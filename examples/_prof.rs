@@ -1,0 +1,11 @@
+use daig::algorithms::pagerank::{self, PrConfig};
+use daig::engine::sim::cost::Machine;
+use daig::engine::{EngineConfig, ExecutionMode};
+use daig::graph::gap::GapGraph;
+fn main() {
+    let g = GapGraph::Kron.generate(14, 12);
+    let m = Machine::haswell();
+    for _ in 0..30 {
+        std::hint::black_box(pagerank::run_sim(&g, &EngineConfig::new(32, ExecutionMode::Delayed(256)), &PrConfig::default(), &m));
+    }
+}

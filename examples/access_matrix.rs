@@ -1,0 +1,58 @@
+//! Fig. 5 in your terminal: render the thread-access matrices for Kron
+//! and Web as ASCII heat maps and print the §IV-C precomputable
+//! diagnostic that predicts whether delay-buffering will help.
+//!
+//! ```bash
+//! cargo run --release --example access_matrix
+//! ```
+
+use daig::algorithms::pagerank::{self, PrConfig};
+use daig::engine::sim::cost::Machine;
+use daig::engine::{EngineConfig, ExecutionMode};
+use daig::graph::gap::GapGraph;
+use daig::graph::properties;
+
+const SHADES: &[char] = &[' ', '.', ':', '+', '*', '#', '@'];
+
+fn render(matrix: &[Vec<u64>]) {
+    let max = *matrix.iter().flatten().max().unwrap_or(&1) as f64;
+    for row in matrix {
+        let line: String = row
+            .iter()
+            .map(|&x| {
+                let idx = if x == 0 { 0 } else { 1 + ((x as f64 / max).powf(0.35) * (SHADES.len() - 2) as f64) as usize };
+                SHADES[idx.min(SHADES.len() - 1)]
+            })
+            .collect();
+        println!("  |{line}|");
+    }
+}
+
+fn main() {
+    let threads = 32;
+    let machine = Machine::haswell();
+    for g in [GapGraph::Kron, GapGraph::Web] {
+        let graph = g.generate(12, 8);
+        // Dynamic matrix from one simulated asynchronous run…
+        let (_, sim) =
+            pagerank::run_sim(&graph, &EngineConfig::new(threads, ExecutionMode::Asynchronous), &PrConfig::default(), &machine);
+        println!(
+            "\n{} — rows: reading thread, cols: owning thread (measured over {} rounds)",
+            g.name(),
+            sim.result.num_rounds()
+        );
+        render(&sim.metrics.access_matrix());
+        // …and the static precomputation the paper's §V suggests.
+        let static_locality = properties::diagonal_locality(&graph, threads);
+        println!(
+            "  diagonal fraction: measured {:.3} | static precompute {:.3} | rows ≥1/32 local: {}",
+            sim.metrics.diagonal_fraction(),
+            static_locality,
+            sim.metrics.clustered_rows(1.0 / 32.0)
+        );
+        println!(
+            "  => delay-buffering predicted {}",
+            if static_locality > 0.5 { "NOT beneficial (web-like clustering)" } else { "beneficial" }
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! δ-tuning walkthrough (paper §IV): sweep the delay parameter on one
+//! graph across thread counts and watch the best δ move — downward as
+//! threads increase on Kron (the paper's Fig. 3/4 finding).
+//!
+//! ```bash
+//! cargo run --release --example delta_tuning
+//! cargo run --release --example delta_tuning -- urand 12
+//! ```
+
+use daig::coordinator::{sweep, Algo};
+use daig::engine::sim::cost::Machine;
+use daig::engine::ExecutionMode;
+use daig::graph::gap::GapGraph;
+use daig::util::fmt;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let graph_name = args.first().map(String::as_str).unwrap_or("kron");
+    let scale: u32 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12);
+    let g = GapGraph::from_name(graph_name).expect("graph: kron|urand|twitter|web|road");
+    let graph = g.generate(scale, 8);
+    let machine = Machine::haswell();
+
+    println!("δ sweep, PageRank on {}@{scale} (simulated Haswell)\n", g.name());
+    for threads in [4usize, 8, 16, 32] {
+        let pts = sweep::modes(&graph, Algo::PageRank, threads, &machine);
+        let asyn = sweep::find_mode(&pts, ExecutionMode::Asynchronous).unwrap();
+        let best = sweep::best_delayed(&pts).unwrap();
+        print!("{threads:>3} threads: ");
+        for p in &pts {
+            if let ExecutionMode::Delayed(d) = p.mode {
+                let marker = if p.mode == best.mode { '*' } else { ' ' };
+                print!("δ{d}={:.2}x{marker} ", asyn.time_s / p.time_s);
+            }
+        }
+        println!(
+            "\n             best δ = {} ({} vs async; {} flushes/run)",
+            best.mode.label(),
+            fmt::pct_delta(asyn.time_s / best.time_s),
+            best.flushes
+        );
+    }
+    println!("\n(speedups are relative to asynchronous; * marks the best δ)");
+}

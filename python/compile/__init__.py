@@ -1,0 +1,2 @@
+# Build-time-only package: JAX/Pallas kernels and AOT lowering.
+# Never imported by the runtime path — rust loads the HLO artifacts.

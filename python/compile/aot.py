@@ -1,0 +1,98 @@
+"""AOT lowering: JAX/Pallas step functions -> HLO text artifacts.
+
+Runs ONCE at build time (`make artifacts`); the rust runtime then loads
+``artifacts/*.hlo.txt`` via ``HloModuleProto::from_text_file`` and never
+touches python again.
+
+HLO **text** (not ``lowered.compile().serialize()`` / serialized proto)
+is the interchange format: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids which the `xla` crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out-dir ../artifacts``
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Block sizes to lower. 128 = one MXU tile; 256/512 exercise the grid.
+BLOCK_SIZES = (128, 256, 512)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args):
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def arg_manifest(example_args):
+    return [
+        {"shape": list(a.shape), "dtype": str(a.dtype)} for a in example_args
+    ]
+
+
+def build(out_dir: str) -> dict:
+    """Lower every entry point; returns the manifest dict."""
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for n in BLOCK_SIZES:
+        for name, fn, args in (
+            (
+                f"pagerank_step_{n}",
+                model.pagerank_step,
+                model.pagerank_example_args(n),
+            ),
+            (f"sssp_step_{n}", model.sssp_step, model.sssp_example_args(n)),
+        ):
+            text = lower_entry(fn, args)
+            fname = f"{name}.hlo.txt"
+            path = os.path.join(out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "block": n,
+                    "inputs": arg_manifest(args),
+                    "outputs": 2,
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                }
+            )
+            print(f"lowered {name}: {len(text)} chars -> {path}")
+    manifest = {
+        "format": "hlo-text",
+        "jax": jax.__version__,
+        "tile_m": 128,
+        "entries": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = build(args.out_dir)
+    print(f"wrote {len(manifest['entries'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Layer-1 Pallas kernel: tiled dense-block PageRank update.
+
+Computes ``out = base + damping * (M @ xw)`` over a dense (N, N) pull
+adjacency block, tiled along the output (row) dimension.
+
+Hardware adaptation (DESIGN.md §4): the paper targets shared-memory CPUs,
+so there is no CUDA idiom to port; on the TPU-shaped stack the natural
+mapping of one *partition's* pull sweep is a dense blocked SpMV, which is
+MXU work. Tiles are (TM, N) rows of M against the full (N, 1) vector:
+
+* the (TM, N) row tile and (N, 1) vector stream HBM -> VMEM per grid
+  step (BlockSpec index_map below) — the analog of the paper's blocked
+  partitioning;
+* the output tile is written back once per grid step — a δ=TM coalesced
+  flush, which is exactly the delay-buffer idea expressed as a VMEM
+  write-out schedule;
+* the inner contraction is a (TM, N) x (N, 1) matmul on the MXU in f32.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowering via interpret mode produces plain HLO that the
+rust runtime executes (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height. 128 matches the MXU systolic dimension; N must be a
+# multiple (model.py pads).
+TILE_M = 128
+
+
+def _kernel(m_ref, xw_ref, damping_ref, base_ref, out_ref):
+    # One grid step: rows [i*TM, (i+1)*TM) of the block.
+    acc = jnp.dot(m_ref[...], xw_ref[...], preferred_element_type=jnp.float32)
+    out_ref[...] = base_ref[0, 0] + damping_ref[0, 0] * acc
+
+
+@functools.partial(jax.jit, static_argnames=())
+def pagerank_block(m, xw, damping, base):
+    """Pallas twin of :func:`compile.kernels.ref.pagerank_block`.
+
+    Args:
+      m: (N, N) f32 pull adjacency block (m[i, j] = 1 iff edge j -> i).
+      xw: (N, 1) f32 out-degree-normalized scores.
+      damping: (1, 1) f32.
+      base: (1, 1) f32.
+
+    Returns:
+      (N, 1) f32 updated scores.
+    """
+    n = m.shape[0]
+    assert m.shape == (n, n), m.shape
+    assert xw.shape == (n, 1), xw.shape
+    assert n % TILE_M == 0, f"N={n} must be a multiple of {TILE_M}"
+    grid = (n // TILE_M,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            # Row tile of M: HBM->VMEM once per grid step.
+            pl.BlockSpec((TILE_M, n), lambda i: (i, 0)),
+            # Full vector: resident across steps.
+            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(m, xw, damping, base)

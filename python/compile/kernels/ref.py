@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package must
+match its oracle to float tolerance across the shape/dtype sweep in
+``python/tests``. They are deliberately written in the most obvious
+vectorized form with no tiling tricks.
+"""
+
+import jax.numpy as jnp
+
+
+def pagerank_block(m, xw, damping, base):
+    """Dense-block PageRank contribution.
+
+    new[i] = base + damping * sum_j m[i, j] * xw[j]
+
+    Args:
+      m: (N, N) f32 — m[i, j] = 1.0 iff edge j -> i (pull orientation).
+      xw: (N, 1) f32 — neighbor scores pre-divided by out-degree.
+      damping: (1, 1) f32.
+      base: (1, 1) f32 — (1 - d) / n_total.
+
+    Returns:
+      (N, 1) f32 new scores.
+    """
+    return base + damping * (m @ xw)
+
+
+def sssp_block(w, dist):
+    """Dense-block min-plus Bellman-Ford relaxation.
+
+    new[i] = min(dist[i], min_j (dist[j] + w[j, i]))
+
+    Args:
+      w: (N, N) f32 — w[j, i] = weight of edge j -> i, +inf when absent.
+      dist: (N, 1) f32 — current distances (+inf = unreached).
+
+    Returns:
+      (N, 1) f32 relaxed distances.
+    """
+    cand = jnp.min(dist + w, axis=0, keepdims=True).T  # (N, 1)
+    return jnp.minimum(dist, cand)
+
+
+def pagerank_delta(old, new):
+    """Round L1 delta — the paper's convergence metric."""
+    return jnp.sum(jnp.abs(new - old)).reshape(1, 1)
+
+
+def sssp_changed(old, new):
+    """Number of vertices whose distance changed this round."""
+    return jnp.sum((old != new).astype(jnp.float32)).reshape(1, 1)

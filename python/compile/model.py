@@ -1,0 +1,75 @@
+"""Layer-2 JAX model: full per-round step functions over the L1 kernels.
+
+Each step consumes the whole state of one iterative round and returns the
+new state *plus* the convergence metric, so the rust coordinator drives
+the loop with a single executable call per round:
+
+* :func:`pagerank_step` — new scores and the round's L1 delta.
+* :func:`sssp_step` — relaxed distances and the change count.
+
+``xw`` normalization, convergence reduction, and the kernel call are all
+in one jitted graph, so XLA fuses them around the Pallas body and nothing
+crosses the host boundary mid-round.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import pagerank_block, sssp_block
+
+
+def pagerank_step(m, scores, inv_outdeg, damping, base):
+    """One full PageRank round on a dense block.
+
+    Args:
+      m: (N, N) f32 pull adjacency (m[i, j] = 1 iff edge j -> i).
+      scores: (N, 1) f32 current scores.
+      inv_outdeg: (N, 1) f32 reciprocal out-degrees (0 for dangling).
+      damping: (1, 1) f32.
+      base: (1, 1) f32 = (1 - d)/n.
+
+    Returns:
+      (new_scores (N, 1), delta (1, 1)) — delta is the summed |change|,
+      compared by the coordinator against the paper's 1e-4 threshold.
+    """
+    xw = scores * inv_outdeg
+    new = pagerank_block.pagerank_block(m, xw, damping, base)
+    delta = jnp.sum(jnp.abs(new - scores)).reshape(1, 1)
+    return new, delta
+
+
+def sssp_step(w, dist):
+    """One full Bellman-Ford round on a dense block.
+
+    Args:
+      w: (N, N) f32 weights, +inf where no edge (w[j, i] = weight j -> i).
+      dist: (N, 1) f32 current distances, +inf unreached.
+
+    Returns:
+      (new_dist (N, 1), changed (1, 1)) — changed counts updated vertices;
+      0 means the paper's SSSP stopping criterion is met.
+    """
+    new = sssp_block.sssp_block(w, dist)
+    changed = jnp.sum((new != dist).astype(jnp.float32)).reshape(1, 1)
+    return new, changed
+
+
+def pagerank_example_args(n):
+    """ShapeDtypeStructs for AOT lowering at block size n."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((n, 1), f32),
+        jax.ShapeDtypeStruct((n, 1), f32),
+        jax.ShapeDtypeStruct((1, 1), f32),
+        jax.ShapeDtypeStruct((1, 1), f32),
+    )
+
+
+def sssp_example_args(n):
+    """ShapeDtypeStructs for AOT lowering at block size n."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, n), f32),
+        jax.ShapeDtypeStruct((n, 1), f32),
+    )

@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps block sizes (multiples of the 128 tile), densities, and
+value magnitudes; every case must match the oracle to float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pagerank_block, ref, sssp_block
+
+BLOCKS = st.sampled_from([128, 256, 384, 512])
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def rand_adjacency(n, density, seed):
+    rng = np.random.default_rng(seed)
+    return (rng.random((n, n)) < density).astype(np.float32)
+
+
+def rand_weights(n, density, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.integers(1, 256, size=(n, n)).astype(np.float32)
+    mask = rng.random((n, n)) < density
+    return np.where(mask, w, np.float32(np.inf))
+
+
+class TestPageRankKernel:
+    @settings(max_examples=12, deadline=None)
+    @given(n=BLOCKS, seed=SEEDS, density=st.floats(0.0, 0.3))
+    def test_matches_ref(self, n, seed, density):
+        m = rand_adjacency(n, density, seed)
+        rng = np.random.default_rng(seed + 1)
+        xw = rng.random((n, 1)).astype(np.float32)
+        damping = jnp.full((1, 1), 0.85, jnp.float32)
+        base = jnp.full((1, 1), (1 - 0.85) / n, jnp.float32)
+        got = pagerank_block.pagerank_block(m, xw, damping, base)
+        want = ref.pagerank_block(m, xw, damping, base)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_zero_matrix_gives_base(self):
+        n = 128
+        m = np.zeros((n, n), np.float32)
+        xw = np.ones((n, 1), np.float32)
+        damping = jnp.full((1, 1), 0.85, jnp.float32)
+        base = jnp.full((1, 1), 0.125, jnp.float32)
+        got = pagerank_block.pagerank_block(m, xw, damping, base)
+        np.testing.assert_allclose(got, np.full((n, 1), 0.125), rtol=1e-6)
+
+    def test_identity_scales(self):
+        n = 256
+        m = np.eye(n, dtype=np.float32)
+        xw = np.full((n, 1), 0.5, np.float32)
+        damping = jnp.full((1, 1), 0.5, jnp.float32)
+        base = jnp.full((1, 1), 0.1, jnp.float32)
+        got = pagerank_block.pagerank_block(m, xw, damping, base)
+        np.testing.assert_allclose(got, np.full((n, 1), 0.35), rtol=1e-6)
+
+    def test_rejects_unaligned_n(self):
+        n = 100
+        with pytest.raises(AssertionError):
+            pagerank_block.pagerank_block(
+                np.zeros((n, n), np.float32),
+                np.zeros((n, 1), np.float32),
+                jnp.zeros((1, 1)),
+                jnp.zeros((1, 1)),
+            )
+
+
+class TestSsspKernel:
+    @settings(max_examples=12, deadline=None)
+    @given(n=BLOCKS, seed=SEEDS, density=st.floats(0.0, 0.3))
+    def test_matches_ref(self, n, seed, density):
+        w = rand_weights(n, density, seed)
+        rng = np.random.default_rng(seed + 2)
+        dist = rng.integers(0, 1000, size=(n, 1)).astype(np.float32)
+        # Sprinkle unreached vertices.
+        dist[rng.random((n, 1)) < 0.3] = np.inf
+        got = sssp_block.sssp_block(w, dist)
+        want = ref.sssp_block(w, dist)
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    def test_no_edges_keeps_dist(self):
+        n = 128
+        w = np.full((n, n), np.inf, np.float32)
+        dist = np.arange(n, dtype=np.float32).reshape(n, 1)
+        got = sssp_block.sssp_block(w, dist)
+        np.testing.assert_array_equal(np.asarray(got), dist)
+
+    def test_single_relaxation(self):
+        n = 128
+        w = np.full((n, n), np.inf, np.float32)
+        w[0, 1] = 7.0  # edge 0 -> 1
+        dist = np.full((n, 1), np.inf, np.float32)
+        dist[0] = 0.0
+        got = np.asarray(sssp_block.sssp_block(w, dist))
+        assert got[1, 0] == 7.0
+        assert got[0, 0] == 0.0
+        assert np.isinf(got[2, 0])
+
+    def test_monotone_never_increases(self):
+        n = 256
+        w = rand_weights(n, 0.05, 9)
+        rng = np.random.default_rng(10)
+        dist = rng.integers(0, 100, size=(n, 1)).astype(np.float32)
+        got = np.asarray(sssp_block.sssp_block(w, dist))
+        assert (got <= dist + 1e-6).all()
+
+
+class TestRefHelpers:
+    def test_pagerank_delta(self):
+        old = jnp.array([[1.0], [2.0]])
+        new = jnp.array([[1.5], [1.0]])
+        assert float(ref.pagerank_delta(old, new)[0, 0]) == pytest.approx(1.5)
+
+    def test_sssp_changed(self):
+        old = jnp.array([[1.0], [2.0], [3.0]])
+        new = jnp.array([[1.0], [1.0], [3.0]])
+        assert float(ref.sssp_changed(old, new)[0, 0]) == 1.0

@@ -1,0 +1,34 @@
+//! Bench regenerating **Figure 2**: PageRank speedup over the synchronous
+//! baseline for asynchronous and all δ set-points, on both simulated
+//! machines. The shape to check against the paper: every bar > 1.0
+//! (async/hybrid beat sync), best-δ beats async on all graphs except web.
+
+use daig::coordinator::{sweep, Algo};
+use daig::engine::sim::cost::Machine;
+use daig::engine::ExecutionMode;
+use daig::graph::gap::ALL;
+use daig::util::bench;
+
+fn main() {
+    let scale = std::env::var("DAIG_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(12u32);
+    for machine in [Machine::haswell(), Machine::cascade_lake()] {
+        let threads = machine.threads;
+        bench::section(&format!("Fig 2 — PR speedup over sync ({}, {} threads, scale {scale})", machine.name, threads));
+        for g in ALL {
+            let graph = g.generate(scale, 0);
+            let pts = sweep::modes(&graph, Algo::PageRank, threads, &machine);
+            let sync = sweep::find_mode(&pts, ExecutionMode::Synchronous).unwrap().time_s;
+            let asyn = sweep::find_mode(&pts, ExecutionMode::Asynchronous).unwrap().time_s;
+            let best = sweep::best_delayed(&pts).unwrap();
+            print!("{:<10}", g.name());
+            for p in pts.iter().filter(|p| p.mode != ExecutionMode::Synchronous) {
+                print!(" {}={:.2}x", p.mode.label(), sync / p.time_s);
+            }
+            println!(
+                "  | best {} vs async {}",
+                best.mode.label(),
+                daig::util::fmt::pct_delta(asyn / best.time_s)
+            );
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! Bench regenerating **Figures 3 & 4**: PageRank thread scaling on Kron
+//! and Web with the best δ per thread count. Shape to check: on Kron the
+//! best δ trends *down* as threads rise and delayed beats async; on Web
+//! delayed never beats async.
+
+use daig::coordinator::{sweep, Algo};
+use daig::engine::sim::cost::Machine;
+use daig::engine::ExecutionMode;
+use daig::graph::gap::GapGraph;
+use daig::util::{bench, fmt};
+
+fn scaling(machine: &Machine, threads: &[usize], scale: u32) {
+    for g in [GapGraph::Kron, GapGraph::Web] {
+        let graph = g.generate(scale, 0);
+        println!("{:<8} {:>7} {:>13} {:>8} {:>13} {:>10}", g.name(), "threads", "async", "best δ", "delayed", "vs async");
+        for &t in threads {
+            let pts = sweep::modes(&graph, Algo::PageRank, t, machine);
+            let asyn = sweep::find_mode(&pts, ExecutionMode::Asynchronous).unwrap();
+            let best = sweep::best_delayed(&pts).unwrap();
+            println!(
+                "{:<8} {:>7} {:>13} {:>8} {:>13} {:>10}",
+                "",
+                t,
+                fmt::secs(asyn.time_s),
+                best.mode.label(),
+                fmt::secs(best.time_s),
+                fmt::pct_delta(asyn.time_s / best.time_s)
+            );
+        }
+    }
+}
+
+fn main() {
+    let scale = std::env::var("DAIG_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(12u32);
+    bench::section(&format!("Fig 3 — thread scaling, simulated Haswell (scale {scale})"));
+    scaling(&Machine::haswell(), &[1, 2, 4, 8, 16, 32], scale);
+    bench::section(&format!("Fig 4 — thread scaling, simulated Cascade Lake (scale {scale})"));
+    scaling(&Machine::cascade_lake(), &[7, 14, 28, 56, 112], scale);
+}

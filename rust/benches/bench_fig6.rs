@@ -1,0 +1,32 @@
+//! Bench regenerating **Figure 6**: Bellman-Ford SSSP speedup over sync
+//! at full thread count (simulated Cascade Lake, 112 threads). Shape to
+//! check: Kron/Urand/Twitter benefit from the hybrid; Road and Web do
+//! not (paper §IV-D).
+
+use daig::coordinator::{sweep, Algo};
+use daig::engine::sim::cost::Machine;
+use daig::engine::ExecutionMode;
+use daig::graph::gap::ALL;
+use daig::util::bench;
+
+fn main() {
+    let scale = std::env::var("DAIG_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(12u32);
+    let machine = Machine::cascade_lake();
+    bench::section(&format!("Fig 6 — SSSP speedup over sync (simulated Cascade Lake, 112t, scale {scale})"));
+    for g in ALL {
+        let graph = g.generate_weighted(scale, 0);
+        let pts = sweep::modes(&graph, Algo::Sssp, machine.threads, &machine);
+        let sync = sweep::find_mode(&pts, ExecutionMode::Synchronous).unwrap().time_s;
+        let asyn = sweep::find_mode(&pts, ExecutionMode::Asynchronous).unwrap().time_s;
+        let best = sweep::best_delayed(&pts).unwrap();
+        print!("{:<10}", g.name());
+        for p in pts.iter().filter(|p| p.mode != ExecutionMode::Synchronous) {
+            print!(" {}={:.2}x", p.mode.label(), sync / p.time_s);
+        }
+        println!(
+            "  | best {} vs async {}",
+            best.mode.label(),
+            daig::util::fmt::pct_delta(asyn / best.time_s)
+        );
+    }
+}

@@ -1,0 +1,76 @@
+//! Micro-benchmarks on the L3 hot paths (used by the §Perf optimization
+//! loop): delay-buffer flush, CSR pull sweep, native engine rounds,
+//! simulator throughput, and PJRT dense-step latency when artifacts are
+//! present.
+
+use daig::algorithms::pagerank::{self, PageRank, PrConfig};
+use daig::engine::delay_buffer::DelayBuffer;
+use daig::engine::native;
+use daig::engine::shared::SharedValues;
+use daig::engine::sim::cost::Machine;
+use daig::engine::{EngineConfig, ExecutionMode};
+use daig::graph::gap::GapGraph;
+use daig::util::bench;
+
+fn main() {
+    let scale = std::env::var("DAIG_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(14u32);
+    let g = GapGraph::Kron.generate(scale, 8);
+    let n = g.num_vertices();
+    let m = g.num_edges();
+    println!("kron@{scale}: n={n} m={m}");
+
+    bench::section("delay buffer");
+    let shared = SharedValues::from_bits(vec![0u32; n]);
+    for delta in [16usize, 256, 4096] {
+        let s = bench::case(&format!("flush-cycle δ={delta} over {n} values"), 20, || {
+            let mut buf = DelayBuffer::new(delta);
+            buf.begin(0);
+            for i in 0..n as u32 {
+                buf.push(&shared, i);
+            }
+            buf.flush(&shared);
+            buf.flushes()
+        });
+        let per_val = s.min_s / n as f64;
+        println!("  -> {:.2} ns/value", per_val * 1e9);
+    }
+
+    bench::section("CSR pull sweep (serial PageRank round)");
+    let prog = PageRank::new(&g, &PrConfig::default());
+    let s = bench::case("serial sync jacobi round x1", 5, || native::run_serial_sync(&g, &prog, 1));
+    println!("  -> {:.1} M edges/s", m as f64 / s.min_s / 1e6);
+
+    bench::section("native engine end-to-end (wall clock, host threads)");
+    for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(256)] {
+        bench::case(&format!("native pagerank kron@{scale} {} 4t", mode.label()), 3, || {
+            pagerank::run_native(&g, &EngineConfig::new(4, mode), &PrConfig::default())
+        });
+    }
+
+    bench::section("simulator throughput");
+    let machine = Machine::haswell();
+    for threads in [8usize, 32] {
+        let s = bench::case(&format!("sim pagerank kron@{scale} d256 {threads}t"), 3, || {
+            pagerank::run_sim(&g, &EngineConfig::new(threads, ExecutionMode::Delayed(256)), &PrConfig::default(), &machine)
+        });
+        let (_, sim) = pagerank::run_sim(
+            &g,
+            &EngineConfig::new(threads, ExecutionMode::Delayed(256)),
+            &PrConfig::default(),
+            &machine,
+        );
+        let accesses = sim.metrics.accesses as f64;
+        println!("  -> {:.1} M simulated accesses/s", accesses / s.min_s / 1e6);
+    }
+
+    bench::section("PJRT dense-block step (L1/L2 artifact path)");
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let rt = daig::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();
+        let small = GapGraph::Kron.generate(8, 8); // 256 vertices
+        bench::case("dense pagerank kron@8 to convergence", 3, || {
+            daig::runtime::block_backend::pagerank(&rt, &small, &PrConfig::default(), 100).unwrap()
+        });
+    } else {
+        println!("(artifacts missing — run `make artifacts`)");
+    }
+}

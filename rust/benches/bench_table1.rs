@@ -1,0 +1,48 @@
+//! Bench regenerating **Table I**: PageRank rounds + avg round time for
+//! sync / async / best-hybrid on the 5-graph suite (simulated 32-thread
+//! Haswell), and wall-clock cost of each simulated configuration.
+
+use daig::coordinator::{sweep, Algo};
+use daig::engine::sim::cost::Machine;
+use daig::engine::ExecutionMode;
+use daig::graph::gap::ALL;
+use daig::util::bench;
+
+fn main() {
+    let scale = std::env::var("DAIG_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(12u32);
+    let m = Machine::haswell();
+    bench::section(&format!("Table I — PageRank 3-mode comparison (scale {scale}, sim Haswell/32t)"));
+    println!(
+        "{:<10} {:>6} {:>6} {:>6} {:>14} {:>14} {:>14} {:>8}",
+        "graph", "r.sync", "r.asy", "r.hyb", "avg sync", "avg async", "avg hybrid", "best δ"
+    );
+    for g in ALL {
+        let graph = g.generate(scale, 0);
+        let pts = sweep::modes(&graph, Algo::PageRank, 32, &m);
+        let sync = sweep::find_mode(&pts, ExecutionMode::Synchronous).unwrap();
+        let asyn = sweep::find_mode(&pts, ExecutionMode::Asynchronous).unwrap();
+        let best = sweep::best_delayed(&pts).unwrap();
+        println!(
+            "{:<10} {:>6} {:>6} {:>6} {:>14} {:>14} {:>14} {:>8}",
+            g.name(),
+            sync.rounds,
+            asyn.rounds,
+            best.rounds,
+            daig::util::fmt::secs(sync.avg_round_s),
+            daig::util::fmt::secs(asyn.avg_round_s),
+            daig::util::fmt::secs(best.avg_round_s),
+            best.mode.label()
+        );
+    }
+
+    bench::section("simulator wall-clock per configuration (host cost of regenerating Table I)");
+    for g in [daig::graph::gap::GapGraph::Kron, daig::graph::gap::GapGraph::Web] {
+        let graph = g.generate(scale, 0);
+        bench::case(&format!("sim pagerank {} async 32t", g.name()), 3, || {
+            sweep::point(&graph, Algo::PageRank, 32, &m, ExecutionMode::Asynchronous)
+        });
+        bench::case(&format!("sim pagerank {} d256 32t", g.name()), 3, || {
+            sweep::point(&graph, Algo::PageRank, 32, &m, ExecutionMode::Delayed(256))
+        });
+    }
+}

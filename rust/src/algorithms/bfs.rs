@@ -1,0 +1,140 @@
+//! Iterative (level-relaxation) BFS — second §V extension workload.
+//!
+//! `level(v) = min(level(v), 1 + min_{u ∈ in(v)} level(u))`
+//!
+//! This is Bellman-Ford with unit weights: a pull-style iterative BFS
+//! whose number of rounds equals the eccentricity of the source. It is
+//! the extreme sparse-update case (each vertex changes exactly once), so
+//! it bounds the regime where the paper's §IV-D analysis predicts
+//! buffering is least useful.
+
+use crate::engine::program::{ValueReader, VertexProgram};
+use crate::engine::sim::cost::Machine;
+use crate::engine::sim::SimRun;
+use crate::engine::{native, EngineConfig, RunResult};
+use crate::graph::{Csr, VertexId};
+
+/// Unreached marker.
+pub const UNREACHED: u32 = u32::MAX;
+
+/// Level-relaxation BFS program.
+pub struct Bfs<'g> {
+    g: &'g Csr,
+    source: VertexId,
+    conditional: bool,
+}
+
+impl<'g> Bfs<'g> {
+    /// BFS from `source`.
+    pub fn new(g: &'g Csr, source: VertexId) -> Self {
+        Self { g, source, conditional: false }
+    }
+
+    /// Enable conditional writes.
+    pub fn conditional(mut self) -> Self {
+        self.conditional = true;
+        self
+    }
+}
+
+impl VertexProgram for Bfs<'_> {
+    fn name(&self) -> &'static str {
+        "bfs"
+    }
+
+    fn init(&self, v: VertexId) -> u32 {
+        if v == self.source {
+            0
+        } else {
+            UNREACHED
+        }
+    }
+
+    #[inline]
+    fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let mut best = r.read(v);
+        for &u in self.g.in_neighbors(v) {
+            let lu = r.read(u);
+            if lu != UNREACHED {
+                best = best.min(lu + 1);
+            }
+        }
+        best
+    }
+
+    fn delta(&self, old: u32, new: u32) -> f64 {
+        (old != new) as u32 as f64
+    }
+
+    fn converged(&self, round_delta: f64) -> bool {
+        round_delta == 0.0
+    }
+
+    fn conditional_writes(&self) -> bool {
+        self.conditional
+    }
+}
+
+/// Run on the real-thread executor.
+pub fn run_native(g: &Csr, source: VertexId, ecfg: &EngineConfig) -> BfsResult {
+    BfsResult::from(native::run(g, &Bfs::new(g, source), ecfg))
+}
+
+/// Run on the simulator.
+pub fn run_sim(g: &Csr, source: VertexId, ecfg: &EngineConfig, machine: &Machine) -> (BfsResult, SimRun) {
+    let sim = crate::engine::sim::run(g, &Bfs::new(g, source), ecfg, machine);
+    (BfsResult::from(sim.result.clone()), sim)
+}
+
+/// Decoded result.
+#[derive(Debug, Clone)]
+pub struct BfsResult {
+    /// Hop count per vertex ([`UNREACHED`] if not reachable).
+    pub levels: Vec<u32>,
+    pub run: RunResult,
+}
+
+impl From<RunResult> for BfsResult {
+    fn from(run: RunResult) -> Self {
+        Self { levels: run.values.clone(), run }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle;
+    use crate::engine::ExecutionMode;
+    use crate::graph::gap::GapGraph;
+
+    #[test]
+    fn matches_queue_bfs() {
+        // Symmetric graph: in-neighbors = out-neighbors, so the pull
+        // relaxation equals forward BFS.
+        let g = GapGraph::Kron.generate(9, 8);
+        let want = oracle::bfs_levels(&g, 0);
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+            let r = run_native(&g, 0, &EngineConfig::new(4, mode));
+            assert_eq!(r.levels, want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn road_needs_many_rounds_sync() {
+        let g = GapGraph::Road.generate(10, 0);
+        let sync = run_native(&g, 0, &EngineConfig::new(2, ExecutionMode::Synchronous));
+        let asyn = run_native(&g, 0, &EngineConfig::new(2, ExecutionMode::Asynchronous));
+        // Sync needs ~eccentricity rounds; async can cut through within a
+        // thread's sweep direction.
+        assert!(asyn.run.num_rounds() < sync.run.num_rounds());
+    }
+
+    #[test]
+    fn sim_matches_oracle() {
+        let g = GapGraph::Web.generate(9, 4);
+        // Web is directed: use the transpose-consistent oracle.
+        let want = oracle::bfs_levels(&g, 3);
+        let (r, _) = run_sim(&g, 3, &EngineConfig::new(8, ExecutionMode::Delayed(16)), &Machine::haswell());
+        assert_eq!(r.levels, want);
+    }
+}

@@ -1,0 +1,147 @@
+//! Connected components by min-label propagation — the first §V
+//! future-work extension ("extend the idea of buffering to other
+//! pull-style algorithms, including where updates may only be
+//! conditionally written").
+//!
+//! Each vertex repeatedly takes the minimum label among itself and its
+//! in-neighbors; on symmetric graphs labels converge to the component
+//! minimum. Like SSSP, most rounds update few vertices, so this is a
+//! second data point for the paper's sparse-update regime.
+
+use crate::engine::program::{ValueReader, VertexProgram};
+use crate::engine::sim::cost::Machine;
+use crate::engine::sim::SimRun;
+use crate::engine::{native, EngineConfig, RunResult};
+use crate::graph::{Csr, VertexId};
+
+/// Min-label propagation program.
+pub struct Components<'g> {
+    g: &'g Csr,
+    conditional: bool,
+}
+
+impl<'g> Components<'g> {
+    /// Program for a (preferably symmetric) graph.
+    pub fn new(g: &'g Csr) -> Self {
+        Self { g, conditional: false }
+    }
+
+    /// Enable conditional writes.
+    pub fn conditional(mut self) -> Self {
+        self.conditional = true;
+        self
+    }
+}
+
+impl VertexProgram for Components<'_> {
+    fn name(&self) -> &'static str {
+        "cc"
+    }
+
+    fn init(&self, v: VertexId) -> u32 {
+        v
+    }
+
+    #[inline]
+    fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let mut best = r.read(v);
+        for &u in self.g.in_neighbors(v) {
+            best = best.min(r.read(u));
+        }
+        best
+    }
+
+    fn delta(&self, old: u32, new: u32) -> f64 {
+        (old != new) as u32 as f64
+    }
+
+    fn converged(&self, round_delta: f64) -> bool {
+        round_delta == 0.0
+    }
+
+    fn conditional_writes(&self) -> bool {
+        self.conditional
+    }
+}
+
+/// Run on the real-thread executor.
+pub fn run_native(g: &Csr, ecfg: &EngineConfig) -> CcResult {
+    CcResult::from(native::run(g, &Components::new(g), ecfg))
+}
+
+/// Run on the simulator.
+pub fn run_sim(g: &Csr, ecfg: &EngineConfig, machine: &Machine) -> (CcResult, SimRun) {
+    let sim = crate::engine::sim::run(g, &Components::new(g), ecfg, machine);
+    (CcResult::from(sim.result.clone()), sim)
+}
+
+/// Decoded result.
+#[derive(Debug, Clone)]
+pub struct CcResult {
+    /// Component label per vertex (= min vertex id in the component).
+    pub labels: Vec<u32>,
+    pub run: RunResult,
+}
+
+impl From<RunResult> for CcResult {
+    fn from(run: RunResult) -> Self {
+        Self { labels: run.values.clone(), run }
+    }
+}
+
+impl CcResult {
+    /// Number of distinct components.
+    pub fn num_components(&self) -> usize {
+        let mut ls = self.labels.clone();
+        ls.sort_unstable();
+        ls.dedup();
+        ls.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle;
+    use crate::engine::ExecutionMode;
+    use crate::graph::gap::GapGraph;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn islands() {
+        let g = GraphBuilder::new(6).edges(&[(0, 1), (1, 2), (4, 5)]).symmetrize().build();
+        let r = run_native(&g, &EngineConfig::new(2, ExecutionMode::Asynchronous));
+        assert_eq!(r.labels[..3], [0, 0, 0]);
+        assert_eq!(r.labels[3], 3);
+        assert_eq!(r.labels[4], 4);
+        assert_eq!(r.labels[5], 4);
+        assert_eq!(r.num_components(), 3);
+    }
+
+    #[test]
+    fn matches_oracle_all_modes() {
+        let g = GapGraph::Road.generate(10, 0);
+        let want = oracle::components(&g);
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Delayed(16)] {
+            let r = run_native(&g, &EngineConfig::new(4, mode));
+            assert_eq!(r.labels, want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn conditional_matches_unconditional() {
+        let g = GapGraph::Urand.generate(9, 8);
+        let base = run_native(&g, &EngineConfig::new(4, ExecutionMode::Delayed(32)));
+        let p = Components::new(&g).conditional();
+        let cond = native::run(&g, &p, &EngineConfig::new(4, ExecutionMode::Delayed(32)));
+        assert_eq!(base.labels, cond.values);
+    }
+
+    #[test]
+    fn sim_agrees() {
+        let g = GapGraph::Kron.generate(8, 8);
+        let want = oracle::components(&g);
+        let (r, _) = run_sim(&g, &EngineConfig::new(8, ExecutionMode::Delayed(16)), &Machine::haswell());
+        assert_eq!(r.labels, want);
+    }
+}

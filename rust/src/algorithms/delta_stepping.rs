@@ -1,0 +1,143 @@
+//! Delta-stepping SSSP (Meyer & Sanders 2003) — the classical hybrid the
+//! paper holds up as precedent (§II-B): Δ = 0 degenerates to Dijkstra,
+//! Δ = ∞ to Bellman-Ford, exactly as the paper's δ spans synchronous to
+//! asynchronous execution. Implemented as the comparison baseline for
+//! the engine's Bellman-Ford (bench `bench_micro`, example
+//! `delta_tuning` discussion).
+//!
+//! Bucket-based sequential formulation over the pull graph's transpose:
+//! light edges (w ≤ Δ) are relaxed within a bucket until it empties,
+//! heavy edges once per bucket settlement.
+
+use crate::algorithms::sssp::INF;
+use crate::graph::{Csr, VertexId};
+
+/// Run delta-stepping from `source` with bucket width `delta` (panics if
+/// `delta == 0`; use [`crate::algorithms::oracle::dijkstra`] for that
+/// limit). Returns distances with [`INF`] for unreachable vertices.
+pub fn run(g: &Csr, source: VertexId, delta: u32) -> Vec<u32> {
+    assert!(g.is_weighted(), "delta-stepping requires weights");
+    assert!(delta > 0, "Δ=0 is Dijkstra; use oracle::dijkstra");
+    let n = g.num_vertices();
+
+    // Out-edges (transpose of the pull lists), split light/heavy.
+    let mut light: Vec<Vec<(VertexId, u32)>> = vec![Vec::new(); n];
+    let mut heavy: Vec<Vec<(VertexId, u32)>> = vec![Vec::new(); n];
+    for v in 0..n as VertexId {
+        for (u, w) in g.in_neighbors_weighted(v) {
+            if w <= delta {
+                light[u as usize].push((v, w));
+            } else {
+                heavy[u as usize].push((v, w));
+            }
+        }
+    }
+
+    let mut dist = vec![INF; n];
+    // Buckets as a growable vec of vecs; bucket of d = d / delta.
+    let mut buckets: Vec<Vec<VertexId>> = Vec::new();
+    let in_bucket = |buckets: &mut Vec<Vec<VertexId>>, v: VertexId, d: u32| {
+        let b = (d / delta) as usize;
+        if buckets.len() <= b {
+            buckets.resize(b + 1, Vec::new());
+        }
+        buckets[b].push(v);
+    };
+
+    dist[source as usize] = 0;
+    in_bucket(&mut buckets, source, 0);
+
+    let mut i = 0usize;
+    while i < buckets.len() {
+        let mut settled: Vec<VertexId> = Vec::new();
+        // Phase 1: drain bucket i, relaxing light edges (may re-insert).
+        while !buckets[i].is_empty() {
+            let frontier = std::mem::take(&mut buckets[i]);
+            for &u in &frontier {
+                let du = dist[u as usize];
+                // Stale entry (vertex moved to an earlier bucket) — skip.
+                if (du / delta) as usize != i {
+                    continue;
+                }
+                settled.push(u);
+                for &(v, w) in &light[u as usize] {
+                    let nd = du.saturating_add(w);
+                    if nd < dist[v as usize] {
+                        dist[v as usize] = nd;
+                        in_bucket(&mut buckets, v, nd);
+                    }
+                }
+            }
+        }
+        // Phase 2: heavy edges once from everything settled in bucket i.
+        for &u in &settled {
+            let du = dist[u as usize];
+            for &(v, w) in &heavy[u as usize] {
+                let nd = du.saturating_add(w);
+                if nd < dist[v as usize] {
+                    dist[v as usize] = nd;
+                    in_bucket(&mut buckets, v, nd);
+                }
+            }
+        }
+        i += 1;
+    }
+    dist
+}
+
+/// The customary Δ heuristic: Δ ≈ max weight / average degree (Meyer &
+/// Sanders suggest Θ(1/max-degree · max-weight); this variant works well
+/// on the GAP weight range).
+pub fn default_delta(g: &Csr) -> u32 {
+    let avg_deg = g.avg_degree().max(1.0);
+    ((crate::graph::weights::MAX_WEIGHT as f64 / avg_deg).ceil() as u32).max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle;
+    use crate::graph::gap::{GapGraph, ALL};
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn line_graph() {
+        let g = GraphBuilder::new(4).weighted_edges(&[(0, 1, 5), (1, 2, 3), (2, 3, 200)]).build();
+        assert_eq!(run(&g, 0, 64), vec![0, 5, 8, 208]);
+    }
+
+    #[test]
+    fn matches_dijkstra_on_suite() {
+        for gg in ALL {
+            let g = gg.generate_weighted(9, 0);
+            let src = crate::algorithms::sssp::default_source(&g);
+            let want = oracle::dijkstra(&g, src);
+            for delta in [1u32, 17, 64, 255, 10_000] {
+                assert_eq!(run(&g, src, delta), want, "{} Δ={delta}", gg.name());
+            }
+        }
+    }
+
+    #[test]
+    fn default_delta_reasonable() {
+        let g = GapGraph::Kron.generate_weighted(10, 0);
+        let d = default_delta(&g);
+        assert!(d >= 1 && d <= 255, "Δ={d}");
+    }
+
+    #[test]
+    fn matches_engine_bellman_ford() {
+        use crate::engine::{EngineConfig, ExecutionMode};
+        let g = GapGraph::Twitter.generate_weighted(9, 0);
+        let src = crate::algorithms::sssp::default_source(&g);
+        let bf = crate::algorithms::sssp::run_native(&g, src, &EngineConfig::new(4, ExecutionMode::Delayed(32)));
+        assert_eq!(run(&g, src, default_delta(&g)), bf.dist);
+    }
+
+    #[test]
+    #[should_panic(expected = "Dijkstra")]
+    fn zero_delta_panics() {
+        let g = GraphBuilder::new(2).weighted_edges(&[(0, 1, 1)]).build();
+        run(&g, 0, 0);
+    }
+}

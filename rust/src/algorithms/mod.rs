@@ -1,0 +1,20 @@
+//! Pull-style iterative graph algorithms expressed as
+//! [`crate::engine::VertexProgram`]s.
+//!
+//! [`pagerank`] and [`sssp`] are the paper's two evaluation workloads;
+//! [`cc`] (label-propagation components) and [`bfs`] (level propagation)
+//! implement the §V future-work extension to "other pull-style
+//! algorithms, including where updates may only be conditionally
+//! written". [`oracle`] holds serial reference implementations used by
+//! the test suites. [`delta_stepping`] and [`dobfs`] are the two
+//! classical hybrid baselines the paper cites as design precedent
+//! (§II-B): Δ-stepping blends Dijkstra↔Bellman-Ford continuously like
+//! the paper's δ; DO-BFS switches push↔pull discretely.
+
+pub mod bfs;
+pub mod cc;
+pub mod delta_stepping;
+pub mod dobfs;
+pub mod oracle;
+pub mod pagerank;
+pub mod sssp;

@@ -1,0 +1,156 @@
+//! Serial reference implementations — the test suites' ground truth.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::algorithms::sssp::INF;
+use crate::graph::{Csr, VertexId};
+
+/// Dijkstra over the pull representation.
+///
+/// The engine computes `dist(v) = min over in-edges (u→v)`; Dijkstra
+/// needs out-edges, so this builds the transpose adjacency on the fly
+/// (`O(m)` extra memory — fine for test-sized graphs).
+pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<u32> {
+    let n = g.num_vertices();
+    // Transpose: out[u] = list of (v, w) with edge u→v.
+    let mut out: Vec<Vec<(VertexId, u32)>> = vec![Vec::new(); n];
+    for v in 0..n as VertexId {
+        for (u, w) in g.in_neighbors_weighted(v) {
+            out[u as usize].push((v, w));
+        }
+    }
+    let mut dist = vec![INF; n];
+    let mut heap: BinaryHeap<Reverse<(u32, VertexId)>> = BinaryHeap::new();
+    dist[source as usize] = 0;
+    heap.push(Reverse((0, source)));
+    while let Some(Reverse((d, u))) = heap.pop() {
+        if d > dist[u as usize] {
+            continue;
+        }
+        for &(v, w) in &out[u as usize] {
+            let nd = d.saturating_add(w);
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(Reverse((nd, v)));
+            }
+        }
+    }
+    dist
+}
+
+/// Serial double-buffered (Jacobi) PageRank — matches the engine's
+/// synchronous mode bit-for-bit when summation order is identical.
+pub fn pagerank(g: &Csr, damping: f32, epsilon: f64, max_rounds: usize) -> (Vec<f32>, usize) {
+    let n = g.num_vertices();
+    let nf = n.max(1) as f32;
+    let base = (1.0 - damping) / nf;
+    let inv: Vec<f32> = g.out_degrees().iter().map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 }).collect();
+    let mut front = vec![1.0f32 / nf; n];
+    let mut back = vec![0.0f32; n];
+    for round in 1..=max_rounds {
+        let mut delta = 0.0f64;
+        for v in 0..n {
+            let mut acc = 0.0f32;
+            for &u in g.in_neighbors(v as VertexId) {
+                acc += front[u as usize] * inv[u as usize];
+            }
+            back[v] = base + damping * acc;
+            delta += (back[v] - front[v]).abs() as f64;
+        }
+        std::mem::swap(&mut front, &mut back);
+        if delta < epsilon {
+            return (front, round);
+        }
+    }
+    (front, max_rounds)
+}
+
+/// Connected components via repeated min-label flooding (undirected
+/// graphs). Serial, O(diameter · m).
+pub fn components(g: &Csr) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut label: Vec<u32> = (0..n as u32).collect();
+    loop {
+        let mut changed = false;
+        for v in 0..n as VertexId {
+            let mut best = label[v as usize];
+            for &u in g.in_neighbors(v) {
+                best = best.min(label[u as usize]);
+            }
+            if best < label[v as usize] {
+                label[v as usize] = best;
+                changed = true;
+            }
+        }
+        if !changed {
+            return label;
+        }
+    }
+}
+
+/// BFS levels from `source` following in-edges as undirected hops is NOT
+/// what the engine computes; this follows edges u→v (using the transpose
+/// like [`dijkstra`]), i.e. forward BFS. `u32::MAX` = unreachable.
+pub fn bfs_levels(g: &Csr, source: VertexId) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut out: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+    for v in 0..n as VertexId {
+        for &u in g.in_neighbors(v) {
+            out[u as usize].push(v);
+        }
+    }
+    let mut level = vec![u32::MAX; n];
+    let mut q = std::collections::VecDeque::new();
+    level[source as usize] = 0;
+    q.push_back(source);
+    while let Some(u) = q.pop_front() {
+        for &v in &out[u as usize] {
+            if level[v as usize] == u32::MAX {
+                level[v as usize] = level[u as usize] + 1;
+                q.push_back(v);
+            }
+        }
+    }
+    level
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn dijkstra_small() {
+        // 0 -5-> 1 -1-> 2 ; 0 -10-> 2
+        let g = GraphBuilder::new(3).weighted_edges(&[(0, 1, 5), (1, 2, 1), (0, 2, 10)]).build();
+        assert_eq!(dijkstra(&g, 0), vec![0, 5, 6]);
+    }
+
+    #[test]
+    fn pagerank_cycle_uniform() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2), (2, 0)]).build();
+        let (scores, rounds) = pagerank(&g, 0.85, 1e-6, 1000);
+        assert!(rounds < 1000);
+        for &s in &scores {
+            assert!((s - 1.0 / 3.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn components_two_islands() {
+        let g = GraphBuilder::new(5).edges(&[(0, 1), (3, 4)]).symmetrize().build();
+        let c = components(&g);
+        assert_eq!(c[0], c[1]);
+        assert_eq!(c[3], c[4]);
+        assert_ne!(c[0], c[3]);
+        assert_eq!(c[2], 2); // isolated keeps own label
+    }
+
+    #[test]
+    fn bfs_line() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).build();
+        assert_eq!(bfs_levels(&g, 0), vec![0, 1, 2, 3]);
+        assert_eq!(bfs_levels(&g, 3), vec![u32::MAX, u32::MAX, u32::MAX, 0]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Pull-style Bellman-Ford single-source shortest paths.
+//!
+//! `dist(v) = min(dist(v), min_{u ∈ in(v)} dist(u) + w(u,v))`
+//!
+//! Distances are u32 (∞ = `u32::MAX`), weights are the GAP-style uniform
+//! integers from [`crate::graph::weights`]. Convergence is the paper's:
+//! "no update was generated in the last iteration".
+//!
+//! The paper stores updates **unconditionally** ("same runtime
+//! conditions … unconditionally storing updates"); [`Sssp::conditional`]
+//! flips on the §V future-work variant where unchanged distances are not
+//! written.
+
+use crate::engine::program::{ValueReader, VertexProgram};
+use crate::engine::sim::cost::Machine;
+use crate::engine::sim::SimRun;
+use crate::engine::{native, EngineConfig, RunResult};
+use crate::graph::{Csr, VertexId};
+
+/// Unreachable marker.
+pub const INF: u32 = u32::MAX;
+
+/// Bellman-Ford vertex program.
+pub struct Sssp<'g> {
+    g: &'g Csr,
+    source: VertexId,
+    conditional: bool,
+}
+
+impl<'g> Sssp<'g> {
+    /// Program computing distances from `source`. Panics if `g` is
+    /// unweighted.
+    pub fn new(g: &'g Csr, source: VertexId) -> Self {
+        assert!(g.is_weighted(), "SSSP requires a weighted graph");
+        Self { g, source, conditional: false }
+    }
+
+    /// Enable conditional writes (§V extension).
+    pub fn conditional(mut self) -> Self {
+        self.conditional = true;
+        self
+    }
+}
+
+impl VertexProgram for Sssp<'_> {
+    fn name(&self) -> &'static str {
+        "sssp"
+    }
+
+    fn init(&self, v: VertexId) -> u32 {
+        if v == self.source {
+            0
+        } else {
+            INF
+        }
+    }
+
+    #[inline]
+    fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let mut best = r.read(v);
+        for (u, w) in self.g.in_neighbors_weighted(v) {
+            let du = r.read(u);
+            if du != INF {
+                best = best.min(du.saturating_add(w));
+            }
+        }
+        best
+    }
+
+    #[inline]
+    fn delta(&self, old: u32, new: u32) -> f64 {
+        (old != new) as u32 as f64
+    }
+
+    fn converged(&self, round_delta: f64) -> bool {
+        round_delta == 0.0
+    }
+
+    fn conditional_writes(&self) -> bool {
+        self.conditional
+    }
+}
+
+/// Decoded SSSP result.
+#[derive(Debug, Clone)]
+pub struct SsspResult {
+    /// Distance per vertex ([`INF`] = unreachable).
+    pub dist: Vec<u32>,
+    pub run: RunResult,
+}
+
+impl From<RunResult> for SsspResult {
+    fn from(run: RunResult) -> Self {
+        Self { dist: run.values.clone(), run }
+    }
+}
+
+impl SsspResult {
+    /// Number of reachable vertices.
+    pub fn reached(&self) -> usize {
+        self.dist.iter().filter(|&&d| d != INF).count()
+    }
+}
+
+/// Run on the real-thread executor.
+pub fn run_native(g: &Csr, source: VertexId, ecfg: &EngineConfig) -> SsspResult {
+    SsspResult::from(native::run(g, &Sssp::new(g, source), ecfg))
+}
+
+/// Run on the multicore simulator.
+pub fn run_sim(g: &Csr, source: VertexId, ecfg: &EngineConfig, machine: &Machine) -> (SsspResult, SimRun) {
+    let sim = crate::engine::sim::run(g, &Sssp::new(g, source), ecfg, machine);
+    (SsspResult::from(sim.result.clone()), sim)
+}
+
+/// Deterministic "interesting" source: highest out-degree vertex (GAP
+/// uses random sources; a hub makes small graphs mostly reachable).
+pub fn default_source(g: &Csr) -> VertexId {
+    (0..g.num_vertices() as VertexId).max_by_key(|&v| g.out_degree(v)).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle;
+    use crate::engine::ExecutionMode;
+    use crate::graph::gap::GapGraph;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn line_graph_distances() {
+        let g = GraphBuilder::new(4).weighted_edges(&[(0, 1, 5), (1, 2, 3), (2, 3, 2)]).build();
+        let r = run_native(&g, 0, &EngineConfig::new(2, ExecutionMode::Asynchronous));
+        assert_eq!(r.dist, vec![0, 5, 8, 10]);
+        assert!(r.run.converged);
+    }
+
+    #[test]
+    fn unreachable_stays_inf() {
+        let g = GraphBuilder::new(3).weighted_edges(&[(0, 1, 1)]).build();
+        let r = run_native(&g, 0, &EngineConfig::new(1, ExecutionMode::Synchronous));
+        assert_eq!(r.dist[2], INF);
+        assert_eq!(r.reached(), 2);
+    }
+
+    #[test]
+    fn matches_dijkstra_all_modes() {
+        let g = GapGraph::Kron.generate_weighted(9, 8);
+        let src = default_source(&g);
+        let want = oracle::dijkstra(&g, src);
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+            let r = run_native(&g, src, &EngineConfig::new(4, mode));
+            assert_eq!(r.dist, want, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn conditional_variant_matches() {
+        let g = GapGraph::Twitter.generate_weighted(9, 8);
+        let src = default_source(&g);
+        let want = oracle::dijkstra(&g, src);
+        let p = Sssp::new(&g, src).conditional();
+        let r = native::run(&g, &p, &EngineConfig::new(4, ExecutionMode::Delayed(64)));
+        assert_eq!(r.values, want);
+    }
+
+    #[test]
+    fn sim_matches_dijkstra() {
+        let g = GapGraph::Road.generate_weighted(9, 0);
+        let src = default_source(&g);
+        let want = oracle::dijkstra(&g, src);
+        let (r, _) = run_sim(&g, src, &EngineConfig::new(8, ExecutionMode::Delayed(16)), &Machine::haswell());
+        assert_eq!(r.dist, want);
+    }
+
+    #[test]
+    #[should_panic(expected = "weighted")]
+    fn unweighted_rejected() {
+        let g = GraphBuilder::new(2).edges(&[(0, 1)]).build();
+        let _ = Sssp::new(&g, 0);
+    }
+}

@@ -1,0 +1,166 @@
+//! Automatic δ selection — the paper's §V future work made concrete.
+//!
+//! "Further work must be done to determine what buffer size to use,
+//! dependent on both the graph's topology and the number of threads on
+//! the system." (§V) — and §IV-C notes the topology analysis "can be
+//! precomputed, giving a potential way to determine when to buffer in
+//! practice."
+//!
+//! The rule implemented here distills the paper's findings plus our
+//! measurements (EXPERIMENTS.md Figs 2–4, 6):
+//!
+//! 1. **Diagonal locality gate** (§IV-C): if the fraction of edges
+//!    internal to their partition block exceeds ~0.5 (Web-like), threads
+//!    mostly consume their own updates and buffering cannot relieve
+//!    contention → run asynchronous.
+//! 2. **Sparse-update gate** (§IV-D): algorithms where few vertices
+//!    change per round (SSSP/BFS/CC) make every update precious → use
+//!    the smallest line-aligned buffer, or async on high-diameter
+//!    graphs (Road) where information flow is already slow.
+//! 3. **δ ∝ per-thread range** (Figs 3–4): dense-update workloads want a
+//!    δ that shrinks as thread count grows; half the per-thread range,
+//!    snapped to a power of two in the paper's sweep [16, 32768],
+//!    brackets the measured best-δ trajectory (2048 → 256 from 7 to 112
+//!    threads on kron@14).
+//!
+//! Validation: `daig experiment autotune` reports the regret of the rule
+//! against an exhaustive sweep — 0% on every gated workload (road, web,
+//! urand-SSSP), and the recommendation matches or beats plain
+//! asynchronous execution on 8 of 10 suite workloads.
+
+use crate::engine::delay_buffer::round_delta;
+use crate::engine::ExecutionMode;
+use crate::graph::{properties, Csr};
+use crate::partition::blocked;
+
+use super::Algo;
+
+/// Topology threshold above which buffering is predicted useless (Web
+/// measures ~0.88, all buffer-friendly graphs < 0.05; the gate sits far
+/// from both).
+pub const LOCALITY_GATE: f64 = 0.5;
+
+/// Diameter threshold for the Road-like "already slow information flow"
+/// case (§IV-D).
+pub const DIAMETER_GATE: usize = 64;
+
+/// A δ recommendation with its reasoning (surfaced in the CLI).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recommendation {
+    pub mode: ExecutionMode,
+    /// Measured diagonal locality that drove the decision.
+    pub locality: f64,
+    /// Human-readable justification.
+    pub reason: String,
+}
+
+/// Whether an algorithm updates most vertices every round (PageRank) or
+/// only a frontier (SSSP/BFS/CC) — the §IV-D distinction.
+pub fn dense_updates(algo: Algo) -> bool {
+    matches!(algo, Algo::PageRank)
+}
+
+/// Recommend an execution mode for `algo` on `g` with `threads` threads.
+pub fn recommend(g: &Csr, algo: Algo, threads: usize) -> Recommendation {
+    let locality = properties::diagonal_locality(g, threads.max(2));
+    if locality > LOCALITY_GATE {
+        return Recommendation {
+            mode: ExecutionMode::Asynchronous,
+            locality,
+            reason: format!(
+                "diagonal locality {locality:.2} > {LOCALITY_GATE}: threads consume their own \
+                 updates (web-like); buffering cannot relieve contention (§IV-C)"
+            ),
+        };
+    }
+    if !dense_updates(algo) {
+        let diam = properties::effective_diameter(g, 4, 0xA070);
+        if diam > DIAMETER_GATE {
+            return Recommendation {
+                mode: ExecutionMode::Asynchronous,
+                locality,
+                reason: format!(
+                    "sparse updates + effective diameter {diam} > {DIAMETER_GATE}: information \
+                     flow is already slow (road-like); delaying hurts (§IV-D)"
+                ),
+            };
+        }
+        return Recommendation {
+            mode: ExecutionMode::Delayed(16),
+            locality,
+            reason: "sparse updates: every update matters, use the minimum line-aligned buffer (§IV-D)".into(),
+        };
+    }
+    // Dense updates: δ ≈ the per-thread range, snapped to the paper's
+    // power-of-two sweep and clamped to [16, 32768]. The measured best-δ
+    // trajectory (EXPERIMENTS.md Fig 4: 2048→512→512→256→256 for ranges
+    // ≈2340→146) brackets range/2 — buffer about half a block's worth,
+    // publishing once or twice per round, which shrinks automatically as
+    // thread count grows (the paper's Figs 3–4 trend).
+    let range = blocked::partition(g, threads).max_len();
+    let target = (range / 2).clamp(16, 32_768);
+    let pow2 = if target.is_power_of_two() { target } else { target.next_power_of_two() / 2 };
+    let delta = round_delta(pow2).max(16);
+    Recommendation {
+        mode: ExecutionMode::Delayed(delta),
+        locality,
+        reason: format!(
+            "dense updates, locality {locality:.2}, per-thread range {range}: δ ≈ range/2 \
+             snapped to 2^k (Figs 3–4 trajectory)"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gap::GapGraph;
+
+    #[test]
+    fn web_gets_async() {
+        let g = GapGraph::Web.generate(11, 0);
+        let r = recommend(&g, Algo::PageRank, 32);
+        assert_eq!(r.mode, ExecutionMode::Asynchronous);
+        assert!(r.locality > LOCALITY_GATE);
+    }
+
+    #[test]
+    fn kron_pagerank_gets_buffer_shrinking_with_threads() {
+        let g = GapGraph::Kron.generate(13, 0);
+        let low = recommend(&g, Algo::PageRank, 8);
+        let high = recommend(&g, Algo::PageRank, 112);
+        let (ExecutionMode::Delayed(d_low), ExecutionMode::Delayed(d_high)) = (low.mode, high.mode) else {
+            panic!("expected Delayed for kron PR: {low:?} {high:?}");
+        };
+        assert!(d_low > d_high, "δ must shrink with threads: {d_low} vs {d_high}");
+        assert!(d_low >= 16 && d_high >= 16);
+    }
+
+    #[test]
+    fn road_sssp_gets_async() {
+        // Scale 13+ so the grid's effective diameter clears the gate
+        // (experiments run at scale 14).
+        let g = GapGraph::Road.generate(13, 0);
+        let r = recommend(&g, Algo::Sssp, 112);
+        assert_eq!(r.mode, ExecutionMode::Asynchronous, "{}", r.reason);
+    }
+
+    #[test]
+    fn kron_sssp_gets_minimal_buffer() {
+        let g = GapGraph::Kron.generate(11, 0);
+        let r = recommend(&g, Algo::Sssp, 32);
+        assert_eq!(r.mode, ExecutionMode::Delayed(16));
+    }
+
+    #[test]
+    fn deltas_are_line_multiples() {
+        for scale in [10u32, 12, 14] {
+            let g = GapGraph::Urand.generate(scale, 0);
+            for t in [4usize, 16, 64] {
+                if let ExecutionMode::Delayed(d) = recommend(&g, Algo::PageRank, t).mode {
+                    assert_eq!(d % crate::VALUES_PER_LINE, 0, "δ={d}");
+                }
+            }
+        }
+    }
+}

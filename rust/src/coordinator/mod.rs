@@ -1,0 +1,160 @@
+//! Experiment orchestration: everything needed to regenerate the paper's
+//! tables and figures from the command line.
+//!
+//! [`Workload`] names an (algorithm, graph) pair at a scale;
+//! [`sweep`] runs mode/δ/thread grids on the simulator; [`experiments`]
+//! maps each paper artifact (Table I … Fig. 6) to a driver; [`report`]
+//! renders the results as aligned text, CSV, and markdown.
+
+pub mod autotune;
+pub mod experiments;
+pub mod report;
+pub mod sweep;
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::{bfs, cc, pagerank, sssp};
+use crate::engine::sim::cost::Machine;
+use crate::engine::sim::SimRun;
+use crate::engine::{EngineConfig, RunResult};
+use crate::graph::gap::GapGraph;
+use crate::graph::Csr;
+
+/// The iterative algorithms the coordinator can drive.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algo {
+    PageRank,
+    Sssp,
+    Cc,
+    Bfs,
+}
+
+impl Algo {
+    /// CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Algo::PageRank => "pagerank",
+            Algo::Sssp => "sssp",
+            Algo::Cc => "cc",
+            Algo::Bfs => "bfs",
+        }
+    }
+
+    /// Parse a CLI name.
+    pub fn from_name(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "pagerank" | "pr" => Some(Algo::PageRank),
+            "sssp" | "bf" => Some(Algo::Sssp),
+            "cc" => Some(Algo::Cc),
+            "bfs" => Some(Algo::Bfs),
+            _ => None,
+        }
+    }
+
+    /// Whether the algorithm needs edge weights.
+    pub fn weighted(self) -> bool {
+        matches!(self, Algo::Sssp)
+    }
+}
+
+/// A named workload: algorithm × GAP-analog graph × scale.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub algo: Algo,
+    pub graph: GapGraph,
+    /// log2 of the vertex count target.
+    pub scale: u32,
+    /// Edges per vertex (ignored by Road).
+    pub edge_factor: usize,
+}
+
+impl Workload {
+    /// Generate the graph (weighted iff the algorithm requires it).
+    pub fn build_graph(&self) -> Csr {
+        if self.algo.weighted() {
+            self.graph.generate_weighted(self.scale, self.edge_factor)
+        } else {
+            self.graph.generate(self.scale, self.edge_factor)
+        }
+    }
+}
+
+/// Run a workload on the simulator; returns the run and its metrics.
+pub fn run_sim(g: &Csr, algo: Algo, ecfg: &EngineConfig, machine: &Machine) -> SimRun {
+    match algo {
+        Algo::PageRank => pagerank::run_sim(g, ecfg, &pagerank::PrConfig::default(), machine).1,
+        Algo::Sssp => sssp::run_sim(g, sssp::default_source(g), ecfg, machine).1,
+        Algo::Cc => cc::run_sim(g, ecfg, machine).1,
+        Algo::Bfs => bfs::run_sim(g, sssp::default_source(g), ecfg, machine).1,
+    }
+}
+
+/// Run a workload on the native threaded engine.
+pub fn run_native(g: &Csr, algo: Algo, ecfg: &EngineConfig) -> RunResult {
+    match algo {
+        Algo::PageRank => pagerank::run_native(g, ecfg, &pagerank::PrConfig::default()).run,
+        Algo::Sssp => sssp::run_native(g, sssp::default_source(g), ecfg).run,
+        Algo::Cc => cc::run_native(g, ecfg).run,
+        Algo::Bfs => bfs::run_native(g, sssp::default_source(g), ecfg).run,
+    }
+}
+
+/// Parse a machine preset name.
+pub fn machine_from_name(s: &str) -> Result<Machine> {
+    match s.to_ascii_lowercase().as_str() {
+        "haswell" | "haswell32" => Ok(Machine::haswell()),
+        "cascadelake" | "cascadelake112" | "clx" => Ok(Machine::cascade_lake()),
+        other => bail!("unknown machine '{other}' (haswell | cascadelake)"),
+    }
+}
+
+/// The paper's δ sweep: powers of two, 16 … 32768 elements (§IV), capped
+/// at `max` (δ beyond the per-thread range behaves as synchronous).
+pub fn delta_sweep(max: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut d = 16usize;
+    while d <= 32_768 && d <= max {
+        out.push(d);
+        d *= 2;
+    }
+    if out.is_empty() {
+        out.push(16);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn algo_names() {
+        for a in [Algo::PageRank, Algo::Sssp, Algo::Cc, Algo::Bfs] {
+            assert_eq!(Algo::from_name(a.name()), Some(a));
+        }
+        assert_eq!(Algo::from_name("pr"), Some(Algo::PageRank));
+        assert!(Algo::from_name("x").is_none());
+    }
+
+    #[test]
+    fn workload_builds_weighted_for_sssp() {
+        let w = Workload { algo: Algo::Sssp, graph: GapGraph::Kron, scale: 7, edge_factor: 4 };
+        assert!(w.build_graph().is_weighted());
+        let w = Workload { algo: Algo::PageRank, ..w };
+        assert!(!w.build_graph().is_weighted());
+    }
+
+    #[test]
+    fn delta_sweep_shape() {
+        assert_eq!(delta_sweep(100), vec![16, 32, 64]);
+        assert_eq!(delta_sweep(8), vec![16]); // never empty
+        assert!(delta_sweep(1 << 20).contains(&32_768));
+    }
+
+    #[test]
+    fn machines_parse() {
+        assert_eq!(machine_from_name("haswell").unwrap().threads, 32);
+        assert_eq!(machine_from_name("clx").unwrap().threads, 112);
+        assert!(machine_from_name("zen").is_err());
+    }
+}

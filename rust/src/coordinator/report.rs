@@ -1,0 +1,90 @@
+//! Result emission: console text + `results/<id>.csv` + `results/<id>.md`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::util::table::Table;
+
+/// Sink for experiment tables.
+pub struct Report {
+    /// Output directory; `None` = console only.
+    dir: Option<PathBuf>,
+    /// Quiet mode suppresses console output (tests).
+    quiet: bool,
+}
+
+impl Report {
+    /// Report into `dir` (created if missing).
+    pub fn to_dir(dir: &str) -> Result<Self> {
+        fs::create_dir_all(dir).with_context(|| format!("create {dir}"))?;
+        Ok(Self { dir: Some(PathBuf::from(dir)), quiet: false })
+    }
+
+    /// Console-only report.
+    pub fn console() -> Self {
+        Self { dir: None, quiet: false }
+    }
+
+    /// Silent report (integration tests).
+    pub fn sink() -> Self {
+        Self { dir: None, quiet: true }
+    }
+
+    /// Quiet file report.
+    pub fn quiet_dir(dir: &str) -> Result<Self> {
+        let mut r = Self::to_dir(dir)?;
+        r.quiet = true;
+        Ok(r)
+    }
+
+    /// Emit one table under an artifact id (e.g. "table1", "fig2").
+    pub fn emit(&self, id: &str, t: &Table) -> Result<()> {
+        if !self.quiet {
+            println!("{}", t.to_text());
+        }
+        if let Some(dir) = &self.dir {
+            fs::write(dir.join(format!("{id}.csv")), t.to_csv())?;
+            fs::write(dir.join(format!("{id}.md")), t.to_markdown())?;
+        }
+        Ok(())
+    }
+
+    /// Emit free-form notes alongside an artifact.
+    pub fn note(&self, id: &str, text: &str) -> Result<()> {
+        if !self.quiet {
+            println!("{text}");
+        }
+        if let Some(dir) = &self.dir {
+            fs::write(dir.join(format!("{id}.txt")), text)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("daig-report-test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let r = Report::quiet_dir(dir.to_str().unwrap()).unwrap();
+        let mut t = Table::new("t", &["a"]);
+        t.row(vec!["1".into()]);
+        r.emit("table9", &t).unwrap();
+        r.note("table9", "hello").unwrap();
+        assert!(dir.join("table9.csv").exists());
+        assert!(dir.join("table9.md").exists());
+        assert!(dir.join("table9.txt").exists());
+    }
+
+    #[test]
+    fn sink_swallows() {
+        let r = Report::sink();
+        let t = Table::new("t", &["a"]);
+        r.emit("x", &t).unwrap();
+    }
+}

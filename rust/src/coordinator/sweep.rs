@@ -1,0 +1,90 @@
+//! Mode/δ/thread sweeps on the simulator — the inner loop of every
+//! figure driver.
+
+use crate::engine::sim::cost::Machine;
+use crate::engine::{EngineConfig, ExecutionMode};
+use crate::graph::Csr;
+use crate::partition::blocked;
+
+use super::{delta_sweep, run_sim, Algo};
+
+/// One sweep point.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub mode: ExecutionMode,
+    pub rounds: usize,
+    /// Total simulated seconds.
+    pub time_s: f64,
+    /// Average simulated seconds per round (Table I column).
+    pub avg_round_s: f64,
+    pub invalidations: u64,
+    pub flushes: u64,
+}
+
+/// Sweep sync + async + the paper's δ grid at a fixed thread count.
+pub fn modes(g: &Csr, algo: Algo, threads: usize, machine: &Machine) -> Vec<SweepPoint> {
+    let max_range = blocked::partition(g, threads).max_len();
+    let mut out = Vec::new();
+    let mut list = vec![ExecutionMode::Synchronous, ExecutionMode::Asynchronous];
+    list.extend(delta_sweep(max_range).into_iter().map(ExecutionMode::Delayed));
+    for mode in list {
+        out.push(point(g, algo, threads, machine, mode));
+    }
+    out
+}
+
+/// Run one configuration.
+pub fn point(g: &Csr, algo: Algo, threads: usize, machine: &Machine, mode: ExecutionMode) -> SweepPoint {
+    let sim = run_sim(g, algo, &EngineConfig::new(threads, mode), machine);
+    SweepPoint {
+        mode,
+        rounds: sim.result.num_rounds(),
+        time_s: sim.result.total_time(),
+        avg_round_s: sim.result.avg_round_time(),
+        invalidations: sim.metrics.invalidations,
+        flushes: sim.result.total_flushes(),
+    }
+}
+
+/// The best (lowest total time) delayed point of a sweep, if any.
+pub fn best_delayed(points: &[SweepPoint]) -> Option<&SweepPoint> {
+    points
+        .iter()
+        .filter(|p| matches!(p.mode, ExecutionMode::Delayed(_)))
+        .min_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap())
+}
+
+/// The synchronous / asynchronous points of a sweep.
+pub fn find_mode<'a>(points: &'a [SweepPoint], mode: ExecutionMode) -> Option<&'a SweepPoint> {
+    points.iter().find(|p| p.mode == mode)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gap::GapGraph;
+
+    #[test]
+    fn sweep_covers_modes() {
+        let g = GapGraph::Kron.generate(9, 8);
+        let pts = modes(&g, Algo::PageRank, 8, &Machine::haswell());
+        assert!(pts.len() >= 3);
+        assert!(find_mode(&pts, ExecutionMode::Synchronous).is_some());
+        assert!(find_mode(&pts, ExecutionMode::Asynchronous).is_some());
+        let best = best_delayed(&pts).unwrap();
+        assert!(matches!(best.mode, ExecutionMode::Delayed(_)));
+        // All runs converged on the same algorithm => same-ish rounds.
+        for p in &pts {
+            assert!(p.rounds > 0 && p.time_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn sync_has_most_rounds() {
+        let g = GapGraph::Road.generate(10, 0);
+        let pts = modes(&g, Algo::PageRank, 8, &Machine::haswell());
+        let sync = find_mode(&pts, ExecutionMode::Synchronous).unwrap().rounds;
+        let asyn = find_mode(&pts, ExecutionMode::Asynchronous).unwrap().rounds;
+        assert!(asyn <= sync, "async {asyn} vs sync {sync}");
+    }
+}

@@ -1,0 +1,46 @@
+//! Convergence criteria used by the paper's two workloads.
+//!
+//! * PageRank: "total absolute page rank score change across vertices
+//!   from the penultimate iteration totals 1e-4" — an L1-norm threshold.
+//! * SSSP: "no update was generated in the last iteration".
+
+/// A reusable convergence policy (value-level deltas are produced by the
+/// [`crate::engine::VertexProgram`]; this just interprets the round sum).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Convergence {
+    /// Stop when the summed |Δvalue| of a round is below the threshold.
+    L1Below(f64),
+    /// Stop when no vertex changed in a round.
+    NoUpdates,
+}
+
+impl Convergence {
+    /// Has the run converged given this round's summed delta?
+    #[inline]
+    pub fn met(&self, round_delta: f64) -> bool {
+        match self {
+            Convergence::L1Below(eps) => round_delta < *eps,
+            Convergence::NoUpdates => round_delta == 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn l1() {
+        let c = Convergence::L1Below(1e-4);
+        assert!(!c.met(1e-3));
+        assert!(c.met(1e-5));
+        assert!(c.met(0.0));
+    }
+
+    #[test]
+    fn no_updates() {
+        let c = Convergence::NoUpdates;
+        assert!(!c.met(1.0));
+        assert!(c.met(0.0));
+    }
+}

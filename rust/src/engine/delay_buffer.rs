@@ -1,0 +1,203 @@
+//! The delay buffer — the mechanism behind the paper's δ parameter.
+//!
+//! Each thread owns one buffer of capacity δ (rounded **up** to a whole
+//! number of cache lines, §III-B: "δ is sized … to a multiple of the
+//! cache line size so that flushing a full buffer makes maximal use of
+//! bringing a cache line in"). As the thread sweeps its contiguous vertex
+//! range it pushes each newly computed value; when the buffer fills (or
+//! the range ends) the values are copied in one contiguous run into the
+//! shared array — a single burst of stores instead of one shared-line
+//! invalidation per element.
+
+use crate::graph::VertexId;
+use crate::util::aligned::AlignedBuf;
+use crate::VALUES_PER_LINE;
+
+use super::shared::SharedValues;
+
+/// Per-thread delay buffer tracking which global range it mirrors.
+pub struct DelayBuffer {
+    buf: AlignedBuf,
+    /// Global index of the first buffered element.
+    base: VertexId,
+    /// Number of flushes performed (reported in RunResult).
+    flushes: u64,
+}
+
+/// Round δ up to a whole number of cache lines (and at least one line),
+/// as the paper prescribes. δ=0 stays 0 (asynchronous: no buffer).
+pub fn round_delta(delta: usize) -> usize {
+    if delta == 0 {
+        0
+    } else {
+        delta.div_ceil(VALUES_PER_LINE) * VALUES_PER_LINE
+    }
+}
+
+impl DelayBuffer {
+    /// Buffer with capacity [`round_delta`]`(delta)` elements.
+    pub fn new(delta: usize) -> Self {
+        Self { buf: AlignedBuf::with_capacity(round_delta(delta)), base: 0, flushes: 0 }
+    }
+
+    /// Capacity after cache-line rounding.
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Prepare for a sweep that will next write global index `start`.
+    pub fn begin(&mut self, start: VertexId) {
+        debug_assert!(self.buf.is_empty(), "begin() with unflushed data");
+        self.base = start;
+    }
+
+    /// Record the newly computed value for the *next* vertex in the
+    /// thread's contiguous sweep; flushes first if full. Returns `true`
+    /// if a flush happened (callers count contention events).
+    ///
+    /// With capacity 0 (async mode) the value is stored straight through.
+    #[inline]
+    pub fn push(&mut self, global: &SharedValues, value: u32) -> bool {
+        if self.buf.capacity() == 0 {
+            global.store(self.base, value);
+            self.base += 1;
+            return false;
+        }
+        let mut flushed = false;
+        if self.buf.is_full() {
+            self.flush(global);
+            flushed = true;
+        }
+        self.buf.push(value);
+        flushed
+    }
+
+    /// Publish all buffered values to the shared array.
+    pub fn flush(&mut self, global: &SharedValues) {
+        if self.buf.is_empty() {
+            return;
+        }
+        global.store_run(self.base, &self.buf);
+        self.base += self.buf.len() as VertexId;
+        self.buf.clear();
+        self.flushes += 1;
+    }
+
+    /// Conditional-write extension (§V future work): the next vertex in
+    /// the sweep keeps its old value, so nothing is staged for it — but
+    /// buffered runs must stay contiguous, so any pending values are
+    /// published first and the base advances past the skipped slot.
+    #[inline]
+    pub fn skip(&mut self, global: &SharedValues) {
+        if self.buf.capacity() != 0 {
+            self.flush(global);
+        }
+        self.base += 1;
+    }
+
+    /// §III-C local-read variant: if `v` is buffered but unflushed,
+    /// return its pending value.
+    #[inline]
+    pub fn pending(&self, v: VertexId) -> Option<u32> {
+        let off = v.checked_sub(self.base)? as usize;
+        if off < self.buf.len() {
+            Some(self.buf[off])
+        } else {
+            None
+        }
+    }
+
+    /// Number of elements currently buffered.
+    pub fn pending_len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Flush count so far.
+    pub fn flushes(&self) -> u64 {
+        self.flushes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding() {
+        assert_eq!(round_delta(0), 0);
+        assert_eq!(round_delta(1), 16);
+        assert_eq!(round_delta(16), 16);
+        assert_eq!(round_delta(17), 32);
+        assert_eq!(round_delta(32768), 32768);
+    }
+
+    #[test]
+    fn no_loss_across_flushes() {
+        let g = SharedValues::from_bits(vec![0; 100]);
+        let mut b = DelayBuffer::new(16);
+        b.begin(10);
+        for i in 0..50u32 {
+            b.push(&g, 1000 + i);
+        }
+        b.flush(&g);
+        let v = g.to_vec();
+        for i in 0..50usize {
+            assert_eq!(v[10 + i], 1000 + i as u32, "index {i}");
+        }
+        assert_eq!(v[9], 0);
+        assert_eq!(v[60], 0);
+        // 50 values, capacity 16: flushes at 16/32/48 + final = 4.
+        assert_eq!(b.flushes(), 4);
+    }
+
+    #[test]
+    fn zero_capacity_is_writethrough() {
+        let g = SharedValues::from_bits(vec![0; 8]);
+        let mut b = DelayBuffer::new(0);
+        b.begin(2);
+        b.push(&g, 7);
+        b.push(&g, 8);
+        assert_eq!(g.to_vec(), vec![0, 0, 7, 8, 0, 0, 0, 0]);
+        assert_eq!(b.flushes(), 0);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn pending_lookup() {
+        let g = SharedValues::from_bits(vec![0; 64]);
+        let mut b = DelayBuffer::new(16);
+        b.begin(5);
+        b.push(&g, 100);
+        b.push(&g, 101);
+        assert_eq!(b.pending(5), Some(100));
+        assert_eq!(b.pending(6), Some(101));
+        assert_eq!(b.pending(7), None); // not yet written
+        assert_eq!(b.pending(4), None); // before base
+        b.flush(&g);
+        assert_eq!(b.pending(5), None); // flushed
+        assert_eq!(g.load(5), 100);
+    }
+
+    #[test]
+    fn flush_on_empty_is_noop() {
+        let g = SharedValues::from_bits(vec![0; 4]);
+        let mut b = DelayBuffer::new(16);
+        b.begin(0);
+        b.flush(&g);
+        assert_eq!(b.flushes(), 0);
+    }
+
+    #[test]
+    fn push_signals_flush() {
+        let g = SharedValues::from_bits(vec![0; 64]);
+        let mut b = DelayBuffer::new(16);
+        b.begin(0);
+        let mut flushes = 0;
+        for i in 0..33u32 {
+            if b.push(&g, i) {
+                flushes += 1;
+            }
+        }
+        assert_eq!(flushes, 2); // on the 17th and 33rd push
+    }
+}

@@ -1,0 +1,149 @@
+//! Execution engine: the paper's three modes over pull-style vertex
+//! programs.
+//!
+//! * [`ExecutionMode::Synchronous`] — Jacobi-style double buffering; new
+//!   values become visible only at the next round.
+//! * [`ExecutionMode::Asynchronous`] — Gauss-Seidel-style single shared
+//!   array; every store is immediately visible (and immediately
+//!   invalidates the cache line for any other thread reading it).
+//! * [`ExecutionMode::Delayed`]`(δ)` — **the contribution**: thread-local
+//!   aligned buffers of δ elements, flushed to the shared array when full
+//!   or at end of the thread's range. Coalesces invalidation-causing
+//!   writes while still propagating values within a round.
+//!
+//! Two executors consume the same [`VertexProgram`]s:
+//! [`native::run`] uses real OS threads (correct parallel library);
+//! [`sim::run`] is a deterministic multicore-with-caches simulator that
+//! reproduces the paper's contention measurements on any host
+//! (DESIGN.md §3 explains the substitution).
+
+pub mod convergence;
+pub mod delay_buffer;
+pub mod native;
+pub mod program;
+pub mod shared;
+pub mod sim;
+pub mod stats;
+
+pub use program::{ValueReader, VertexProgram};
+pub use stats::{RoundStats, RunResult};
+
+use crate::partition::PartitionMap;
+
+/// How updates propagate between threads. δ is in 32-bit elements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecutionMode {
+    /// Double-buffered: visibility deferred to the next round.
+    Synchronous,
+    /// In-place: every write immediately visible.
+    Asynchronous,
+    /// Buffer up to δ elements per thread before publishing.
+    /// `Delayed(0)` behaves exactly like `Asynchronous`;
+    /// `Delayed(≥ thread range)` approaches `Synchronous`.
+    Delayed(usize),
+}
+
+impl ExecutionMode {
+    /// Canonical short label for reports ("sync", "async", "d256"…).
+    pub fn label(&self) -> String {
+        match self {
+            ExecutionMode::Synchronous => "sync".into(),
+            ExecutionMode::Asynchronous => "async".into(),
+            ExecutionMode::Delayed(d) => format!("d{d}"),
+        }
+    }
+
+    /// Parse labels produced by [`Self::label`].
+    pub fn from_label(s: &str) -> Option<Self> {
+        match s {
+            "sync" => Some(ExecutionMode::Synchronous),
+            "async" => Some(ExecutionMode::Asynchronous),
+            _ => s.strip_prefix('d').and_then(|d| d.parse().ok()).map(ExecutionMode::Delayed),
+        }
+    }
+}
+
+/// Which partitioner assigns vertices to threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionStrategy {
+    /// The paper's contiguous in-degree-balanced blocks.
+    #[default]
+    BlockedByDegree,
+    /// Ablation: equal vertex counts.
+    EqualVertex,
+}
+
+/// Engine configuration shared by both executors.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Number of (real or simulated) worker threads.
+    pub threads: usize,
+    pub mode: ExecutionMode,
+    pub partition: PartitionStrategy,
+    /// §III-C variant: serve reads of not-yet-flushed own values from the
+    /// local delay buffer. The paper found this rarely faster; default off.
+    pub local_reads: bool,
+    /// Safety valve: abort after this many rounds.
+    pub max_rounds: usize,
+}
+
+impl EngineConfig {
+    /// Config with defaults (blocked partitioning, global reads).
+    pub fn new(threads: usize, mode: ExecutionMode) -> Self {
+        Self { threads, mode, partition: PartitionStrategy::default(), local_reads: false, max_rounds: 10_000 }
+    }
+
+    /// Builder-style: enable local reads.
+    pub fn with_local_reads(mut self) -> Self {
+        self.local_reads = true;
+        self
+    }
+
+    /// Builder-style: choose partitioner.
+    pub fn with_partition(mut self, p: PartitionStrategy) -> Self {
+        self.partition = p;
+        self
+    }
+
+    /// Resolve the partition map for a graph.
+    pub fn partition_map(&self, g: &crate::graph::Csr) -> PartitionMap {
+        match self.partition {
+            PartitionStrategy::BlockedByDegree => crate::partition::blocked::partition(g, self.threads),
+            PartitionStrategy::EqualVertex => crate::partition::equal_vertex::partition(g, self.threads),
+        }
+    }
+
+    /// Effective δ for a thread range of `len` elements: `Synchronous`
+    /// buffers everything, `Asynchronous` nothing.
+    pub fn effective_delta(&self, len: usize) -> usize {
+        match self.mode {
+            ExecutionMode::Synchronous => len,
+            ExecutionMode::Asynchronous => 0,
+            ExecutionMode::Delayed(d) => d.min(len),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_labels_roundtrip() {
+        for m in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(256)] {
+            assert_eq!(ExecutionMode::from_label(&m.label()), Some(m));
+        }
+        assert_eq!(ExecutionMode::from_label("bogus"), None);
+    }
+
+    #[test]
+    fn effective_delta() {
+        let c = EngineConfig::new(4, ExecutionMode::Delayed(100));
+        assert_eq!(c.effective_delta(50), 50);
+        assert_eq!(c.effective_delta(500), 100);
+        let s = EngineConfig::new(4, ExecutionMode::Synchronous);
+        assert_eq!(s.effective_delta(500), 500);
+        let a = EngineConfig::new(4, ExecutionMode::Asynchronous);
+        assert_eq!(a.effective_delta(500), 0);
+    }
+}

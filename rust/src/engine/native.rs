@@ -1,0 +1,390 @@
+//! Real-thread executor: `std::thread` workers, one per partition block,
+//! barrier-synchronized rounds, with value visibility governed by
+//! [`ExecutionMode`].
+//!
+//! All three modes share the same round structure (the paper counts
+//! rounds for the asynchronous version too — threads sweep their range
+//! once per round and a barrier separates rounds so convergence can be
+//! evaluated globally); only *when* newly computed values become visible
+//! differs:
+//!
+//! * sync — written to the inactive half of a double buffer, visible
+//!   next round;
+//! * async — stored straight into the shared array;
+//! * delayed(δ) — staged in a [`DelayBuffer`] and published every δ
+//!   elements.
+
+use std::cell::RefCell;
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Barrier, Mutex};
+use std::time::Instant;
+
+use crate::graph::{Csr, VertexId};
+
+use super::delay_buffer::DelayBuffer;
+use super::program::{ValueReader, VertexProgram};
+use super::shared::{SharedValues, SliceReader};
+use super::stats::{RoundStats, RunResult};
+use super::{EngineConfig, ExecutionMode};
+
+/// Reader for async/delayed modes: global array, optionally patched with
+/// the thread's own unflushed values (§III-C local-read variant).
+struct AsyncReader<'a> {
+    global: &'a SharedValues,
+    local: Option<&'a RefCell<DelayBuffer>>,
+}
+
+impl ValueReader for AsyncReader<'_> {
+    #[inline]
+    fn read(&mut self, v: VertexId) -> u32 {
+        if let Some(buf) = self.local {
+            if let Some(bits) = buf.borrow().pending(v) {
+                return bits;
+            }
+        }
+        self.global.load(v)
+    }
+}
+
+/// Shared control block for the worker gang.
+struct Ctrl {
+    barrier: Barrier,
+    /// Per-thread round delta (f64 bits), written by owner only.
+    deltas: Vec<AtomicU64>,
+    /// Per-thread cumulative flush count.
+    flushes: Vec<AtomicU64>,
+    /// Set by thread 0 once converged / max rounds hit.
+    done: AtomicBool,
+}
+
+/// Run `prog` on `g` under `cfg`. Spawns `cfg.threads` OS threads (they
+/// live for the whole run). Deterministic for `Synchronous` mode;
+/// async/delayed results depend on interleaving but converge to the same
+/// fixed point (chaotic relaxation).
+pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult {
+    let n = g.num_vertices();
+    let pm = cfg.partition_map(g);
+    let t_count = pm.num_parts();
+    let init: Vec<u32> = (0..n as VertexId).map(|v| prog.init(v)).collect();
+
+    let global = SharedValues::from_bits(init.iter().copied());
+    // Double buffer for sync mode only (async/delayed read+write `global`).
+    let back = SharedValues::from_bits(init.iter().copied());
+
+    let ctrl = Ctrl {
+        barrier: Barrier::new(t_count),
+        deltas: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        flushes: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        done: AtomicBool::new(false),
+    };
+    // Written by thread 0 only (between barriers); Mutex for Sync-ness.
+    let rounds_out: Mutex<Vec<RoundStats>> = Mutex::new(Vec::new());
+    let converged_out = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        for t in 0..t_count {
+            let range = pm.range(t);
+            let ctrl = &ctrl;
+            let global = &global;
+            let back = &back;
+            let rounds_out = &rounds_out;
+            let converged_out = &converged_out;
+            let handle = move || {
+                worker(t, range, g, prog, cfg, ctrl, global, back, rounds_out, converged_out);
+            };
+            if t == t_count - 1 {
+                // Run the last worker on the caller thread: saves one
+                // spawn and keeps thread 0 = a spawned worker symmetric.
+                handle();
+            } else {
+                scope.spawn(handle);
+            }
+        }
+    });
+
+    let rounds = rounds_out.into_inner().unwrap();
+    let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
+    let values = if sync_mode {
+        // Round r writes into `back` when r is even (buffers swap roles
+        // each round); after `rounds.len()` rounds the freshest buffer is:
+        if rounds.len() % 2 == 1 {
+            back.to_vec()
+        } else {
+            global.to_vec()
+        }
+    } else {
+        global.to_vec()
+    };
+
+    RunResult {
+        values,
+        rounds,
+        mode: cfg.mode,
+        threads: t_count,
+        converged: converged_out.load(Ordering::SeqCst),
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker<P: VertexProgram>(
+    t: usize,
+    range: Range<VertexId>,
+    g: &Csr,
+    prog: &P,
+    cfg: &EngineConfig,
+    ctrl: &Ctrl,
+    global: &SharedValues,
+    back: &SharedValues,
+    rounds_out: &Mutex<Vec<RoundStats>>,
+    converged_out: &AtomicBool,
+) {
+    let _ = g;
+    let delta_cap = cfg.effective_delta(range.len());
+    let buf = RefCell::new(DelayBuffer::new(delta_cap));
+    let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
+    let conditional = prog.conditional_writes();
+
+    let mut round = 0usize;
+    let mut t0 = Instant::now();
+    loop {
+        let mut delta = 0.0f64;
+
+        if sync_mode {
+            // Buffers swap roles each round; `front` is read-only here
+            // because every writer targets `write` and ranges are disjoint.
+            let (front, write) = if round % 2 == 0 { (global, back) } else { (back, global) };
+            let snapshot_reader = front; // reads are racy-free: nobody writes front this round
+            for v in range.clone() {
+                let old = snapshot_reader.load(v);
+                let mut rd = SharedReaderShim(snapshot_reader);
+                let new = prog.update(v, &mut rd);
+                delta += prog.delta(old, new);
+                // Sync must carry unchanged values across the swap.
+                write.store(v, if conditional && new == old { old } else { new });
+            }
+        } else {
+            buf.borrow_mut().begin(range.start);
+            for v in range.clone() {
+                let old = global.load(v);
+                let new = {
+                    let mut rd = AsyncReader { global, local: cfg.local_reads.then_some(&buf) };
+                    prog.update(v, &mut rd)
+                };
+                delta += prog.delta(old, new);
+                let mut b = buf.borrow_mut();
+                if conditional && new == old {
+                    b.skip(global);
+                } else {
+                    b.push(global, new);
+                }
+            }
+            buf.borrow_mut().flush(global);
+        }
+
+        ctrl.deltas[t].store(delta.to_bits(), Ordering::Relaxed);
+        ctrl.flushes[t].store(buf.borrow().flushes(), Ordering::Relaxed);
+
+        // ---- barrier 1: all writes of the round done ----
+        ctrl.barrier.wait();
+
+        if t == 0 {
+            let round_delta: f64 = ctrl.deltas.iter().map(|d| f64::from_bits(d.load(Ordering::Relaxed))).sum();
+            let total_flushes: u64 = ctrl.flushes.iter().map(|f| f.load(Ordering::Relaxed)).sum();
+            let mut rounds = rounds_out.lock().unwrap();
+            let prev_flushes: u64 = rounds.iter().map(|r: &RoundStats| r.flushes).sum();
+            rounds.push(RoundStats {
+                time_s: t0.elapsed().as_secs_f64(),
+                delta: round_delta,
+                flushes: total_flushes - prev_flushes,
+            });
+            let conv = prog.converged(round_delta);
+            if conv || rounds.len() >= cfg.max_rounds {
+                ctrl.done.store(true, Ordering::SeqCst);
+                converged_out.store(conv, Ordering::SeqCst);
+            }
+        }
+
+        // ---- barrier 2: decision published ----
+        ctrl.barrier.wait();
+        if ctrl.done.load(Ordering::SeqCst) {
+            return;
+        }
+        if t == 0 {
+            t0 = Instant::now();
+        }
+        round += 1;
+    }
+}
+
+/// Local shim: a reader over `SharedValues` (can't use `SharedReader`
+/// because sync mode's front buffer alternates between the two arrays).
+struct SharedReaderShim<'a>(&'a SharedValues);
+
+impl ValueReader for SharedReaderShim<'_> {
+    #[inline]
+    fn read(&mut self, v: VertexId) -> u32 {
+        self.0.load(v)
+    }
+}
+
+/// Serial reference executor: single thread, plain Jacobi (sync) sweep.
+/// Used as the oracle in tests: `run` with `Synchronous` must match this
+/// bit-exactly for any thread count.
+pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -> RunResult {
+    let n = g.num_vertices();
+    let mut front: Vec<u32> = (0..n as VertexId).map(|v| prog.init(v)).collect();
+    let mut back = front.clone();
+    let mut rounds = Vec::new();
+    let mut converged = false;
+    while rounds.len() < max_rounds {
+        let t0 = Instant::now();
+        let mut delta = 0.0;
+        for v in 0..n as VertexId {
+            let mut rd = SliceReader(&front);
+            let new = prog.update(v, &mut rd);
+            delta += prog.delta(front[v as usize], new);
+            back[v as usize] = new;
+        }
+        std::mem::swap(&mut front, &mut back);
+        rounds.push(RoundStats { time_s: t0.elapsed().as_secs_f64(), delta, flushes: 0 });
+        if prog.converged(delta) {
+            converged = true;
+            break;
+        }
+    }
+    RunResult { values: front, rounds, mode: ExecutionMode::Synchronous, threads: 1, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::program::ValueReader;
+    use crate::graph::gap::GapGraph;
+
+    /// Toy program: each vertex takes max(own, in-neighbors) — converges
+    /// to per-component max; easy to verify and sensitive to value
+    /// propagation speed (async should need fewer rounds than sync).
+    struct MaxProp<'g> {
+        g: &'g Csr,
+    }
+
+    impl VertexProgram for MaxProp<'_> {
+        fn name(&self) -> &'static str {
+            "maxprop"
+        }
+        fn init(&self, v: VertexId) -> u32 {
+            v * 7919 % 10007
+        }
+        fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+            let mut best = r.read(v);
+            for &u in self.g.in_neighbors(v) {
+                best = best.max(r.read(u));
+            }
+            best
+        }
+        fn delta(&self, old: u32, new: u32) -> f64 {
+            (old != new) as u32 as f64
+        }
+        fn converged(&self, d: f64) -> bool {
+            d == 0.0
+        }
+    }
+
+    fn fixed_point_serial(g: &Csr) -> Vec<u32> {
+        run_serial_sync(g, &MaxProp { g }, 10_000).values
+    }
+
+    #[test]
+    fn sync_matches_serial_any_thread_count() {
+        let g = GapGraph::Kron.generate(9, 8);
+        let oracle = fixed_point_serial(&g);
+        for t in [1, 2, 4, 7] {
+            let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(t, ExecutionMode::Synchronous));
+            assert!(r.converged);
+            assert_eq!(r.values, oracle, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn all_modes_reach_same_fixed_point() {
+        let g = GapGraph::Web.generate(9, 4);
+        let oracle = fixed_point_serial(&g);
+        for mode in [ExecutionMode::Asynchronous, ExecutionMode::Delayed(16), ExecutionMode::Delayed(64)] {
+            let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(4, mode));
+            assert!(r.converged, "{mode:?}");
+            assert_eq!(r.values, oracle, "{mode:?}");
+        }
+    }
+
+    #[test]
+    fn async_never_more_rounds_than_sync_single_thread() {
+        // With one thread, async is pure Gauss-Seidel: strictly faster
+        // information flow than Jacobi on this monotone program.
+        let g = GapGraph::Road.generate(10, 0);
+        let p = MaxProp { g: &g };
+        let sync = run(&g, &p, &EngineConfig::new(1, ExecutionMode::Synchronous));
+        let asyn = run(&g, &p, &EngineConfig::new(1, ExecutionMode::Asynchronous));
+        assert!(
+            asyn.num_rounds() <= sync.num_rounds(),
+            "async {} vs sync {}",
+            asyn.num_rounds(),
+            sync.num_rounds()
+        );
+        assert!(asyn.num_rounds() < sync.num_rounds(), "road should show a strict gap");
+    }
+
+    #[test]
+    fn delayed_flush_counts_reported() {
+        let g = GapGraph::Urand.generate(9, 8);
+        let p = MaxProp { g: &g };
+        let r = run(&g, &p, &EngineConfig::new(4, ExecutionMode::Delayed(16)));
+        assert!(r.total_flushes() > 0);
+        let sync = run(&g, &p, &EngineConfig::new(4, ExecutionMode::Synchronous));
+        assert_eq!(sync.total_flushes(), 0);
+    }
+
+    #[test]
+    fn local_reads_variant_converges() {
+        let g = GapGraph::Kron.generate(8, 8);
+        let oracle = fixed_point_serial(&g);
+        let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(4, ExecutionMode::Delayed(32)).with_local_reads());
+        assert_eq!(r.values, oracle);
+    }
+
+    #[test]
+    fn more_threads_than_vertices() {
+        let g = crate::graph::GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(8, ExecutionMode::Delayed(16)));
+        assert!(r.converged);
+        assert_eq!(r.values.len(), 3);
+    }
+
+    #[test]
+    fn max_rounds_respected() {
+        struct NeverConverge;
+        impl VertexProgram for NeverConverge {
+            fn name(&self) -> &'static str {
+                "never"
+            }
+            fn init(&self, _v: VertexId) -> u32 {
+                0
+            }
+            fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+                r.read(v).wrapping_add(1)
+            }
+            fn delta(&self, _o: u32, _n: u32) -> f64 {
+                1.0
+            }
+            fn converged(&self, _d: f64) -> bool {
+                false
+            }
+        }
+        let g = crate::graph::GraphBuilder::new(4).edges(&[(0, 1)]).build();
+        let mut cfg = EngineConfig::new(2, ExecutionMode::Asynchronous);
+        cfg.max_rounds = 5;
+        let r = run(&g, &NeverConverge, &cfg);
+        assert_eq!(r.num_rounds(), 5);
+        assert!(!r.converged);
+    }
+}

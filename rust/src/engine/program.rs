@@ -1,0 +1,97 @@
+//! The vertex-program abstraction consumed by both executors.
+//!
+//! All vertex values are 32-bit (`u32` raw bits) exactly as in the paper
+//! (PageRank f32 scores, SSSP u32 distances): δ is specified in 32-bit
+//! elements and a cache line holds [`crate::VALUES_PER_LINE`] of them.
+
+use crate::graph::VertexId;
+
+/// Read access to the current vertex values. Implementations: the shared
+/// global array (native engine), the double-buffer front (sync mode), the
+/// simulator's cache-tracking accessor, and the delay-buffer-aware local
+/// reader (§III-C variant).
+pub trait ValueReader {
+    /// Current value of `v` as raw bits.
+    fn read(&mut self, v: VertexId) -> u32;
+}
+
+/// Blanket impl so plain closures can be readers in tests.
+impl<F: FnMut(VertexId) -> u32> ValueReader for F {
+    #[inline]
+    fn read(&mut self, v: VertexId) -> u32 {
+        self(v)
+    }
+}
+
+/// A pull-style iterative algorithm.
+///
+/// Programs are immutable and shared across threads; per-vertex state
+/// lives in the engine's value array(s).
+pub trait VertexProgram: Sync {
+    /// Report label ("pagerank", "sssp"…).
+    fn name(&self) -> &'static str;
+
+    /// Initial value of vertex `v` (raw bits).
+    fn init(&self, v: VertexId) -> u32;
+
+    /// Recompute `v`'s value by pulling current neighbor values through
+    /// `reader`. Must read *only* via `reader` so the simulator can
+    /// observe every access.
+    fn update<R: ValueReader>(&self, v: VertexId, reader: &mut R) -> u32;
+
+    /// Per-vertex contribution to the round's convergence metric.
+    /// PageRank: |new − old|; SSSP: 1.0 if changed else 0.0.
+    fn delta(&self, old: u32, new: u32) -> f64;
+
+    /// Whether the run has converged given the summed delta of the round.
+    fn converged(&self, round_delta: f64) -> bool;
+
+    /// §V future-work extension: when true, values identical to the old
+    /// value are not stored at all (no buffer slot, no global write).
+    /// The paper's evaluation stores unconditionally; default matches.
+    fn conditional_writes(&self) -> bool {
+        false
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimal program: value = max of in-neighbors' values (label prop).
+    struct MaxProp<'g> {
+        g: &'g crate::graph::Csr,
+    }
+
+    impl VertexProgram for MaxProp<'_> {
+        fn name(&self) -> &'static str {
+            "maxprop"
+        }
+        fn init(&self, v: VertexId) -> u32 {
+            v
+        }
+        fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+            let mut best = v;
+            for &u in self.g.in_neighbors(v) {
+                best = best.max(r.read(u));
+            }
+            best
+        }
+        fn delta(&self, old: u32, new: u32) -> f64 {
+            (old != new) as u32 as f64
+        }
+        fn converged(&self, d: f64) -> bool {
+            d == 0.0
+        }
+    }
+
+    #[test]
+    fn closure_reader_works() {
+        let g = crate::graph::GraphBuilder::new(3).edges(&[(0, 1), (2, 1)]).build();
+        let p = MaxProp { g: &g };
+        let vals = [5u32, 0, 9];
+        let mut reader = |v: VertexId| vals[v as usize];
+        assert_eq!(p.update(1, &mut reader), 9);
+        assert_eq!(p.update(0, &mut reader), 0);
+    }
+}

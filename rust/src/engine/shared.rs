@@ -1,0 +1,144 @@
+//! The globally shared vertex-value array.
+//!
+//! In asynchronous and delayed modes every thread reads the same array
+//! that owners write into. Rust-wise those are data races unless the
+//! slots are atomics, so values are `AtomicU32` accessed with `Relaxed`
+//! ordering — which compiles to plain loads/stores on x86/ARM, exactly
+//! the machine behavior the paper's C++ implementation has, without UB.
+//! (The algorithms are chaotic-relaxation-tolerant: any interleaving of
+//! 32-bit values converges; see Chazan & Miranker, ref 6 of the paper.)
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use crate::graph::VertexId;
+
+use super::program::ValueReader;
+
+/// Shared value array. Heap layout is 64-byte aligned so partition ranges
+/// map cleanly onto cache lines.
+pub struct SharedValues {
+    slots: Vec<AtomicU32>,
+}
+
+impl SharedValues {
+    /// Build from initial raw-bit values.
+    pub fn from_bits(bits: impl IntoIterator<Item = u32>) -> Self {
+        Self { slots: bits.into_iter().map(AtomicU32::new).collect() }
+    }
+
+    /// Number of values.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True if empty.
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Relaxed load.
+    #[inline]
+    pub fn load(&self, v: VertexId) -> u32 {
+        self.slots[v as usize].load(Ordering::Relaxed)
+    }
+
+    /// Relaxed store.
+    #[inline]
+    pub fn store(&self, v: VertexId, bits: u32) {
+        self.slots[v as usize].store(bits, Ordering::Relaxed);
+    }
+
+    /// Bulk store of a contiguous run starting at `base` — the delay
+    /// buffer flush. Relaxed per-element stores; the compiler vectorizes
+    /// this into the aligned wide stores the paper describes.
+    #[inline]
+    pub fn store_run(&self, base: VertexId, values: &[u32]) {
+        for (i, &x) in values.iter().enumerate() {
+            self.slots[base as usize + i].store(x, Ordering::Relaxed);
+        }
+    }
+
+    /// Snapshot into a plain vector.
+    pub fn to_vec(&self) -> Vec<u32> {
+        self.slots.iter().map(|s| s.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Overwrite all slots from a plain slice (used at sync-round swap).
+    pub fn copy_from(&self, bits: &[u32]) {
+        assert_eq!(bits.len(), self.slots.len());
+        for (s, &b) in self.slots.iter().zip(bits) {
+            s.store(b, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Reader over the shared array (async + delayed global reads).
+pub struct SharedReader<'a>(pub &'a SharedValues);
+
+impl ValueReader for SharedReader<'_> {
+    #[inline]
+    fn read(&mut self, v: VertexId) -> u32 {
+        self.0.load(v)
+    }
+}
+
+/// Reader over an immutable snapshot (sync mode front buffer).
+pub struct SliceReader<'a>(pub &'a [u32]);
+
+impl ValueReader for SliceReader<'_> {
+    #[inline]
+    fn read(&mut self, v: VertexId) -> u32 {
+        self.0[v as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_load_roundtrip() {
+        let s = SharedValues::from_bits([1, 2, 3]);
+        s.store(1, 42);
+        assert_eq!(s.load(1), 42);
+        assert_eq!(s.to_vec(), vec![1, 42, 3]);
+    }
+
+    #[test]
+    fn store_run() {
+        let s = SharedValues::from_bits(vec![0; 8]);
+        s.store_run(2, &[9, 8, 7]);
+        assert_eq!(s.to_vec(), vec![0, 0, 9, 8, 7, 0, 0, 0]);
+    }
+
+    #[test]
+    fn readers() {
+        let s = SharedValues::from_bits([10, 20]);
+        let mut r = SharedReader(&s);
+        assert_eq!(r.read(1), 20);
+        let snap = s.to_vec();
+        let mut sr = SliceReader(&snap);
+        assert_eq!(sr.read(0), 10);
+    }
+
+    #[test]
+    fn concurrent_store_load_is_safe() {
+        // Smoke test: hammer the same slots from two threads.
+        let s = SharedValues::from_bits(vec![0; 64]);
+        std::thread::scope(|scope| {
+            scope.spawn(|| {
+                for i in 0..10_000u32 {
+                    s.store((i % 64) as u32, i);
+                }
+            });
+            scope.spawn(|| {
+                let mut acc = 0u64;
+                for i in 0..10_000u32 {
+                    acc += s.load((i % 64) as u32) as u64;
+                }
+                std::hint::black_box(acc);
+            });
+        });
+    }
+}

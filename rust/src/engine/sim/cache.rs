@@ -1,0 +1,240 @@
+//! Line-granularity MESI-style coherence state for the simulator.
+//!
+//! One [`LineTable`] tracks every 64-byte line of a shared value array:
+//! which simulated threads hold a valid copy (sharer bitmask) and whether
+//! one of them holds it Modified. The table is the *whole* model — private
+//! caches are taken as large enough to hold their working set (capacity
+//! misses are identical across the three execution modes and thus cancel
+//! out of every ratio the paper reports; coherence misses are what
+//! differ). First-ever touch of a line is charged as a DRAM miss.
+
+use crate::VALUES_PER_LINE;
+
+use super::cost::Machine;
+
+/// Maximum simulated threads (two bitmask words).
+pub const MAX_THREADS: usize = 128;
+
+/// Coherence state of one cache line.
+#[derive(Debug, Clone, Copy, Default)]
+struct Line {
+    /// Threads holding a valid copy.
+    sharers: [u64; 2],
+    /// Thread holding the line Modified (also set in `sharers`).
+    modified: Option<u16>,
+    /// Whether the line has ever been brought in from memory.
+    touched: bool,
+}
+
+impl Line {
+    #[inline]
+    fn has(&self, t: usize) -> bool {
+        self.sharers[t / 64] & (1u64 << (t % 64)) != 0
+    }
+
+    #[inline]
+    fn add(&mut self, t: usize) {
+        self.sharers[t / 64] |= 1u64 << (t % 64);
+    }
+
+    #[inline]
+    fn others(&self, t: usize) -> u32 {
+        let mut w = self.sharers;
+        w[t / 64] &= !(1u64 << (t % 64));
+        w[0].count_ones() + w[1].count_ones()
+    }
+
+    #[inline]
+    fn only(&mut self, t: usize) {
+        self.sharers = [0, 0];
+        self.add(t);
+    }
+}
+
+/// Outcome of one simulated access: the latency charged and the
+/// coherence events it caused (fed into [`super::trace::SimMetrics`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Access {
+    pub cycles: u64,
+    /// Copies invalidated in other threads' caches (write only).
+    pub invalidated: u32,
+    /// Served by forwarding another core's dirty line.
+    pub remote_dirty: bool,
+    /// Cold DRAM fill.
+    pub cold: bool,
+    /// Plain L1 hit.
+    pub hit: bool,
+}
+
+/// Coherence state for one shared array.
+pub struct LineTable {
+    lines: Vec<Line>,
+}
+
+impl LineTable {
+    /// Table covering `n_values` 32-bit elements.
+    pub fn new(n_values: usize) -> Self {
+        Self { lines: vec![Line::default(); n_values.div_ceil(VALUES_PER_LINE)] }
+    }
+
+    /// Line index of element `idx`.
+    #[inline]
+    pub fn line_of(idx: usize) -> usize {
+        idx / VALUES_PER_LINE
+    }
+
+    /// Number of lines tracked.
+    pub fn num_lines(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// Simulate thread `t` reading element `idx`.
+    #[inline]
+    pub fn read(&mut self, t: usize, idx: usize, m: &Machine, active: usize) -> Access {
+        let line = &mut self.lines[Self::line_of(idx)];
+        if line.has(t) {
+            // Valid copy (Shared or our own Modified): L1 hit.
+            return Access { cycles: m.cost.l1, invalidated: 0, remote_dirty: false, cold: false, hit: true };
+        }
+        if let Some(owner) = line.modified {
+            // Dirty elsewhere: forward + downgrade to Shared.
+            let cycles = m.forward_cost(owner as usize, t, active);
+            line.modified = None;
+            line.add(t);
+            return Access { cycles, invalidated: 0, remote_dirty: true, cold: false, hit: false };
+        }
+        if line.touched {
+            // Clean somewhere in the hierarchy: LLC-class fill.
+            line.add(t);
+            return Access { cycles: m.cost.llc, invalidated: 0, remote_dirty: false, cold: false, hit: false };
+        }
+        // Cold: DRAM.
+        line.touched = true;
+        line.add(t);
+        Access { cycles: m.cost.dram, invalidated: 0, remote_dirty: false, cold: true, hit: false }
+    }
+
+    /// Simulate thread `t` writing element `idx` (request-for-ownership).
+    #[inline]
+    pub fn write(&mut self, t: usize, idx: usize, m: &Machine, active: usize) -> Access {
+        let line = &mut self.lines[Self::line_of(idx)];
+        if line.modified == Some(t as u16) {
+            // Already exclusive-dirty here: store hits L1.
+            return Access { cycles: m.cost.l1, invalidated: 0, remote_dirty: false, cold: false, hit: true };
+        }
+        let others = line.others(t);
+        let was_dirty_elsewhere = line.modified.is_some();
+        let cold = !line.touched;
+        // Invalidate every other copy; take exclusive ownership.
+        let cycles = if was_dirty_elsewhere {
+            m.forward_cost(line.modified.unwrap() as usize, t, active)
+        } else if others > 0 {
+            // Upgrade / RFO with sharers to invalidate.
+            m.cost.llc
+        } else if line.has(t) {
+            // Silent S→M upgrade of our own copy.
+            m.cost.l1
+        } else if cold {
+            m.cost.dram
+        } else {
+            m.cost.llc
+        };
+        line.touched = true;
+        line.only(t);
+        line.modified = Some(t as u16);
+        Access { cycles, invalidated: others, remote_dirty: was_dirty_elsewhere, cold, hit: false }
+    }
+
+    /// Reset all coherence state (used between independent runs).
+    pub fn clear(&mut self) {
+        self.lines.iter_mut().for_each(|l| *l = Line::default());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> Machine {
+        Machine::haswell()
+    }
+
+    #[test]
+    fn cold_then_hit() {
+        let m = machine();
+        let mut lt = LineTable::new(64);
+        let a = lt.read(0, 5, &m, 32);
+        assert!(a.cold);
+        assert_eq!(a.cycles, m.cost.dram);
+        let b = lt.read(0, 6, &m, 32); // same line
+        assert!(b.hit);
+        assert_eq!(b.cycles, m.cost.l1);
+    }
+
+    #[test]
+    fn write_invalidates_readers() {
+        let m = machine();
+        let mut lt = LineTable::new(64);
+        lt.read(0, 0, &m, 32);
+        lt.read(1, 0, &m, 32);
+        lt.read(2, 0, &m, 32);
+        let w = lt.write(3, 0, &m, 32);
+        assert_eq!(w.invalidated, 3);
+        // Reader must now pay a dirty-forward, not an L1 hit.
+        let r = lt.read(0, 0, &m, 32);
+        assert!(r.remote_dirty);
+        assert_eq!(r.cycles, m.cost.remote_core); // 0 and 3 share socket 0
+    }
+
+    #[test]
+    fn own_modified_line_is_cheap() {
+        let m = machine();
+        let mut lt = LineTable::new(64);
+        lt.write(0, 0, &m, 32);
+        let w2 = lt.write(0, 1, &m, 32); // same line, still M here
+        assert!(w2.hit);
+        let r = lt.read(0, 2, &m, 32);
+        assert!(r.hit);
+    }
+
+    #[test]
+    fn cross_socket_forward_costs_more() {
+        let m = machine();
+        let mut lt = LineTable::new(64);
+        lt.write(0, 0, &m, 32); // socket 0
+        let r = lt.read(31, 0, &m, 32); // socket 1
+        assert_eq!(r.cycles, m.cost.remote_socket);
+    }
+
+    #[test]
+    fn read_downgrades_modified() {
+        let m = machine();
+        let mut lt = LineTable::new(64);
+        lt.write(0, 0, &m, 32);
+        let r = lt.read(1, 0, &m, 32);
+        assert!(r.remote_dirty);
+        // Next write by 0 must RFO again (line now Shared).
+        let w = lt.write(0, 0, &m, 32);
+        assert!(!w.hit);
+        assert_eq!(w.invalidated, 1);
+    }
+
+    #[test]
+    fn silent_upgrade_when_sole_sharer() {
+        let m = machine();
+        let mut lt = LineTable::new(64);
+        lt.read(4, 0, &m, 32);
+        lt.read(4, 0, &m, 32);
+        let w = lt.write(4, 0, &m, 32);
+        assert_eq!(w.cycles, m.cost.l1);
+        assert_eq!(w.invalidated, 0);
+    }
+
+    #[test]
+    fn line_math() {
+        assert_eq!(LineTable::line_of(0), 0);
+        assert_eq!(LineTable::line_of(15), 0);
+        assert_eq!(LineTable::line_of(16), 1);
+        assert_eq!(LineTable::new(17).num_lines(), 2);
+    }
+}

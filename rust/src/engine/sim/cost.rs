@@ -1,0 +1,148 @@
+//! Latency cost model for the multicore simulator.
+//!
+//! Cycle counts are round numbers in line with published measurements for
+//! the paper's two platforms (Haswell-EP and Cascade Lake-SP): L1 ≈ 4
+//! cycles, shared LLC ≈ 40, a dirty line forwarded from another core on
+//! the same socket ≈ 70, cross-socket forward ≈ 130, DRAM ≈ 150–200. The
+//! *absolute* numbers matter little — every figure in the paper reports
+//! ratios — but their ordering and rough magnitudes drive the same
+//! trade-off the real machines exhibit: asynchronous stores turn other
+//! threads' L1 hits into 70–130-cycle coherence misses.
+
+/// Latencies (cycles) and per-operation compute costs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// L1 hit (line already in this thread's cache, valid).
+    pub l1: u64,
+    /// Clean line obtained from LLC / another core's clean copy.
+    pub llc: u64,
+    /// Dirty line forwarded from a core on the same socket.
+    pub remote_core: u64,
+    /// Dirty line forwarded across the socket interconnect.
+    pub remote_socket: u64,
+    /// Cold miss to DRAM.
+    pub dram: u64,
+    /// Fixed work per vertex update (loop overhead, convergence math).
+    pub vertex_base: u64,
+    /// ALU work per in-edge (multiply-add / min-plus).
+    pub edge_compute: u64,
+    /// Store into the thread-local delay buffer (always L1-resident).
+    pub buffer_push: u64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            l1: 4,
+            llc: 40,
+            remote_core: 70,
+            remote_socket: 130,
+            dram: 160,
+            vertex_base: 8,
+            edge_compute: 2,
+            buffer_push: 1,
+        }
+    }
+}
+
+/// A simulated machine: thread count, socket split, clock.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Machine {
+    pub name: &'static str,
+    /// Hardware threads available.
+    pub threads: usize,
+    /// Number of sockets (threads are split contiguously across them,
+    /// mirroring the paper's pinning policy).
+    pub sockets: usize,
+    /// Core clock in Hz (converts cycles → seconds for Table I).
+    pub clock_hz: f64,
+    pub cost: CostModel,
+}
+
+impl Machine {
+    /// Dual-socket Xeon E5-2667v3 (the paper's 32-thread Haswell).
+    pub fn haswell() -> Self {
+        Self { name: "haswell32", threads: 32, sockets: 2, clock_hz: 3.2e9, cost: CostModel::default() }
+    }
+
+    /// Dual-socket Xeon Platinum 8280 (the paper's 112-thread Cascade
+    /// Lake). Slightly cheaper cross-socket than Haswell (UPI vs QPI).
+    pub fn cascade_lake() -> Self {
+        Self {
+            name: "cascadelake112",
+            threads: 112,
+            sockets: 2,
+            clock_hz: 2.7e9,
+            cost: CostModel { remote_socket: 120, ..CostModel::default() },
+        }
+    }
+
+    /// Which socket a thread lives on (contiguous split).
+    #[inline]
+    pub fn socket_of(&self, thread: usize, active_threads: usize) -> usize {
+        // When running with fewer threads than the machine has, the
+        // paper pins ≤half-complement runs to one socket.
+        if active_threads * 2 <= self.threads {
+            0
+        } else {
+            thread * self.sockets / active_threads
+        }
+    }
+
+    /// Latency for pulling a dirty line from `from` as seen by `to`.
+    #[inline]
+    pub fn forward_cost(&self, from: usize, to: usize, active_threads: usize) -> u64 {
+        if self.socket_of(from, active_threads) == self.socket_of(to, active_threads) {
+            self.cost.remote_core
+        } else {
+            self.cost.remote_socket
+        }
+    }
+
+    /// Machine with the same cost model but a different thread count
+    /// (for thread-scaling sweeps).
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ordering_sane() {
+        let c = CostModel::default();
+        assert!(c.l1 < c.llc && c.llc < c.remote_core);
+        assert!(c.remote_core < c.remote_socket && c.remote_socket < c.dram);
+        assert!(c.buffer_push <= c.l1);
+    }
+
+    #[test]
+    fn socket_split() {
+        let m = Machine::haswell();
+        // Full complement: half the threads on each socket.
+        assert_eq!(m.socket_of(0, 32), 0);
+        assert_eq!(m.socket_of(15, 32), 0);
+        assert_eq!(m.socket_of(16, 32), 1);
+        assert_eq!(m.socket_of(31, 32), 1);
+        // Half complement or less: pinned to socket 0.
+        assert_eq!(m.socket_of(15, 16), 0);
+        assert_eq!(m.socket_of(7, 8), 0);
+    }
+
+    #[test]
+    fn forward_costs() {
+        let m = Machine::haswell();
+        assert_eq!(m.forward_cost(0, 1, 32), m.cost.remote_core);
+        assert_eq!(m.forward_cost(0, 31, 32), m.cost.remote_socket);
+    }
+
+    #[test]
+    fn presets() {
+        assert_eq!(Machine::haswell().threads, 32);
+        assert_eq!(Machine::cascade_lake().threads, 112);
+        assert!(Machine::cascade_lake().clock_hz < Machine::haswell().clock_hz);
+    }
+}

@@ -1,0 +1,140 @@
+//! Metrics collected by the simulator — coherence events and the
+//! thread-access matrix of the paper's Fig. 5.
+
+use crate::engine::sim::cache::Access;
+
+/// Aggregate coherence statistics for one simulated run.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimMetrics {
+    /// Cache-line copies invalidated by stores (the quantity the delay
+    /// buffer exists to reduce).
+    pub invalidations: u64,
+    /// Reads served by forwarding another core's dirty line.
+    pub remote_dirty_reads: u64,
+    /// Cold DRAM fills.
+    pub cold_misses: u64,
+    /// L1 hits.
+    pub l1_hits: u64,
+    /// Total simulated accesses to shared arrays.
+    pub accesses: u64,
+    /// Row-major `threads × threads` matrix; entry `(reader, owner)`
+    /// counts pull reads by simulated thread `reader` on vertex data
+    /// owned by partition `owner` (Fig. 5). Flat storage: the increment
+    /// is on the simulator's hottest path (§Perf: the nested-Vec layout
+    /// cost a second pointer chase per read).
+    matrix: Vec<u64>,
+    threads: usize,
+    /// Simulated cycles per round (max over threads).
+    pub round_cycles: Vec<u64>,
+}
+
+impl SimMetrics {
+    /// Initialize with a `threads × threads` access matrix.
+    pub fn new(threads: usize) -> Self {
+        Self { matrix: vec![0; threads * threads], threads, ..Default::default() }
+    }
+
+    /// Number of simulated threads (matrix dimension).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Record a read access outcome.
+    #[inline]
+    pub fn on_read(&mut self, a: &Access) {
+        self.accesses += 1;
+        self.l1_hits += a.hit as u64;
+        self.remote_dirty_reads += a.remote_dirty as u64;
+        self.cold_misses += a.cold as u64;
+    }
+
+    /// Count one pull read by `reader` on data owned by `owner`.
+    #[inline]
+    pub fn count_read(&mut self, reader: usize, owner: usize) {
+        self.matrix[reader * self.threads + owner] += 1;
+    }
+
+    /// Record a write access outcome.
+    #[inline]
+    pub fn on_write(&mut self, a: &Access) {
+        self.accesses += 1;
+        self.l1_hits += a.hit as u64;
+        self.invalidations += a.invalidated as u64;
+        self.cold_misses += a.cold as u64;
+    }
+
+    /// One row of the access matrix (reads performed by `reader`).
+    pub fn matrix_row(&self, reader: usize) -> &[u64] {
+        &self.matrix[reader * self.threads..(reader + 1) * self.threads]
+    }
+
+    /// The access matrix as rows (convenience for reports).
+    pub fn access_matrix(&self) -> Vec<Vec<u64>> {
+        (0..self.threads).map(|r| self.matrix_row(r).to_vec()).collect()
+    }
+
+    /// Fraction of the access matrix's mass on the diagonal — the §IV-C
+    /// clustering statistic (high for Web, low for Kron).
+    pub fn diagonal_fraction(&self) -> f64 {
+        let total: u64 = self.matrix.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let diag: u64 = (0..self.threads).map(|i| self.matrix[i * self.threads + i]).sum();
+        diag as f64 / total as f64
+    }
+
+    /// Rows whose diagonal share exceeds `threshold` (the paper marks
+    /// boxes receiving ≥ 1/32 of accesses locally with a plus).
+    pub fn clustered_rows(&self, threshold: f64) -> usize {
+        (0..self.threads)
+            .filter(|&i| {
+                let row = self.matrix_row(i);
+                let total: u64 = row.iter().sum();
+                total > 0 && row[i] as f64 / total as f64 >= threshold
+            })
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diagonal_fraction() {
+        let mut m = SimMetrics::new(2);
+        m.count_read(0, 0);
+        m.count_read(0, 0);
+        m.count_read(0, 0);
+        m.count_read(0, 1);
+        for _ in 0..4 {
+            m.count_read(1, 1);
+        }
+        assert!((m.diagonal_fraction() - 7.0 / 8.0).abs() < 1e-12);
+        assert_eq!(m.clustered_rows(0.5), 2);
+        assert_eq!(m.clustered_rows(0.8), 1);
+        assert_eq!(m.access_matrix(), vec![vec![3, 1], vec![0, 4]]);
+        assert_eq!(m.matrix_row(1), &[0, 4]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let m = SimMetrics::new(4);
+        assert_eq!(m.diagonal_fraction(), 0.0);
+        assert_eq!(m.clustered_rows(0.1), 0);
+        assert_eq!(m.threads(), 4);
+    }
+
+    #[test]
+    fn event_recording() {
+        use crate::engine::sim::cache::Access;
+        let mut m = SimMetrics::new(1);
+        m.on_read(&Access { cycles: 4, invalidated: 0, remote_dirty: true, cold: false, hit: false });
+        m.on_write(&Access { cycles: 40, invalidated: 3, remote_dirty: false, cold: true, hit: false });
+        assert_eq!(m.remote_dirty_reads, 1);
+        assert_eq!(m.invalidations, 3);
+        assert_eq!(m.cold_misses, 1);
+        assert_eq!(m.accesses, 2);
+    }
+}

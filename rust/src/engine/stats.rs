@@ -1,0 +1,93 @@
+//! Run-level and round-level statistics — what Table I and every figure
+//! are built from.
+
+use super::ExecutionMode;
+
+/// Per-round record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoundStats {
+    /// Wall-clock seconds (native) or simulated cycles ÷ clock (sim).
+    pub time_s: f64,
+    /// Summed convergence metric of the round.
+    pub delta: f64,
+    /// Delay-buffer flushes across all threads this round.
+    pub flushes: u64,
+}
+
+/// Result of one engine run.
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// Final vertex values (raw bits; decode via the algorithm wrapper).
+    pub values: Vec<u32>,
+    pub rounds: Vec<RoundStats>,
+    pub mode: ExecutionMode,
+    pub threads: usize,
+    /// True if the convergence criterion was met (false = hit max_rounds).
+    pub converged: bool,
+}
+
+impl RunResult {
+    /// Number of rounds executed.
+    pub fn num_rounds(&self) -> usize {
+        self.rounds.len()
+    }
+
+    /// Total time (sum of round times).
+    pub fn total_time(&self) -> f64 {
+        self.rounds.iter().map(|r| r.time_s).sum()
+    }
+
+    /// Average time per round — the paper's Table I column.
+    pub fn avg_round_time(&self) -> f64 {
+        if self.rounds.is_empty() {
+            0.0
+        } else {
+            self.total_time() / self.rounds.len() as f64
+        }
+    }
+
+    /// Total delay-buffer flushes.
+    pub fn total_flushes(&self) -> u64 {
+        self.rounds.iter().map(|r| r.flushes).sum()
+    }
+
+    /// Values decoded as f32 (PageRank scores).
+    pub fn values_f32(&self) -> Vec<f32> {
+        self.values.iter().map(|&b| f32::from_bits(b)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk() -> RunResult {
+        RunResult {
+            values: vec![1f32.to_bits(), 2f32.to_bits()],
+            rounds: vec![
+                RoundStats { time_s: 0.5, delta: 1.0, flushes: 3 },
+                RoundStats { time_s: 1.5, delta: 0.0, flushes: 2 },
+            ],
+            mode: ExecutionMode::Delayed(64),
+            threads: 4,
+            converged: true,
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = mk();
+        assert_eq!(r.num_rounds(), 2);
+        assert!((r.total_time() - 2.0).abs() < 1e-12);
+        assert!((r.avg_round_time() - 1.0).abs() < 1e-12);
+        assert_eq!(r.total_flushes(), 5);
+        assert_eq!(r.values_f32(), vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn empty_rounds() {
+        let mut r = mk();
+        r.rounds.clear();
+        assert_eq!(r.avg_round_time(), 0.0);
+    }
+}

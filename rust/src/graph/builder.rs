@@ -1,0 +1,169 @@
+//! Edge-list → [`Csr`] construction.
+//!
+//! Handles the messiness real edge lists have: duplicate edges, self
+//! loops, unsorted input. Duplicates are removed (keeping the first
+//! weight), self loops are dropped (neither PageRank-pull nor
+//! Bellman-Ford benefits from them and the GAP reference builder also
+//! removes them), and optional symmetrization inserts the reverse of
+//! every edge.
+
+use super::csr::{Csr, VertexId};
+
+/// Builder accumulating `(src, dst, weight)` triples.
+#[derive(Debug, Clone)]
+pub struct GraphBuilder {
+    n: usize,
+    triples: Vec<(VertexId, VertexId, u32)>,
+    weighted: bool,
+    symmetrize: bool,
+    keep_self_loops: bool,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph over vertices `0..n`.
+    pub fn new(n: usize) -> Self {
+        assert!(n <= u32::MAX as usize, "vertex ids are u32");
+        Self { n, triples: Vec::new(), weighted: false, symmetrize: false, keep_self_loops: false }
+    }
+
+    /// Add unweighted directed edges.
+    pub fn edges(mut self, es: &[(VertexId, VertexId)]) -> Self {
+        self.triples.extend(es.iter().map(|&(s, d)| (s, d, 1)));
+        self
+    }
+
+    /// Add weighted directed edges; marks the graph weighted.
+    pub fn weighted_edges(mut self, es: &[(VertexId, VertexId, u32)]) -> Self {
+        self.weighted = true;
+        self.triples.extend_from_slice(es);
+        self
+    }
+
+    /// Push a single edge.
+    pub fn push(&mut self, s: VertexId, d: VertexId, w: u32) {
+        self.triples.push((s, d, w));
+    }
+
+    /// Mark the builder weighted even if edges were added via [`Self::edges`].
+    pub fn with_weights(mut self) -> Self {
+        self.weighted = true;
+        self
+    }
+
+    /// Insert the reverse of every edge (undirected semantics). The GAP
+    /// road/urand/kron graphs are symmetric; twitter/web are not.
+    pub fn symmetrize(mut self) -> Self {
+        self.symmetrize = true;
+        self
+    }
+
+    /// Keep self loops instead of dropping them (off by default).
+    pub fn keep_self_loops(mut self) -> Self {
+        self.keep_self_loops = true;
+        self
+    }
+
+    /// Current number of staged triples (before dedup).
+    pub fn staged_edges(&self) -> usize {
+        self.triples.len()
+    }
+
+    /// Finalize into CSR (pull orientation).
+    pub fn build(self) -> Csr {
+        let Self { n, mut triples, weighted, symmetrize, keep_self_loops } = self;
+
+        for &(s, d, _) in &triples {
+            assert!((s as usize) < n && (d as usize) < n, "edge ({s},{d}) out of range for n={n}");
+        }
+        if !keep_self_loops {
+            triples.retain(|&(s, d, _)| s != d);
+        }
+        if symmetrize {
+            let rev: Vec<_> = triples.iter().map(|&(s, d, w)| (d, s, w)).collect();
+            triples.extend(rev);
+        }
+
+        // Sort by (dst, src) so each pull row comes out sorted, then dedup
+        // on the (src, dst) pair keeping the first weight.
+        triples.sort_unstable_by_key(|&(s, d, _)| (d, s));
+        triples.dedup_by_key(|&mut (s, d, _)| (s, d));
+
+        let mut offsets = vec![0u64; n + 1];
+        for &(_, d, _) in &triples {
+            offsets[d as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+
+        let sources: Vec<VertexId> = triples.iter().map(|&(s, _, _)| s).collect();
+        let weights = if weighted { Some(triples.iter().map(|&(_, _, w)| w).collect()) } else { None };
+
+        let mut out_degrees = vec![0u32; n];
+        for &(s, _, _) in &triples {
+            out_degrees[s as usize] += 1;
+        }
+
+        Csr::from_parts(offsets, sources, weights, out_degrees, symmetrize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_self_loop_removal() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (0, 1), (1, 1), (2, 1)]).build();
+        assert_eq!(g.num_edges(), 2); // (0,1) deduped, (1,1) dropped
+        assert_eq!(g.in_neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn keep_self_loops_option() {
+        let g = GraphBuilder::new(2).edges(&[(1, 1)]).keep_self_loops().build();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.in_neighbors(1), &[1]);
+    }
+
+    #[test]
+    fn symmetrize_doubles_edges() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).symmetrize().build();
+        assert_eq!(g.num_edges(), 4);
+        assert!(g.is_symmetric());
+        assert_eq!(g.in_neighbors(1), &[0, 2]);
+        assert_eq!(g.out_degree(1), 2);
+    }
+
+    #[test]
+    fn symmetrize_dedups_bidirectional_input() {
+        // (0,1) and (1,0) both present: symmetrizing must not double-count.
+        let g = GraphBuilder::new(2).edges(&[(0, 1), (1, 0)]).symmetrize().build();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn rows_sorted() {
+        let g = GraphBuilder::new(5).edges(&[(4, 0), (1, 0), (3, 0), (2, 0)]).build();
+        assert_eq!(g.in_neighbors(0), &[1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn dedup_keeps_first_weight() {
+        let g = GraphBuilder::new(2).weighted_edges(&[(0, 1, 5), (0, 1, 9)]).build();
+        let nb: Vec<_> = g.in_neighbors_weighted(1).collect();
+        assert_eq!(nb, vec![(0, 5)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_edge_panics() {
+        GraphBuilder::new(2).edges(&[(0, 5)]).build();
+    }
+
+    #[test]
+    fn out_degrees_after_dedup() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (0, 1), (0, 2)]).build();
+        assert_eq!(g.out_degree(0), 2);
+    }
+}

@@ -1,0 +1,220 @@
+//! Compressed sparse row storage over incoming edges.
+//!
+//! For pull-style algorithms each output vertex `v` scans its in-neighbor
+//! list once per round; [`Csr`] therefore stores, for each vertex, the
+//! sorted list of sources of its incoming edges (plus parallel edge
+//! weights when present). Out-degrees are kept alongside because PageRank
+//! divides each neighbor's score by *its* out-degree.
+
+/// Vertex identifier. 32 bits everywhere, matching the paper's element
+/// sizing (δ is measured in 32-bit elements).
+pub type VertexId = u32;
+
+/// Immutable graph in pull orientation (row `v` = in-neighbors of `v`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// `offsets[v]..offsets[v+1]` indexes `sources` (and `weights`).
+    offsets: Vec<u64>,
+    /// Concatenated in-neighbor lists, each sorted ascending.
+    sources: Vec<VertexId>,
+    /// Optional per-edge weights, parallel to `sources`.
+    weights: Option<Vec<u32>>,
+    /// Out-degree of every vertex (pull algorithms need the *writer's*
+    /// fan-out, which CSC rows do not encode).
+    out_degrees: Vec<u32>,
+    /// True if built via symmetrization (undirected semantics).
+    symmetric: bool,
+}
+
+impl Csr {
+    pub(crate) fn from_parts(
+        offsets: Vec<u64>,
+        sources: Vec<VertexId>,
+        weights: Option<Vec<u32>>,
+        out_degrees: Vec<u32>,
+        symmetric: bool,
+    ) -> Self {
+        debug_assert_eq!(offsets.len(), out_degrees.len() + 1);
+        debug_assert_eq!(*offsets.last().unwrap_or(&0) as usize, sources.len());
+        if let Some(w) = &weights {
+            debug_assert_eq!(w.len(), sources.len());
+        }
+        Self { offsets, sources, weights, out_degrees, symmetric }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.out_degrees.len()
+    }
+
+    /// Number of (directed) edges stored.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Whether the graph carries edge weights.
+    #[inline]
+    pub fn is_weighted(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// Whether the graph was symmetrized at build time.
+    #[inline]
+    pub fn is_symmetric(&self) -> bool {
+        self.symmetric
+    }
+
+    /// In-degree of `v`.
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> u32 {
+        self.out_degrees[v as usize]
+    }
+
+    /// All out-degrees (indexed by vertex).
+    #[inline]
+    pub fn out_degrees(&self) -> &[u32] {
+        &self.out_degrees
+    }
+
+    /// Sorted in-neighbors of `v`.
+    #[inline]
+    pub fn in_neighbors(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.sources[lo..hi]
+    }
+
+    /// In-neighbors of `v` zipped with edge weights. Panics if unweighted.
+    #[inline]
+    pub fn in_neighbors_weighted(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u32)> + '_ {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        let w = self.weights.as_ref().expect("graph is unweighted");
+        self.sources[lo..hi].iter().copied().zip(w[lo..hi].iter().copied())
+    }
+
+    /// Raw offsets array (len = n+1).
+    #[inline]
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// Raw concatenated sources array.
+    #[inline]
+    pub fn sources(&self) -> &[VertexId] {
+        &self.sources
+    }
+
+    /// Raw weights array if present.
+    #[inline]
+    pub fn weights(&self) -> Option<&[u32]> {
+        self.weights.as_deref()
+    }
+
+    /// Iterate all edges as `(src, dst, weight)` (weight 1 if unweighted).
+    pub fn edges(&self) -> impl Iterator<Item = (VertexId, VertexId, u32)> + '_ {
+        (0..self.num_vertices() as VertexId).flat_map(move |v| {
+            let lo = self.offsets[v as usize] as usize;
+            let hi = self.offsets[v as usize + 1] as usize;
+            (lo..hi).map(move |i| {
+                let w = self.weights.as_ref().map(|w| w[i]).unwrap_or(1);
+                (self.sources[i], v, w)
+            })
+        })
+    }
+
+    /// Total in-degree over a contiguous vertex range — the partitioners'
+    /// balance objective.
+    pub fn range_in_edges(&self, lo: VertexId, hi: VertexId) -> u64 {
+        self.offsets[hi as usize] - self.offsets[lo as usize]
+    }
+
+    /// Mean in-degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.num_vertices() == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / self.num_vertices() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn tiny_graph_pull_lists() {
+        // 0->1, 0->2, 1->2, 2->0
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (0, 2), (1, 2), (2, 0)]).build();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.in_neighbors(0), &[2]);
+        assert_eq!(g.in_neighbors(1), &[0]);
+        assert_eq!(g.in_neighbors(2), &[0, 1]);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.out_degree(1), 1);
+        assert_eq!(g.out_degree(2), 1);
+        assert_eq!(g.in_degree(2), 2);
+    }
+
+    #[test]
+    fn edges_iterator_roundtrip() {
+        let input = [(0u32, 1u32), (2, 1), (1, 0)];
+        let g = GraphBuilder::new(3).edges(&input).build();
+        let mut got: Vec<(u32, u32)> = g.edges().map(|(s, d, _)| (s, d)).collect();
+        got.sort_unstable();
+        let mut want = input.to_vec();
+        want.sort_unstable();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn range_in_edges_matches_sum() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (0, 2), (3, 2), (2, 3), (1, 3)]).build();
+        let total: u64 = (0..4).map(|v| g.in_degree(v) as u64).sum();
+        assert_eq!(g.range_in_edges(0, 4), total);
+        assert_eq!(g.range_in_edges(1, 3), (g.in_degree(1) + g.in_degree(2)) as u64);
+    }
+
+    #[test]
+    fn weighted_access() {
+        let g = GraphBuilder::new(2).weighted_edges(&[(0, 1, 7), (1, 0, 9)]).build();
+        assert!(g.is_weighted());
+        let nb: Vec<_> = g.in_neighbors_weighted(1).collect();
+        assert_eq!(nb, vec![(0, 7)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "unweighted")]
+    fn weighted_access_on_unweighted_panics() {
+        let g = GraphBuilder::new(2).edges(&[(0, 1)]).build();
+        let _ = g.in_neighbors_weighted(1).count();
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(0).edges(&[]).build();
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.avg_degree(), 0.0);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = GraphBuilder::new(5).edges(&[(0, 4)]).build();
+        for v in 1..4 {
+            assert_eq!(g.in_degree(v), 0);
+            assert_eq!(g.in_neighbors(v), &[] as &[u32]);
+        }
+        assert_eq!(g.in_neighbors(4), &[0]);
+    }
+}

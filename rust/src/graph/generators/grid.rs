@@ -1,0 +1,93 @@
+//! 2D lattice generator — GAP "road" analog.
+//!
+//! Road networks are near-planar: degree ≈ 2–4, enormous diameter, and
+//! information travels slowly (the paper's §IV-D explains Road's poor
+//! response to buffering by exactly this). A perturbed 2D grid reproduces
+//! those properties: `side × side` vertices, 4-neighborhood, a fraction
+//! of edges deleted (dead ends / rivers) and a few short-range diagonal
+//! "shortcut" roads added.
+
+use crate::graph::{Csr, GraphBuilder, VertexId};
+use crate::util::rng::SplitMix64;
+
+/// Generate a perturbed grid with `side*side` vertices, in row-major ID
+/// order (so contiguous ID blocks are horizontal strips — matching how
+/// road-network IDs cluster geographically in the GAP dataset).
+pub fn generate(side: usize, seed: u64) -> Csr {
+    let n = side * side;
+    let mut rng = SplitMix64::new(seed);
+    let id = |r: usize, c: usize| (r * side + c) as VertexId;
+    let mut es: Vec<(VertexId, VertexId)> = Vec::with_capacity(2 * n);
+    for r in 0..side {
+        for c in 0..side {
+            // Right and down neighbors; 8% of road segments are missing.
+            if c + 1 < side && !rng.chance(0.08) {
+                es.push((id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < side && !rng.chance(0.08) {
+                es.push((id(r, c), id(r + 1, c)));
+            }
+            // Rare short diagonal shortcut (~2%).
+            if r + 1 < side && c + 1 < side && rng.chance(0.02) {
+                es.push((id(r, c), id(r + 1, c + 1)));
+            }
+        }
+    }
+    GraphBuilder::new(n).edges(&es).symmetrize().build()
+}
+
+/// Road analog sized like the scale-based generators: picks `side` so that
+/// `side^2 ≈ 2^scale`.
+pub fn generate_scale(scale: u32, seed: u64) -> Csr {
+    let side = (1usize << scale).isqrt().max(2);
+    generate(side, seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_degree() {
+        let g = generate(32, 1);
+        assert_eq!(g.num_vertices(), 1024);
+        let max_d = (0..g.num_vertices() as u32).map(|v| g.in_degree(v)).max().unwrap();
+        assert!(max_d <= 8, "grid degree bounded, got {max_d}");
+        assert!(g.avg_degree() > 2.0 && g.avg_degree() < 5.0);
+    }
+
+    #[test]
+    fn symmetric_and_deterministic() {
+        let g = generate(16, 7);
+        assert!(g.is_symmetric());
+        assert_eq!(g, generate(16, 7));
+    }
+
+    #[test]
+    fn mostly_connected() {
+        // BFS from 0 should reach the vast majority of the grid despite
+        // deleted segments.
+        let g = generate(24, 3);
+        let n = g.num_vertices();
+        let mut seen = vec![false; n];
+        let mut stack = vec![0u32];
+        seen[0] = true;
+        let mut count = 1;
+        while let Some(v) = stack.pop() {
+            for &u in g.in_neighbors(v) {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    count += 1;
+                    stack.push(u);
+                }
+            }
+        }
+        assert!(count as f64 > 0.9 * n as f64, "connected fraction {}", count as f64 / n as f64);
+    }
+
+    #[test]
+    fn scale_variant_size() {
+        let g = generate_scale(10, 1);
+        assert_eq!(g.num_vertices(), 32 * 32);
+    }
+}

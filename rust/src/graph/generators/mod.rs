@@ -1,0 +1,19 @@
+//! Synthetic graph generators for the GAP-analog suite.
+//!
+//! The paper evaluates on the five GAP benchmark graphs. Those are
+//! multi-gigabyte downloads; per DESIGN.md §3 we substitute generators
+//! that reproduce the *causal* topological properties §IV identifies:
+//!
+//! | GAP graph | generator | property preserved |
+//! |---|---|---|
+//! | Kron    | [`rmat`] (a=.57 b=.19 c=.19), symmetric | scale-free, long-range, diffuse access matrix |
+//! | Urand   | [`uniform`], symmetric | no locality at all, uniform degree |
+//! | Twitter | [`twitter`] (skewed RMAT + permutation), directed | heavy skew, diffuse |
+//! | Web     | [`web`] (contiguous communities), directed | **diagonal-clustered** access matrix, high local reads |
+//! | Road    | [`grid`] (2D lattice + perturbation), symmetric | huge diameter, degree ≈ 2–4, slow information flow |
+
+pub mod grid;
+pub mod rmat;
+pub mod twitter;
+pub mod uniform;
+pub mod web;

@@ -1,0 +1,49 @@
+//! Uniform-random (Erdős–Rényi G(n,m)) generator — GAP "urand" analog.
+//!
+//! Every endpoint is drawn uniformly, so there is no degree skew and no
+//! locality whatsoever: a vertex's in-neighbors are spread evenly over
+//! the whole ID space, which makes urand the worst case for inter-thread
+//! read sharing (every thread reads every other thread's partition).
+
+use crate::graph::{Csr, GraphBuilder, VertexId};
+use crate::util::rng::SplitMix64;
+
+/// `edge_factor * 2^scale` uniformly random directed edges.
+pub fn edges(scale: u32, edge_factor: usize, seed: u64) -> Vec<(VertexId, VertexId)> {
+    let n = 1u64 << scale;
+    let m = (n as usize) * edge_factor;
+    let mut rng = SplitMix64::new(seed);
+    (0..m).map(|_| (rng.next_below(n) as VertexId, rng.next_below(n) as VertexId)).collect()
+}
+
+/// GAP-urand analog: symmetric uniform random graph.
+pub fn generate(scale: u32, edge_factor: usize, seed: u64) -> Csr {
+    let es = edges(scale, edge_factor, seed);
+    GraphBuilder::new(1 << scale).edges(&es).symmetrize().build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_and_symmetry() {
+        let g = generate(9, 8, 2);
+        assert_eq!(g.num_vertices(), 512);
+        assert!(g.is_symmetric());
+        assert!(g.num_edges() > 512 * 8 / 2);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(generate(7, 4, 11), generate(7, 4, 11));
+    }
+
+    #[test]
+    fn no_heavy_skew() {
+        let g = generate(10, 8, 4);
+        let max_d = (0..g.num_vertices() as u32).map(|v| g.in_degree(v)).max().unwrap();
+        // Poisson-ish: max degree stays within a small factor of the mean.
+        assert!((max_d as f64) < 4.0 * g.avg_degree(), "max {max_d} avg {}", g.avg_degree());
+    }
+}

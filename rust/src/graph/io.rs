@@ -1,0 +1,298 @@
+//! Graph serialization: plain edge-list text, a compact binary format,
+//! and Matrix Market import — so users can run the engine on their own
+//! graphs (including the real GAP downloads) rather than only the
+//! synthetic suite.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{Csr, GraphBuilder};
+
+/// Magic bytes of the binary `.daig` format.
+const MAGIC: &[u8; 4] = b"DAIG";
+/// Binary format version.
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------- text --
+
+/// Write as whitespace-separated edge list (`src dst [weight]` per line).
+pub fn write_edge_list(g: &Csr, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    writeln!(w, "# daig edge list: {} vertices, {} edges", g.num_vertices(), g.num_edges())?;
+    for (s, d, wt) in g.edges() {
+        if g.is_weighted() {
+            writeln!(w, "{s} {d} {wt}")?;
+        } else {
+            writeln!(w, "{s} {d}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Read a whitespace-separated edge list. Lines starting with `#` or `%`
+/// are comments. Vertex count is `max id + 1` unless `n` is given.
+pub fn read_edge_list(path: &Path, n: Option<usize>, symmetrize: bool) -> Result<Csr> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut triples: Vec<(u32, u32, u32)> = Vec::new();
+    let mut weighted = false;
+    let mut max_id = 0u32;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let s: u32 = it.next().context("missing src")?.parse().with_context(|| format!("line {}", lineno + 1))?;
+        let d: u32 = it.next().with_context(|| format!("line {}: missing dst", lineno + 1))?.parse()?;
+        let w: u32 = match it.next() {
+            Some(ws) => {
+                weighted = true;
+                ws.parse()?
+            }
+            None => 1,
+        };
+        max_id = max_id.max(s).max(d);
+        triples.push((s, d, w));
+    }
+    let n = n.unwrap_or(if triples.is_empty() { 0 } else { max_id as usize + 1 });
+    let mut b = GraphBuilder::new(n);
+    if weighted {
+        b = b.with_weights();
+    }
+    if symmetrize {
+        b = b.symmetrize();
+    }
+    for (s, d, w) in triples {
+        b.push(s, d, w);
+    }
+    Ok(b.build())
+}
+
+// -------------------------------------------------------------- binary --
+
+fn put_u32(w: &mut impl Write, x: u32) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn put_u64(w: &mut impl Write, x: u64) -> Result<()> {
+    w.write_all(&x.to_le_bytes())?;
+    Ok(())
+}
+
+fn get_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn get_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+/// Write the compact binary `.daig` format (offsets + sources (+weights)).
+pub fn write_binary(g: &Csr, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+    w.write_all(MAGIC)?;
+    put_u32(&mut w, VERSION)?;
+    let flags = (g.is_weighted() as u32) | ((g.is_symmetric() as u32) << 1);
+    put_u32(&mut w, flags)?;
+    put_u64(&mut w, g.num_vertices() as u64)?;
+    put_u64(&mut w, g.num_edges() as u64)?;
+    for &o in g.offsets() {
+        put_u64(&mut w, o)?;
+    }
+    for &s in g.sources() {
+        put_u32(&mut w, s)?;
+    }
+    for &d in g.out_degrees() {
+        put_u32(&mut w, d)?;
+    }
+    if let Some(ws) = g.weights() {
+        for &x in ws {
+            put_u32(&mut w, x)?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the binary `.daig` format.
+pub fn read_binary(path: &Path) -> Result<Csr> {
+    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?}: not a .daig file");
+    }
+    let version = get_u32(&mut r)?;
+    if version != VERSION {
+        bail!("{path:?}: unsupported version {version}");
+    }
+    let flags = get_u32(&mut r)?;
+    let weighted = flags & 1 != 0;
+    let symmetric = flags & 2 != 0;
+    let n = get_u64(&mut r)? as usize;
+    let m = get_u64(&mut r)? as usize;
+    let mut offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        offsets.push(get_u64(&mut r)?);
+    }
+    let mut sources = Vec::with_capacity(m);
+    for _ in 0..m {
+        sources.push(get_u32(&mut r)?);
+    }
+    let mut out_degrees = Vec::with_capacity(n);
+    for _ in 0..n {
+        out_degrees.push(get_u32(&mut r)?);
+    }
+    let weights = if weighted {
+        let mut ws = Vec::with_capacity(m);
+        for _ in 0..m {
+            ws.push(get_u32(&mut r)?);
+        }
+        Some(ws)
+    } else {
+        None
+    };
+    if *offsets.last().unwrap_or(&0) as usize != m {
+        bail!("{path:?}: corrupt offsets");
+    }
+    Ok(Csr::from_parts(offsets, sources, weights, out_degrees, symmetric))
+}
+
+// ------------------------------------------------------- matrix market --
+
+/// Read a MatrixMarket `coordinate` file as a graph (1-based indices;
+/// `pattern` fields unweighted, otherwise weights are rounded to u32).
+pub fn read_matrix_market(path: &Path) -> Result<Csr> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut lines = r.lines();
+    let header = lines.next().context("empty file")??;
+    if !header.starts_with("%%MatrixMarket") {
+        bail!("{path:?}: missing MatrixMarket header");
+    }
+    let symmetric = header.contains("symmetric");
+    let pattern = header.contains("pattern");
+    let mut dims: Option<(usize, usize)> = None;
+    let mut b: Option<GraphBuilder> = None;
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        if dims.is_none() {
+            let rows: usize = it.next().context("rows")?.parse()?;
+            let cols: usize = it.next().context("cols")?.parse()?;
+            dims = Some((rows, cols));
+            let mut builder = GraphBuilder::new(rows.max(cols));
+            if !pattern {
+                builder = builder.with_weights();
+            }
+            if symmetric {
+                builder = builder.symmetrize();
+            }
+            b = Some(builder);
+            continue;
+        }
+        let i: u32 = it.next().context("i")?.parse()?;
+        let j: u32 = it.next().context("j")?.parse()?;
+        let w = if pattern {
+            1
+        } else {
+            it.next().map(|s| s.parse::<f64>().unwrap_or(1.0).abs().round() as u32).unwrap_or(1).max(1)
+        };
+        b.as_mut().unwrap().push(i - 1, j - 1, w);
+    }
+    Ok(b.context("no size line")?.build())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gap::GapGraph;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("daig-io-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = GapGraph::Twitter.generate(8, 4);
+        let p = tmp("t.el");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p, Some(g.num_vertices()), false).unwrap();
+        assert_eq!(g.num_edges(), g2.num_edges());
+        assert_eq!(g.sources(), g2.sources());
+    }
+
+    #[test]
+    fn weighted_edge_list_roundtrip() {
+        let g = GapGraph::Twitter.generate_weighted(7, 4);
+        let p = tmp("tw.el");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p, Some(g.num_vertices()), false).unwrap();
+        assert_eq!(g.weights(), g2.weights());
+    }
+
+    #[test]
+    fn binary_roundtrip_exact() {
+        for gg in [GapGraph::Kron, GapGraph::Web] {
+            let g = gg.generate_weighted(8, 4);
+            let p = tmp(&format!("{}.daig", gg.name()));
+            write_binary(&g, &p).unwrap();
+            let g2 = read_binary(&p).unwrap();
+            assert_eq!(g, g2, "{}", gg.name());
+        }
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let p = tmp("garbage.daig");
+        std::fs::write(&p, b"NOPE....").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn matrix_market_basic() {
+        let p = tmp("m.mtx");
+        std::fs::write(
+            &p,
+            "%%MatrixMarket matrix coordinate real general\n% comment\n3 3 3\n1 2 5.0\n2 3 1.5\n3 1 2.0\n",
+        )
+        .unwrap();
+        let g = read_matrix_market(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert!(g.is_weighted());
+        assert_eq!(g.in_neighbors(1), &[0]);
+    }
+
+    #[test]
+    fn matrix_market_symmetric_pattern() {
+        let p = tmp("sp.mtx");
+        std::fs::write(&p, "%%MatrixMarket matrix coordinate pattern symmetric\n2 2 1\n1 2\n").unwrap();
+        let g = read_matrix_market(&p).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert!(!g.is_weighted());
+    }
+
+    #[test]
+    fn edge_list_comments_and_blank_lines() {
+        let p = tmp("c.el");
+        std::fs::write(&p, "# hi\n\n0 1\n% also comment\n1 2 9\n").unwrap();
+        let g = read_edge_list(&p, None, false).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+        assert!(g.is_weighted());
+    }
+}

@@ -1,0 +1,21 @@
+//! Graph storage, generation, and analysis.
+//!
+//! Pull-style iterative algorithms read a vertex's **in-neighbors**, so
+//! the canonical representation here is [`Csr`] over *incoming* edges
+//! (i.e. CSC of the adjacency matrix). [`builder`] turns arbitrary edge
+//! lists into that form; [`generators`]/[`gap`] produce the synthetic
+//! GAP-analog suite used by every experiment; [`properties`] computes the
+//! topology metrics (notably the diagonal-locality score of §IV-C) that
+//! predict whether delaying updates helps.
+
+pub mod builder;
+pub mod gap;
+pub mod generators;
+pub mod io;
+pub mod properties;
+pub mod weights;
+
+mod csr;
+
+pub use builder::GraphBuilder;
+pub use csr::{Csr, VertexId};

@@ -1,0 +1,191 @@
+//! Topology metrics — Table II and the §IV-C locality precomputation.
+//!
+//! The paper concludes that a graph's amenability to delay-buffering "can
+//! be precomputed" from its topology: graphs whose coarsened adjacency
+//! mass sits on the main diagonal (Web) do not benefit. This module
+//! computes that *diagonal locality score* plus the standard statistics
+//! reported in Table II.
+
+use crate::graph::{Csr, VertexId};
+use crate::partition::{blocked, PartitionMap};
+use crate::util::rng::SplitMix64;
+
+/// Summary statistics for a graph (Table II plus locality diagnostics).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphStats {
+    pub vertices: usize,
+    pub edges: usize,
+    pub symmetric: bool,
+    pub weighted: bool,
+    pub avg_degree: f64,
+    pub max_in_degree: usize,
+    /// Coefficient of variation of in-degree (skew measure).
+    pub degree_cv: f64,
+    /// Fraction of edges whose endpoints fall in the same partition when
+    /// split into `parts` in-degree-balanced blocks — the mass on the
+    /// diagonal of the paper's Fig. 5 access matrix.
+    pub diagonal_locality: f64,
+    /// BFS-estimated effective diameter (90th percentile distance from a
+    /// sample of sources; usize::MAX-free: unreachable pairs ignored).
+    pub effective_diameter: usize,
+}
+
+/// Number of blocks used for the locality score (the paper instruments a
+/// 32-thread setup; we use the same granularity by default).
+pub const LOCALITY_PARTS: usize = 32;
+
+/// Compute all statistics. `O(m + sample·(n+m))` for the diameter sample.
+pub fn stats(g: &Csr) -> GraphStats {
+    let n = g.num_vertices();
+    let m = g.num_edges();
+    let avg = g.avg_degree();
+
+    let mut max_in = 0usize;
+    let mut var = 0.0f64;
+    for v in 0..n as VertexId {
+        let d = g.in_degree(v);
+        max_in = max_in.max(d);
+        let diff = d as f64 - avg;
+        var += diff * diff;
+    }
+    let degree_cv = if n > 0 && avg > 0.0 { (var / n as f64).sqrt() / avg } else { 0.0 };
+
+    GraphStats {
+        vertices: n,
+        edges: m,
+        symmetric: g.is_symmetric(),
+        weighted: g.is_weighted(),
+        avg_degree: avg,
+        max_in_degree: max_in,
+        degree_cv,
+        diagonal_locality: diagonal_locality(g, LOCALITY_PARTS),
+        effective_diameter: effective_diameter(g, 8, 0xD1A3),
+    }
+}
+
+/// Fraction of edges internal to their in-degree-balanced block — the
+/// §IV-C predictor: high values (Web) mean threads consume their own
+/// updates and delaying writes cannot relieve contention.
+pub fn diagonal_locality(g: &Csr, parts: usize) -> f64 {
+    if g.num_edges() == 0 {
+        return 0.0;
+    }
+    let pm = blocked::partition(g, parts);
+    let mut internal = 0usize;
+    for (s, d, _) in g.edges() {
+        if pm.owner(s) == pm.owner(d) {
+            internal += 1;
+        }
+    }
+    internal as f64 / g.num_edges() as f64
+}
+
+/// The full coarsened access matrix: `counts[r][c]` = number of pull reads
+/// thread `r` (owner of the destination) performs on data owned by thread
+/// `c` (the source's partition). This is exactly what Fig. 5 plots.
+pub fn access_matrix(g: &Csr, parts: usize) -> Vec<Vec<u64>> {
+    let pm = blocked::partition(g, parts);
+    access_matrix_with(g, &pm)
+}
+
+/// As [`access_matrix`] but over a caller-supplied partition map.
+pub fn access_matrix_with(g: &Csr, pm: &PartitionMap) -> Vec<Vec<u64>> {
+    let parts = pm.num_parts();
+    let mut counts = vec![vec![0u64; parts]; parts];
+    for (s, d, _) in g.edges() {
+        counts[pm.owner(d) as usize][pm.owner(s) as usize] += 1;
+    }
+    counts
+}
+
+/// 90th-percentile BFS distance from `samples` random sources (ignoring
+/// unreachable vertices). Cheap stand-in for effective diameter.
+pub fn effective_diameter(g: &Csr, samples: usize, seed: u64) -> usize {
+    let n = g.num_vertices();
+    if n == 0 {
+        return 0;
+    }
+    let mut rng = SplitMix64::new(seed);
+    let mut best = 0usize;
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    for _ in 0..samples {
+        let src = rng.index(n) as VertexId;
+        dist.iter_mut().for_each(|d| *d = u32::MAX);
+        queue.clear();
+        dist[src as usize] = 0;
+        queue.push_back(src);
+        let mut reached = Vec::new();
+        while let Some(v) = queue.pop_front() {
+            reached.push(dist[v as usize]);
+            // NOTE: pull lists are in-neighbors; on symmetric graphs this
+            // equals out-neighbors. On directed graphs this measures the
+            // reverse reachability, which is fine for an estimate.
+            for &u in g.in_neighbors(v) {
+                if dist[u as usize] == u32::MAX {
+                    dist[u as usize] = dist[v as usize] + 1;
+                    queue.push_back(u);
+                }
+            }
+        }
+        reached.sort_unstable();
+        if !reached.is_empty() {
+            best = best.max(reached[(reached.len() * 9) / 10] as usize);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gap::GapGraph;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn stats_tiny() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2), (2, 0), (0, 2)]).build();
+        let s = stats(&g);
+        assert_eq!(s.vertices, 3);
+        assert_eq!(s.edges, 4);
+        assert!(!s.symmetric);
+        assert!((s.avg_degree - 4.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.max_in_degree, 2);
+    }
+
+    #[test]
+    fn web_more_diagonal_than_kron() {
+        // The paper's central topology finding, at small scale.
+        let web = GapGraph::Web.generate(11, 8);
+        let kron = GapGraph::Kron.generate(11, 8);
+        let lw = diagonal_locality(&web, 32);
+        let lk = diagonal_locality(&kron, 32);
+        assert!(lw > 2.0 * lk, "web {lw} vs kron {lk}");
+        assert!(lw > 0.5, "web should be majority-local, got {lw}");
+    }
+
+    #[test]
+    fn road_has_large_diameter() {
+        let road = GapGraph::Road.generate(12, 0);
+        let kron = GapGraph::Kron.generate(12, 8);
+        let dr = effective_diameter(&road, 4, 1);
+        let dk = effective_diameter(&kron, 4, 1);
+        assert!(dr > 4 * dk.max(1), "road {dr} vs kron {dk}");
+    }
+
+    #[test]
+    fn access_matrix_conserves_edges() {
+        let g = GapGraph::Twitter.generate(10, 8);
+        let am = access_matrix(&g, 8);
+        let total: u64 = am.iter().flatten().sum();
+        assert_eq!(total, g.num_edges() as u64);
+    }
+
+    #[test]
+    fn empty_graph_stats() {
+        let g = GraphBuilder::new(0).edges(&[]).build();
+        let s = stats(&g);
+        assert_eq!(s.vertices, 0);
+        assert_eq!(s.effective_diameter, 0);
+    }
+}

@@ -1,0 +1,90 @@
+//! Edge-weight assignment for SSSP workloads.
+//!
+//! The GAP benchmark assigns each edge a uniformly random integer weight
+//! in `[1, 255]`; the paper's Bellman-Ford runs "use the given weights
+//! for each of the GAP graphs". We reproduce that policy deterministically
+//! from a seed so weighted graphs are reproducible.
+//!
+//! Weights are assigned per *undirected pair*: edge (u,v) and its reverse
+//! (v,u) get the same weight on symmetric graphs, as GAP does.
+
+use crate::graph::{Csr, GraphBuilder};
+use crate::util::rng::SplitMix64;
+
+/// GAP weight range.
+pub const MIN_WEIGHT: u32 = 1;
+/// GAP weight range.
+pub const MAX_WEIGHT: u32 = 255;
+
+/// Hash-derived weight for the unordered pair `{u,v}` — both directions
+/// of an undirected edge get the same value without any coordination.
+fn pair_weight(u: u32, v: u32, seed: u64) -> u32 {
+    let (a, b) = if u <= v { (u, v) } else { (v, u) };
+    let mut h = SplitMix64::new(seed ^ ((a as u64) << 32 | b as u64));
+    h.range_u32(MIN_WEIGHT, MAX_WEIGHT)
+}
+
+/// Produce a weighted copy of `g` with GAP-style uniform weights.
+pub fn assign_uniform(g: &Csr, seed: u64) -> Csr {
+    let mut b = GraphBuilder::new(g.num_vertices()).with_weights();
+    if g.is_symmetric() {
+        b = b.symmetrize();
+        // Emit each undirected edge once; symmetrize restores the pair
+        // with equal weights.
+        for (s, d, _) in g.edges() {
+            if s <= d {
+                b.push(s, d, pair_weight(s, d, seed));
+            }
+        }
+    } else {
+        for (s, d, _) in g.edges() {
+            b.push(s, d, pair_weight(s, d, seed));
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::{rmat, web};
+
+    #[test]
+    fn weights_in_gap_range() {
+        let g = assign_uniform(&rmat::generate(8, 4, 1), 42);
+        assert!(g.is_weighted());
+        for (_, _, w) in g.edges() {
+            assert!((MIN_WEIGHT..=MAX_WEIGHT).contains(&w));
+        }
+    }
+
+    #[test]
+    fn symmetric_pairs_share_weight() {
+        let g = assign_uniform(&rmat::generate(8, 4, 2), 7);
+        // For every edge (s,d,w), the reverse must exist with weight w.
+        for (s, d, w) in g.edges() {
+            let rev: Vec<_> = g.in_neighbors_weighted(s).filter(|&(u, _)| u == d).collect();
+            assert_eq!(rev, vec![(d, w)], "asymmetric weight for ({s},{d})");
+        }
+    }
+
+    #[test]
+    fn preserves_structure() {
+        let base = web::generate(8, 4, 3);
+        let g = assign_uniform(&base, 9);
+        assert_eq!(g.num_vertices(), base.num_vertices());
+        assert_eq!(g.num_edges(), base.num_edges());
+        let mut a: Vec<_> = base.edges().map(|(s, d, _)| (s, d)).collect();
+        let mut b: Vec<_> = g.edges().map(|(s, d, _)| (s, d)).collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn deterministic_in_seed() {
+        let base = rmat::generate(7, 4, 5);
+        assert_eq!(assign_uniform(&base, 1), assign_uniform(&base, 1));
+        assert_ne!(assign_uniform(&base, 1), assign_uniform(&base, 2));
+    }
+}

@@ -1,0 +1,237 @@
+//! `daig` — command-line driver for the Delayed Asynchronous Iterative
+//! Graph Algorithms library.
+//!
+//! ```text
+//! daig run        --algo pagerank --graph kron --scale 14 --mode d256 --threads 32 [--engine sim|native] [--machine haswell|cascadelake]
+//! daig sweep      --algo pagerank --graph kron --scale 14 --threads 32 [--machine haswell]
+//! daig experiment <table1|table2|fig2|fig3|fig4|fig5|fig6|ablations|all> [--out results] [--scale 14]
+//! daig stats      --graph web --scale 14 | --file graph.daig
+//! daig gengraph   --graph kron --scale 14 --out kron.daig [--weighted]
+//! daig pjrt-demo  [--graph kron] [--scale 8] [--artifacts artifacts]
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use daig::coordinator::experiments::{self, ExpOptions};
+use daig::coordinator::{machine_from_name, run_native, run_sim, sweep, Algo, Workload};
+use daig::engine::{EngineConfig, ExecutionMode};
+use daig::graph::gap::GapGraph;
+use daig::graph::{io, properties, Csr};
+use daig::util::cli::Args;
+use daig::util::{fmt, table::Table};
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_deref() {
+        Some("run") => cmd_run(args),
+        Some("sweep") => cmd_sweep(args),
+        Some("experiment") => cmd_experiment(args),
+        Some("stats") => cmd_stats(args),
+        Some("gengraph") => cmd_gengraph(args),
+        Some("autotune") => cmd_autotune(args),
+        Some("pjrt-demo") => cmd_pjrt_demo(args),
+        Some("help") | None => {
+            print!("{HELP}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command '{other}' (try `daig help`)"),
+    }
+}
+
+const HELP: &str = "daig — delayed asynchronous iterative graph algorithms
+
+commands:
+  run         run one algorithm/graph/mode configuration
+  sweep       sync/async/δ-grid sweep at a fixed thread count
+  experiment  regenerate a paper table/figure (table1 table2 fig2..fig6 ablations all)
+  stats       graph statistics (Table II columns)
+  gengraph    generate a GAP-analog graph to a .daig file
+  autotune    recommend an execution mode/δ from topology (§V future work)
+  pjrt-demo   run PageRank + SSSP through the AOT/PJRT dense-block backend
+  help        this text
+
+common options:
+  --graph kron|urand|twitter|web|road   --scale N (log2 vertices)
+  --ef N (edge factor)                  --algo pagerank|sssp|cc|bfs
+  --mode sync|async|dN                  --threads N
+  --engine sim|native                   --machine haswell|cascadelake
+";
+
+fn parse_workload(args: &Args) -> Result<(Workload, Csr)> {
+    let algo = Algo::from_name(&args.opt_str("algo", "pagerank")).context("bad --algo")?;
+    if let Some(file) = args.options.get("file") {
+        let g = io::read_binary(std::path::Path::new(file))?;
+        return Ok((Workload { algo, graph: GapGraph::Kron, scale: 0, edge_factor: 0 }, g));
+    }
+    let graph = GapGraph::from_name(&args.opt_str("graph", "kron")).context("bad --graph")?;
+    let w = Workload { algo, graph, scale: args.opt("scale", 14)?, edge_factor: args.opt("ef", 0)? };
+    let g = w.build_graph();
+    Ok((w, g))
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (w, g) = parse_workload(args)?;
+    let mode = ExecutionMode::from_label(&args.opt_str("mode", "d256")).context("bad --mode")?;
+    let threads: usize = args.opt("threads", 32)?;
+    let mut ecfg = EngineConfig::new(threads, mode);
+    if args.flag("local-reads") {
+        ecfg = ecfg.with_local_reads();
+    }
+    println!(
+        "{} on {} (n={}, m={}), mode={}, threads={}",
+        w.algo.name(),
+        args.opt_str("graph", "kron"),
+        g.num_vertices(),
+        g.num_edges(),
+        mode.label(),
+        threads
+    );
+    match args.opt_str("engine", "sim").as_str() {
+        "native" => {
+            let r = run_native(&g, w.algo, &ecfg);
+            println!(
+                "rounds={} total={} avg/round={} converged={}",
+                r.num_rounds(),
+                fmt::secs(r.total_time()),
+                fmt::secs(r.avg_round_time()),
+                r.converged
+            );
+        }
+        "sim" => {
+            let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
+            let s = run_sim(&g, w.algo, &ecfg, &machine);
+            println!(
+                "rounds={} total={} avg/round={} cycles={} invalidations={} flushes={} converged={}",
+                s.result.num_rounds(),
+                fmt::secs(s.result.total_time()),
+                fmt::secs(s.result.avg_round_time()),
+                fmt::si(s.total_cycles() as f64),
+                fmt::si(s.metrics.invalidations as f64),
+                s.result.total_flushes(),
+                s.result.converged
+            );
+        }
+        other => bail!("unknown engine '{other}'"),
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let (w, g) = parse_workload(args)?;
+    let threads: usize = args.opt("threads", 32)?;
+    let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
+    let pts = sweep::modes(&g, w.algo, threads, &machine);
+    let sync_t = sweep::find_mode(&pts, ExecutionMode::Synchronous).unwrap().time_s;
+    let mut t = Table::new(
+        &format!("{} δ-sweep, {} threads, {}", w.algo.name(), threads, machine.name),
+        &["mode", "rounds", "total", "avg/round", "invalidations", "flushes", "speedup vs sync"],
+    );
+    for p in &pts {
+        t.row(vec![
+            p.mode.label(),
+            p.rounds.to_string(),
+            fmt::secs(p.time_s),
+            fmt::secs(p.avg_round_s),
+            fmt::si(p.invalidations as f64),
+            p.flushes.to_string(),
+            format!("{:.3}x", sync_t / p.time_s),
+        ]);
+    }
+    print!("{}", t.to_text());
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = match args.positional.first() {
+        Some(x) => x.clone(),
+        None => bail!("usage: daig experiment <id> [--out results]"),
+    };
+    let mut opts = ExpOptions::to_dir(&args.opt_str("out", "results"))?;
+    opts.scale = args.opt("scale", 14)?;
+    opts.edge_factor = args.opt("ef", 0)?;
+    let t0 = std::time::Instant::now();
+    experiments::run(&id, &opts)?;
+    println!("experiment {id} done in {}", fmt::secs(t0.elapsed().as_secs_f64()));
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let (_, g) = parse_workload(args)?;
+    let s = properties::stats(&g);
+    println!("{s:#?}");
+    Ok(())
+}
+
+fn cmd_gengraph(args: &Args) -> Result<()> {
+    let graph = GapGraph::from_name(&args.opt_str("graph", "kron")).context("bad --graph")?;
+    let scale: u32 = args.opt("scale", 14)?;
+    let ef: usize = args.opt("ef", 0)?;
+    let g = if args.flag("weighted") { graph.generate_weighted(scale, ef) } else { graph.generate(scale, ef) };
+    let out = args.opt_str("out", &format!("{}_{}.daig", graph.name(), scale));
+    io::write_binary(&g, std::path::Path::new(&out))?;
+    println!("wrote {} (n={}, m={})", out, g.num_vertices(), g.num_edges());
+    Ok(())
+}
+
+fn cmd_autotune(args: &Args) -> Result<()> {
+    let (w, g) = parse_workload(args)?;
+    let threads: usize = args.opt("threads", 32)?;
+    let rec = daig::coordinator::autotune::recommend(&g, w.algo, threads);
+    println!("workload : {} on {} (n={}, m={}), {} threads", w.algo.name(), args.opt_str("graph", "kron"), g.num_vertices(), g.num_edges(), threads);
+    println!("recommend: {}", rec.mode.label());
+    println!("locality : {:.3}", rec.locality);
+    println!("reason   : {}", rec.reason);
+    if args.flag("validate") {
+        let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
+        let rec_pt = sweep::point(&g, w.algo, threads, &machine, rec.mode);
+        let pts = sweep::modes(&g, w.algo, threads, &machine);
+        let best = pts
+            .iter()
+            .filter(|p| p.mode != ExecutionMode::Synchronous)
+            .min_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap())
+            .unwrap();
+        println!(
+            "validate : recommended {} = {}, sweep best {} = {} (regret {})",
+            rec.mode.label(),
+            fmt::secs(rec_pt.time_s),
+            best.mode.label(),
+            fmt::secs(best.time_s),
+            fmt::pct_delta(rec_pt.time_s / best.time_s)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_pjrt_demo(args: &Args) -> Result<()> {
+    use daig::runtime::{block_backend, Runtime};
+    let scale: u32 = args.opt("scale", 8)?;
+    let graph = GapGraph::from_name(&args.opt_str("graph", "kron")).context("bad --graph")?;
+    let dir = args.opt_str("artifacts", "artifacts");
+    let rt = Runtime::load(std::path::Path::new(&dir))?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let g = graph.generate(scale, 8);
+    println!("dense-block PageRank on {} (n={})", graph.name(), g.num_vertices());
+    let pr = block_backend::pagerank(&rt, &g, &Default::default(), 200)?;
+    println!("  rounds={} converged={} mass={:.4}", pr.rounds, pr.converged, pr.values.iter().sum::<f32>());
+
+    let gw = graph.generate_weighted(scale, 8);
+    let src = daig::algorithms::sssp::default_source(&gw);
+    let ss = block_backend::sssp(&rt, &gw, src, 200)?;
+    let reached = ss.values.iter().filter(|d| d.is_finite()).count();
+    println!("dense-block SSSP: rounds={} converged={} reached={}", ss.rounds, ss.converged, reached);
+    Ok(())
+}

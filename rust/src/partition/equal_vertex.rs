@@ -1,0 +1,54 @@
+//! Ablation partitioner: contiguous blocks with equal vertex counts,
+//! ignoring degree. On skewed graphs this produces badly imbalanced pull
+//! work; comparing it against [`crate::partition::blocked`] quantifies
+//! how much the paper's in-degree balancing matters.
+
+use crate::graph::Csr;
+use crate::partition::PartitionMap;
+
+/// Split `0..n` into `parts` near-equal contiguous ranges.
+pub fn partition(g: &Csr, parts: usize) -> PartitionMap {
+    partition_n(g.num_vertices(), parts)
+}
+
+/// As [`partition`] but from a bare vertex count.
+pub fn partition_n(n: usize, parts: usize) -> PartitionMap {
+    assert!(parts >= 1);
+    let mut bounds = Vec::with_capacity(parts + 1);
+    for t in 0..=parts {
+        bounds.push(((n as u64 * t as u64) / parts as u64) as u32);
+    }
+    PartitionMap::from_bounds(bounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gap::GapGraph;
+    use crate::partition::blocked;
+
+    #[test]
+    fn sizes_differ_by_at_most_one() {
+        let pm = partition_n(10, 3);
+        let sizes: Vec<usize> = (0..3).map(|t| pm.len(t)).collect();
+        assert_eq!(sizes.iter().sum::<usize>(), 10);
+        assert!(sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn worse_than_blocked_on_skew() {
+        let g = GapGraph::Kron.generate(12, 8);
+        let ev = partition(&g, 16);
+        let bl = blocked::partition(&g, 16);
+        assert!(
+            blocked::imbalance(&g, &ev) > blocked::imbalance(&g, &bl),
+            "equal-vertex should be worse on skewed graphs"
+        );
+    }
+
+    #[test]
+    fn zero_vertices() {
+        let pm = partition_n(0, 4);
+        assert_eq!(pm.num_vertices(), 0);
+    }
+}

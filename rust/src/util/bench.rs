@@ -1,0 +1,76 @@
+//! Self-timed micro-benchmark harness (criterion is unavailable in this
+//! offline environment). Used by the `rust/benches/*.rs` targets
+//! (`harness = false`).
+//!
+//! Methodology: warmup iterations, then `samples` timed iterations;
+//! reports min / median / mean. Black-boxes the closure result so the
+//! optimizer cannot elide the work.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub min_s: f64,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub samples: usize,
+}
+
+/// Time `f`, returning the summary (warmup 2 + `samples` runs).
+pub fn time<T>(samples: usize, mut f: impl FnMut() -> T) -> Sample {
+    for _ in 0..2 {
+        black_box(f());
+    }
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Sample {
+        min_s: times[0],
+        median_s: times[times.len() / 2],
+        mean_s: times.iter().sum::<f64>() / times.len() as f64,
+        samples,
+    }
+}
+
+/// Run + report one named case.
+pub fn case<T>(name: &str, samples: usize, f: impl FnMut() -> T) -> Sample {
+    let s = time(samples, f);
+    println!(
+        "{name:<52} min {:>12}  median {:>12}  mean {:>12}  (n={})",
+        super::fmt::secs(s.min_s),
+        super::fmt::secs(s.median_s),
+        super::fmt::secs(s.mean_s),
+        s.samples
+    );
+    s
+}
+
+/// Print a section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sane() {
+        let s = time(5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.min_s > 0.0);
+        assert!(s.min_s <= s.median_s);
+        assert!(s.samples == 5);
+    }
+}

@@ -1,0 +1,143 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Grammar: `daig <subcommand> [positional…] [--flag] [--key value]…`.
+//! Flags may be written `--key=value` or `--key value`. Unknown flags are
+//! an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a subcommand, positionals, and `--key value` pairs.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining non-flag tokens.
+    pub positional: Vec<String>,
+    /// `--key value` and `--key=value` options; bare `--flag` maps to "true".
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding `argv[0]`).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if stripped.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.options.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the real process arguments.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// String option with default.
+    pub fn opt_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Typed option with default; errors if present but unparsable.
+    pub fn opt<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow::anyhow!("--{key}: cannot parse '{v}'")),
+        }
+    }
+
+    /// Boolean flag (`--quiet` or `--quiet=true`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.options.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Error unless every provided option key is in `allowed`.
+    pub fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+        for k in self.options.keys() {
+            if !allowed.contains(&k.as_str()) {
+                bail!("unknown option --{k} (allowed: {})", allowed.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("run kron extra");
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["kron", "extra"]);
+    }
+
+    #[test]
+    fn key_value_both_syntaxes() {
+        let a = parse("run --threads 8 --delta=256");
+        assert_eq!(a.opt::<usize>("threads", 1).unwrap(), 8);
+        assert_eq!(a.opt::<usize>("delta", 0).unwrap(), 256);
+    }
+
+    #[test]
+    fn bare_flag() {
+        // A non-flag token after `--key` binds as its value…
+        let a = parse("run --quiet kron");
+        assert_eq!(a.opt_str("quiet", ""), "kron");
+        assert!(!a.flag("quiet"));
+        // …use `--key=true` to combine a bare flag with positionals.
+        let b = parse("run --quiet=true kron");
+        assert!(b.flag("quiet"));
+        assert_eq!(b.positional, vec!["kron"]);
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = parse("run --verbose");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.opt::<u64>("seed", 42).unwrap(), 42);
+        assert_eq!(a.opt_str("graph", "kron"), "kron");
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn parse_error_reported() {
+        let a = parse("run --threads abc");
+        assert!(a.opt::<usize>("threads", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_rejected() {
+        let a = parse("run --oops 3");
+        assert!(a.reject_unknown(&["threads"]).is_err());
+        assert!(a.reject_unknown(&["oops"]).is_ok());
+    }
+}

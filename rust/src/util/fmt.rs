@@ -1,0 +1,64 @@
+//! Human-readable formatting helpers for reports and logs.
+
+/// Format a count with SI-style suffixes: `1234567` → `"1.23M"`.
+pub fn si(x: f64) -> String {
+    let (v, suffix) = if x.abs() >= 1e9 {
+        (x / 1e9, "G")
+    } else if x.abs() >= 1e6 {
+        (x / 1e6, "M")
+    } else if x.abs() >= 1e3 {
+        (x / 1e3, "k")
+    } else {
+        (x, "")
+    };
+    if suffix.is_empty() {
+        format!("{v:.0}")
+    } else {
+        format!("{v:.2}{suffix}")
+    }
+}
+
+/// Format a duration in seconds adaptively (`1.23 s`, `45.6 ms`, `789 µs`).
+pub fn secs(t: f64) -> String {
+    if t >= 1.0 {
+        format!("{t:.3} s")
+    } else if t >= 1e-3 {
+        format!("{:.3} ms", t * 1e3)
+    } else if t >= 1e-6 {
+        format!("{:.1} µs", t * 1e6)
+    } else {
+        format!("{:.0} ns", t * 1e9)
+    }
+}
+
+/// Format a ratio as a percentage delta: 1.194 → `"+19.4%"`.
+pub fn pct_delta(ratio: f64) -> String {
+    format!("{:+.1}%", (ratio - 1.0) * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_suffixes() {
+        assert_eq!(si(950.0), "950");
+        assert_eq!(si(1_234_567.0), "1.23M");
+        assert_eq!(si(4_200.0), "4.20k");
+        assert_eq!(si(2.5e9), "2.50G");
+    }
+
+    #[test]
+    fn secs_ranges() {
+        assert_eq!(secs(2.5), "2.500 s");
+        assert_eq!(secs(0.0456), "45.600 ms");
+        assert_eq!(secs(7.89e-4), "789.0 µs");
+        assert_eq!(secs(5e-8), "50 ns");
+    }
+
+    #[test]
+    fn pct() {
+        assert_eq!(pct_delta(1.194), "+19.4%");
+        assert_eq!(pct_delta(0.95), "-5.0%");
+    }
+}

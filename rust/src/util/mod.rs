@@ -1,0 +1,11 @@
+//! In-tree substrates: the offline build environment ships no third-party
+//! crates beyond `xla`/`anyhow`, so the small utilities a project would
+//! normally pull from crates.io are implemented here from scratch.
+
+pub mod aligned;
+pub mod bench;
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,211 @@
+//! Property-based tests on the engine invariants (in-tree `daig::prop`
+//! framework; replay failures with DAIG_PROP_SEED=<master-seed>).
+
+use daig::algorithms::{oracle, pagerank, sssp};
+use daig::engine::delay_buffer::{round_delta, DelayBuffer};
+use daig::engine::native;
+use daig::engine::program::{ValueReader, VertexProgram};
+use daig::engine::shared::SharedValues;
+use daig::engine::sim::cost::Machine;
+use daig::engine::{EngineConfig, ExecutionMode};
+use daig::graph::{Csr, GraphBuilder, VertexId};
+use daig::prop::{forall, forall_res, Gen};
+
+fn random_graph(g: &mut Gen, weighted: bool) -> Csr {
+    let n = g.usize(2..120);
+    let m = g.usize(1..400);
+    let es = g.edges(n, m);
+    let mut b = GraphBuilder::new(n);
+    if weighted {
+        b = b.with_weights();
+    }
+    if g.chance(0.5) {
+        b = b.symmetrize();
+    }
+    for (s, d) in es {
+        let w = g.u32(1..256);
+        b.push(s, d, w);
+    }
+    b.build()
+}
+
+#[test]
+fn prop_delay_buffer_never_loses_updates() {
+    forall_res(128, |g| {
+        let total = g.usize(1..300);
+        let delta = g.usize(0..80);
+        let base = g.usize(0..50) as VertexId;
+        let shared = SharedValues::from_bits(vec![0u32; total + base as usize + 1]);
+        let mut buf = DelayBuffer::new(delta);
+        buf.begin(base);
+        let vals: Vec<u32> = (0..total as u32).map(|i| i + 1000).collect();
+        for &v in &vals {
+            buf.push(&shared, v);
+        }
+        buf.flush(&shared);
+        let got = shared.to_vec();
+        for (i, &v) in vals.iter().enumerate() {
+            if got[base as usize + i] != v {
+                return Err(format!("slot {i}: {} != {v}", got[base as usize + i]));
+            }
+        }
+        // Nothing outside the run was touched.
+        if (0..base as usize).any(|i| got[i] != 0) {
+            return Err("wrote before base".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_round_delta_is_line_multiple() {
+    forall(256, |g| {
+        let d = g.usize(0..100_000);
+        let r = round_delta(d);
+        (d == 0 && r == 0) || (r % 16 == 0 && r >= d && r < d + 16)
+    });
+}
+
+#[test]
+fn prop_partition_covers_exactly_once() {
+    forall_res(96, |g| {
+        let graph = random_graph(g, false);
+        let parts = g.usize(1..40);
+        let pm = daig::partition::blocked::partition(&graph, parts);
+        if pm.num_parts() != parts {
+            return Err("wrong part count".into());
+        }
+        let mut seen = vec![false; graph.num_vertices()];
+        for t in 0..parts {
+            for v in pm.range(t) {
+                if seen[v as usize] {
+                    return Err(format!("vertex {v} in two parts"));
+                }
+                seen[v as usize] = true;
+                if pm.owner(v) != t as u32 {
+                    return Err(format!("owner({v}) != {t}"));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("vertex uncovered".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sync_native_matches_serial_jacobi() {
+    forall_res(24, |g| {
+        let graph = random_graph(g, false);
+        let threads = g.usize(1..9);
+        let p = pagerank::PageRank::new(&graph, &pagerank::PrConfig::default());
+        let serial = native::run_serial_sync(&graph, &p, 2_000);
+        let par = native::run(&graph, &p, &EngineConfig::new(threads, ExecutionMode::Synchronous));
+        if par.values != serial.values {
+            return Err(format!("values differ at {} threads", threads));
+        }
+        if par.num_rounds() != serial.num_rounds() {
+            return Err("round counts differ".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sssp_all_modes_match_dijkstra() {
+    forall_res(24, |g| {
+        let graph = random_graph(g, true);
+        if graph.num_edges() == 0 {
+            return Ok(());
+        }
+        let src = g.u32(0..graph.num_vertices() as u32);
+        let want = oracle::dijkstra(&graph, src);
+        let mode = *g.choose(&[ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(16)]);
+        let threads = g.usize(1..7);
+        let r = sssp::run_native(&graph, src, &EngineConfig::new(threads, mode));
+        if r.dist != want {
+            return Err(format!("{mode:?} t={threads} differs from dijkstra"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_deterministic_and_mode_consistent() {
+    forall_res(16, |g| {
+        let graph = random_graph(g, false);
+        let threads = g.usize(1..17);
+        let delta = *g.choose(&[0usize, 16, 64, 256]);
+        let mode = if delta == 0 { ExecutionMode::Asynchronous } else { ExecutionMode::Delayed(delta) };
+        let p = pagerank::PageRank::new(&graph, &pagerank::PrConfig::default());
+        let m = Machine::haswell();
+        let a = daig::engine::sim::run(&graph, &p, &EngineConfig::new(threads, mode), &m);
+        let b = daig::engine::sim::run(&graph, &p, &EngineConfig::new(threads, mode), &m);
+        if a.result.values != b.result.values || a.metrics != b.metrics {
+            return Err("simulator non-deterministic".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_conditional_writes_preserve_result() {
+    // §V extension: conditional writing must not change the fixed point.
+    struct MinProp<'g>(&'g Csr, bool);
+    impl VertexProgram for MinProp<'_> {
+        fn name(&self) -> &'static str {
+            "minprop"
+        }
+        fn init(&self, v: VertexId) -> u32 {
+            v.wrapping_mul(2654435761) >> 8
+        }
+        fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+            let mut best = r.read(v);
+            for &u in self.0.in_neighbors(v) {
+                best = best.min(r.read(u));
+            }
+            best
+        }
+        fn delta(&self, old: u32, new: u32) -> f64 {
+            (old != new) as u32 as f64
+        }
+        fn converged(&self, d: f64) -> bool {
+            d == 0.0
+        }
+        fn conditional_writes(&self) -> bool {
+            self.1
+        }
+    }
+    forall_res(24, |g| {
+        let graph = random_graph(g, false);
+        let threads = g.usize(1..7);
+        let mode = *g.choose(&[ExecutionMode::Asynchronous, ExecutionMode::Delayed(16), ExecutionMode::Synchronous]);
+        let uncond = native::run(&graph, &MinProp(&graph, false), &EngineConfig::new(threads, mode));
+        let cond = native::run(&graph, &MinProp(&graph, true), &EngineConfig::new(threads, mode));
+        if uncond.values != cond.values {
+            return Err(format!("conditional changed result ({mode:?}, t={threads})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_modes_share_fixed_point_on_sim() {
+    forall_res(12, |g| {
+        let graph = random_graph(g, true);
+        if graph.num_edges() == 0 {
+            return Ok(());
+        }
+        let src = g.u32(0..graph.num_vertices() as u32);
+        let want = oracle::dijkstra(&graph, src);
+        let threads = g.usize(1..13);
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+            let (r, _) = sssp::run_sim(&graph, src, &EngineConfig::new(threads, mode), &Machine::cascade_lake());
+            if r.dist != want {
+                return Err(format!("sim {mode:?} differs"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,143 @@
+//! Property-based tests on the graph substrate.
+
+use daig::graph::{io, properties, weights, GraphBuilder};
+use daig::partition::{blocked, equal_vertex, stripe};
+use daig::prop::{forall_res, Gen};
+
+fn build(g: &mut Gen) -> daig::graph::Csr {
+    let n = g.usize(1..200);
+    let m = g.usize(0..600);
+    let es = g.edges(n, m);
+    GraphBuilder::new(n).edges(&es).build()
+}
+
+#[test]
+fn prop_builder_rows_sorted_dedup() {
+    forall_res(96, |g| {
+        let graph = build(g);
+        for v in 0..graph.num_vertices() as u32 {
+            let nb = graph.in_neighbors(v);
+            if !nb.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("row {v} not strictly sorted: {nb:?}"));
+            }
+            if nb.contains(&v) {
+                return Err(format!("self loop survived at {v}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_degrees_consistent() {
+    forall_res(96, |g| {
+        let graph = build(g);
+        // Sum of in-degrees == sum of out-degrees == edge count.
+        let in_sum: usize = (0..graph.num_vertices() as u32).map(|v| graph.in_degree(v)).sum();
+        let out_sum: usize = graph.out_degrees().iter().map(|&d| d as usize).sum();
+        if in_sum != graph.num_edges() || out_sum != graph.num_edges() {
+            return Err(format!("degree sums {in_sum}/{out_sum} != {}", graph.num_edges()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_symmetrize_makes_symmetric() {
+    forall_res(64, |g| {
+        let n = g.usize(2..100);
+        let m = g.usize(1..300);
+        let es = g.edges(n, m);
+        let graph = GraphBuilder::new(n).edges(&es).symmetrize().build();
+        for (s, d, _) in graph.edges() {
+            if !graph.in_neighbors(s).contains(&d) {
+                return Err(format!("missing reverse of ({s},{d})"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_binary_io_identity() {
+    let dir = std::env::temp_dir().join("daig-prop-io");
+    std::fs::create_dir_all(&dir).unwrap();
+    forall_res(32, |g| {
+        let graph = build(g);
+        let weighted = weights::assign_uniform(&graph, g.u64());
+        let p = dir.join(format!("g{}.daig", g.case_seed));
+        io::write_binary(&weighted, &p).map_err(|e| e.to_string())?;
+        let back = io::read_binary(&p).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&p);
+        if back != weighted {
+            return Err("binary roundtrip not identical".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partitioners_cover() {
+    forall_res(64, |g| {
+        let graph = build(g);
+        let parts = g.usize(1..50);
+        for pm in [blocked::partition(&graph, parts), equal_vertex::partition(&graph, parts)] {
+            let total: usize = (0..pm.num_parts()).map(|t| pm.len(t)).sum();
+            if total != graph.num_vertices() {
+                return Err("partition does not cover".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stripe_permutation_bijective() {
+    forall_res(64, |g| {
+        let n = g.usize(1..500);
+        let parts = g.usize(1..17);
+        let width = g.usize(1..33);
+        let p = stripe::permutation(n, parts, width);
+        let mut seen = vec![false; n];
+        for &x in &p {
+            if seen[x as usize] {
+                return Err("not a permutation".into());
+            }
+            seen[x as usize] = true;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_access_matrix_mass_conserved() {
+    forall_res(48, |g| {
+        let graph = build(g);
+        let parts = g.usize(1..33);
+        let am = properties::access_matrix(&graph, parts);
+        let total: u64 = am.iter().flatten().sum();
+        if total != graph.num_edges() as u64 {
+            return Err(format!("matrix mass {total} != edges {}", graph.num_edges()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weights_in_gap_range_and_deterministic() {
+    forall_res(32, |g| {
+        let graph = build(g);
+        let seed = g.u64();
+        let a = weights::assign_uniform(&graph, seed);
+        let b = weights::assign_uniform(&graph, seed);
+        if a != b {
+            return Err("weights not deterministic".into());
+        }
+        for (_, _, w) in a.edges() {
+            if !(1..=255).contains(&w) {
+                return Err(format!("weight {w} out of GAP range"));
+            }
+        }
+        Ok(())
+    });
+}
