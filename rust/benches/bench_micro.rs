@@ -3,14 +3,16 @@
 //! simulator throughput, and PJRT dense-step latency when artifacts are
 //! present.
 
+use daig::algorithms::cc;
 use daig::algorithms::pagerank::{self, PageRank, PrConfig};
 use daig::engine::delay_buffer::DelayBuffer;
 use daig::engine::native;
 use daig::engine::shared::SharedValues;
 use daig::engine::sim::cost::Machine;
-use daig::engine::{EngineConfig, ExecutionMode};
+use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
 use daig::graph::gap::GapGraph;
 use daig::util::bench;
+use daig::util::json::Json;
 
 fn main() {
     let scale = std::env::var("DAIG_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(14u32);
@@ -62,6 +64,69 @@ fn main() {
         let accesses = sim.metrics.accesses as f64;
         println!("  -> {:.1} M simulated accesses/s", accesses / s.min_s / 1e6);
     }
+
+    bench::section("schedule: dense vs frontier vs adaptive round sweeps (native wall clock, 4 threads)");
+    // Road is the sparse-frontier showcase (high diameter, collapsing
+    // frontier); Kron is the dense-update stress case where scheduling
+    // overhead must stay near zero. Results land in BENCH_schedule.json
+    // so the perf trajectory is recorded across PRs.
+    let road = GapGraph::Road.generate(scale, 0);
+    let mut graphs_json: Vec<(String, Json)> = Vec::new();
+    for (gname, graph) in [("kron", &g), ("road", &road)] {
+        let mut algo_json: Vec<(&str, Json)> = Vec::new();
+        for algo in ["cc", "pagerank"] {
+            let mut sched_json: Vec<(&str, Json)> = Vec::new();
+            let mut dense_min = 0.0f64;
+            for sched in SchedulePolicy::ALL {
+                let ecfg = EngineConfig::new(4, ExecutionMode::Delayed(256)).with_schedule(sched);
+                // Stats come from the timed iterations themselves (no
+                // extra untimed run).
+                let mut stats = (0usize, 0u64);
+                let label = format!("{algo} {gname}@{scale} {} 4t", sched.label());
+                let s = match algo {
+                    "cc" => bench::case(&label, 3, || {
+                        let r = cc::run_native(graph, &ecfg);
+                        stats = (r.run.num_rounds(), r.run.total_active());
+                        r
+                    }),
+                    _ => bench::case(&label, 3, || {
+                        let r = pagerank::run_native(graph, &ecfg, &PrConfig::default());
+                        stats = (r.run.num_rounds(), r.run.total_active());
+                        r
+                    }),
+                };
+                let (rounds, updates) = stats;
+                if sched == SchedulePolicy::Dense {
+                    dense_min = s.min_s;
+                } else {
+                    println!("  -> {:.2}x vs dense", dense_min / s.min_s);
+                }
+                sched_json.push((
+                    sched.label(),
+                    Json::obj(vec![
+                        ("total_s_min", Json::Num(s.min_s)),
+                        ("rounds", Json::Num(rounds as f64)),
+                        ("updates", Json::Num(updates as f64)),
+                        ("speedup_vs_dense", Json::Num(dense_min / s.min_s)),
+                    ]),
+                ));
+            }
+            algo_json.push((algo, Json::obj(sched_json)));
+        }
+        graphs_json.push((gname.to_string(), Json::obj(algo_json)));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("schedule".into())),
+        ("scale", Json::Num(scale as f64)),
+        ("threads", Json::Num(4.0)),
+        ("mode", Json::Str("d256".into())),
+        (
+            "graphs",
+            Json::Obj(graphs_json.into_iter().collect()),
+        ),
+    ]);
+    std::fs::write("BENCH_schedule.json", doc.to_string()).expect("write BENCH_schedule.json");
+    println!("wrote BENCH_schedule.json");
 
     bench::section("PJRT dense-block step (L1/L2 artifact path)");
     if std::path::Path::new("artifacts/manifest.json").exists() {

@@ -130,6 +130,19 @@ mod tests {
     }
 
     #[test]
+    fn frontier_schedule_matches_oracle() {
+        use crate::engine::SchedulePolicy;
+        let g = GapGraph::Web.generate(9, 4); // directed: exercises the transpose
+        let want = oracle::bfs_levels(&g, 3);
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(16)] {
+            for sched in [SchedulePolicy::Frontier, SchedulePolicy::Adaptive] {
+                let r = run_native(&g, 3, &EngineConfig::new(4, mode).with_schedule(sched));
+                assert_eq!(r.levels, want, "{mode:?}/{sched:?}");
+            }
+        }
+    }
+
+    #[test]
     fn sim_matches_oracle() {
         let g = GapGraph::Web.generate(9, 4);
         // Web is directed: use the transpose-consistent oracle.

@@ -138,6 +138,22 @@ mod tests {
     }
 
     #[test]
+    fn frontier_schedule_matches_and_shrinks() {
+        use crate::engine::SchedulePolicy;
+        // Label propagation on a high-diameter graph: the frontier
+        // collapses fast — the showcase workload for sparse scheduling.
+        let g = GapGraph::Road.generate(10, 0);
+        let n = g.num_vertices() as u64;
+        let want = oracle::components(&g);
+        let dense = run_native(&g, &EngineConfig::new(4, ExecutionMode::Delayed(32)));
+        let fcfg = EngineConfig::new(4, ExecutionMode::Delayed(32)).with_schedule(SchedulePolicy::Frontier);
+        let fr = run_native(&g, &fcfg);
+        assert_eq!(fr.labels, want);
+        assert_eq!(fr.run.active_counts()[0], n, "round 0 dense");
+        assert!(fr.run.total_active() < dense.run.total_active());
+    }
+
+    #[test]
     fn sim_agrees() {
         let g = GapGraph::Kron.generate(8, 8);
         let want = oracle::components(&g);

@@ -38,13 +38,9 @@ pub enum Direction {
 /// uses the transpose built once up front.
 pub fn run(g: &Csr, source: VertexId, p: DoBfsParams) -> (Vec<u32>, Vec<Direction>) {
     let n = g.num_vertices();
-    // Transpose (out-edges) for the push direction.
-    let mut out: Vec<Vec<VertexId>> = vec![Vec::new(); n];
-    for v in 0..n as VertexId {
-        for &u in g.in_neighbors(v) {
-            out[u as usize].push(v);
-        }
-    }
+    // Transpose (out-edges) for the push direction — the Csr's shared
+    // out-edge view, also used by the engine's frontier scheduling.
+    g.ensure_out_edges();
 
     let mut level = vec![UNREACHED; n];
     level[source as usize] = 0;
@@ -54,7 +50,7 @@ pub fn run(g: &Csr, source: VertexId, p: DoBfsParams) -> (Vec<u32>, Vec<Directio
     let mut unexplored_edges: usize = g.num_edges();
 
     while !frontier.is_empty() {
-        let frontier_edges: usize = frontier.iter().map(|&v| out[v as usize].len()).sum();
+        let frontier_edges: usize = frontier.iter().map(|&v| g.out_degree(v) as usize).sum();
         let dir = if frontier_edges * p.alpha > unexplored_edges {
             Direction::BottomUp
         } else {
@@ -68,7 +64,7 @@ pub fn run(g: &Csr, source: VertexId, p: DoBfsParams) -> (Vec<u32>, Vec<Directio
         match dir {
             Direction::TopDown => {
                 for &u in &frontier {
-                    for &v in &out[u as usize] {
+                    for &v in g.out_neighbors(u) {
                         if level[v as usize] == UNREACHED {
                             level[v as usize] = depth;
                             next.push(v);

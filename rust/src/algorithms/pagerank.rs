@@ -204,6 +204,21 @@ mod tests {
     }
 
     #[test]
+    fn frontier_schedule_bitexact_in_sync_mode() {
+        use crate::engine::SchedulePolicy;
+        // PageRank is a pure pull function of neighbor scores, so the
+        // frontier schedule reproduces dense Jacobi bit-for-bit.
+        let g = GapGraph::Road.generate(9, 0);
+        let cfg = PrConfig::default();
+        let dense = run_native(&g, &EngineConfig::new(4, ExecutionMode::Synchronous), &cfg);
+        for sched in [SchedulePolicy::Frontier, SchedulePolicy::Adaptive] {
+            let r = run_native(&g, &EngineConfig::new(4, ExecutionMode::Synchronous).with_schedule(sched), &cfg);
+            assert_eq!(r.run.values, dense.run.values, "{sched:?}");
+            assert_eq!(r.run.num_rounds(), dense.run.num_rounds(), "{sched:?}");
+        }
+    }
+
+    #[test]
     fn sim_matches_native_sync_bitexact() {
         let g = GapGraph::Kron.generate(8, 8);
         let cfg = PrConfig::default();

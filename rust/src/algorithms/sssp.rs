@@ -165,6 +165,24 @@ mod tests {
     }
 
     #[test]
+    fn frontier_schedule_matches_dijkstra() {
+        use crate::engine::SchedulePolicy;
+        let g = GapGraph::Kron.generate_weighted(9, 8);
+        let src = default_source(&g);
+        let want = oracle::dijkstra(&g, src);
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+            for sched in [SchedulePolicy::Frontier, SchedulePolicy::Adaptive] {
+                let r = run_native(&g, src, &EngineConfig::new(4, mode).with_schedule(sched));
+                assert_eq!(r.dist, want, "{mode:?}/{sched:?}");
+            }
+        }
+        // Conditional-write variant composes with sparse sweeps.
+        let p = Sssp::new(&g, src).conditional();
+        let cfg = EngineConfig::new(4, ExecutionMode::Delayed(64)).with_schedule(SchedulePolicy::Frontier);
+        assert_eq!(native::run(&g, &p, &cfg).values, want);
+    }
+
+    #[test]
     fn sim_matches_dijkstra() {
         let g = GapGraph::Road.generate_weighted(9, 0);
         let src = default_source(&g);

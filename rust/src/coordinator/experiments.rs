@@ -18,7 +18,7 @@ use anyhow::{bail, Result};
 
 use crate::algorithms::{pagerank, sssp};
 use crate::engine::sim::cost::Machine;
-use crate::engine::{EngineConfig, ExecutionMode, PartitionStrategy};
+use crate::engine::{EngineConfig, ExecutionMode, PartitionStrategy, SchedulePolicy};
 use crate::graph::gap::{GapGraph, ALL};
 use crate::graph::{properties, Csr};
 use crate::partition::stripe;
@@ -61,8 +61,10 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "fig6" => fig6(opts),
         "ablations" => ablations(opts),
         "autotune" => autotune_validation(opts),
+        "schedule" => schedule(opts),
         "all" => {
-            for id in ["table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune"] {
+            let ids = ["table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune", "schedule"];
+            for id in ids {
                 run(id, opts)?;
             }
             Ok(())
@@ -111,6 +113,40 @@ pub fn autotune_validation(opts: &ExpOptions) -> Result<()> {
 
 fn fmt_mode(p: &SweepPoint) -> String {
     p.mode.label()
+}
+
+/// Schedule dimension (beyond the paper): dense vs frontier vs adaptive
+/// sweeps for every workload at 32 simulated threads, δ=64. Columns show
+/// where sparse scheduling wins (SSSP/CC/BFS everywhere, PageRank
+/// nowhere — dense-update workloads never develop a sparse frontier) and
+/// by how much total work shrinks.
+pub fn schedule(opts: &ExpOptions) -> Result<()> {
+    let m = Machine::haswell();
+    let mut t = Table::new(
+        "Schedule — dense vs frontier vs adaptive sweeps (simulated 32-thread Haswell, δ=64)",
+        &["algo", "graph", "schedule", "rounds", "time", "updates", "work vs dense", "speedup vs dense"],
+    );
+    for algo in [Algo::PageRank, Algo::Sssp, Algo::Cc, Algo::Bfs] {
+        for g in ALL {
+            let graph = opts.graph(g, algo);
+            let pts = sweep::schedules(&graph, algo, 32, &m, ExecutionMode::Delayed(64));
+            let dense = sweep::find_schedule(&pts, SchedulePolicy::Dense).unwrap();
+            let (dense_t, dense_work) = (dense.time_s, dense.active_total);
+            for p in &pts {
+                t.row(vec![
+                    algo.name().into(),
+                    g.name().into(),
+                    p.schedule.label().into(),
+                    p.rounds.to_string(),
+                    fmt::secs(p.time_s),
+                    fmt::si(p.active_total as f64),
+                    format!("{:.3}x", p.active_total as f64 / dense_work as f64),
+                    format!("{:.3}x", dense_t / p.time_s),
+                ]);
+            }
+        }
+    }
+    opts.report.emit("schedule", &t)
 }
 
 /// Table I: rounds and average round time for PR, 32-thread Haswell.

@@ -1,8 +1,8 @@
-//! Mode/δ/thread sweeps on the simulator — the inner loop of every
-//! figure driver.
+//! Mode/δ/thread/schedule sweeps on the simulator — the inner loop of
+//! every figure driver.
 
 use crate::engine::sim::cost::Machine;
-use crate::engine::{EngineConfig, ExecutionMode};
+use crate::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
 use crate::graph::Csr;
 use crate::partition::blocked;
 
@@ -12,6 +12,8 @@ use super::{delta_sweep, run_sim, Algo};
 #[derive(Debug, Clone)]
 pub struct SweepPoint {
     pub mode: ExecutionMode,
+    /// Which vertices each round swept.
+    pub schedule: SchedulePolicy,
     pub rounds: usize,
     /// Total simulated seconds.
     pub time_s: f64,
@@ -19,30 +21,63 @@ pub struct SweepPoint {
     pub avg_round_s: f64,
     pub invalidations: u64,
     pub flushes: u64,
+    /// Total vertex updates across all rounds (dense = rounds × n).
+    pub active_total: u64,
 }
 
-/// Sweep sync + async + the paper's δ grid at a fixed thread count.
+/// Sweep sync + async + the paper's δ grid at a fixed thread count,
+/// dense-scheduled (the paper's configuration).
 pub fn modes(g: &Csr, algo: Algo, threads: usize, machine: &Machine) -> Vec<SweepPoint> {
+    modes_scheduled(g, algo, threads, machine, SchedulePolicy::Dense)
+}
+
+/// Mode sweep under an explicit schedule policy.
+pub fn modes_scheduled(
+    g: &Csr,
+    algo: Algo,
+    threads: usize,
+    machine: &Machine,
+    schedule: SchedulePolicy,
+) -> Vec<SweepPoint> {
     let max_range = blocked::partition(g, threads).max_len();
     let mut out = Vec::new();
     let mut list = vec![ExecutionMode::Synchronous, ExecutionMode::Asynchronous];
     list.extend(delta_sweep(max_range).into_iter().map(ExecutionMode::Delayed));
     for mode in list {
-        out.push(point(g, algo, threads, machine, mode));
+        out.push(point_scheduled(g, algo, threads, machine, mode, schedule));
     }
     out
 }
 
-/// Run one configuration.
+/// Sweep all three schedule policies at one fixed execution mode.
+pub fn schedules(g: &Csr, algo: Algo, threads: usize, machine: &Machine, mode: ExecutionMode) -> Vec<SweepPoint> {
+    SchedulePolicy::ALL.iter().map(|&s| point_scheduled(g, algo, threads, machine, mode, s)).collect()
+}
+
+/// Run one configuration (dense schedule).
 pub fn point(g: &Csr, algo: Algo, threads: usize, machine: &Machine, mode: ExecutionMode) -> SweepPoint {
-    let sim = run_sim(g, algo, &EngineConfig::new(threads, mode), machine);
+    point_scheduled(g, algo, threads, machine, mode, SchedulePolicy::Dense)
+}
+
+/// Run one fully specified configuration.
+pub fn point_scheduled(
+    g: &Csr,
+    algo: Algo,
+    threads: usize,
+    machine: &Machine,
+    mode: ExecutionMode,
+    schedule: SchedulePolicy,
+) -> SweepPoint {
+    let sim = run_sim(g, algo, &EngineConfig::new(threads, mode).with_schedule(schedule), machine);
     SweepPoint {
         mode,
+        schedule,
         rounds: sim.result.num_rounds(),
         time_s: sim.result.total_time(),
         avg_round_s: sim.result.avg_round_time(),
         invalidations: sim.metrics.invalidations,
         flushes: sim.result.total_flushes(),
+        active_total: sim.result.total_active(),
     }
 }
 
@@ -57,6 +92,11 @@ pub fn best_delayed(points: &[SweepPoint]) -> Option<&SweepPoint> {
 /// The synchronous / asynchronous points of a sweep.
 pub fn find_mode<'a>(points: &'a [SweepPoint], mode: ExecutionMode) -> Option<&'a SweepPoint> {
     points.iter().find(|p| p.mode == mode)
+}
+
+/// The point of a schedule sweep with the given policy.
+pub fn find_schedule<'a>(points: &'a [SweepPoint], schedule: SchedulePolicy) -> Option<&'a SweepPoint> {
+    points.iter().find(|p| p.schedule == schedule)
 }
 
 #[cfg(test)]
@@ -76,6 +116,8 @@ mod tests {
         // All runs converged on the same algorithm => same-ish rounds.
         for p in &pts {
             assert!(p.rounds > 0 && p.time_s > 0.0);
+            assert_eq!(p.schedule, SchedulePolicy::Dense);
+            assert_eq!(p.active_total, p.rounds as u64 * g.num_vertices() as u64);
         }
     }
 
@@ -86,5 +128,21 @@ mod tests {
         let sync = find_mode(&pts, ExecutionMode::Synchronous).unwrap().rounds;
         let asyn = find_mode(&pts, ExecutionMode::Asynchronous).unwrap().rounds;
         assert!(asyn <= sync, "async {asyn} vs sync {sync}");
+    }
+
+    #[test]
+    fn schedule_sweep_frontier_does_less_work() {
+        let g = GapGraph::Road.generate(9, 0);
+        let pts = schedules(&g, Algo::Cc, 8, &Machine::haswell(), ExecutionMode::Synchronous);
+        assert_eq!(pts.len(), 3);
+        let dense = find_schedule(&pts, SchedulePolicy::Dense).unwrap();
+        let frontier = find_schedule(&pts, SchedulePolicy::Frontier).unwrap();
+        assert!(
+            frontier.active_total < dense.active_total,
+            "frontier {} vs dense {}",
+            frontier.active_total,
+            dense.active_total
+        );
+        assert!(frontier.time_s < dense.time_s, "frontier {} vs dense {}", frontier.time_s, dense.time_s);
     }
 }

@@ -95,6 +95,20 @@ impl DelayBuffer {
         self.base += 1;
     }
 
+    /// Generalized skip for non-contiguous (frontier-scheduled) sweeps:
+    /// reposition so the *next* push writes global index `v`. A no-op
+    /// when the sweep is already contiguous; otherwise pending values are
+    /// published first so flushed runs stay contiguous, exactly like
+    /// [`Self::skip`] but jumping an arbitrary gap in O(1).
+    #[inline]
+    pub fn seek(&mut self, global: &SharedValues, v: VertexId) {
+        if self.base + self.buf.len() as VertexId == v {
+            return;
+        }
+        self.flush(global);
+        self.base = v;
+    }
+
     /// §III-C local-read variant: if `v` is buffered but unflushed,
     /// return its pending value.
     #[inline]
@@ -184,6 +198,53 @@ mod tests {
         let mut b = DelayBuffer::new(16);
         b.begin(0);
         b.flush(&g);
+        assert_eq!(b.flushes(), 0);
+    }
+
+    #[test]
+    fn seek_contiguous_is_noop() {
+        let g = SharedValues::from_bits(vec![0; 64]);
+        let mut b = DelayBuffer::new(16);
+        b.begin(3);
+        b.push(&g, 100);
+        b.seek(&g, 4); // next contiguous slot: nothing published
+        assert_eq!(b.pending_len(), 1);
+        assert_eq!(b.flushes(), 0);
+        b.push(&g, 101);
+        b.flush(&g);
+        assert_eq!(g.load(3), 100);
+        assert_eq!(g.load(4), 101);
+    }
+
+    #[test]
+    fn seek_gap_flushes_then_rebases() {
+        let g = SharedValues::from_bits(vec![0; 64]);
+        let mut b = DelayBuffer::new(16);
+        b.begin(0);
+        b.push(&g, 10);
+        b.push(&g, 11);
+        b.seek(&g, 40); // jump: pending run [0,1] must publish contiguously
+        assert_eq!(b.flushes(), 1);
+        assert_eq!(g.load(0), 10);
+        assert_eq!(g.load(1), 11);
+        b.push(&g, 42);
+        b.flush(&g);
+        assert_eq!(g.load(40), 42);
+        assert_eq!(g.load(2), 0, "gap untouched");
+        assert_eq!(g.load(39), 0, "gap untouched");
+    }
+
+    #[test]
+    fn seek_writethrough_capacity_zero() {
+        let g = SharedValues::from_bits(vec![0; 16]);
+        let mut b = DelayBuffer::new(0);
+        b.begin(0);
+        b.seek(&g, 5);
+        b.push(&g, 7);
+        b.seek(&g, 9);
+        b.push(&g, 8);
+        assert_eq!(g.load(5), 7);
+        assert_eq!(g.load(9), 8);
         assert_eq!(b.flushes(), 0);
     }
 

@@ -16,16 +16,22 @@
 //! [`sim::run`] is a deterministic multicore-with-caches simulator that
 //! reproduces the paper's contention measurements on any host
 //! (DESIGN.md §3 explains the substitution).
+//!
+//! Orthogonal to the mode, [`SchedulePolicy`] decides *which vertices*
+//! a round touches: the paper's dense sweep, a frontier of activated
+//! vertices, or an adaptive dense↔sparse hybrid (DESIGN.md §4).
 
 pub mod convergence;
 pub mod delay_buffer;
 pub mod native;
 pub mod program;
+pub mod schedule;
 pub mod shared;
 pub mod sim;
 pub mod stats;
 
 pub use program::{ValueReader, VertexProgram};
+pub use schedule::SchedulePolicy;
 pub use stats::{RoundStats, RunResult};
 
 use crate::partition::PartitionMap;
@@ -80,6 +86,8 @@ pub struct EngineConfig {
     pub threads: usize,
     pub mode: ExecutionMode,
     pub partition: PartitionStrategy,
+    /// Which vertices a round touches (dense sweep vs frontier-driven).
+    pub schedule: SchedulePolicy,
     /// §III-C variant: serve reads of not-yet-flushed own values from the
     /// local delay buffer. The paper found this rarely faster; default off.
     pub local_reads: bool,
@@ -88,9 +96,17 @@ pub struct EngineConfig {
 }
 
 impl EngineConfig {
-    /// Config with defaults (blocked partitioning, global reads).
+    /// Config with defaults (blocked partitioning, dense sweeps, global
+    /// reads).
     pub fn new(threads: usize, mode: ExecutionMode) -> Self {
-        Self { threads, mode, partition: PartitionStrategy::default(), local_reads: false, max_rounds: 10_000 }
+        Self {
+            threads,
+            mode,
+            partition: PartitionStrategy::default(),
+            schedule: SchedulePolicy::default(),
+            local_reads: false,
+            max_rounds: 10_000,
+        }
     }
 
     /// Builder-style: enable local reads.
@@ -102,6 +118,12 @@ impl EngineConfig {
     /// Builder-style: choose partitioner.
     pub fn with_partition(mut self, p: PartitionStrategy) -> Self {
         self.partition = p;
+        self
+    }
+
+    /// Builder-style: choose the round schedule.
+    pub fn with_schedule(mut self, s: SchedulePolicy) -> Self {
+        self.schedule = s;
         self
     }
 
@@ -134,6 +156,14 @@ mod tests {
             assert_eq!(ExecutionMode::from_label(&m.label()), Some(m));
         }
         assert_eq!(ExecutionMode::from_label("bogus"), None);
+    }
+
+    #[test]
+    fn schedule_builder_and_default() {
+        let c = EngineConfig::new(4, ExecutionMode::Asynchronous);
+        assert_eq!(c.schedule, SchedulePolicy::Dense);
+        let f = c.with_schedule(SchedulePolicy::Frontier);
+        assert_eq!(f.schedule, SchedulePolicy::Frontier);
     }
 
     #[test]

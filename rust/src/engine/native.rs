@@ -1,6 +1,7 @@
 //! Real-thread executor: `std::thread` workers, one per partition block,
 //! barrier-synchronized rounds, with value visibility governed by
-//! [`ExecutionMode`].
+//! [`ExecutionMode`] and per-round vertex selection governed by
+//! [`SchedulePolicy`].
 //!
 //! All three modes share the same round structure (the paper counts
 //! rounds for the asynchronous version too — threads sweep their range
@@ -13,6 +14,15 @@
 //! * async — stored straight into the shared array;
 //! * delayed(δ) — staged in a [`DelayBuffer`] and published every δ
 //!   elements.
+//!
+//! Orthogonally, the schedule decides *which* vertices a round sweeps:
+//! `Dense` is the paper's full sweep (and pays zero scheduling cost);
+//! `Frontier`/`Adaptive` sweep only vertices activated by a neighbor's
+//! change, tracked in shared [`AtomicBitmap`]s with round parity (the
+//! current round consumes one map while activations build the other).
+//! Sparse sweeps compose with the delay buffer through
+//! [`DelayBuffer::seek`], which generalizes the conditional-write
+//! `skip()` flush-and-advance so published runs stay contiguous.
 
 use std::cell::RefCell;
 use std::ops::Range;
@@ -24,6 +34,7 @@ use crate::graph::{Csr, VertexId};
 
 use super::delay_buffer::DelayBuffer;
 use super::program::{ValueReader, VertexProgram};
+use super::schedule::{AtomicBitmap, SchedulePolicy, ADAPTIVE_SPARSE_DIVISOR};
 use super::shared::{SharedValues, SliceReader};
 use super::stats::{RoundStats, RunResult};
 use super::{EngineConfig, ExecutionMode};
@@ -47,6 +58,12 @@ impl ValueReader for AsyncReader<'_> {
     }
 }
 
+/// The frontier pair: `maps[round % 2]` is consumed by round `round`
+/// while activations for the next round land in the other map.
+struct Frontiers {
+    maps: [AtomicBitmap; 2],
+}
+
 /// Shared control block for the worker gang.
 struct Ctrl {
     barrier: Barrier,
@@ -54,6 +71,13 @@ struct Ctrl {
     deltas: Vec<AtomicU64>,
     /// Per-thread cumulative flush count.
     flushes: Vec<AtomicU64>,
+    /// Per-thread vertices swept this round.
+    processed: Vec<AtomicU64>,
+    /// Per-thread vertices *newly* activated for the next round.
+    activated: Vec<AtomicU64>,
+    /// Whether the next round sweeps sparsely (thread 0 decides between
+    /// the barriers; round 0 is always dense).
+    sparse_next: AtomicBool,
     /// Set by thread 0 once converged / max rounds hit.
     done: AtomicBool,
 }
@@ -72,10 +96,21 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
     // Double buffer for sync mode only (async/delayed read+write `global`).
     let back = SharedValues::from_bits(init.iter().copied());
 
+    let frontier_on = cfg.schedule != SchedulePolicy::Dense;
+    if frontier_on {
+        // Build the transpose once, outside the worker gang (no-op on
+        // symmetric graphs).
+        g.ensure_out_edges();
+    }
+    let frontiers = frontier_on.then(|| Frontiers { maps: [AtomicBitmap::new(n), AtomicBitmap::new(n)] });
+
     let ctrl = Ctrl {
         barrier: Barrier::new(t_count),
         deltas: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         flushes: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        processed: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        activated: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        sparse_next: AtomicBool::new(false),
         done: AtomicBool::new(false),
     };
     // Written by thread 0 only (between barriers); Mutex for Sync-ness.
@@ -88,10 +123,11 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
             let ctrl = &ctrl;
             let global = &global;
             let back = &back;
+            let frontiers = frontiers.as_ref();
             let rounds_out = &rounds_out;
             let converged_out = &converged_out;
             let handle = move || {
-                worker(t, range, g, prog, cfg, ctrl, global, back, rounds_out, converged_out);
+                worker(t, range, g, prog, cfg, ctrl, global, back, frontiers, rounds_out, converged_out);
             };
             if t == t_count - 1 {
                 // Run the last worker on the caller thread: saves one
@@ -121,6 +157,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
         values,
         rounds,
         mode: cfg.mode,
+        schedule: cfg.schedule,
         threads: t_count,
         converged: converged_out.load(Ordering::SeqCst),
     }
@@ -136,54 +173,142 @@ fn worker<P: VertexProgram>(
     ctrl: &Ctrl,
     global: &SharedValues,
     back: &SharedValues,
+    frontiers: Option<&Frontiers>,
     rounds_out: &Mutex<Vec<RoundStats>>,
     converged_out: &AtomicBool,
 ) {
-    let _ = g;
+    let n = g.num_vertices();
     let delta_cap = cfg.effective_delta(range.len());
     let buf = RefCell::new(DelayBuffer::new(delta_cap));
     let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
     let conditional = prog.conditional_writes();
 
+    // Sync-mode frontier bookkeeping: the vertices we swept last round.
+    // Their fresh value lives only in this round's *read* buffer, so if
+    // we skip one this round it must be mirrored into the write buffer
+    // to keep the double buffers interchangeable (`None` = a dense round
+    // swept everything, so both buffers already agree for skipped ids).
+    let mut prev_swept: Option<Vec<VertexId>> = None;
+
     let mut round = 0usize;
+    let mut sparse = false; // round 0 is always dense
     let mut t0 = Instant::now();
     loop {
         let mut delta = 0.0f64;
+        let mut processed = 0u64;
+        let mut activated = 0u64;
+        let (cur, nxt) = match frontiers {
+            Some(f) => (Some(&f.maps[round % 2]), Some(&f.maps[(round + 1) % 2])),
+            None => (None, None),
+        };
+        // Shared by every sweep variant: a changed vertex re-activates
+        // its out-neighbors for the next round, counting newly set bits
+        // (thread 0 sums them for the adaptive density decision).
+        let activate = |old: u32, new: u32, v: VertexId, activated: &mut u64| {
+            if let Some(nx) = nxt {
+                if prog.activates(old, new) {
+                    for &w in g.out_neighbors(v) {
+                        if nx.set(w) {
+                            *activated += 1;
+                        }
+                    }
+                }
+            }
+        };
 
         if sync_mode {
             // Buffers swap roles each round; `front` is read-only here
             // because every writer targets `write` and ranges are disjoint.
             let (front, write) = if round % 2 == 0 { (global, back) } else { (back, global) };
-            let snapshot_reader = front; // reads are racy-free: nobody writes front this round
-            for v in range.clone() {
-                let old = snapshot_reader.load(v);
-                let mut rd = SharedReaderShim(snapshot_reader);
-                let new = prog.update(v, &mut rd);
-                delta += prog.delta(old, new);
-                // Sync must carry unchanged values across the swap.
-                write.store(v, if conditional && new == old { old } else { new });
+            if sparse {
+                let cur = cur.expect("sparse rounds require frontiers");
+                // Copy-down: values we computed last round for vertices
+                // skipped this round exist only in `front`.
+                match &prev_swept {
+                    None => {
+                        for v in range.clone() {
+                            if !cur.get(v) {
+                                write.store(v, front.load(v));
+                            }
+                        }
+                    }
+                    Some(list) => {
+                        for &v in list {
+                            if !cur.get(v) {
+                                write.store(v, front.load(v));
+                            }
+                        }
+                    }
+                }
+                let mut swept: Vec<VertexId> = Vec::new();
+                cur.for_each_in(range.clone(), |v| {
+                    let old = front.load(v);
+                    let mut rd = SharedReaderShim(front);
+                    let new = prog.update(v, &mut rd);
+                    delta += prog.delta(old, new);
+                    activate(old, new, v, &mut activated);
+                    // Sync must carry unchanged values across the swap.
+                    write.store(v, if conditional && new == old { old } else { new });
+                    swept.push(v);
+                });
+                processed = swept.len() as u64;
+                prev_swept = Some(swept);
+            } else {
+                for v in range.clone() {
+                    let old = front.load(v);
+                    let mut rd = SharedReaderShim(front);
+                    let new = prog.update(v, &mut rd);
+                    delta += prog.delta(old, new);
+                    activate(old, new, v, &mut activated);
+                    write.store(v, if conditional && new == old { old } else { new });
+                }
+                processed = range.len() as u64;
+                prev_swept = None;
             }
         } else {
             buf.borrow_mut().begin(range.start);
-            for v in range.clone() {
+            let mut body = |v: VertexId| {
+                // No-op on contiguous (dense) sweeps; on sparse sweeps
+                // publishes the pending run before jumping the gap.
+                buf.borrow_mut().seek(global, v);
                 let old = global.load(v);
                 let new = {
                     let mut rd = AsyncReader { global, local: cfg.local_reads.then_some(&buf) };
                     prog.update(v, &mut rd)
                 };
                 delta += prog.delta(old, new);
+                activate(old, new, v, &mut activated);
                 let mut b = buf.borrow_mut();
                 if conditional && new == old {
                     b.skip(global);
                 } else {
                     b.push(global, new);
                 }
+                processed += 1;
+            };
+            match (sparse, cur) {
+                (true, Some(cur)) => cur.for_each_in(range.clone(), &mut body),
+                _ => {
+                    for v in range.clone() {
+                        body(v);
+                    }
+                }
             }
             buf.borrow_mut().flush(global);
         }
 
+        if let Some(cur) = cur {
+            // This round's bits are consumed (only the owner reads them);
+            // clear our slice so the map can serve as the round-after-
+            // next's activation target. Masked: boundary words are shared
+            // with neighboring partitions.
+            cur.clear_range(range.clone());
+        }
+
         ctrl.deltas[t].store(delta.to_bits(), Ordering::Relaxed);
         ctrl.flushes[t].store(buf.borrow().flushes(), Ordering::Relaxed);
+        ctrl.processed[t].store(processed, Ordering::Relaxed);
+        ctrl.activated[t].store(activated, Ordering::Relaxed);
 
         // ---- barrier 1: all writes of the round done ----
         ctrl.barrier.wait();
@@ -191,17 +316,28 @@ fn worker<P: VertexProgram>(
         if t == 0 {
             let round_delta: f64 = ctrl.deltas.iter().map(|d| f64::from_bits(d.load(Ordering::Relaxed))).sum();
             let total_flushes: u64 = ctrl.flushes.iter().map(|f| f.load(Ordering::Relaxed)).sum();
+            let total_active: u64 = ctrl.processed.iter().map(|p| p.load(Ordering::Relaxed)).sum();
             let mut rounds = rounds_out.lock().unwrap();
             let prev_flushes: u64 = rounds.iter().map(|r: &RoundStats| r.flushes).sum();
             rounds.push(RoundStats {
                 time_s: t0.elapsed().as_secs_f64(),
                 delta: round_delta,
                 flushes: total_flushes - prev_flushes,
+                active: total_active,
             });
             let conv = prog.converged(round_delta);
             if conv || rounds.len() >= cfg.max_rounds {
                 ctrl.done.store(true, Ordering::SeqCst);
                 converged_out.store(conv, Ordering::SeqCst);
+            } else if frontiers.is_some() {
+                let next_size: u64 = ctrl.activated.iter().map(|a| a.load(Ordering::Relaxed)).sum();
+                let sparse_next = match cfg.schedule {
+                    SchedulePolicy::Dense => false,
+                    SchedulePolicy::Frontier => true,
+                    // DO-BFS-style density switch, re-evaluated per round.
+                    SchedulePolicy::Adaptive => (next_size as usize) * ADAPTIVE_SPARSE_DIVISOR < n,
+                };
+                ctrl.sparse_next.store(sparse_next, Ordering::SeqCst);
             }
         }
 
@@ -210,6 +346,7 @@ fn worker<P: VertexProgram>(
         if ctrl.done.load(Ordering::SeqCst) {
             return;
         }
+        sparse = ctrl.sparse_next.load(Ordering::SeqCst);
         if t == 0 {
             t0 = Instant::now();
         }
@@ -230,7 +367,8 @@ impl ValueReader for SharedReaderShim<'_> {
 
 /// Serial reference executor: single thread, plain Jacobi (sync) sweep.
 /// Used as the oracle in tests: `run` with `Synchronous` must match this
-/// bit-exactly for any thread count.
+/// bit-exactly for any thread count (and, for frontier schedules, any
+/// schedule — skipped vertices recompute identically by construction).
 pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -> RunResult {
     let n = g.num_vertices();
     let mut front: Vec<u32> = (0..n as VertexId).map(|v| prog.init(v)).collect();
@@ -247,13 +385,20 @@ pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -
             back[v as usize] = new;
         }
         std::mem::swap(&mut front, &mut back);
-        rounds.push(RoundStats { time_s: t0.elapsed().as_secs_f64(), delta, flushes: 0 });
+        rounds.push(RoundStats { time_s: t0.elapsed().as_secs_f64(), delta, flushes: 0, active: n as u64 });
         if prog.converged(delta) {
             converged = true;
             break;
         }
     }
-    RunResult { values: front, rounds, mode: ExecutionMode::Synchronous, threads: 1, converged }
+    RunResult {
+        values: front,
+        rounds,
+        mode: ExecutionMode::Synchronous,
+        schedule: SchedulePolicy::Dense,
+        threads: 1,
+        converged,
+    }
 }
 
 #[cfg(test)]
@@ -318,6 +463,84 @@ mod tests {
     }
 
     #[test]
+    fn frontier_schedules_match_dense_every_mode() {
+        // Web is directed (exercises the transpose view); Road is the
+        // sparse-frontier showcase.
+        for g in [GapGraph::Web.generate(9, 4), GapGraph::Road.generate(9, 0)] {
+            let oracle = fixed_point_serial(&g);
+            for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+                for sched in [SchedulePolicy::Frontier, SchedulePolicy::Adaptive] {
+                    let cfg = EngineConfig::new(4, mode).with_schedule(sched);
+                    let r = run(&g, &MaxProp { g: &g }, &cfg);
+                    assert!(r.converged, "{mode:?}/{sched:?}");
+                    assert_eq!(r.values, oracle, "{mode:?}/{sched:?}");
+                    assert_eq!(r.schedule, sched);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_sync_round_trajectory_matches_serial() {
+        // In sync mode the frontier schedule is bit-identical to dense
+        // Jacobi round by round: same round count, same per-round delta.
+        let g = GapGraph::Road.generate(9, 0);
+        let serial = run_serial_sync(&g, &MaxProp { g: &g }, 10_000);
+        let r = run(
+            &g,
+            &MaxProp { g: &g },
+            &EngineConfig::new(4, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier),
+        );
+        assert_eq!(r.num_rounds(), serial.num_rounds());
+        for (a, b) in r.rounds.iter().zip(&serial.rounds) {
+            assert_eq!(a.delta, b.delta);
+        }
+        assert_eq!(r.values, serial.values);
+    }
+
+    #[test]
+    fn frontier_active_counts_shrink() {
+        // Synchronous: the frontier trajectory is deterministic and the
+        // round count matches dense exactly, so "less total work" is a
+        // hard guarantee, not a race-dependent observation.
+        let g = GapGraph::Road.generate(10, 0);
+        let n = g.num_vertices() as u64;
+        let p = MaxProp { g: &g };
+        let dense = run(&g, &p, &EngineConfig::new(4, ExecutionMode::Synchronous));
+        let cfg = EngineConfig::new(4, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier);
+        let r = run(&g, &p, &cfg);
+        assert!(r.converged);
+        assert_eq!(r.num_rounds(), dense.num_rounds());
+        let actives = r.active_counts();
+        assert_eq!(actives[0], n, "round 0 is dense");
+        assert!(*actives.last().unwrap() < n, "last round must be sparse: {actives:?}");
+        // The headline: strictly less total work than the dense schedule.
+        assert!(
+            r.total_active() < dense.total_active(),
+            "frontier {} vs dense {}",
+            r.total_active(),
+            dense.total_active()
+        );
+        assert_eq!(dense.total_active(), dense.num_rounds() as u64 * n);
+    }
+
+    #[test]
+    fn adaptive_starts_dense_then_goes_sparse() {
+        let g = GapGraph::Road.generate(10, 0);
+        let n = g.num_vertices() as u64;
+        let cfg = EngineConfig::new(4, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Adaptive);
+        let r = run(&g, &MaxProp { g: &g }, &cfg);
+        assert!(r.converged);
+        let actives = r.active_counts();
+        assert_eq!(actives[0], n);
+        // The convergence tail must trip the density switch.
+        assert!(
+            actives.iter().any(|&a| a < n / ADAPTIVE_SPARSE_DIVISOR as u64),
+            "no sparse round engaged: {actives:?}"
+        );
+    }
+
+    #[test]
     fn async_never_more_rounds_than_sync_single_thread() {
         // With one thread, async is pure Gauss-Seidel: strictly faster
         // information flow than Jacobi on this monotone program.
@@ -350,14 +573,21 @@ mod tests {
         let oracle = fixed_point_serial(&g);
         let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(4, ExecutionMode::Delayed(32)).with_local_reads());
         assert_eq!(r.values, oracle);
+        let fcfg = EngineConfig::new(4, ExecutionMode::Delayed(32))
+            .with_local_reads()
+            .with_schedule(SchedulePolicy::Frontier);
+        let fr = run(&g, &MaxProp { g: &g }, &fcfg);
+        assert_eq!(fr.values, oracle);
     }
 
     #[test]
     fn more_threads_than_vertices() {
         let g = crate::graph::GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
-        let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(8, ExecutionMode::Delayed(16)));
-        assert!(r.converged);
-        assert_eq!(r.values.len(), 3);
+        for sched in SchedulePolicy::ALL {
+            let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(8, ExecutionMode::Delayed(16)).with_schedule(sched));
+            assert!(r.converged, "{sched:?}");
+            assert_eq!(r.values.len(), 3, "{sched:?}");
+        }
     }
 
     #[test]

@@ -52,6 +52,18 @@ pub trait VertexProgram: Sync {
     fn conditional_writes(&self) -> bool {
         false
     }
+
+    /// Frontier-scheduling activation semantics: after `v` is updated
+    /// from `old` to `new`, should `v`'s out-neighbors be re-swept next
+    /// round? The default — activate exactly when the stored bits
+    /// changed — preserves the dense sweep's results for every pure pull
+    /// program: a vertex none of whose in-neighbors changed recomputes
+    /// the identical value, so skipping it is exact. Dense scheduling
+    /// never calls this.
+    #[inline]
+    fn activates(&self, old: u32, new: u32) -> bool {
+        old != new
+    }
 }
 
 #[cfg(test)]
@@ -93,5 +105,13 @@ mod tests {
         let mut reader = |v: VertexId| vals[v as usize];
         assert_eq!(p.update(1, &mut reader), 9);
         assert_eq!(p.update(0, &mut reader), 0);
+    }
+
+    #[test]
+    fn default_activation_is_on_change() {
+        let g = crate::graph::GraphBuilder::new(2).edges(&[(0, 1)]).build();
+        let p = MaxProp { g: &g };
+        assert!(p.activates(1, 2));
+        assert!(!p.activates(7, 7));
     }
 }

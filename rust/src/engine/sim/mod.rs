@@ -16,6 +16,13 @@
 //! value array passes through the line table, which charges latencies
 //! and records invalidations. Rounds are barrier-separated exactly like
 //! [`super::native`].
+//!
+//! Scheduling mirrors the native executor: under
+//! [`SchedulePolicy::Frontier`]/[`SchedulePolicy::Adaptive`] a round
+//! sweeps only the vertices activated last round, so cache/contention
+//! measurements cover the sparse regime too. Frontier bitmap stores are
+//! charged at the delay-buffer push rate (`cost.buffer_push`): the bitmap
+//! is thread-hot and tiny (1 bit/vertex), below line-table granularity.
 
 pub mod cache;
 pub mod cost;
@@ -24,11 +31,12 @@ pub mod trace;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::graph::{Csr, VertexId};
 use super::delay_buffer::round_delta;
 use super::program::{ValueReader, VertexProgram};
+use super::schedule::{bits, SchedulePolicy, ADAPTIVE_SPARSE_DIVISOR};
 use super::stats::{RoundStats, RunResult};
 use super::{EngineConfig, ExecutionMode};
+use crate::graph::{Csr, VertexId};
 use cache::LineTable;
 use cost::Machine;
 use trace::SimMetrics;
@@ -115,6 +123,10 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
     assert!(t_count <= cache::MAX_THREADS, "simulator supports ≤{} threads", cache::MAX_THREADS);
     let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
     let conditional = prog.conditional_writes();
+    let frontier_on = cfg.schedule != SchedulePolicy::Dense;
+    if frontier_on {
+        g.ensure_out_edges();
+    }
 
     // Front/back arrays with their own coherence tables. Async/delayed
     // use only the front pair.
@@ -140,18 +152,80 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
     let mut converged = false;
     let mut clock_base = 0u64;
 
+    // Frontier state: `cur` is consumed this round, activations land in
+    // `nxt` (swapped at round end). `prev_lists` is last round's sweep
+    // (None = dense), needed by the sync-mode copy-down.
+    let mut cur = bits::words_for(n);
+    let mut nxt = bits::words_for(n);
+    let mut sparse = false; // round 0 is always dense
+    let mut prev_lists: Option<Vec<Vec<VertexId>>> = None;
+
     while rounds.len() < cfg.max_rounds {
         let mut clocks = vec![clock_base; t_count];
-        let mut cursors: Vec<VertexId> = (0..t_count).map(|t| pm.range(t).start).collect();
         let mut deltas = vec![0.0f64; t_count];
         let mut flushes = 0u64;
+
+        // Materialize per-thread worklists for sparse rounds (dense
+        // rounds iterate partition ranges directly, as before).
+        let lists: Option<Vec<Vec<VertexId>>> = if sparse {
+            let mut ls: Vec<Vec<VertexId>> = vec![Vec::new(); t_count];
+            for (t, l) in ls.iter_mut().enumerate() {
+                bits::for_each_in(&cur, pm.range(t), |v| l.push(v));
+            }
+            Some(ls)
+        } else {
+            None
+        };
+
+        if sync_mode && sparse {
+            // Copy-down: vertices swept last round but skipped this round
+            // have their fresh value only in `values` (the read buffer);
+            // mirror it into `back` so the double buffers stay
+            // interchangeable. Charged to the owner as a back-array store.
+            let mut copy_down = |v: VertexId,
+                                 back: &mut [u32],
+                                 table_back: &mut LineTable,
+                                 metrics: &mut SimMetrics,
+                                 clocks: &mut [u64]| {
+                if !bits::get(&cur, v) {
+                    let t = owners[v as usize] as usize;
+                    let w = table_back.write(t, v as usize, machine, t_count);
+                    metrics.on_write(&w);
+                    clocks[t] += w.cycles + machine.cost.buffer_push as u64;
+                    back[v as usize] = values[v as usize];
+                }
+            };
+            match &prev_lists {
+                None => {
+                    for v in 0..n as VertexId {
+                        copy_down(v, &mut back, &mut table_back, &mut metrics, &mut clocks);
+                    }
+                }
+                Some(ls) => {
+                    for l in ls {
+                        for &v in l {
+                            copy_down(v, &mut back, &mut table_back, &mut metrics, &mut clocks);
+                        }
+                    }
+                }
+            }
+        }
+
+        let len_of = |t: usize| -> usize {
+            match &lists {
+                Some(ls) => ls[t].len(),
+                None => pm.len(t),
+            }
+        };
+        let total_active: u64 = (0..t_count).map(|t| len_of(t) as u64).sum();
+        let mut idx = vec![0usize; t_count];
 
         let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
         for t in 0..t_count {
             if !sync_mode {
                 buffers[t].begin(pm.range(t).start);
             }
-            if cursors[t] < pm.range(t).end {
+            if len_of(t) > 0 {
                 heap.push(Reverse((clocks[t], t)));
             }
         }
@@ -164,7 +238,10 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
             let mut clock = clock;
             let next_key = heap.peek().map(|Reverse(k)| *k);
             loop {
-            let v = cursors[t];
+            let v = match &lists {
+                Some(ls) => ls[t][idx[t]],
+                None => pm.range(t).start + idx[t] as VertexId,
+            };
             let mut cost = machine.cost.vertex_base;
 
             let (new, old) = if sync_mode {
@@ -214,6 +291,18 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                     new
                 };
                 let buf = &mut buffers[t];
+                if sparse && buf.cap != 0 {
+                    // Non-contiguous sweep: keep the staged run contiguous
+                    // (the generalized skip()/seek() path of the native
+                    // DelayBuffer).
+                    if buf.data.is_empty() {
+                        buf.base = v;
+                    } else if buf.base + buf.data.len() as VertexId != v {
+                        cost +=
+                            flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
+                        buf.base = v;
+                    }
+                }
                 if buf.cap == 0 {
                     // Asynchronous: store straight through.
                     if !(conditional && new == old) {
@@ -228,7 +317,8 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                     buf.base += 1;
                 } else {
                     if buf.data.len() == buf.cap {
-                        cost += flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
+                        cost +=
+                            flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
                     }
                     buf.data.push(new);
                     cost += machine.cost.buffer_push;
@@ -236,12 +326,19 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                 (new, old)
             };
 
+            if frontier_on && prog.activates(old, new) {
+                for &w2 in g.out_neighbors(v) {
+                    bits::set(&mut nxt, w2);
+                    cost += machine.cost.buffer_push;
+                }
+            }
+
             deltas[t] += prog.delta(old, new);
-            cursors[t] += 1;
+            idx[t] += 1;
             clock += cost;
             clocks[t] = clock;
 
-            if cursors[t] >= pm.range(t).end {
+            if idx[t] >= len_of(t) {
                 if !sync_mode {
                     // End of range: final flush, charged to this thread.
                     let buf = &mut buffers[t];
@@ -274,15 +371,36 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
             time_s: round_cycles as f64 / machine.clock_hz,
             delta: round_delta,
             flushes,
+            active: total_active,
         });
         if prog.converged(round_delta) {
             converged = true;
             break;
         }
+
+        if frontier_on {
+            // `lists` was exactly this round's sweep (None = dense).
+            prev_lists = lists;
+            std::mem::swap(&mut cur, &mut nxt);
+            nxt.iter_mut().for_each(|w| *w = 0);
+            let next_size = bits::count(&cur);
+            sparse = match cfg.schedule {
+                SchedulePolicy::Dense => false,
+                SchedulePolicy::Frontier => true,
+                SchedulePolicy::Adaptive => next_size * ADAPTIVE_SPARSE_DIVISOR < n,
+            };
+        }
     }
 
     SimRun {
-        result: RunResult { values, rounds, mode: cfg.mode, threads: t_count, converged },
+        result: RunResult {
+            values,
+            rounds,
+            mode: cfg.mode,
+            schedule: cfg.schedule,
+            threads: t_count,
+            converged,
+        },
         metrics,
     }
 }
@@ -368,6 +486,18 @@ mod tests {
     }
 
     #[test]
+    fn deterministic_with_frontier() {
+        let g = GapGraph::Web.generate(8, 4);
+        let p = MaxProp { g: &g };
+        let cfg = EngineConfig::new(8, ExecutionMode::Delayed(32)).with_schedule(SchedulePolicy::Frontier);
+        let m = Machine::haswell();
+        let a = run(&g, &p, &cfg, &m);
+        let b = run(&g, &p, &cfg, &m);
+        assert_eq!(a.result.values, b.result.values);
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    #[test]
     fn matches_native_fixed_point() {
         let g = GapGraph::Web.generate(8, 4);
         let p = MaxProp { g: &g };
@@ -377,6 +507,65 @@ mod tests {
             assert!(s.result.converged, "{mode:?}");
             assert_eq!(s.result.values, native.values, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn frontier_schedules_match_dense_fixed_point() {
+        for g in [GapGraph::Web.generate(8, 4), GapGraph::Road.generate(8, 0)] {
+            let p = MaxProp { g: &g };
+            let oracle = crate::engine::native::run_serial_sync(&g, &p, 10_000);
+            for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(16)] {
+                for sched in [SchedulePolicy::Frontier, SchedulePolicy::Adaptive] {
+                    let cfg = EngineConfig::new(4, mode).with_schedule(sched);
+                    let s = run(&g, &p, &cfg, &Machine::haswell());
+                    assert!(s.result.converged, "{mode:?}/{sched:?}");
+                    assert_eq!(s.result.values, oracle.values, "{mode:?}/{sched:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_sync_matches_dense_round_count() {
+        // Sync frontier is bit-identical to sync dense: same rounds, same
+        // per-round deltas, and per-round active counts shrink.
+        let g = GapGraph::Road.generate(9, 0);
+        let p = MaxProp { g: &g };
+        let m = Machine::haswell();
+        let dense = run(&g, &p, &EngineConfig::new(8, ExecutionMode::Synchronous), &m);
+        let front = run(
+            &g,
+            &p,
+            &EngineConfig::new(8, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier),
+            &m,
+        );
+        assert_eq!(front.result.num_rounds(), dense.result.num_rounds());
+        assert_eq!(front.result.values, dense.result.values);
+        for (a, b) in front.result.rounds.iter().zip(&dense.result.rounds) {
+            assert_eq!(a.delta, b.delta);
+        }
+        assert!(front.result.total_active() < dense.result.total_active());
+    }
+
+    #[test]
+    fn frontier_sparse_rounds_cost_fewer_cycles() {
+        // Road converges from a shrinking frontier. Synchronous keeps the
+        // round count identical to dense, so the cycle comparison is a
+        // hard guarantee: every sparse round does strictly less work.
+        let g = GapGraph::Road.generate(9, 0);
+        let p = MaxProp { g: &g };
+        let m = Machine::haswell();
+        let dense = run(&g, &p, &EngineConfig::new(8, ExecutionMode::Synchronous), &m);
+        let front =
+            run(&g, &p, &EngineConfig::new(8, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier), &m);
+        assert!(front.result.converged);
+        assert_eq!(front.result.num_rounds(), dense.result.num_rounds());
+        assert!(
+            front.total_cycles() < dense.total_cycles(),
+            "frontier {} vs dense {} cycles",
+            front.total_cycles(),
+            dense.total_cycles()
+        );
     }
 
     #[test]
@@ -447,6 +636,11 @@ mod tests {
         let oracle = crate::engine::native::run_serial_sync(&g, &p, 10_000).values;
         let lr = run(&g, &p, &EngineConfig::new(4, ExecutionMode::Delayed(64)).with_local_reads(), &m);
         assert_eq!(lr.result.values, oracle);
+        let fcfg = EngineConfig::new(4, ExecutionMode::Delayed(64))
+            .with_local_reads()
+            .with_schedule(SchedulePolicy::Frontier);
+        let lr_frontier = run(&g, &p, &fcfg, &m);
+        assert_eq!(lr_frontier.result.values, oracle);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Run-level and round-level statistics — what Table I and every figure
 //! are built from.
 
+use super::schedule::SchedulePolicy;
 use super::ExecutionMode;
 
 /// Per-round record.
@@ -12,6 +13,10 @@ pub struct RoundStats {
     pub delta: f64,
     /// Delay-buffer flushes across all threads this round.
     pub flushes: u64,
+    /// Vertices the round actually swept. Dense rounds touch every
+    /// vertex; frontier rounds only the active set — the shrinking
+    /// trajectory of this column is the whole point of sparse scheduling.
+    pub active: u64,
 }
 
 /// Result of one engine run.
@@ -21,6 +26,8 @@ pub struct RunResult {
     pub values: Vec<u32>,
     pub rounds: Vec<RoundStats>,
     pub mode: ExecutionMode,
+    /// Which vertices each round swept (dense / frontier / adaptive).
+    pub schedule: SchedulePolicy,
     pub threads: usize,
     /// True if the convergence criterion was met (false = hit max_rounds).
     pub converged: bool,
@@ -51,6 +58,18 @@ impl RunResult {
         self.rounds.iter().map(|r| r.flushes).sum()
     }
 
+    /// Total vertex updates across all rounds. For a dense schedule this
+    /// is `rounds × n`; frontier schedules do strictly less work on any
+    /// workload that converges non-uniformly.
+    pub fn total_active(&self) -> u64 {
+        self.rounds.iter().map(|r| r.active).sum()
+    }
+
+    /// Per-round active-vertex counts (convenience for reports/tests).
+    pub fn active_counts(&self) -> Vec<u64> {
+        self.rounds.iter().map(|r| r.active).collect()
+    }
+
     /// Values decoded as f32 (PageRank scores).
     pub fn values_f32(&self) -> Vec<f32> {
         self.values.iter().map(|&b| f32::from_bits(b)).collect()
@@ -65,10 +84,11 @@ mod tests {
         RunResult {
             values: vec![1f32.to_bits(), 2f32.to_bits()],
             rounds: vec![
-                RoundStats { time_s: 0.5, delta: 1.0, flushes: 3 },
-                RoundStats { time_s: 1.5, delta: 0.0, flushes: 2 },
+                RoundStats { time_s: 0.5, delta: 1.0, flushes: 3, active: 2 },
+                RoundStats { time_s: 1.5, delta: 0.0, flushes: 2, active: 1 },
             ],
             mode: ExecutionMode::Delayed(64),
+            schedule: SchedulePolicy::Frontier,
             threads: 4,
             converged: true,
         }
@@ -81,6 +101,8 @@ mod tests {
         assert!((r.total_time() - 2.0).abs() < 1e-12);
         assert!((r.avg_round_time() - 1.0).abs() < 1e-12);
         assert_eq!(r.total_flushes(), 5);
+        assert_eq!(r.total_active(), 3);
+        assert_eq!(r.active_counts(), vec![2, 1]);
         assert_eq!(r.values_f32(), vec![1.0, 2.0]);
     }
 
@@ -89,5 +111,6 @@ mod tests {
         let mut r = mk();
         r.rounds.clear();
         assert_eq!(r.avg_round_time(), 0.0);
+        assert_eq!(r.total_active(), 0);
     }
 }

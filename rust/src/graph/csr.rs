@@ -6,12 +6,23 @@
 //! weights when present). Out-degrees are kept alongside because PageRank
 //! divides each neighbor's score by *its* out-degree.
 
+use std::sync::OnceLock;
+
 /// Vertex identifier. 32 bits everywhere, matching the paper's element
 /// sizing (δ is measured in 32-bit elements).
 pub type VertexId = u32;
 
+/// Lazily built transpose (push orientation): `offsets[u]..offsets[u+1]`
+/// indexes `targets`, listing the vertices `u` has an edge *to*. Needed
+/// by frontier scheduling (a changed vertex activates its out-neighbors).
+#[derive(Debug, Clone)]
+struct OutEdges {
+    offsets: Vec<u64>,
+    targets: Vec<VertexId>,
+}
+
 /// Immutable graph in pull orientation (row `v` = in-neighbors of `v`).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug)]
 pub struct Csr {
     /// `offsets[v]..offsets[v+1]` indexes `sources` (and `weights`).
     offsets: Vec<u64>,
@@ -24,6 +35,33 @@ pub struct Csr {
     out_degrees: Vec<u32>,
     /// True if built via symmetrization (undirected semantics).
     symmetric: bool,
+    /// Transpose view, built on first use. Symmetric graphs never build
+    /// it (out-neighbors == in-neighbors).
+    out_view: OnceLock<OutEdges>,
+}
+
+impl Clone for Csr {
+    fn clone(&self) -> Self {
+        // The transpose cache is derived data; rebuild lazily in clones.
+        Self {
+            offsets: self.offsets.clone(),
+            sources: self.sources.clone(),
+            weights: self.weights.clone(),
+            out_degrees: self.out_degrees.clone(),
+            symmetric: self.symmetric,
+            out_view: OnceLock::new(),
+        }
+    }
+}
+
+impl PartialEq for Csr {
+    fn eq(&self, other: &Self) -> bool {
+        self.offsets == other.offsets
+            && self.sources == other.sources
+            && self.weights == other.weights
+            && self.out_degrees == other.out_degrees
+            && self.symmetric == other.symmetric
+    }
 }
 
 impl Csr {
@@ -39,7 +77,7 @@ impl Csr {
         if let Some(w) = &weights {
             debug_assert_eq!(w.len(), sources.len());
         }
-        Self { offsets, sources, weights, out_degrees, symmetric }
+        Self { offsets, sources, weights, out_degrees, symmetric, out_view: OnceLock::new() }
     }
 
     /// Number of vertices.
@@ -90,6 +128,49 @@ impl Csr {
         let lo = self.offsets[v as usize] as usize;
         let hi = self.offsets[v as usize + 1] as usize;
         &self.sources[lo..hi]
+    }
+
+    /// Out-neighbors of `v` (targets of `v`'s outgoing edges), sorted
+    /// ascending. Symmetric graphs answer from the pull lists directly;
+    /// directed graphs build (and cache) the transpose on first use —
+    /// call [`Self::ensure_out_edges`] up front to keep the build out of
+    /// timed or multi-threaded regions.
+    #[inline]
+    pub fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        if self.symmetric {
+            return self.in_neighbors(v);
+        }
+        let oe = self.out_view.get_or_init(|| self.build_out_edges());
+        let lo = oe.offsets[v as usize] as usize;
+        let hi = oe.offsets[v as usize + 1] as usize;
+        &oe.targets[lo..hi]
+    }
+
+    /// Force the transpose view to exist (no-op on symmetric graphs).
+    pub fn ensure_out_edges(&self) {
+        if !self.symmetric {
+            let _ = self.out_view.get_or_init(|| self.build_out_edges());
+        }
+    }
+
+    /// Counting-sort transpose of the pull lists: O(n + m).
+    fn build_out_edges(&self) -> OutEdges {
+        let n = self.num_vertices();
+        let mut offsets = vec![0u64; n + 1];
+        for (u, &d) in self.out_degrees.iter().enumerate() {
+            offsets[u + 1] = offsets[u] + d as u64;
+        }
+        let mut next: Vec<u64> = offsets[..n].to_vec();
+        let mut targets = vec![0 as VertexId; self.sources.len()];
+        // Visiting destinations in ascending order leaves each target
+        // list sorted ascending, matching the pull rows' convention.
+        for v in 0..n as VertexId {
+            for &u in self.in_neighbors(v) {
+                targets[next[u as usize] as usize] = v;
+                next[u as usize] += 1;
+            }
+        }
+        OutEdges { offsets, targets }
     }
 
     /// In-neighbors of `v` zipped with edge weights. Panics if unweighted.
@@ -198,6 +279,48 @@ mod tests {
     fn weighted_access_on_unweighted_panics() {
         let g = GraphBuilder::new(2).edges(&[(0, 1)]).build();
         let _ = g.in_neighbors_weighted(1).count();
+    }
+
+    #[test]
+    fn out_neighbors_directed() {
+        // 0->1, 0->2, 1->2, 2->0
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (0, 2), (1, 2), (2, 0)]).build();
+        assert_eq!(g.out_neighbors(0), &[1, 2]);
+        assert_eq!(g.out_neighbors(1), &[2]);
+        assert_eq!(g.out_neighbors(2), &[0]);
+        for v in 0..3u32 {
+            assert_eq!(g.out_neighbors(v).len(), g.out_degree(v) as usize, "v{v}");
+        }
+    }
+
+    #[test]
+    fn out_neighbors_symmetric_alias_pull_rows() {
+        let g = GraphBuilder::new(4).edges(&[(0, 1), (1, 2), (2, 3)]).symmetrize().build();
+        for v in 0..4u32 {
+            assert_eq!(g.out_neighbors(v), g.in_neighbors(v), "v{v}");
+        }
+    }
+
+    #[test]
+    fn out_neighbors_transpose_consistent() {
+        let g = GraphBuilder::new(6).edges(&[(0, 3), (5, 1), (2, 4), (2, 0), (4, 2), (3, 3)]).build();
+        // Every pull edge (u in row v) appears as v in u's push row.
+        for v in 0..6u32 {
+            for &u in g.in_neighbors(v) {
+                assert!(g.out_neighbors(u).contains(&v), "{u}->{v} missing from transpose");
+            }
+        }
+        let out_total: usize = (0..6u32).map(|v| g.out_neighbors(v).len()).sum();
+        assert_eq!(out_total, g.num_edges());
+    }
+
+    #[test]
+    fn clone_and_eq_ignore_transpose_cache() {
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let _ = g.out_neighbors(0); // populate the cache
+        let h = g.clone();
+        assert_eq!(g, h);
+        assert_eq!(h.out_neighbors(1), &[2]);
     }
 
     #[test]

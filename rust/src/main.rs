@@ -2,9 +2,9 @@
 //! Graph Algorithms library.
 //!
 //! ```text
-//! daig run        --algo pagerank --graph kron --scale 14 --mode d256 --threads 32 [--engine sim|native] [--machine haswell|cascadelake]
-//! daig sweep      --algo pagerank --graph kron --scale 14 --threads 32 [--machine haswell]
-//! daig experiment <table1|table2|fig2|fig3|fig4|fig5|fig6|ablations|all> [--out results] [--scale 14]
+//! daig run        --algo pagerank --graph kron --scale 14 --mode d256 --threads 32 [--engine sim|native] [--schedule dense|frontier|adaptive] [--machine haswell|cascadelake]
+//! daig sweep      --algo pagerank --graph kron --scale 14 --threads 32 [--schedule dense] [--machine haswell]
+//! daig experiment <table1|table2|fig2|fig3|fig4|fig5|fig6|ablations|schedule|all> [--out results] [--scale 14]
 //! daig stats      --graph web --scale 14 | --file graph.daig
 //! daig gengraph   --graph kron --scale 14 --out kron.daig [--weighted]
 //! daig pjrt-demo  [--graph kron] [--scale 8] [--artifacts artifacts]
@@ -14,7 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use daig::coordinator::experiments::{self, ExpOptions};
 use daig::coordinator::{machine_from_name, run_native, run_sim, sweep, Algo, Workload};
-use daig::engine::{EngineConfig, ExecutionMode};
+use daig::engine::{EngineConfig, ExecutionMode, RunResult, SchedulePolicy};
 use daig::graph::gap::GapGraph;
 use daig::graph::{io, properties, Csr};
 use daig::util::cli::Args;
@@ -56,7 +56,7 @@ const HELP: &str = "daig — delayed asynchronous iterative graph algorithms
 commands:
   run         run one algorithm/graph/mode configuration
   sweep       sync/async/δ-grid sweep at a fixed thread count
-  experiment  regenerate a paper table/figure (table1 table2 fig2..fig6 ablations all)
+  experiment  regenerate a paper table/figure (table1 table2 fig2..fig6 ablations schedule all)
   stats       graph statistics (Table II columns)
   gengraph    generate a GAP-analog graph to a .daig file
   autotune    recommend an execution mode/δ from topology (§V future work)
@@ -68,7 +68,28 @@ common options:
   --ef N (edge factor)                  --algo pagerank|sssp|cc|bfs
   --mode sync|async|dN                  --threads N
   --engine sim|native                   --machine haswell|cascadelake
+  --schedule dense|frontier|adaptive    (which vertices each round sweeps)
 ";
+
+/// Parse the `--schedule` option (default dense, the paper's behavior).
+fn parse_schedule(args: &Args) -> Result<SchedulePolicy> {
+    SchedulePolicy::from_label(&args.opt_str("schedule", "dense")).context("bad --schedule")
+}
+
+/// Render the per-round active-vertex trajectory, elided in the middle
+/// for long runs — the visible evidence that sparse scheduling engages.
+fn fmt_actives(r: &RunResult) -> String {
+    let a = r.active_counts();
+    let shown: Vec<String> = if a.len() <= 12 {
+        a.iter().map(u64::to_string).collect()
+    } else {
+        let mut s: Vec<String> = a[..6].iter().map(u64::to_string).collect();
+        s.push("…".into());
+        s.extend(a[a.len() - 5..].iter().map(u64::to_string));
+        s
+    };
+    format!("[{}]", shown.join(", "))
+}
 
 fn parse_workload(args: &Args) -> Result<(Workload, Csr)> {
     let algo = Algo::from_name(&args.opt_str("algo", "pagerank")).context("bad --algo")?;
@@ -86,43 +107,53 @@ fn cmd_run(args: &Args) -> Result<()> {
     let (w, g) = parse_workload(args)?;
     let mode = ExecutionMode::from_label(&args.opt_str("mode", "d256")).context("bad --mode")?;
     let threads: usize = args.opt("threads", 32)?;
-    let mut ecfg = EngineConfig::new(threads, mode);
+    let schedule = parse_schedule(args)?;
+    let mut ecfg = EngineConfig::new(threads, mode).with_schedule(schedule);
     if args.flag("local-reads") {
         ecfg = ecfg.with_local_reads();
     }
     println!(
-        "{} on {} (n={}, m={}), mode={}, threads={}",
+        "{} on {} (n={}, m={}), mode={}, schedule={}, threads={}",
         w.algo.name(),
         args.opt_str("graph", "kron"),
         g.num_vertices(),
         g.num_edges(),
         mode.label(),
+        schedule.label(),
         threads
     );
     match args.opt_str("engine", "sim").as_str() {
         "native" => {
             let r = run_native(&g, w.algo, &ecfg);
             println!(
-                "rounds={} total={} avg/round={} converged={}",
+                "rounds={} total={} avg/round={} updates={} converged={}",
                 r.num_rounds(),
                 fmt::secs(r.total_time()),
                 fmt::secs(r.avg_round_time()),
+                fmt::si(r.total_active() as f64),
                 r.converged
             );
+            if schedule != SchedulePolicy::Dense {
+                println!("active/round = {}", fmt_actives(&r));
+            }
         }
         "sim" => {
             let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
             let s = run_sim(&g, w.algo, &ecfg, &machine);
             println!(
-                "rounds={} total={} avg/round={} cycles={} invalidations={} flushes={} converged={}",
+                "rounds={} total={} avg/round={} cycles={} invalidations={} flushes={} updates={} converged={}",
                 s.result.num_rounds(),
                 fmt::secs(s.result.total_time()),
                 fmt::secs(s.result.avg_round_time()),
                 fmt::si(s.total_cycles() as f64),
                 fmt::si(s.metrics.invalidations as f64),
                 s.result.total_flushes(),
+                fmt::si(s.result.total_active() as f64),
                 s.result.converged
             );
+            if schedule != SchedulePolicy::Dense {
+                println!("active/round = {}", fmt_actives(&s.result));
+            }
         }
         other => bail!("unknown engine '{other}'"),
     }
@@ -133,11 +164,12 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let (w, g) = parse_workload(args)?;
     let threads: usize = args.opt("threads", 32)?;
     let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
-    let pts = sweep::modes(&g, w.algo, threads, &machine);
+    let schedule = parse_schedule(args)?;
+    let pts = sweep::modes_scheduled(&g, w.algo, threads, &machine, schedule);
     let sync_t = sweep::find_mode(&pts, ExecutionMode::Synchronous).unwrap().time_s;
     let mut t = Table::new(
-        &format!("{} δ-sweep, {} threads, {}", w.algo.name(), threads, machine.name),
-        &["mode", "rounds", "total", "avg/round", "invalidations", "flushes", "speedup vs sync"],
+        &format!("{} δ-sweep, {} threads, {} schedule, {}", w.algo.name(), threads, schedule.label(), machine.name),
+        &["mode", "rounds", "total", "avg/round", "invalidations", "flushes", "updates", "speedup vs sync"],
     );
     for p in &pts {
         t.row(vec![
@@ -147,6 +179,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             fmt::secs(p.avg_round_s),
             fmt::si(p.invalidations as f64),
             p.flushes.to_string(),
+            fmt::si(p.active_total as f64),
             format!("{:.3}x", sync_t / p.time_s),
         ]);
     }

@@ -81,6 +81,27 @@ fn native_smoke_suite() {
 }
 
 #[test]
+fn schedule_experiment() {
+    let dir = tmpdir("schedule");
+    experiments::run("schedule", &opts(&dir)).unwrap();
+    let csv = std::fs::read_to_string(std::path::Path::new(&dir).join("schedule.csv")).unwrap();
+    // 4 algorithms × 5 graphs × 3 schedules + header.
+    assert_eq!(csv.lines().count(), 61, "{csv}");
+    // Frontier must beat dense on at least one sparse-update workload
+    // (cc/road is the showcase); the speedup column is the last one.
+    let wins = csv
+        .lines()
+        .filter(|l| l.contains(",frontier,"))
+        .filter(|l| {
+            let speedup: f64 =
+                l.rsplit(',').next().unwrap().trim_end_matches('x').parse().unwrap_or(0.0);
+            speedup > 1.0
+        })
+        .count();
+    assert!(wins > 0, "no frontier win anywhere:\n{csv}");
+}
+
+#[test]
 fn autotune_validation_runs() {
     let dir = tmpdir("autotune");
     experiments::run("autotune", &opts(&dir)).unwrap();

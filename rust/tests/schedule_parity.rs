@@ -1,0 +1,263 @@
+//! Schedule parity: `Frontier` and `Adaptive` sweeps must reach the same
+//! fixed point as the paper's `Dense` sweep for every `ExecutionMode` ×
+//! algorithm — including the §III-C local-read and §V conditional-write
+//! variants — on both executors. Discrete algorithms (SSSP/CC/BFS) have
+//! a unique fixed point and must match the serial oracles bit-exactly;
+//! PageRank is bit-exact in synchronous mode (deterministic Jacobi) and
+//! tolerance-checked under async interleaving, exactly like the existing
+//! dense-mode tests.
+
+use daig::algorithms::{bfs, cc, oracle, pagerank, sssp};
+use daig::engine::program::{ValueReader, VertexProgram};
+use daig::engine::sim::cost::Machine;
+use daig::engine::{native, EngineConfig, ExecutionMode, SchedulePolicy};
+use daig::graph::gap::GapGraph;
+use daig::graph::{Csr, GraphBuilder, VertexId};
+use daig::prop::{forall_res, Gen};
+
+const MODES: [ExecutionMode; 3] =
+    [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)];
+const SPARSE: [SchedulePolicy; 2] = [SchedulePolicy::Frontier, SchedulePolicy::Adaptive];
+
+fn cfg(mode: ExecutionMode, sched: SchedulePolicy, local_reads: bool) -> EngineConfig {
+    let c = EngineConfig::new(4, mode).with_schedule(sched);
+    if local_reads {
+        c.with_local_reads()
+    } else {
+        c
+    }
+}
+
+#[test]
+fn sssp_exact_for_every_mode_schedule_variant() {
+    let g = GapGraph::Kron.generate_weighted(9, 8);
+    let src = sssp::default_source(&g);
+    let want = oracle::dijkstra(&g, src);
+    for mode in MODES {
+        for sched in SPARSE {
+            for local in [false, true] {
+                for conditional in [false, true] {
+                    let p = if conditional { sssp::Sssp::new(&g, src).conditional() } else { sssp::Sssp::new(&g, src) };
+                    let r = native::run(&g, &p, &cfg(mode, sched, local));
+                    assert_eq!(r.values, want, "{mode:?}/{sched:?} local={local} cond={conditional}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cc_exact_for_every_mode_schedule_variant() {
+    let g = GapGraph::Road.generate(9, 0);
+    let want = oracle::components(&g);
+    for mode in MODES {
+        for sched in SPARSE {
+            for local in [false, true] {
+                for conditional in [false, true] {
+                    let p = if conditional {
+                        cc::Components::new(&g).conditional()
+                    } else {
+                        cc::Components::new(&g)
+                    };
+                    let r = native::run(&g, &p, &cfg(mode, sched, local));
+                    assert_eq!(r.values, want, "{mode:?}/{sched:?} local={local} cond={conditional}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn bfs_exact_for_every_mode_schedule_variant() {
+    // Web is directed: activation must go through the transpose view.
+    let g = GapGraph::Web.generate(9, 4);
+    let want = oracle::bfs_levels(&g, 3);
+    for mode in MODES {
+        for sched in SPARSE {
+            for local in [false, true] {
+                for conditional in [false, true] {
+                    let p = if conditional { bfs::Bfs::new(&g, 3).conditional() } else { bfs::Bfs::new(&g, 3) };
+                    let r = native::run(&g, &p, &cfg(mode, sched, local));
+                    assert_eq!(r.values, want, "{mode:?}/{sched:?} local={local} cond={conditional}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pagerank_parity_for_every_mode_schedule_variant() {
+    let g = GapGraph::Twitter.generate(9, 8);
+    let prcfg = pagerank::PrConfig::default();
+    let dense_sync = pagerank::run_native(&g, &EngineConfig::new(4, ExecutionMode::Synchronous), &prcfg);
+    for mode in MODES {
+        for sched in SPARSE {
+            for local in [false, true] {
+                let r = pagerank::run_native(&g, &cfg(mode, sched, local), &prcfg);
+                assert!(r.run.converged, "{mode:?}/{sched:?} local={local}");
+                if mode == ExecutionMode::Synchronous {
+                    // Deterministic Jacobi: the schedule must be invisible.
+                    assert_eq!(r.run.values, dense_sync.run.values, "{sched:?} local={local}");
+                } else {
+                    for v in 0..g.num_vertices() {
+                        assert!(
+                            (r.values[v] - dense_sync.values[v]).abs() < 1e-3,
+                            "{mode:?}/{sched:?} local={local} v{v}: {} vs {}",
+                            r.values[v],
+                            dense_sync.values[v]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_executor_schedule_parity() {
+    let m = Machine::haswell();
+    // SSSP: unique fixed point, exact across modes and schedules.
+    let gw = GapGraph::Road.generate_weighted(9, 0);
+    let src = sssp::default_source(&gw);
+    let want = oracle::dijkstra(&gw, src);
+    for mode in MODES {
+        for sched in SPARSE {
+            let ecfg = EngineConfig::new(8, mode).with_schedule(sched);
+            let (r, _) = sssp::run_sim(&gw, src, &ecfg, &m);
+            assert_eq!(r.dist, want, "sim {mode:?}/{sched:?}");
+        }
+    }
+    // PageRank sync: simulator frontier must be bit-identical to
+    // simulator dense (and therefore to native sync, per existing tests).
+    let g = GapGraph::Kron.generate(8, 8);
+    let prcfg = pagerank::PrConfig::default();
+    let (dense, _) = pagerank::run_sim(&g, &EngineConfig::new(8, ExecutionMode::Synchronous), &prcfg, &m);
+    for sched in SPARSE {
+        let ecfg = EngineConfig::new(8, ExecutionMode::Synchronous).with_schedule(sched);
+        let (r, _) = pagerank::run_sim(&g, &ecfg, &prcfg, &m);
+        assert_eq!(r.run.values, dense.run.values, "sim sync {sched:?}");
+        assert_eq!(r.run.num_rounds(), dense.run.num_rounds(), "sim sync {sched:?}");
+    }
+}
+
+#[test]
+fn frontier_reports_shrinking_active_counts() {
+    // Acceptance criterion: RoundStats carries the shrinking trajectory.
+    let g = GapGraph::Road.generate(10, 0);
+    let n = g.num_vertices() as u64;
+    for (engine, actives) in [
+        ("native", {
+            let ecfg = EngineConfig::new(4, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier);
+            let r = bfs::run_native(&g, 0, &ecfg);
+            assert!(r.run.converged);
+            r.run.active_counts()
+        }),
+        ("sim", {
+            let (r, _) = bfs::run_sim(
+                &g,
+                0,
+                &EngineConfig::new(8, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier),
+                &Machine::haswell(),
+            );
+            assert!(r.run.converged);
+            r.run.active_counts()
+        }),
+    ] {
+        assert_eq!(actives[0], n, "{engine}: round 0 is dense");
+        assert!(actives[1..].iter().all(|&a| a < n), "{engine}: all later rounds sparse: {actives:?}");
+        let total: u64 = actives.iter().sum();
+        assert!(total < actives.len() as u64 * n, "{engine}: less total work than dense");
+    }
+}
+
+/// Min-label propagation with a switchable conditional-write flag — the
+/// workhorse for randomized parity (unique fixed point ⇒ exact compare).
+struct MinProp<'g>(&'g Csr, bool);
+
+impl VertexProgram for MinProp<'_> {
+    fn name(&self) -> &'static str {
+        "minprop"
+    }
+    fn init(&self, v: VertexId) -> u32 {
+        v.wrapping_mul(2654435761) >> 8
+    }
+    fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let mut best = r.read(v);
+        for &u in self.0.in_neighbors(v) {
+            best = best.min(r.read(u));
+        }
+        best
+    }
+    fn delta(&self, old: u32, new: u32) -> f64 {
+        (old != new) as u32 as f64
+    }
+    fn converged(&self, d: f64) -> bool {
+        d == 0.0
+    }
+    fn conditional_writes(&self) -> bool {
+        self.1
+    }
+}
+
+fn random_graph(g: &mut Gen) -> Csr {
+    let n = g.usize(2..150);
+    let m = g.usize(1..500);
+    let es = g.edges(n, m);
+    let mut b = GraphBuilder::new(n);
+    if g.chance(0.5) {
+        b = b.symmetrize(); // exercise both the aliased and built transpose
+    }
+    for (s, d) in es {
+        b.push(s, d, 1);
+    }
+    b.build()
+}
+
+#[test]
+fn prop_random_graphs_schedule_parity() {
+    forall_res(64, |g| {
+        let graph = random_graph(g);
+        let threads = g.usize(1..9);
+        let mode = *g.choose(&[ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(16)]);
+        let sched = *g.choose(&[SchedulePolicy::Frontier, SchedulePolicy::Adaptive]);
+        let conditional = g.chance(0.5);
+        let local = g.chance(0.3);
+        let dense = native::run(&graph, &MinProp(&graph, conditional), &EngineConfig::new(threads, mode));
+        let mut ecfg = EngineConfig::new(threads, mode).with_schedule(sched);
+        if local {
+            ecfg = ecfg.with_local_reads();
+        }
+        let sparse = native::run(&graph, &MinProp(&graph, conditional), &ecfg);
+        if sparse.values != dense.values {
+            return Err(format!(
+                "{mode:?}/{sched:?} t={threads} cond={conditional} local={local}: fixed points differ"
+            ));
+        }
+        if !sparse.converged {
+            return Err("sparse run did not converge".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_schedule_deterministic_and_exact() {
+    forall_res(24, |g| {
+        let graph = random_graph(g);
+        let threads = g.usize(1..13);
+        let mode = *g.choose(&[ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(16)]);
+        let sched = *g.choose(&[SchedulePolicy::Frontier, SchedulePolicy::Adaptive]);
+        let m = Machine::haswell();
+        let ecfg = EngineConfig::new(threads, mode).with_schedule(sched);
+        let a = daig::engine::sim::run(&graph, &MinProp(&graph, false), &ecfg, &m);
+        let b = daig::engine::sim::run(&graph, &MinProp(&graph, false), &ecfg, &m);
+        if a.result.values != b.result.values || a.metrics != b.metrics {
+            return Err(format!("sim nondeterministic under {mode:?}/{sched:?}"));
+        }
+        let dense = daig::engine::sim::run(&graph, &MinProp(&graph, false), &EngineConfig::new(threads, mode), &m);
+        if a.result.values != dense.result.values {
+            return Err(format!("sim {mode:?}/{sched:?} fixed point differs from dense"));
+        }
+        Ok(())
+    });
+}

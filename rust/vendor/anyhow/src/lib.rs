@@ -1,0 +1,199 @@
+//! Offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this path dependency
+//! provides the subset of anyhow's API the workspace actually uses:
+//! [`Error`], [`Result`], the [`Context`] extension trait on `Result` and
+//! `Option`, and the `anyhow!` / `bail!` / `ensure!` macros. Error values
+//! carry a context *chain* of messages: `{e}` prints the outermost
+//! message, `{e:#}` prints the whole chain separated by `": "` — matching
+//! the real crate's Display behavior closely enough for CLI output and
+//! tests.
+//!
+//! Not implemented (unused here): downcasting, backtraces, `source()`
+//! interop. Swapping the real crate back in is a one-line change in
+//! `rust/Cargo.toml`.
+
+use std::fmt;
+
+/// `Result` with a boxed-message error, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A message-chain error. `chain[0]` is the root cause; later entries are
+/// contexts added around it (outermost last).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything printable.
+    pub fn msg<M: fmt::Display>(m: M) -> Self {
+        Self { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, c: C) -> Self {
+        self.chain.push(c.to_string());
+        self
+    }
+
+    /// The root-cause message (innermost).
+    pub fn root_cause(&self) -> &str {
+        &self.chain[0]
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: outermost context first, then each cause.
+            for (i, msg) in self.chain.iter().rev().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.chain.last().unwrap())
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.last().unwrap())?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for msg in self.chain.iter().rev().skip(1) {
+                write!(f, "\n    {msg}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Any std error converts via `?`. (Error itself deliberately does NOT
+// implement std::error::Error, exactly like the real anyhow, so this
+// blanket impl cannot overlap the identity conversion.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.insert(0, s.to_string());
+            src = s.source();
+        }
+        Self { chain }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error>;
+
+    /// Wrap lazily (the closure only runs on the error path).
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, c: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path")
+            .map(|_| ())
+            .with_context(|| "reading config".to_string())
+    }
+
+    #[test]
+    fn context_chain_formats() {
+        let e = io_fail().unwrap_err();
+        let plain = format!("{e}");
+        let alt = format!("{e:#}");
+        assert_eq!(plain, "reading config");
+        assert!(alt.starts_with("reading config: "), "{alt}");
+    }
+
+    #[test]
+    fn macros_and_option_context() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            let v: Option<u32> = Some(x);
+            v.context("missing")
+        }
+        assert_eq!(f(1).unwrap(), 1);
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+        assert_eq!(format!("{}", f(99).unwrap_err()), "x too big: 99");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert!(parse("7").is_ok());
+        assert!(parse("x").is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! Offline stub of the `xla` (PJRT) bindings.
+//!
+//! The dense-block backend (`daig::runtime`) executes AOT-lowered HLO
+//! through PJRT when the `xla_extension` shared library is installed.
+//! This build environment has no such library (and no crates.io access),
+//! so this path dependency supplies the same API surface with two
+//! behaviors:
+//!
+//! * **Pure-host pieces work**: [`Literal`] really stores f32 data, so
+//!   shape checks and literal round-trips (used by unit tests) behave.
+//! * **Device pieces fail cleanly**: [`PjRtClient::cpu`] returns an error
+//!   explaining the stub, so `Runtime::load` degrades into a skip path —
+//!   exactly what `rust/tests/pjrt_backend.rs` expects when artifacts or
+//!   the extension are absent.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/Cargo.toml`.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real crate's (a printable message).
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias used by every fallible call.
+pub type XlaResult<T> = Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT unavailable (built against the offline `xla` stub in rust/vendor/xla; \
+         install xla_extension and point rust/Cargo.toml at the real bindings)"
+    ))
+}
+
+/// Host-side tensor of f32 values (the only element type this workspace
+/// moves across the PJRT boundary).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape; errors if the element count does not match.
+    pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.data.len() {
+            return Err(Error(format!("reshape {:?} -> {dims:?}: element count mismatch", self.dims)));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out the elements.
+    pub fn to_vec<T: From<f32>>(&self) -> XlaResult<Vec<T>> {
+        Ok(self.data.iter().map(|&x| T::from(x)).collect())
+    }
+
+    /// Destructure a tuple literal (only produced by device execution,
+    /// which the stub cannot perform).
+    pub fn to_tuple(self) -> XlaResult<Vec<Literal>> {
+        Err(stub_err("Literal::to_tuple"))
+    }
+
+    /// The dimensions.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (opaque in the stub; parsing only validates shape).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    /// Read HLO text from a file. Validates existence and the HloModule
+    /// header so corrupt artifacts fail here, like the real parser.
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> XlaResult<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error(format!("read {:?}: {e}", path.as_ref())))?;
+        if !text.starts_with("HloModule") {
+            return Err(Error(format!("{:?}: not HLO text", path.as_ref())));
+        }
+        Ok(HloModuleProto)
+    }
+}
+
+/// Computation wrapper (opaque).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device-resident output buffer.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    /// Transfer to host.
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Err(stub_err("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given inputs.
+    pub fn execute<L: std::borrow::Borrow<Literal>>(&self, _inputs: &[L]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// CPU client — always errors in the stub so callers degrade cleanly.
+    pub fn cpu() -> XlaResult<PjRtClient> {
+        Err(stub_err("PjRtClient::cpu"))
+    }
+
+    /// Platform name for diagnostics.
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        Err(stub_err("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_shape_check() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 2]).is_err());
+    }
+
+    #[test]
+    fn device_paths_fail_with_stub_message() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+}
