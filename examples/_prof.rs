@@ -6,6 +6,7 @@ fn main() {
     let g = GapGraph::Kron.generate(14, 12);
     let m = Machine::haswell();
     for _ in 0..30 {
-        std::hint::black_box(pagerank::run_sim(&g, &EngineConfig::new(32, ExecutionMode::Delayed(256)), &PrConfig::default(), &m));
+        let ecfg = EngineConfig::new(32, ExecutionMode::Delayed(256));
+        std::hint::black_box(pagerank::run_sim(&g, &ecfg, &PrConfig::default(), &m));
     }
 }

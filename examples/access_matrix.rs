@@ -20,7 +20,8 @@ fn render(matrix: &[Vec<u64>]) {
         let line: String = row
             .iter()
             .map(|&x| {
-                let idx = if x == 0 { 0 } else { 1 + ((x as f64 / max).powf(0.35) * (SHADES.len() - 2) as f64) as usize };
+                let idx =
+                    if x == 0 { 0 } else { 1 + ((x as f64 / max).powf(0.35) * (SHADES.len() - 2) as f64) as usize };
                 SHADES[idx.min(SHADES.len() - 1)]
             })
             .collect();
@@ -34,8 +35,8 @@ fn main() {
     for g in [GapGraph::Kron, GapGraph::Web] {
         let graph = g.generate(12, 8);
         // Dynamic matrix from one simulated asynchronous run…
-        let (_, sim) =
-            pagerank::run_sim(&graph, &EngineConfig::new(threads, ExecutionMode::Asynchronous), &PrConfig::default(), &machine);
+        let ecfg = EngineConfig::new(threads, ExecutionMode::Asynchronous);
+        let (_, sim) = pagerank::run_sim(&graph, &ecfg, &PrConfig::default(), &machine);
         println!(
             "\n{} — rows: reading thread, cols: owning thread (measured over {} rounds)",
             g.name(),

@@ -12,7 +12,15 @@ use daig::util::{bench, fmt};
 fn scaling(machine: &Machine, threads: &[usize], scale: u32) {
     for g in [GapGraph::Kron, GapGraph::Web] {
         let graph = g.generate(scale, 0);
-        println!("{:<8} {:>7} {:>13} {:>8} {:>13} {:>10}", g.name(), "threads", "async", "best δ", "delayed", "vs async");
+        println!(
+            "{:<8} {:>7} {:>13} {:>8} {:>13} {:>10}",
+            g.name(),
+            "threads",
+            "async",
+            "best δ",
+            "delayed",
+            "vs async"
+        );
         for &t in threads {
             let pts = sweep::modes(&graph, Algo::PageRank, t, machine);
             let asyn = sweep::find_mode(&pts, ExecutionMode::Asynchronous).unwrap();

@@ -53,7 +53,8 @@ fn main() {
     let machine = Machine::haswell();
     for threads in [8usize, 32] {
         let s = bench::case(&format!("sim pagerank kron@{scale} d256 {threads}t"), 3, || {
-            pagerank::run_sim(&g, &EngineConfig::new(threads, ExecutionMode::Delayed(256)), &PrConfig::default(), &machine)
+            let ecfg = EngineConfig::new(threads, ExecutionMode::Delayed(256));
+            pagerank::run_sim(&g, &ecfg, &PrConfig::default(), &machine)
         });
         let (_, sim) = pagerank::run_sim(
             &g,
@@ -127,6 +128,53 @@ fn main() {
     ]);
     std::fs::write("BENCH_schedule.json", doc.to_string()).expect("write BENCH_schedule.json");
     println!("wrote BENCH_schedule.json");
+
+    bench::section("steal: static vs work-stealing round execution (native wall clock, 4 threads)");
+    // Skewed graphs (kron/twitter) vs uniform ones (urand/road). Frontier
+    // CC is the showcase: sparse rounds concentrate the active set in few
+    // partitions, exactly the straggler regime chunked stealing recovers.
+    // Results land in BENCH_steal.json so the perf trajectory is recorded
+    // across PRs.
+    let mut steal_json: Vec<(String, Json)> = Vec::new();
+    let steal_graphs = [
+        ("kron", GapGraph::Kron.generate(scale, 8)),
+        ("twitter", GapGraph::Twitter.generate(scale, 8)),
+        ("urand", GapGraph::Urand.generate(scale, 8)),
+        ("road", GapGraph::Road.generate(scale, 0)),
+    ];
+    for (gname, graph) in &steal_graphs {
+        let ecfg = EngineConfig::new(4, ExecutionMode::Delayed(256)).with_schedule(SchedulePolicy::Frontier);
+        let s_static =
+            bench::case(&format!("cc {gname}@{scale} frontier static 4t"), 3, || cc::run_native(graph, &ecfg));
+        let steal_cfg = ecfg.clone().with_stealing();
+        let mut steals = 0u64;
+        let s_steal = bench::case(&format!("cc {gname}@{scale} frontier stealing 4t"), 3, || {
+            let r = cc::run_native(graph, &steal_cfg);
+            steals = r.run.total_steals();
+            r
+        });
+        println!("  -> {:.2}x vs static, {} chunks stolen", s_static.min_s / s_steal.min_s, steals);
+        steal_json.push((
+            gname.to_string(),
+            Json::obj(vec![
+                ("static_s_min", Json::Num(s_static.min_s)),
+                ("stealing_s_min", Json::Num(s_steal.min_s)),
+                ("steals", Json::Num(steals as f64)),
+                ("speedup_vs_static", Json::Num(s_static.min_s / s_steal.min_s)),
+            ]),
+        ));
+    }
+    let steal_doc = Json::obj(vec![
+        ("bench", Json::Str("steal".into())),
+        ("scale", Json::Num(scale as f64)),
+        ("threads", Json::Num(4.0)),
+        ("mode", Json::Str("d256".into())),
+        ("algo", Json::Str("cc".into())),
+        ("schedule", Json::Str("frontier".into())),
+        ("graphs", Json::Obj(steal_json.into_iter().collect())),
+    ]);
+    std::fs::write("BENCH_steal.json", steal_doc.to_string()).expect("write BENCH_steal.json");
+    println!("wrote BENCH_steal.json");
 
     bench::section("PJRT dense-block step (L1/L2 artifact path)");
     if std::path::Path::new("artifacts/manifest.json").exists() {

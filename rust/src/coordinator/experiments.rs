@@ -10,6 +10,7 @@
 //! | `fig5` | 32-thread access matrices, Kron & Web | [`fig5`] |
 //! | `fig6` | SSSP speedup over sync, 112 threads | [`fig6`] |
 //! | `ablations` | DESIGN.md ablations (partition, local reads, stripe, conditional) | [`ablations`] |
+//! | `steal` | static vs work-stealing round execution (beyond the paper) | [`steal`] |
 //!
 //! All drivers run on the simulator (DESIGN.md §3: deterministic stand-in
 //! for the paper's 32/112-thread machines).
@@ -62,8 +63,12 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "ablations" => ablations(opts),
         "autotune" => autotune_validation(opts),
         "schedule" => schedule(opts),
+        "steal" => steal(opts),
         "all" => {
-            let ids = ["table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune", "schedule"];
+            let ids = [
+                "table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune", "schedule",
+                "steal",
+            ];
             for id in ids {
                 run(id, opts)?;
             }
@@ -149,12 +154,55 @@ pub fn schedule(opts: &ExpOptions) -> Result<()> {
     opts.report.emit("schedule", &t)
 }
 
+/// Stealing dimension (beyond the paper): static vs work-stealing round
+/// execution at 32 simulated threads, δ=64, across the whole suite. Dense
+/// PageRank shows the no-skew floor (steal overhead must stay near zero);
+/// frontier CC is the showcase — sparse rounds concentrate the active set
+/// in few partitions, so chunk stealing recovers the straggler time on
+/// the skewed graphs (kron/twitter) far more than the uniform ones
+/// (urand/road).
+pub fn steal(opts: &ExpOptions) -> Result<()> {
+    let m = Machine::haswell();
+    let mut t = Table::new(
+        "Steal — static vs work-stealing round execution (simulated 32-thread Haswell, δ=64)",
+        &["algo", "graph", "schedule", "variant", "rounds", "time", "steals", "speedup vs static"],
+    );
+    for (algo, sched) in [(Algo::PageRank, SchedulePolicy::Dense), (Algo::Cc, SchedulePolicy::Frontier)] {
+        for g in ALL {
+            let graph = opts.graph(g, algo);
+            let (st, dy) = sweep::steal_pair(&graph, algo, 32, &m, ExecutionMode::Delayed(64), sched);
+            for (variant, p) in [("static", &st), ("stealing", &dy)] {
+                t.row(vec![
+                    algo.name().into(),
+                    g.name().into(),
+                    sched.label().into(),
+                    variant.into(),
+                    p.rounds.to_string(),
+                    fmt::secs(p.time_s),
+                    p.steals.to_string(),
+                    format!("{:.3}x", st.time_s / p.time_s),
+                ]);
+            }
+        }
+    }
+    opts.report.emit("steal", &t)
+}
+
 /// Table I: rounds and average round time for PR, 32-thread Haswell.
 pub fn table1(opts: &ExpOptions) -> Result<()> {
     let m = Machine::haswell();
     let mut t = Table::new(
         "Table I — PageRank rounds / avg round time (simulated 32-thread Haswell)",
-        &["graph", "rounds sync", "rounds async", "rounds hybrid", "avg s sync", "avg s async", "avg s hybrid", "best δ"],
+        &[
+            "graph",
+            "rounds sync",
+            "rounds async",
+            "rounds hybrid",
+            "avg s sync",
+            "avg s async",
+            "avg s hybrid",
+            "best δ",
+        ],
     );
     for g in ALL {
         let graph = opts.graph(g, Algo::PageRank);
@@ -351,7 +399,14 @@ pub fn ablations(opts: &ExpOptions) -> Result<()> {
             &m,
         );
         let b = base.result.total_time();
-        t.row(vec!["partition".into(), "kron".into(), "blocked-by-degree".into(), base.result.num_rounds().to_string(), fmt::secs(b), "1.000x".into()]);
+        t.row(vec![
+            "partition".into(),
+            "kron".into(),
+            "blocked-by-degree".into(),
+            base.result.num_rounds().to_string(),
+            fmt::secs(b),
+            "1.000x".into(),
+        ]);
         t.row(vec![
             "partition".into(),
             "kron".into(),
@@ -369,7 +424,14 @@ pub fn ablations(opts: &ExpOptions) -> Result<()> {
         let local =
             run_sim(&g, Algo::PageRank, &EngineConfig::new(32, ExecutionMode::Delayed(128)).with_local_reads(), &m);
         let b = global.result.total_time();
-        t.row(vec!["local-reads".into(), "kron".into(), "global (paper)".into(), global.result.num_rounds().to_string(), fmt::secs(b), "1.000x".into()]);
+        t.row(vec![
+            "local-reads".into(),
+            "kron".into(),
+            "global (paper)".into(),
+            global.result.num_rounds().to_string(),
+            fmt::secs(b),
+            "1.000x".into(),
+        ]);
         t.row(vec![
             "local-reads".into(),
             "kron".into(),
@@ -387,7 +449,14 @@ pub fn ablations(opts: &ExpOptions) -> Result<()> {
         let (striped, _) = stripe::relabel(&g, 32, 16);
         let strd = run_sim(&striped, Algo::PageRank, &EngineConfig::new(32, ExecutionMode::Delayed(128)), &m);
         let b = natural.result.total_time();
-        t.row(vec!["stripe".into(), "web".into(), "natural ids".into(), natural.result.num_rounds().to_string(), fmt::secs(b), "1.000x".into()]);
+        t.row(vec![
+            "stripe".into(),
+            "web".into(),
+            "natural ids".into(),
+            natural.result.num_rounds().to_string(),
+            fmt::secs(b),
+            "1.000x".into(),
+        ]);
         t.row(vec![
             "stripe".into(),
             "web".into(),
@@ -406,7 +475,14 @@ pub fn ablations(opts: &ExpOptions) -> Result<()> {
         let uncond = crate::engine::sim::run(&g, &sssp::Sssp::new(&g, src), &ecfg, &m);
         let cond = crate::engine::sim::run(&g, &sssp::Sssp::new(&g, src).conditional(), &ecfg, &m);
         let b = uncond.result.total_time();
-        t.row(vec!["conditional".into(), "kron".into(), "unconditional (paper)".into(), uncond.result.num_rounds().to_string(), fmt::secs(b), "1.000x".into()]);
+        t.row(vec![
+            "conditional".into(),
+            "kron".into(),
+            "unconditional (paper)".into(),
+            uncond.result.num_rounds().to_string(),
+            fmt::secs(b),
+            "1.000x".into(),
+        ]);
         t.row(vec![
             "conditional".into(),
             "kron".into(),

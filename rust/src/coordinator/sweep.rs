@@ -23,6 +23,8 @@ pub struct SweepPoint {
     pub flushes: u64,
     /// Total vertex updates across all rounds (dense = rounds × n).
     pub active_total: u64,
+    /// Chunks executed away from their owner (zero without stealing).
+    pub steals: u64,
 }
 
 /// Sweep sync + async + the paper's δ grid at a fixed thread count,
@@ -39,14 +41,22 @@ pub fn modes_scheduled(
     machine: &Machine,
     schedule: SchedulePolicy,
 ) -> Vec<SweepPoint> {
-    let max_range = blocked::partition(g, threads).max_len();
-    let mut out = Vec::new();
+    modes_base(g, algo, machine, &EngineConfig::new(threads, ExecutionMode::Synchronous).with_schedule(schedule))
+}
+
+/// Mode sweep preserving every non-mode dimension of `base` (schedule,
+/// stealing, partitioner, thread count).
+pub fn modes_base(g: &Csr, algo: Algo, machine: &Machine, base: &EngineConfig) -> Vec<SweepPoint> {
+    let max_range = blocked::partition(g, base.threads).max_len();
     let mut list = vec![ExecutionMode::Synchronous, ExecutionMode::Asynchronous];
     list.extend(delta_sweep(max_range).into_iter().map(ExecutionMode::Delayed));
-    for mode in list {
-        out.push(point_scheduled(g, algo, threads, machine, mode, schedule));
-    }
-    out
+    list.into_iter()
+        .map(|mode| {
+            let mut c = base.clone();
+            c.mode = mode;
+            point_config(g, algo, machine, &c)
+        })
+        .collect()
 }
 
 /// Sweep all three schedule policies at one fixed execution mode.
@@ -68,17 +78,37 @@ pub fn point_scheduled(
     mode: ExecutionMode,
     schedule: SchedulePolicy,
 ) -> SweepPoint {
-    let sim = run_sim(g, algo, &EngineConfig::new(threads, mode).with_schedule(schedule), machine);
+    point_config(g, algo, machine, &EngineConfig::new(threads, mode).with_schedule(schedule))
+}
+
+/// Run one explicit engine configuration.
+pub fn point_config(g: &Csr, algo: Algo, machine: &Machine, ecfg: &EngineConfig) -> SweepPoint {
+    let sim = run_sim(g, algo, ecfg, machine);
     SweepPoint {
-        mode,
-        schedule,
+        mode: ecfg.mode,
+        schedule: ecfg.schedule,
         rounds: sim.result.num_rounds(),
         time_s: sim.result.total_time(),
         avg_round_s: sim.result.avg_round_time(),
         invalidations: sim.metrics.invalidations,
         flushes: sim.result.total_flushes(),
         active_total: sim.result.total_active(),
+        steals: sim.result.total_steals(),
     }
+}
+
+/// The straggler-recovery pair: one configuration run statically and with
+/// intra-round work stealing.
+pub fn steal_pair(
+    g: &Csr,
+    algo: Algo,
+    threads: usize,
+    machine: &Machine,
+    mode: ExecutionMode,
+    schedule: SchedulePolicy,
+) -> (SweepPoint, SweepPoint) {
+    let base = EngineConfig::new(threads, mode).with_schedule(schedule);
+    (point_config(g, algo, machine, &base), point_config(g, algo, machine, &base.clone().with_stealing()))
 }
 
 /// The best (lowest total time) delayed point of a sweep, if any.
@@ -128,6 +158,17 @@ mod tests {
         let sync = find_mode(&pts, ExecutionMode::Synchronous).unwrap().rounds;
         let asyn = find_mode(&pts, ExecutionMode::Asynchronous).unwrap().rounds;
         assert!(asyn <= sync, "async {asyn} vs sync {sync}");
+    }
+
+    #[test]
+    fn steal_pair_reports_stealing_dimension() {
+        let g = GapGraph::Kron.generate(9, 8);
+        let m = Machine::haswell();
+        let (st, dy) = steal_pair(&g, Algo::Cc, 8, &m, ExecutionMode::Delayed(64), SchedulePolicy::Frontier);
+        assert_eq!(st.steals, 0, "static run must not steal");
+        assert_eq!(st.mode, dy.mode);
+        assert_eq!(st.schedule, dy.schedule);
+        assert!(dy.rounds > 0 && dy.time_s > 0.0);
     }
 
     #[test]

@@ -29,6 +29,7 @@ pub mod schedule;
 pub mod shared;
 pub mod sim;
 pub mod stats;
+pub mod steal;
 
 pub use program::{ValueReader, VertexProgram};
 pub use schedule::SchedulePolicy;
@@ -91,6 +92,11 @@ pub struct EngineConfig {
     /// §III-C variant: serve reads of not-yet-flushed own values from the
     /// local delay buffer. The paper found this rarely faster; default off.
     pub local_reads: bool,
+    /// Intra-round work stealing: partitions split into cache-line-aligned
+    /// chunks; a worker drains its own chunks first, then steals trailing
+    /// chunks from the most loaded victim (see [`steal`]). Default off —
+    /// the paper's static schedule.
+    pub stealing: bool,
     /// Safety valve: abort after this many rounds.
     pub max_rounds: usize,
 }
@@ -105,6 +111,7 @@ impl EngineConfig {
             partition: PartitionStrategy::default(),
             schedule: SchedulePolicy::default(),
             local_reads: false,
+            stealing: false,
             max_rounds: 10_000,
         }
     }
@@ -112,6 +119,12 @@ impl EngineConfig {
     /// Builder-style: enable local reads.
     pub fn with_local_reads(mut self) -> Self {
         self.local_reads = true;
+        self
+    }
+
+    /// Builder-style: enable intra-round work stealing.
+    pub fn with_stealing(mut self) -> Self {
+        self.stealing = true;
         self
     }
 
@@ -164,6 +177,13 @@ mod tests {
         assert_eq!(c.schedule, SchedulePolicy::Dense);
         let f = c.with_schedule(SchedulePolicy::Frontier);
         assert_eq!(f.schedule, SchedulePolicy::Frontier);
+    }
+
+    #[test]
+    fn stealing_builder_and_default() {
+        let c = EngineConfig::new(4, ExecutionMode::Delayed(64));
+        assert!(!c.stealing, "the paper's static schedule is the default");
+        assert!(c.with_stealing().stealing);
     }
 
     #[test]

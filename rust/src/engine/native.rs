@@ -23,6 +23,14 @@
 //! Sparse sweeps compose with the delay buffer through
 //! [`DelayBuffer::seek`], which generalizes the conditional-write
 //! `skip()` flush-and-advance so published runs stay contiguous.
+//!
+//! A third orthogonal dimension is *who* executes a chunk of work:
+//! with [`EngineConfig::stealing`] each partition is split into
+//! cache-line-aligned chunks in a [`StealGrid`]; a worker drains its own
+//! chunks in order (a contiguous sweep, identical to static execution),
+//! then steals trailing chunks from the most loaded victim. Stolen
+//! chunks are just non-contiguous jumps to the delay buffer — the same
+//! `seek` path sparse sweeps already take.
 
 use std::cell::RefCell;
 use std::ops::Range;
@@ -37,6 +45,7 @@ use super::program::{ValueReader, VertexProgram};
 use super::schedule::{AtomicBitmap, SchedulePolicy, ADAPTIVE_SPARSE_DIVISOR};
 use super::shared::{SharedValues, SliceReader};
 use super::stats::{RoundStats, RunResult};
+use super::steal::{StealGrid, DEFAULT_CHUNK};
 use super::{EngineConfig, ExecutionMode};
 
 /// Reader for async/delayed modes: global array, optionally patched with
@@ -75,6 +84,8 @@ struct Ctrl {
     processed: Vec<AtomicU64>,
     /// Per-thread vertices *newly* activated for the next round.
     activated: Vec<AtomicU64>,
+    /// Per-thread chunks stolen this round.
+    steals: Vec<AtomicU64>,
     /// Whether the next round sweeps sparsely (thread 0 decides between
     /// the barriers; round 0 is always dense).
     sparse_next: AtomicBool,
@@ -103,6 +114,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
         g.ensure_out_edges();
     }
     let frontiers = frontier_on.then(|| Frontiers { maps: [AtomicBitmap::new(n), AtomicBitmap::new(n)] });
+    let grid = cfg.stealing.then(|| StealGrid::new(&pm, DEFAULT_CHUNK));
 
     let ctrl = Ctrl {
         barrier: Barrier::new(t_count),
@@ -110,6 +122,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
         flushes: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         processed: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         activated: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        steals: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         sparse_next: AtomicBool::new(false),
         done: AtomicBool::new(false),
     };
@@ -124,10 +137,11 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
             let global = &global;
             let back = &back;
             let frontiers = frontiers.as_ref();
+            let grid = grid.as_ref();
             let rounds_out = &rounds_out;
             let converged_out = &converged_out;
             let handle = move || {
-                worker(t, range, g, prog, cfg, ctrl, global, back, frontiers, rounds_out, converged_out);
+                worker(t, range, g, prog, cfg, ctrl, global, back, frontiers, grid, rounds_out, converged_out);
             };
             if t == t_count - 1 {
                 // Run the last worker on the caller thread: saves one
@@ -174,13 +188,23 @@ fn worker<P: VertexProgram>(
     global: &SharedValues,
     back: &SharedValues,
     frontiers: Option<&Frontiers>,
+    grid: Option<&StealGrid>,
     rounds_out: &Mutex<Vec<RoundStats>>,
     converged_out: &AtomicBool,
 ) {
     let n = g.num_vertices();
-    let delta_cap = cfg.effective_delta(range.len());
-    let buf = RefCell::new(DelayBuffer::new(delta_cap));
     let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
+    // Stealing can hand this thread chunks anywhere in the graph, so the
+    // delayed-mode buffer is capped against n rather than the own range.
+    // Sync mode never stages (the double buffer *is* the delay).
+    let delta_cap = if sync_mode {
+        0
+    } else if grid.is_some() {
+        cfg.effective_delta(n)
+    } else {
+        cfg.effective_delta(range.len())
+    };
+    let buf = RefCell::new(DelayBuffer::new(delta_cap));
     let conditional = prog.conditional_writes();
 
     // Sync-mode frontier bookkeeping: the vertices we swept last round.
@@ -197,6 +221,7 @@ fn worker<P: VertexProgram>(
         let mut delta = 0.0f64;
         let mut processed = 0u64;
         let mut activated = 0u64;
+        let mut steals = 0u64;
         let (cur, nxt) = match frontiers {
             Some(f) => (Some(&f.maps[round % 2]), Some(&f.maps[(round + 1) % 2])),
             None => (None, None),
@@ -212,6 +237,35 @@ fn worker<P: VertexProgram>(
                             *activated += 1;
                         }
                     }
+                }
+            }
+        };
+
+        // Chunk source for this round's sweep. Static: the whole own range,
+        // once. Stealing: own chunks front-to-back (a contiguous sweep,
+        // same order as static), then trailing chunks from the most loaded
+        // victim until every deque is drained.
+        let mut own_done = false;
+        let mut served_whole = false;
+        let mut next_chunk = |steals: &mut u64| -> Option<Range<VertexId>> {
+            match grid {
+                Some(gr) => {
+                    if !own_done {
+                        if let Some(c) = gr.part(t).pop_front() {
+                            return Some(c);
+                        }
+                        own_done = true;
+                    }
+                    let c = gr.steal(t);
+                    if c.is_some() {
+                        *steals += 1;
+                    }
+                    c
+                }
+                None if served_whole => None,
+                None => {
+                    served_whole = true;
+                    Some(range.clone())
                 }
             }
         };
@@ -241,35 +295,40 @@ fn worker<P: VertexProgram>(
                     }
                 }
                 let mut swept: Vec<VertexId> = Vec::new();
-                cur.for_each_in(range.clone(), |v| {
-                    let old = front.load(v);
-                    let mut rd = SharedReaderShim(front);
-                    let new = prog.update(v, &mut rd);
-                    delta += prog.delta(old, new);
-                    activate(old, new, v, &mut activated);
-                    // Sync must carry unchanged values across the swap.
-                    write.store(v, if conditional && new == old { old } else { new });
-                    swept.push(v);
-                });
+                while let Some(c) = next_chunk(&mut steals) {
+                    cur.for_each_in(c, |v| {
+                        let old = front.load(v);
+                        let mut rd = SharedReaderShim(front);
+                        let new = prog.update(v, &mut rd);
+                        delta += prog.delta(old, new);
+                        activate(old, new, v, &mut activated);
+                        // Sync must carry unchanged values across the swap.
+                        write.store(v, if conditional && new == old { old } else { new });
+                        swept.push(v);
+                    });
+                }
                 processed = swept.len() as u64;
                 prev_swept = Some(swept);
             } else {
-                for v in range.clone() {
-                    let old = front.load(v);
-                    let mut rd = SharedReaderShim(front);
-                    let new = prog.update(v, &mut rd);
-                    delta += prog.delta(old, new);
-                    activate(old, new, v, &mut activated);
-                    write.store(v, if conditional && new == old { old } else { new });
+                while let Some(c) = next_chunk(&mut steals) {
+                    processed += c.len() as u64;
+                    for v in c {
+                        let old = front.load(v);
+                        let mut rd = SharedReaderShim(front);
+                        let new = prog.update(v, &mut rd);
+                        delta += prog.delta(old, new);
+                        activate(old, new, v, &mut activated);
+                        write.store(v, if conditional && new == old { old } else { new });
+                    }
                 }
-                processed = range.len() as u64;
                 prev_swept = None;
             }
         } else {
             buf.borrow_mut().begin(range.start);
             let mut body = |v: VertexId| {
-                // No-op on contiguous (dense) sweeps; on sparse sweeps
-                // publishes the pending run before jumping the gap.
+                // No-op on contiguous (dense) sweeps; on sparse sweeps and
+                // stolen chunks publishes the pending run before jumping
+                // the gap.
                 buf.borrow_mut().seek(global, v);
                 let old = global.load(v);
                 let new = {
@@ -286,37 +345,48 @@ fn worker<P: VertexProgram>(
                 }
                 processed += 1;
             };
-            match (sparse, cur) {
-                (true, Some(cur)) => cur.for_each_in(range.clone(), &mut body),
-                _ => {
-                    for v in range.clone() {
-                        body(v);
+            while let Some(c) = next_chunk(&mut steals) {
+                match (sparse, cur) {
+                    (true, Some(cur)) => cur.for_each_in(c, &mut body),
+                    _ => {
+                        for v in c {
+                            body(v);
+                        }
                     }
                 }
             }
             buf.borrow_mut().flush(global);
         }
 
-        if let Some(cur) = cur {
-            // This round's bits are consumed (only the owner reads them);
-            // clear our slice so the map can serve as the round-after-
-            // next's activation target. Masked: boundary words are shared
-            // with neighboring partitions.
-            cur.clear_range(range.clone());
-        }
-
         ctrl.deltas[t].store(delta.to_bits(), Ordering::Relaxed);
         ctrl.flushes[t].store(buf.borrow().flushes(), Ordering::Relaxed);
         ctrl.processed[t].store(processed, Ordering::Relaxed);
         ctrl.activated[t].store(activated, Ordering::Relaxed);
+        ctrl.steals[t].store(steals, Ordering::Relaxed);
 
         // ---- barrier 1: all writes of the round done ----
         ctrl.barrier.wait();
+
+        // Between the barriers: cleanup that must not race the sweep.
+        // Under stealing another thread may have been reading our slice of
+        // the frontier bitmap (or claiming our chunks) right up to the
+        // barrier, so consuming-side clears wait until every sweep is done.
+        if let Some(cur) = cur {
+            // This round's bits are consumed; clear our slice so the map
+            // can serve as the round-after-next's activation target.
+            // Masked: boundary words are shared with neighboring
+            // partitions.
+            cur.clear_range(range.clone());
+        }
+        if let Some(gr) = grid {
+            gr.part(t).reset();
+        }
 
         if t == 0 {
             let round_delta: f64 = ctrl.deltas.iter().map(|d| f64::from_bits(d.load(Ordering::Relaxed))).sum();
             let total_flushes: u64 = ctrl.flushes.iter().map(|f| f.load(Ordering::Relaxed)).sum();
             let total_active: u64 = ctrl.processed.iter().map(|p| p.load(Ordering::Relaxed)).sum();
+            let total_steals: u64 = ctrl.steals.iter().map(|s| s.load(Ordering::Relaxed)).sum();
             let mut rounds = rounds_out.lock().unwrap();
             let prev_flushes: u64 = rounds.iter().map(|r: &RoundStats| r.flushes).sum();
             rounds.push(RoundStats {
@@ -324,6 +394,7 @@ fn worker<P: VertexProgram>(
                 delta: round_delta,
                 flushes: total_flushes - prev_flushes,
                 active: total_active,
+                steals: total_steals,
             });
             let conv = prog.converged(round_delta);
             if conv || rounds.len() >= cfg.max_rounds {
@@ -385,7 +456,13 @@ pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -
             back[v as usize] = new;
         }
         std::mem::swap(&mut front, &mut back);
-        rounds.push(RoundStats { time_s: t0.elapsed().as_secs_f64(), delta, flushes: 0, active: n as u64 });
+        rounds.push(RoundStats {
+            time_s: t0.elapsed().as_secs_f64(),
+            delta,
+            flushes: 0,
+            active: n as u64,
+            steals: 0,
+        });
         if prog.converged(delta) {
             converged = true;
             break;
@@ -587,6 +664,81 @@ mod tests {
             let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(8, ExecutionMode::Delayed(16)).with_schedule(sched));
             assert!(r.converged, "{sched:?}");
             assert_eq!(r.values.len(), 3, "{sched:?}");
+        }
+    }
+
+    #[test]
+    fn stealing_matches_static_every_mode_and_schedule() {
+        // Scale 10 so every partition splits into multiple chunks and the
+        // steal path really engages during the parity sweep.
+        let g = GapGraph::Web.generate(10, 4);
+        let oracle = fixed_point_serial(&g);
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+            for sched in SchedulePolicy::ALL {
+                let cfg = EngineConfig::new(4, mode).with_schedule(sched).with_stealing();
+                let r = run(&g, &MaxProp { g: &g }, &cfg);
+                assert!(r.converged, "{mode:?}/{sched:?}");
+                assert_eq!(r.values, oracle, "{mode:?}/{sched:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn stealing_sync_is_bit_exact_with_serial() {
+        // Sync reads only the stable front buffer, so who executes a
+        // chunk is invisible: same rounds, same per-round delta (integer
+        // counts for MaxProp), same values.
+        let g = GapGraph::Road.generate(9, 0);
+        let serial = run_serial_sync(&g, &MaxProp { g: &g }, 10_000);
+        let cfg = EngineConfig::new(4, ExecutionMode::Synchronous).with_stealing();
+        let r = run(&g, &MaxProp { g: &g }, &cfg);
+        assert_eq!(r.num_rounds(), serial.num_rounds());
+        assert_eq!(r.values, serial.values);
+        for (a, b) in r.rounds.iter().zip(&serial.rounds) {
+            assert_eq!(a.delta, b.delta);
+        }
+    }
+
+    /// Every vertex points at the first 64: the lowest equal-vertex
+    /// partition holds essentially all the pull work, guaranteeing a
+    /// straggler whose trailing chunks get stolen.
+    fn hub_graph(n: usize) -> Csr {
+        let mut b = crate::graph::GraphBuilder::new(n);
+        for v in 0..n as VertexId {
+            for h in 0..64u32 {
+                if v != h {
+                    b.push(v, h, 1);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn stealing_reports_steals_on_skewed_work() {
+        use crate::engine::PartitionStrategy;
+        let g = hub_graph(4096);
+        let p = MaxProp { g: &g };
+        let cfg = EngineConfig::new(4, ExecutionMode::Delayed(64))
+            .with_partition(PartitionStrategy::EqualVertex)
+            .with_stealing();
+        let r = run(&g, &p, &cfg);
+        assert!(r.converged);
+        assert!(r.total_steals() > 0, "straggler chunks must be stolen");
+        // Static execution of the same config reports zero steals.
+        let st = run(&g, &p, &EngineConfig::new(4, ExecutionMode::Delayed(64)));
+        assert_eq!(st.total_steals(), 0);
+        assert_eq!(r.values, st.values);
+    }
+
+    #[test]
+    fn stealing_with_more_threads_than_vertices() {
+        let g = crate::graph::GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(16)] {
+            let cfg = EngineConfig::new(8, mode).with_stealing();
+            let r = run(&g, &MaxProp { g: &g }, &cfg);
+            assert!(r.converged, "{mode:?}");
+            assert_eq!(r.values.len(), 3, "{mode:?}");
         }
     }
 

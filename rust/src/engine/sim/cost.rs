@@ -28,6 +28,11 @@ pub struct CostModel {
     pub edge_compute: u64,
     /// Store into the thread-local delay buffer (always L1-resident).
     pub buffer_push: u64,
+    /// Claiming a chunk from another partition's deque (a CAS on a
+    /// contended shared line — roughly an LLC round trip). Charged once
+    /// per stolen chunk; owner-side claims stay on an owned line and are
+    /// folded into `vertex_base`.
+    pub steal: u64,
 }
 
 impl Default for CostModel {
@@ -41,6 +46,7 @@ impl Default for CostModel {
             vertex_base: 8,
             edge_compute: 2,
             buffer_push: 1,
+            steal: 40,
         }
     }
 }
@@ -117,6 +123,9 @@ mod tests {
         assert!(c.l1 < c.llc && c.llc < c.remote_core);
         assert!(c.remote_core < c.remote_socket && c.remote_socket < c.dram);
         assert!(c.buffer_push <= c.l1);
+        // Stealing pays a contended CAS: pricier than local work, cheaper
+        // than a cross-socket forward.
+        assert!(c.steal >= c.llc && c.steal < c.remote_socket);
     }
 
     #[test]

@@ -23,6 +23,14 @@
 //! measurements cover the sparse regime too. Frontier bitmap stores are
 //! charged at the delay-buffer push rate (`cost.buffer_push`): the bitmap
 //! is thread-hot and tiny (1 bit/vertex), below line-table granularity.
+//!
+//! Work stealing mirrors `engine::steal` the same way: partitions split
+//! into the same cache-line-aligned chunks, owners drain their own chunks
+//! front-to-back, and a thread that runs dry steals the trailing chunk of
+//! the most loaded victim. Claims resolve deterministically in clock
+//! order (ties by thread id, like every other simulator event) and each
+//! stolen chunk is charged `cost.steal` cycles — a contended CAS — so
+//! contention measurements stay meaningful under dynamic scheduling.
 
 pub mod cache;
 pub mod cost;
@@ -30,13 +38,16 @@ pub mod trace;
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::ops::Range;
 
 use super::delay_buffer::round_delta;
 use super::program::{ValueReader, VertexProgram};
 use super::schedule::{bits, SchedulePolicy, ADAPTIVE_SPARSE_DIVISOR};
 use super::stats::{RoundStats, RunResult};
+use super::steal::DEFAULT_CHUNK;
 use super::{EngineConfig, ExecutionMode};
 use crate::graph::{Csr, VertexId};
+use crate::partition::{chunk_bounds, PartitionMap};
 use cache::LineTable;
 use cost::Machine;
 use trace::SimMetrics;
@@ -81,6 +92,137 @@ impl SimBuffer {
     }
 }
 
+/// One stealable unit of a round's sweep: a dense vertex span or (on
+/// sparse rounds) the active vertices inside one chunk's span.
+enum SimChunk {
+    Span(Range<VertexId>),
+    List(Vec<VertexId>),
+}
+
+impl SimChunk {
+    fn len(&self) -> usize {
+        match self {
+            SimChunk::Span(r) => r.len(),
+            SimChunk::List(l) => l.len(),
+        }
+    }
+
+    fn get(&self, i: usize) -> VertexId {
+        match self {
+            SimChunk::Span(r) => r.start + i as VertexId,
+            SimChunk::List(l) => l[i],
+        }
+    }
+}
+
+/// Deterministic twin of [`super::steal::StealGrid`]: the same
+/// cache-line-aligned chunks per partition, the same claim protocol
+/// (owners from the front, thieves take the trailing chunk of the most
+/// loaded victim, ties to the lowest partition id) — but claims resolve
+/// in simulated-clock order instead of hardware CAS order, so runs are
+/// reproducible. Sparse rounds pre-slice each partition's worklist at the
+/// chunk boundaries and drop empty chunks (claiming an empty chunk does
+/// no observable work in the native executor either).
+struct WorkSource {
+    chunks: Vec<Vec<SimChunk>>,
+    /// Per-partition claim window: `head..tail` are unclaimed.
+    head: Vec<usize>,
+    tail: Vec<usize>,
+    /// Per-thread current chunk: (owning partition, chunk index, next
+    /// position within the chunk).
+    cur: Vec<Option<(usize, usize, usize)>>,
+    /// Chunks executed away from their owner this round.
+    steals: u64,
+}
+
+impl WorkSource {
+    fn new(pm: &PartitionMap, lists: Option<&[Vec<VertexId>]>, chunk: usize) -> Self {
+        let t_count = pm.num_parts();
+        let mut chunks: Vec<Vec<SimChunk>> = Vec::with_capacity(t_count);
+        for t in 0..t_count {
+            let bounds = chunk_bounds(&pm.range(t), chunk);
+            let mut cs: Vec<SimChunk> = Vec::new();
+            match lists {
+                None => {
+                    for w in bounds.windows(2) {
+                        cs.push(SimChunk::Span(w[0]..w[1]));
+                    }
+                }
+                Some(ls) => {
+                    // `ls[t]` is sorted and confined to the partition, so
+                    // slicing at the ascending chunk boundaries partitions
+                    // it exactly.
+                    let list = &ls[t];
+                    let mut i = 0usize;
+                    for w in bounds.windows(2) {
+                        let start = i;
+                        while i < list.len() && list[i] < w[1] {
+                            i += 1;
+                        }
+                        if i > start {
+                            cs.push(SimChunk::List(list[start..i].to_vec()));
+                        }
+                    }
+                }
+            }
+            chunks.push(cs);
+        }
+        let tail: Vec<usize> = chunks.iter().map(Vec::len).collect();
+        Self { head: vec![0; t_count], tail, cur: vec![None; t_count], chunks, steals: 0 }
+    }
+
+    /// Claim-and-return thread `t`'s next vertex; the flag is true when
+    /// this claim stole a chunk (the caller charges `cost.steal`).
+    fn next(&mut self, t: usize) -> Option<(VertexId, bool)> {
+        if let Some((p, c, pos)) = self.cur[t] {
+            if pos < self.chunks[p][c].len() {
+                self.cur[t] = Some((p, c, pos + 1));
+                return Some((self.chunks[p][c].get(pos), false));
+            }
+        }
+        if self.head[t] < self.tail[t] {
+            let c = self.head[t];
+            self.head[t] += 1;
+            self.cur[t] = Some((t, c, 1));
+            return Some((self.chunks[t][c].get(0), false));
+        }
+        let mut best: Option<(usize, usize)> = None;
+        for i in 0..self.chunks.len() {
+            if i == t {
+                continue;
+            }
+            let r = self.tail[i] - self.head[i];
+            if r == 0 {
+                continue;
+            }
+            match best {
+                Some((br, _)) if br >= r => {}
+                _ => best = Some((r, i)),
+            }
+        }
+        let (_, victim) = best?;
+        self.tail[victim] -= 1;
+        let c = self.tail[victim];
+        self.steals += 1;
+        self.cur[t] = Some((victim, c, 1));
+        Some((self.chunks[victim][c].get(0), true))
+    }
+
+    /// True when `t` has nothing left to execute: current chunk drained,
+    /// own queue empty, and nothing left to steal.
+    fn exhausted(&self, t: usize) -> bool {
+        if let Some((p, c, pos)) = self.cur[t] {
+            if pos < self.chunks[p][c].len() {
+                return false;
+            }
+        }
+        if self.head[t] < self.tail[t] {
+            return false;
+        }
+        (0..self.chunks.len()).all(|i| i == t || self.head[i] >= self.tail[i])
+    }
+}
+
 /// Reader charging cache costs for every access.
 struct SimReader<'a> {
     t: usize,
@@ -103,7 +245,7 @@ impl ValueReader for SimReader<'_> {
     fn read(&mut self, v: VertexId) -> u32 {
         if let Some(b) = self.buf {
             if let Some(bits) = b.pending(v) {
-                self.cost += self.machine.cost.buffer_push as u64 + self.machine.cost.edge_compute;
+                self.cost += self.machine.cost.buffer_push + self.machine.cost.edge_compute;
                 return bits;
             }
         }
@@ -135,8 +277,21 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
     let mut table = LineTable::new(n);
     let mut table_back = LineTable::new(n);
 
-    let mut buffers: Vec<SimBuffer> =
-        (0..t_count).map(|t| SimBuffer::new(cfg.effective_delta(pm.len(t)))).collect();
+    // Stealing can hand a thread chunks anywhere in the graph, so the
+    // delayed-mode buffer caps against n instead of the own range (sync
+    // mode never stages — the double buffer is the delay).
+    let mut buffers: Vec<SimBuffer> = (0..t_count)
+        .map(|t| {
+            let cap = if sync_mode {
+                0
+            } else if cfg.stealing {
+                cfg.effective_delta(n)
+            } else {
+                cfg.effective_delta(pm.len(t))
+            };
+            SimBuffer::new(cap)
+        })
+        .collect();
 
     // Flat vertex→owner table: O(1) per read instead of a binary search
     // (see SimReader.owners).
@@ -191,7 +346,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                     let t = owners[v as usize] as usize;
                     let w = table_back.write(t, v as usize, machine, t_count);
                     metrics.on_write(&w);
-                    clocks[t] += w.cycles + machine.cost.buffer_push as u64;
+                    clocks[t] += w.cycles + machine.cost.buffer_push;
                     back[v as usize] = values[v as usize];
                 }
             };
@@ -219,13 +374,20 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
         };
         let total_active: u64 = (0..t_count).map(|t| len_of(t) as u64).sum();
         let mut idx = vec![0usize; t_count];
+        // Chunked claim structure mirroring the native StealGrid; the
+        // static path below keeps the plain per-partition index sweep.
+        let mut ws = cfg.stealing.then(|| WorkSource::new(&pm, lists.as_deref(), DEFAULT_CHUNK));
 
         let mut heap: BinaryHeap<Reverse<(u64, usize)>> = BinaryHeap::new();
         for t in 0..t_count {
             if !sync_mode {
                 buffers[t].begin(pm.range(t).start);
             }
-            if len_of(t) > 0 {
+            let has_work = match &ws {
+                Some(w) => !w.exhausted(t),
+                None => len_of(t) > 0,
+            };
+            if has_work {
                 heap.push(Reverse((clocks[t], t)));
             }
         }
@@ -238,43 +400,49 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
             let mut clock = clock;
             let next_key = heap.peek().map(|Reverse(k)| *k);
             loop {
-            let v = match &lists {
-                Some(ls) => ls[t][idx[t]],
-                None => pm.range(t).start + idx[t] as VertexId,
-            };
-            let mut cost = machine.cost.vertex_base;
-
-            let (new, old) = if sync_mode {
-                // Read old + neighbors from front, write into back.
-                let old_a = table.read(t, v as usize, machine, t_count);
-                metrics.on_read(&old_a);
-                cost += old_a.cycles;
-                let old = values[v as usize];
-                let mut rd = SimReader {
-                    t,
-                    values: &values,
-                    table: &mut table,
-                    metrics: &mut metrics,
-                    owners: &owners,
-                    machine,
-                    active: t_count,
-                    cost: 0,
-                    buf: None,
+                let (v, stole) = match ws.as_mut() {
+                    Some(w) => match w.next(t) {
+                        Some(claim) => claim,
+                        None => {
+                            // Everything was claimed since this thread last
+                            // checked: it is done for the round.
+                            if !sync_mode {
+                                let buf = &mut buffers[t];
+                                clocks[t] = clock;
+                                clocks[t] += flush_buffer(
+                                    t,
+                                    buf,
+                                    &mut values,
+                                    &mut table,
+                                    &mut metrics,
+                                    machine,
+                                    t_count,
+                                    &mut flushes,
+                                );
+                            }
+                            break;
+                        }
+                    },
+                    None => {
+                        let v = match &lists {
+                            Some(ls) => ls[t][idx[t]],
+                            None => pm.range(t).start + idx[t] as VertexId,
+                        };
+                        (v, false)
+                    }
                 };
-                let new = prog.update(v, &mut rd);
-                cost += rd.cost;
-                let stored = if conditional && new == old { old } else { new };
-                let w = table_back.write(t, v as usize, machine, t_count);
-                metrics.on_write(&w);
-                cost += w.cycles;
-                back[v as usize] = stored;
-                (new, old)
-            } else {
-                let old_a = table.read(t, v as usize, machine, t_count);
-                metrics.on_read(&old_a);
-                cost += old_a.cycles;
-                let old = values[v as usize];
-                let new = {
+                let mut cost = machine.cost.vertex_base;
+                if stole {
+                    // The claim itself: a CAS on the victim's contended deque.
+                    cost += machine.cost.steal;
+                }
+
+                let (new, old) = if sync_mode {
+                    // Read old + neighbors from front, write into back.
+                    let old_a = table.read(t, v as usize, machine, t_count);
+                    metrics.on_read(&old_a);
+                    cost += old_a.cycles;
+                    let old = values[v as usize];
                     let mut rd = SimReader {
                         t,
                         values: &values,
@@ -284,75 +452,122 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                         machine,
                         active: t_count,
                         cost: 0,
-                        buf: if cfg.local_reads { Some(&buffers[t]) } else { None },
+                        buf: None,
                     };
                     let new = prog.update(v, &mut rd);
                     cost += rd.cost;
-                    new
-                };
-                let buf = &mut buffers[t];
-                if sparse && buf.cap != 0 {
-                    // Non-contiguous sweep: keep the staged run contiguous
-                    // (the generalized skip()/seek() path of the native
-                    // DelayBuffer).
-                    if buf.data.is_empty() {
-                        buf.base = v;
-                    } else if buf.base + buf.data.len() as VertexId != v {
-                        cost +=
-                            flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
-                        buf.base = v;
-                    }
-                }
-                if buf.cap == 0 {
-                    // Asynchronous: store straight through.
-                    if !(conditional && new == old) {
-                        let w = table.write(t, v as usize, machine, t_count);
-                        metrics.on_write(&w);
-                        cost += w.cycles;
-                        values[v as usize] = new;
-                    }
-                } else if conditional && new == old {
-                    // Publish pending, skip this slot.
-                    cost += flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
-                    buf.base += 1;
+                    let stored = if conditional && new == old { old } else { new };
+                    let w = table_back.write(t, v as usize, machine, t_count);
+                    metrics.on_write(&w);
+                    cost += w.cycles;
+                    back[v as usize] = stored;
+                    (new, old)
                 } else {
-                    if buf.data.len() == buf.cap {
+                    let old_a = table.read(t, v as usize, machine, t_count);
+                    metrics.on_read(&old_a);
+                    cost += old_a.cycles;
+                    let old = values[v as usize];
+                    let new = {
+                        let mut rd = SimReader {
+                            t,
+                            values: &values,
+                            table: &mut table,
+                            metrics: &mut metrics,
+                            owners: &owners,
+                            machine,
+                            active: t_count,
+                            cost: 0,
+                            buf: if cfg.local_reads { Some(&buffers[t]) } else { None },
+                        };
+                        let new = prog.update(v, &mut rd);
+                        cost += rd.cost;
+                        new
+                    };
+                    let buf = &mut buffers[t];
+                    if (sparse || cfg.stealing) && buf.cap != 0 {
+                        // Non-contiguous sweep (sparse gaps or a stolen
+                        // chunk): keep the staged run contiguous — the
+                        // generalized skip()/seek() path of the native
+                        // DelayBuffer.
+                        if buf.data.is_empty() {
+                            buf.base = v;
+                        } else if buf.base + buf.data.len() as VertexId != v {
+                            cost += flush_buffer(
+                                t,
+                                buf,
+                                &mut values,
+                                &mut table,
+                                &mut metrics,
+                                machine,
+                                t_count,
+                                &mut flushes,
+                            );
+                            buf.base = v;
+                        }
+                    }
+                    if buf.cap == 0 {
+                        // Asynchronous: store straight through.
+                        if !(conditional && new == old) {
+                            let w = table.write(t, v as usize, machine, t_count);
+                            metrics.on_write(&w);
+                            cost += w.cycles;
+                            values[v as usize] = new;
+                        }
+                    } else if conditional && new == old {
+                        // Publish pending, skip this slot.
                         cost +=
                             flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
+                        buf.base += 1;
+                    } else {
+                        if buf.data.len() == buf.cap {
+                            cost += flush_buffer(
+                                t,
+                                buf,
+                                &mut values,
+                                &mut table,
+                                &mut metrics,
+                                machine,
+                                t_count,
+                                &mut flushes,
+                            );
+                        }
+                        buf.data.push(new);
+                        cost += machine.cost.buffer_push;
                     }
-                    buf.data.push(new);
-                    cost += machine.cost.buffer_push;
-                }
-                (new, old)
-            };
+                    (new, old)
+                };
 
-            if frontier_on && prog.activates(old, new) {
-                for &w2 in g.out_neighbors(v) {
-                    bits::set(&mut nxt, w2);
-                    cost += machine.cost.buffer_push;
+                if frontier_on && prog.activates(old, new) {
+                    for &w2 in g.out_neighbors(v) {
+                        bits::set(&mut nxt, w2);
+                        cost += machine.cost.buffer_push;
+                    }
                 }
-            }
 
-            deltas[t] += prog.delta(old, new);
-            idx[t] += 1;
-            clock += cost;
-            clocks[t] = clock;
+                deltas[t] += prog.delta(old, new);
+                idx[t] += 1;
+                clock += cost;
+                clocks[t] = clock;
 
-            if idx[t] >= len_of(t) {
-                if !sync_mode {
-                    // End of range: final flush, charged to this thread.
-                    let buf = &mut buffers[t];
-                    clocks[t] +=
-                        flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
-                }
-                break;
-            }
-            if let Some(k) = next_key {
-                if (clock, t) > k {
-                    heap.push(Reverse((clock, t)));
+                let done = match &ws {
+                    Some(w) => w.exhausted(t),
+                    None => idx[t] >= len_of(t),
+                };
+                if done {
+                    if !sync_mode {
+                        // End of range: final flush, charged to this thread.
+                        let buf = &mut buffers[t];
+                        clocks[t] +=
+                            flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
+                    }
                     break;
                 }
-            }
+                if let Some(k) = next_key {
+                    if (clock, t) > k {
+                        heap.push(Reverse((clock, t)));
+                        break;
+                    }
+                }
             } // batch loop
         }
 
@@ -372,6 +587,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
             delta: round_delta,
             flushes,
             active: total_active,
+            steals: ws.as_ref().map_or(0, |w| w.steals),
         });
         if prog.converged(round_delta) {
             converged = true;
@@ -652,5 +868,65 @@ mod tests {
             assert!(r.time_s > 0.0);
         }
         assert_eq!(s.metrics.round_cycles.len(), s.result.num_rounds());
+    }
+
+    #[test]
+    fn stealing_deterministic_and_matches_fixed_point() {
+        let g = GapGraph::Kron.generate(8, 8);
+        let p = MaxProp { g: &g };
+        let m = Machine::haswell();
+        let oracle = crate::engine::native::run_serial_sync(&g, &p, 10_000).values;
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+            for sched in [SchedulePolicy::Dense, SchedulePolicy::Frontier] {
+                let cfg = EngineConfig::new(8, mode).with_schedule(sched).with_stealing();
+                let a = run(&g, &p, &cfg, &m);
+                let b = run(&g, &p, &cfg, &m);
+                assert_eq!(a.result.values, b.result.values, "{mode:?}/{sched:?}");
+                assert_eq!(a.metrics, b.metrics, "{mode:?}/{sched:?} nondeterministic");
+                assert_eq!(a.result.values, oracle, "{mode:?}/{sched:?}");
+            }
+        }
+    }
+
+    /// Every vertex points at the first 64, so the lowest equal-vertex
+    /// partition holds essentially all the pull work — a guaranteed
+    /// straggler whose trailing chunks must get stolen.
+    fn hub_graph(n: usize) -> Csr {
+        let mut b = crate::graph::GraphBuilder::new(n);
+        for v in 0..n as VertexId {
+            for h in 0..64u32 {
+                if v != h {
+                    b.push(v, h, 1);
+                }
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn stealing_reports_steals_on_skewed_work() {
+        use crate::engine::PartitionStrategy;
+        let g = hub_graph(2048);
+        let p = MaxProp { g: &g };
+        let m = Machine::haswell();
+        let cfg = EngineConfig::new(4, ExecutionMode::Delayed(64))
+            .with_partition(PartitionStrategy::EqualVertex)
+            .with_stealing();
+        let s = run(&g, &p, &cfg, &m);
+        assert!(s.result.total_steals() > 0, "straggler chunks must be stolen");
+        // Same config without stealing reports zero and the same values.
+        let static_cfg =
+            EngineConfig::new(4, ExecutionMode::Delayed(64)).with_partition(PartitionStrategy::EqualVertex);
+        let st = run(&g, &p, &static_cfg, &m);
+        assert_eq!(st.result.total_steals(), 0);
+        assert_eq!(s.result.values, st.result.values);
+        // Recovered straggler time: the stealing run must finish the same
+        // work in strictly fewer simulated cycles.
+        assert!(
+            s.total_cycles() < st.total_cycles(),
+            "stealing {} vs static {} cycles",
+            s.total_cycles(),
+            st.total_cycles()
+        );
     }
 }

@@ -17,6 +17,9 @@ pub struct RoundStats {
     /// vertex; frontier rounds only the active set — the shrinking
     /// trajectory of this column is the whole point of sparse scheduling.
     pub active: u64,
+    /// Chunks executed by a thread other than their owner this round
+    /// (zero under the paper's static schedule; see `engine::steal`).
+    pub steals: u64,
 }
 
 /// Result of one engine run.
@@ -58,6 +61,11 @@ impl RunResult {
         self.rounds.iter().map(|r| r.flushes).sum()
     }
 
+    /// Total stolen chunks across all rounds (zero without `stealing`).
+    pub fn total_steals(&self) -> u64 {
+        self.rounds.iter().map(|r| r.steals).sum()
+    }
+
     /// Total vertex updates across all rounds. For a dense schedule this
     /// is `rounds × n`; frontier schedules do strictly less work on any
     /// workload that converges non-uniformly.
@@ -84,8 +92,8 @@ mod tests {
         RunResult {
             values: vec![1f32.to_bits(), 2f32.to_bits()],
             rounds: vec![
-                RoundStats { time_s: 0.5, delta: 1.0, flushes: 3, active: 2 },
-                RoundStats { time_s: 1.5, delta: 0.0, flushes: 2, active: 1 },
+                RoundStats { time_s: 0.5, delta: 1.0, flushes: 3, active: 2, steals: 1 },
+                RoundStats { time_s: 1.5, delta: 0.0, flushes: 2, active: 1, steals: 0 },
             ],
             mode: ExecutionMode::Delayed(64),
             schedule: SchedulePolicy::Frontier,
@@ -102,6 +110,7 @@ mod tests {
         assert!((r.avg_round_time() - 1.0).abs() < 1e-12);
         assert_eq!(r.total_flushes(), 5);
         assert_eq!(r.total_active(), 3);
+        assert_eq!(r.total_steals(), 1);
         assert_eq!(r.active_counts(), vec![2, 1]);
         assert_eq!(r.values_f32(), vec![1.0, 2.0]);
     }

@@ -1,0 +1,264 @@
+//! Intra-round work stealing over cache-line-aligned chunks.
+//!
+//! The paper's static contiguous partitions make writes cheap, but a
+//! barrier per round means every round runs at the speed of its slowest
+//! thread — and frontier scheduling makes per-partition work highly
+//! skewed (one partition can hold the whole active set). This module
+//! recovers that straggler time GAP/Ligra-style: each partition is split
+//! into chunks whose interior boundaries are cache-line-aligned
+//! ([`crate::partition::chunk_bounds`]) and published in a per-partition
+//! claim deque. A worker drains its *own* chunks front-to-back first — a
+//! contiguous sweep, so the delay buffer behaves exactly as in static
+//! execution — and only then steals *trailing* chunks from the most
+//! loaded victim. Stolen chunks are non-contiguous jumps, which
+//! [`crate::engine::delay_buffer::DelayBuffer::seek`] already handles:
+//! the pending run is published before the jump, so flushed runs stay
+//! contiguous and line-aligned no matter who executes a chunk.
+//!
+//! Claim state is a single packed `(head, tail)` word per partition:
+//! owners CAS the head forward, thieves CAS the tail backward, and the
+//! two ends meeting means the queue is drained. Within a round the head
+//! only grows and the tail only shrinks, so there is no ABA hazard;
+//! [`ChunkDeque::reset`] re-arms the deque between round barriers.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::graph::VertexId;
+use crate::partition::{chunk_bounds, PartitionMap};
+use crate::VALUES_PER_LINE;
+
+/// Default chunk size in elements: 16 cache lines. Large enough that the
+/// claim CAS amortizes to noise per vertex, small enough that a skewed
+/// partition still splits into many stealable pieces.
+pub const DEFAULT_CHUNK: usize = 16 * VALUES_PER_LINE;
+
+/// Pack a `(head, tail)` chunk-index pair into one atomic word.
+#[inline]
+fn pack(head: u32, tail: u32) -> u64 {
+    ((head as u64) << 32) | tail as u64
+}
+
+/// Inverse of [`pack`].
+#[inline]
+fn unpack(state: u64) -> (u32, u32) {
+    ((state >> 32) as u32, state as u32)
+}
+
+/// A per-partition deque of unclaimed chunks. The owner pops from the
+/// front (preserving its contiguous sweep order); thieves pop from the
+/// back (the trailing chunks the owner would reach last).
+pub struct ChunkDeque {
+    /// `bounds[i]..bounds[i+1]` is chunk `i`.
+    bounds: Vec<VertexId>,
+    /// Packed `(head, tail)`: `head..tail` are the unclaimed chunks.
+    state: AtomicU64,
+}
+
+impl ChunkDeque {
+    /// Deque over `range` split by [`chunk_bounds`] into `chunk`-element
+    /// aligned chunks, all initially unclaimed.
+    pub fn new(range: Range<VertexId>, chunk: usize) -> Self {
+        let bounds = chunk_bounds(&range, chunk);
+        let n = (bounds.len() - 1) as u32;
+        Self { bounds, state: AtomicU64::new(pack(0, n)) }
+    }
+
+    /// Total number of chunks (claimed or not).
+    pub fn num_chunks(&self) -> usize {
+        self.bounds.len() - 1
+    }
+
+    /// Number of currently unclaimed chunks — the "load" a thief compares.
+    #[inline]
+    pub fn remaining(&self) -> usize {
+        let (h, t) = unpack(self.state.load(Ordering::Relaxed));
+        (t - h) as usize
+    }
+
+    /// Owner side: claim the frontmost unclaimed chunk.
+    pub fn pop_front(&self) -> Option<Range<VertexId>> {
+        let mut s = self.state.load(Ordering::Relaxed);
+        loop {
+            let (h, t) = unpack(s);
+            if h == t {
+                return None;
+            }
+            match self.state.compare_exchange_weak(s, pack(h + 1, t), Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return Some(self.bounds[h as usize]..self.bounds[h as usize + 1]),
+                Err(cur) => s = cur,
+            }
+        }
+    }
+
+    /// Thief side: claim the rearmost unclaimed chunk.
+    pub fn pop_back(&self) -> Option<Range<VertexId>> {
+        let mut s = self.state.load(Ordering::Relaxed);
+        loop {
+            let (h, t) = unpack(s);
+            if h == t {
+                return None;
+            }
+            match self.state.compare_exchange_weak(s, pack(h, t - 1), Ordering::AcqRel, Ordering::Relaxed) {
+                Ok(_) => return Some(self.bounds[t as usize - 1]..self.bounds[t as usize]),
+                Err(cur) => s = cur,
+            }
+        }
+    }
+
+    /// Re-arm every chunk for the next round. Callers must guarantee no
+    /// concurrent claims (the executors reset between the round barriers).
+    pub fn reset(&self) {
+        self.state.store(pack(0, self.num_chunks() as u32), Ordering::Release);
+    }
+}
+
+/// The whole gang's claim structure: one [`ChunkDeque`] per partition.
+pub struct StealGrid {
+    parts: Vec<ChunkDeque>,
+}
+
+impl StealGrid {
+    /// One deque per partition of `pm`, chunked by `chunk` elements.
+    pub fn new(pm: &PartitionMap, chunk: usize) -> Self {
+        Self { parts: (0..pm.num_parts()).map(|t| ChunkDeque::new(pm.range(t), chunk)).collect() }
+    }
+
+    /// Partition `t`'s deque (owner claims).
+    #[inline]
+    pub fn part(&self, t: usize) -> &ChunkDeque {
+        &self.parts[t]
+    }
+
+    /// Steal one trailing chunk from the most loaded partition other than
+    /// `me` (most unclaimed chunks; ties go to the lowest partition id).
+    /// `None` once every queue is drained.
+    pub fn steal(&self, me: usize) -> Option<Range<VertexId>> {
+        loop {
+            let mut best: Option<(usize, usize)> = None;
+            for (i, p) in self.parts.iter().enumerate() {
+                if i == me {
+                    continue;
+                }
+                let r = p.remaining();
+                if r == 0 {
+                    continue;
+                }
+                match best {
+                    Some((br, _)) if br >= r => {}
+                    _ => best = Some((r, i)),
+                }
+            }
+            let (_, victim) = best?;
+            if let Some(c) = self.parts[victim].pop_back() {
+                return Some(c);
+            }
+            // Lost the race for the victim's last chunk(s): rescan. Each
+            // retry means a queue drained, so this terminates.
+        }
+    }
+
+    /// Re-arm every partition (between rounds only).
+    pub fn reset(&self) {
+        for p in &self.parts {
+            p.reset();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_chunk_is_line_multiple() {
+        assert_eq!(DEFAULT_CHUNK % VALUES_PER_LINE, 0);
+        assert!(DEFAULT_CHUNK > 0);
+    }
+
+    #[test]
+    fn owner_drains_in_order() {
+        let d = ChunkDeque::new(10..100, 32);
+        assert_eq!(d.num_chunks(), 4);
+        let mut got = Vec::new();
+        while let Some(c) = d.pop_front() {
+            got.push(c);
+        }
+        assert_eq!(got, vec![10..32, 32..64, 64..96, 96..100]);
+        assert_eq!(d.remaining(), 0);
+        assert!(d.pop_back().is_none());
+    }
+
+    #[test]
+    fn thief_takes_trailing_chunks() {
+        let d = ChunkDeque::new(0..96, 32);
+        assert_eq!(d.pop_back(), Some(64..96));
+        assert_eq!(d.pop_front(), Some(0..32));
+        assert_eq!(d.pop_back(), Some(32..64));
+        assert!(d.pop_front().is_none());
+        d.reset();
+        assert_eq!(d.remaining(), 3);
+        assert_eq!(d.pop_front(), Some(0..32));
+    }
+
+    #[test]
+    fn empty_partition_has_no_chunks() {
+        let d = ChunkDeque::new(5..5, 32);
+        assert_eq!(d.num_chunks(), 0);
+        assert!(d.pop_front().is_none());
+        assert!(d.pop_back().is_none());
+    }
+
+    #[test]
+    fn grid_steals_from_most_loaded() {
+        let pm = PartitionMap::from_bounds(vec![0, 32, 256]);
+        let grid = StealGrid::new(&pm, 32);
+        // Partition 1 has 7 chunks, partition 0 has 1: thread 0's first
+        // steal must come from partition 1's tail.
+        assert_eq!(grid.steal(0), Some(224..256));
+        assert_eq!(grid.steal(0), Some(192..224));
+        // Partition 1 steals partition 0's only chunk once it is the max.
+        while grid.part(1).remaining() > 1 {
+            grid.part(1).pop_front();
+        }
+        assert_eq!(grid.steal(1), Some(0..32));
+        // A thread never steals from itself, so the grid is dry for 1 even
+        // though partition 1 still holds its own last chunk.
+        assert!(grid.steal(1).is_none());
+        assert_eq!(grid.part(1).remaining(), 1);
+    }
+
+    #[test]
+    fn concurrent_claims_cover_exactly_once() {
+        // 4 threads hammer one grid: every vertex must be claimed exactly
+        // once across owner pops and steals.
+        let pm = PartitionMap::from_bounds(vec![0, 100, 2000, 2100, 4096]);
+        let grid = StealGrid::new(&pm, 64);
+        let claimed: Vec<Vec<Range<VertexId>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|t| {
+                    let grid = &grid;
+                    s.spawn(move || {
+                        let mut mine = Vec::new();
+                        while let Some(c) = grid.part(t).pop_front() {
+                            mine.push(c);
+                        }
+                        while let Some(c) = grid.steal(t) {
+                            mine.push(c);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut seen = vec![false; 4096];
+        for c in claimed.into_iter().flatten() {
+            for v in c {
+                assert!(!seen[v as usize], "vertex {v} claimed twice");
+                seen[v as usize] = true;
+            }
+        }
+        assert!(seen.into_iter().all(|b| b), "some vertex never claimed");
+    }
+}

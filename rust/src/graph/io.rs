@@ -33,7 +33,9 @@ pub fn write_edge_list(g: &Csr, path: &Path) -> Result<()> {
 }
 
 /// Read a whitespace-separated edge list. Lines starting with `#` or `%`
-/// are comments. Vertex count is `max id + 1` unless `n` is given.
+/// are comments. Vertex count is `max id + 1` unless `n` is given; an
+/// explicit `n` smaller than some vertex id is a clean `Err` (the builder
+/// would otherwise panic mid-`build`).
 pub fn read_edge_list(path: &Path, n: Option<usize>, symmetrize: bool) -> Result<Csr> {
     let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
     let mut triples: Vec<(u32, u32, u32)> = Vec::new();
@@ -55,6 +57,15 @@ pub fn read_edge_list(path: &Path, n: Option<usize>, symmetrize: bool) -> Result
             }
             None => 1,
         };
+        if let Some(nv) = n {
+            if s as usize >= nv || d as usize >= nv {
+                bail!(
+                    "{path:?}: line {}: vertex id {} out of range for n={nv}",
+                    lineno + 1,
+                    s.max(d)
+                );
+            }
+        }
         max_id = max_id.max(s).max(d);
         triples.push((s, d, w));
     }
@@ -122,9 +133,19 @@ pub fn write_binary(g: &Csr, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Bytes before the offsets array: magic + version + flags + n + m.
+const HEADER_BYTES: u64 = 4 + 4 + 4 + 8 + 8;
+
 /// Read the binary `.daig` format.
+///
+/// The header's `n`/`m` counts are validated against the actual file
+/// length *before* sizing any allocation: a truncated or garbage file
+/// returns `Err` instead of aborting the process on a huge `Vec`
+/// reservation.
 pub fn read_binary(path: &Path) -> Result<Csr> {
-    let mut r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let file = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let file_len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+    let mut r = BufReader::new(file);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
     if &magic != MAGIC {
@@ -135,21 +156,48 @@ pub fn read_binary(path: &Path) -> Result<Csr> {
         bail!("{path:?}: unsupported version {version}");
     }
     let flags = get_u32(&mut r)?;
+    if flags & !3 != 0 {
+        bail!("{path:?}: corrupt header: unknown flag bits {flags:#x}");
+    }
     let weighted = flags & 1 != 0;
     let symmetric = flags & 2 != 0;
-    let n = get_u64(&mut r)? as usize;
-    let m = get_u64(&mut r)? as usize;
+    let n64 = get_u64(&mut r)?;
+    let m64 = get_u64(&mut r)?;
+    if n64 > u32::MAX as u64 {
+        bail!("{path:?}: corrupt header: {n64} vertices exceeds the u32 id space");
+    }
+    if m64 > file_len / 4 {
+        bail!("{path:?}: corrupt header: {m64} edges cannot fit in a {file_len}-byte file");
+    }
+    let expected = HEADER_BYTES + (n64 + 1) * 8 + n64 * 4 + m64 * 4 * if weighted { 2 } else { 1 };
+    if expected != file_len {
+        bail!("{path:?}: corrupt header: n={n64}, m={m64} implies a {expected}-byte file, found {file_len} bytes");
+    }
+    let (n, m) = (n64 as usize, m64 as usize);
     let mut offsets = Vec::with_capacity(n + 1);
     for _ in 0..=n {
         offsets.push(get_u64(&mut r)?);
     }
+    if offsets[0] != 0 || offsets.windows(2).any(|w| w[0] > w[1]) {
+        bail!("{path:?}: corrupt offsets (not a monotone prefix sum)");
+    }
+    if *offsets.last().unwrap() as usize != m {
+        bail!("{path:?}: corrupt offsets (end {} ≠ edge count {m})", offsets.last().unwrap());
+    }
     let mut sources = Vec::with_capacity(m);
     for _ in 0..m {
-        sources.push(get_u32(&mut r)?);
+        let s = get_u32(&mut r)?;
+        if s as u64 >= n64 {
+            bail!("{path:?}: corrupt source vertex {s} (n={n})");
+        }
+        sources.push(s);
     }
     let mut out_degrees = Vec::with_capacity(n);
     for _ in 0..n {
         out_degrees.push(get_u32(&mut r)?);
+    }
+    if out_degrees.iter().map(|&d| d as u64).sum::<u64>() != m64 {
+        bail!("{path:?}: corrupt out-degrees (sum ≠ edge count {m})");
     }
     let weights = if weighted {
         let mut ws = Vec::with_capacity(m);
@@ -160,9 +208,6 @@ pub fn read_binary(path: &Path) -> Result<Csr> {
     } else {
         None
     };
-    if *offsets.last().unwrap_or(&0) as usize != m {
-        bail!("{path:?}: corrupt offsets");
-    }
     Ok(Csr::from_parts(offsets, sources, weights, out_degrees, symmetric))
 }
 
@@ -170,29 +215,41 @@ pub fn read_binary(path: &Path) -> Result<Csr> {
 
 /// Read a MatrixMarket `coordinate` file as a graph (1-based indices;
 /// `pattern` fields unweighted, otherwise weights are rounded to u32).
+///
+/// The banner and its qualifiers are matched case-insensitively (the
+/// format spec says `%%MatrixMarket` is not case-sensitive and files
+/// with `Symmetric`/`PATTERN` exist in the wild). Malformed content —
+/// 0-based or out-of-range indices, unparsable weight fields — is
+/// rejected with the offending line number instead of silently coerced
+/// or left to blow up in the graph builder.
 pub fn read_matrix_market(path: &Path) -> Result<Csr> {
     let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
     let mut lines = r.lines();
     let header = lines.next().context("empty file")??;
-    if !header.starts_with("%%MatrixMarket") {
-        bail!("{path:?}: missing MatrixMarket header");
+    let banner = header.to_ascii_lowercase();
+    if !banner.starts_with("%%matrixmarket") {
+        bail!("{path:?}: line 1: missing %%MatrixMarket banner");
     }
-    let symmetric = header.contains("symmetric");
-    let pattern = header.contains("pattern");
-    let mut dims: Option<(usize, usize)> = None;
+    let symmetric = banner.contains("symmetric");
+    let pattern = banner.contains("pattern");
+    let mut dims: Option<(u64, u64)> = None;
     let mut b: Option<GraphBuilder> = None;
-    for line in lines {
+    for (k, line) in lines.enumerate() {
+        let lineno = k + 2; // 1-based, after the banner line
         let line = line?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('%') {
             continue;
         }
         let mut it = t.split_whitespace();
-        if dims.is_none() {
-            let rows: usize = it.next().context("rows")?.parse()?;
-            let cols: usize = it.next().context("cols")?.parse()?;
+        let Some((rows, cols)) = dims else {
+            let rows: u64 = field(path, lineno, it.next(), "row count")?;
+            let cols: u64 = field(path, lineno, it.next(), "column count")?;
+            if rows.max(cols) > u32::MAX as u64 {
+                bail!("{path:?}: line {lineno}: {rows}x{cols} exceeds the u32 vertex id space");
+            }
             dims = Some((rows, cols));
-            let mut builder = GraphBuilder::new(rows.max(cols));
+            let mut builder = GraphBuilder::new(rows.max(cols) as usize);
             if !pattern {
                 builder = builder.with_weights();
             }
@@ -201,17 +258,40 @@ pub fn read_matrix_market(path: &Path) -> Result<Csr> {
             }
             b = Some(builder);
             continue;
+        };
+        let i: u64 = field(path, lineno, it.next(), "row index")?;
+        let j: u64 = field(path, lineno, it.next(), "column index")?;
+        if i == 0 || j == 0 {
+            bail!("{path:?}: line {lineno}: MatrixMarket indices are 1-based, got ({i}, {j})");
         }
-        let i: u32 = it.next().context("i")?.parse()?;
-        let j: u32 = it.next().context("j")?.parse()?;
+        if i > rows || j > cols {
+            bail!("{path:?}: line {lineno}: entry ({i}, {j}) out of range for a {rows}x{cols} matrix");
+        }
         let w = if pattern {
             1
         } else {
-            it.next().map(|s| s.parse::<f64>().unwrap_or(1.0).abs().round() as u32).unwrap_or(1).max(1)
+            match it.next() {
+                None => 1,
+                Some(ws) => {
+                    let x: f64 = ws
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("{path:?}: line {lineno}: bad weight field '{ws}'"))?;
+                    if !x.is_finite() {
+                        bail!("{path:?}: line {lineno}: non-finite weight '{ws}'");
+                    }
+                    (x.abs().round() as u32).max(1)
+                }
+            }
         };
-        b.as_mut().unwrap().push(i - 1, j - 1, w);
+        b.as_mut().unwrap().push((i - 1) as u32, (j - 1) as u32, w);
     }
-    Ok(b.context("no size line")?.build())
+    Ok(b.with_context(|| format!("{path:?}: no size line"))?.build())
+}
+
+/// Parse one whitespace-separated field with file/line context.
+fn field<T: std::str::FromStr>(path: &Path, lineno: usize, tok: Option<&str>, what: &str) -> Result<T> {
+    let tok = tok.with_context(|| format!("{path:?}: line {lineno}: missing {what}"))?;
+    tok.parse().map_err(|_| anyhow::anyhow!("{path:?}: line {lineno}: bad {what} '{tok}'"))
 }
 
 #[cfg(test)]

@@ -69,6 +69,7 @@ common options:
   --mode sync|async|dN                  --threads N
   --engine sim|native                   --machine haswell|cascadelake
   --schedule dense|frontier|adaptive    (which vertices each round sweeps)
+  --steal                               (work-stealing round execution)
 ";
 
 /// Parse the `--schedule` option (default dense, the paper's behavior).
@@ -112,25 +113,30 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flag("local-reads") {
         ecfg = ecfg.with_local_reads();
     }
+    if args.flag("steal") {
+        ecfg = ecfg.with_stealing();
+    }
     println!(
-        "{} on {} (n={}, m={}), mode={}, schedule={}, threads={}",
+        "{} on {} (n={}, m={}), mode={}, schedule={}, threads={}{}",
         w.algo.name(),
         args.opt_str("graph", "kron"),
         g.num_vertices(),
         g.num_edges(),
         mode.label(),
         schedule.label(),
-        threads
+        threads,
+        if ecfg.stealing { ", stealing" } else { "" }
     );
     match args.opt_str("engine", "sim").as_str() {
         "native" => {
             let r = run_native(&g, w.algo, &ecfg);
             println!(
-                "rounds={} total={} avg/round={} updates={} converged={}",
+                "rounds={} total={} avg/round={} updates={} steals={} converged={}",
                 r.num_rounds(),
                 fmt::secs(r.total_time()),
                 fmt::secs(r.avg_round_time()),
                 fmt::si(r.total_active() as f64),
+                r.total_steals(),
                 r.converged
             );
             if schedule != SchedulePolicy::Dense {
@@ -141,7 +147,7 @@ fn cmd_run(args: &Args) -> Result<()> {
             let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
             let s = run_sim(&g, w.algo, &ecfg, &machine);
             println!(
-                "rounds={} total={} avg/round={} cycles={} invalidations={} flushes={} updates={} converged={}",
+                "rounds={} total={} avg/round={} cycles={} invalidations={} flushes={} updates={} steals={} converged={}",
                 s.result.num_rounds(),
                 fmt::secs(s.result.total_time()),
                 fmt::secs(s.result.avg_round_time()),
@@ -149,6 +155,7 @@ fn cmd_run(args: &Args) -> Result<()> {
                 fmt::si(s.metrics.invalidations as f64),
                 s.result.total_flushes(),
                 fmt::si(s.result.total_active() as f64),
+                s.result.total_steals(),
                 s.result.converged
             );
             if schedule != SchedulePolicy::Dense {
@@ -165,11 +172,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     let threads: usize = args.opt("threads", 32)?;
     let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
     let schedule = parse_schedule(args)?;
-    let pts = sweep::modes_scheduled(&g, w.algo, threads, &machine, schedule);
+    let mut base = EngineConfig::new(threads, ExecutionMode::Synchronous).with_schedule(schedule);
+    if args.flag("steal") {
+        base = base.with_stealing();
+    }
+    let pts = sweep::modes_base(&g, w.algo, &machine, &base);
     let sync_t = sweep::find_mode(&pts, ExecutionMode::Synchronous).unwrap().time_s;
     let mut t = Table::new(
-        &format!("{} δ-sweep, {} threads, {} schedule, {}", w.algo.name(), threads, schedule.label(), machine.name),
-        &["mode", "rounds", "total", "avg/round", "invalidations", "flushes", "updates", "speedup vs sync"],
+        &format!(
+            "{} δ-sweep, {} threads, {} schedule{}, {}",
+            w.algo.name(),
+            threads,
+            schedule.label(),
+            if base.stealing { ", stealing" } else { "" },
+            machine.name
+        ),
+        &["mode", "rounds", "total", "avg/round", "invalidations", "flushes", "updates", "steals", "speedup vs sync"],
     );
     for p in &pts {
         t.row(vec![
@@ -180,6 +198,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             fmt::si(p.invalidations as f64),
             p.flushes.to_string(),
             fmt::si(p.active_total as f64),
+            p.steals.to_string(),
             format!("{:.3}x", sync_t / p.time_s),
         ]);
     }
@@ -223,7 +242,14 @@ fn cmd_autotune(args: &Args) -> Result<()> {
     let (w, g) = parse_workload(args)?;
     let threads: usize = args.opt("threads", 32)?;
     let rec = daig::coordinator::autotune::recommend(&g, w.algo, threads);
-    println!("workload : {} on {} (n={}, m={}), {} threads", w.algo.name(), args.opt_str("graph", "kron"), g.num_vertices(), g.num_edges(), threads);
+    println!(
+        "workload : {} on {} (n={}, m={}), {} threads",
+        w.algo.name(),
+        args.opt_str("graph", "kron"),
+        g.num_vertices(),
+        g.num_edges(),
+        threads
+    );
     println!("recommend: {}", rec.mode.label());
     println!("locality : {:.3}", rec.locality);
     println!("reason   : {}", rec.reason);

@@ -83,6 +83,29 @@ impl PartitionMap {
     }
 }
 
+/// Split `range` into chunks of `chunk` elements whose *interior*
+/// boundaries sit at global multiples of `chunk` — so when `chunk` is a
+/// multiple of the cache line, every boundary between two chunks is
+/// line-aligned no matter where the partition starts. The first and last
+/// chunk absorb the unaligned edges. Returns the boundary array
+/// (`bounds[i]..bounds[i+1]` is chunk `i`); an empty range yields zero
+/// chunks.
+pub fn chunk_bounds(range: &std::ops::Range<VertexId>, chunk: usize) -> Vec<VertexId> {
+    assert!(chunk > 0, "chunk size must be positive");
+    if range.start >= range.end {
+        return vec![range.start];
+    }
+    let (start, end) = (range.start as usize, range.end as usize);
+    let mut bounds = vec![range.start];
+    let mut b = (start / chunk + 1) * chunk;
+    while b < end {
+        bounds.push(b as VertexId);
+        b += chunk;
+    }
+    bounds.push(range.end);
+    bounds
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,5 +133,21 @@ mod tests {
         let pm = PartitionMap::from_bounds(vec![0, 4, 8, 12]);
         let total: usize = (0..3).map(|t| pm.len(t)).sum();
         assert_eq!(total, pm.num_vertices());
+    }
+
+    #[test]
+    fn chunk_bounds_aligned_interior() {
+        // Partition starting off-alignment: first chunk is short, every
+        // interior boundary is a global multiple of the chunk size.
+        let b = chunk_bounds(&(10..100), 32);
+        assert_eq!(b, vec![10, 32, 64, 96, 100]);
+        for w in b.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        assert_eq!(chunk_bounds(&(0..64), 32), vec![0, 32, 64]);
+        // Range smaller than one chunk: a single chunk.
+        assert_eq!(chunk_bounds(&(5..9), 32), vec![5, 9]);
+        // Empty range: zero chunks.
+        assert_eq!(chunk_bounds(&(7..7), 32), vec![7]);
     }
 }

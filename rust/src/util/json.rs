@@ -46,7 +46,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 9e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/Infinity; emit null (as serde_json
+                    // does) so experiment/bench artifacts stay parsable.
+                    out.push_str("null");
+                } else if x.fract() == 0.0 && x.abs() < 9e15 {
                     let _ = write!(out, "{}", *x as i64);
                 } else {
                     let _ = write!(out, "{x}");
@@ -345,6 +349,23 @@ mod tests {
         assert_eq!(Json::Num(3.0).to_string(), "3");
         assert_eq!(Json::Num(3.5).to_string(), "3.5");
         assert_eq!(Json::Num(-2.0).to_string(), "-2");
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(x).to_string(), "null", "{x}");
+        }
+        // Round trip: a document containing non-finite values must still
+        // come back through the parser as valid JSON.
+        let doc = Json::obj(vec![
+            ("bad", Json::Num(f64::NAN)),
+            ("worse", Json::Arr(vec![Json::Num(f64::INFINITY), Json::Num(2.5)])),
+        ]);
+        let re = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(re.get("bad"), Some(&Json::Null));
+        assert_eq!(re.get("worse").unwrap().as_arr().unwrap()[0], Json::Null);
+        assert_eq!(re.get("worse").unwrap().as_arr().unwrap()[1].as_f64(), Some(2.5));
     }
 
     #[test]

@@ -102,6 +102,20 @@ fn schedule_experiment() {
 }
 
 #[test]
+fn steal_experiment() {
+    let dir = tmpdir("steal");
+    experiments::run("steal", &opts(&dir)).unwrap();
+    let csv = std::fs::read_to_string(std::path::Path::new(&dir).join("steal.csv")).unwrap();
+    // 2 (algo, schedule) pairs × 5 graphs × 2 variants + header.
+    assert_eq!(csv.lines().count(), 21, "{csv}");
+    // Static rows must report zero steals (column before the speedup).
+    for l in csv.lines().skip(1).filter(|l| l.contains(",static,")) {
+        let steals: u64 = l.rsplit(',').nth(1).unwrap().parse().unwrap();
+        assert_eq!(steals, 0, "{l}");
+    }
+}
+
+#[test]
 fn autotune_validation_runs() {
     let dir = tmpdir("autotune");
     experiments::run("autotune", &opts(&dir)).unwrap();

@@ -1,0 +1,180 @@
+//! I/O hardening: corrupt, truncated, and malformed inputs must come
+//! back as `Err` — never a panic, never an abort-on-OOM from trusting a
+//! garbage header, never a u32 underflow from a 0-based index.
+
+use daig::graph::gap::GapGraph;
+use daig::graph::io;
+
+fn dir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("daig-io-corrupt");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn write(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+    let p = dir().join(name);
+    std::fs::write(&p, bytes).unwrap();
+    p
+}
+
+/// A valid serialized graph to corrupt. `tag` keeps the scratch file
+/// unique per test (tests run in parallel).
+fn valid_daig_bytes(tag: &str, weighted: bool) -> Vec<u8> {
+    let g = if weighted { GapGraph::Kron.generate_weighted(7, 4) } else { GapGraph::Kron.generate(7, 4) };
+    let p = dir().join(format!("valid_{tag}.daig"));
+    io::write_binary(&g, &p).unwrap();
+    std::fs::read(&p).unwrap()
+}
+
+// ---------------------------------------------------------------- binary --
+
+#[test]
+fn binary_truncated_at_every_section_errs() {
+    let full = valid_daig_bytes("trunc", true);
+    // Cut inside the magic, header, offsets, sources, and weights.
+    for cut in [2, 10, 27, 40, full.len() / 2, full.len() - 1] {
+        let p = write(&format!("trunc_{cut}.daig"), &full[..cut]);
+        assert!(io::read_binary(&p).is_err(), "truncated at {cut} bytes must be rejected");
+    }
+}
+
+#[test]
+fn binary_huge_counts_rejected_before_allocation() {
+    // A header claiming ~u64::MAX vertices/edges used to feed
+    // Vec::with_capacity directly and abort the process on OOM. It must
+    // be validated against the file length and rejected.
+    let mut bytes = Vec::new();
+    bytes.extend_from_slice(b"DAIG");
+    bytes.extend_from_slice(&1u32.to_le_bytes()); // version
+    bytes.extend_from_slice(&0u32.to_le_bytes()); // flags
+    bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // n
+    bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // m
+    let p = write("huge.daig", &bytes);
+    assert!(io::read_binary(&p).is_err());
+
+    // Same with a "plausible" but still file-length-exceeding count.
+    let mut bytes2 = Vec::new();
+    bytes2.extend_from_slice(b"DAIG");
+    bytes2.extend_from_slice(&1u32.to_le_bytes());
+    bytes2.extend_from_slice(&0u32.to_le_bytes());
+    bytes2.extend_from_slice(&1_000_000u64.to_le_bytes());
+    bytes2.extend_from_slice(&8_000_000u64.to_le_bytes());
+    let p2 = write("plausible.daig", &bytes2);
+    assert!(io::read_binary(&p2).is_err());
+}
+
+#[test]
+fn binary_garbage_header_fields_err() {
+    let full = valid_daig_bytes("hdr", false);
+    // Unknown flag bits.
+    let mut flags = full.clone();
+    flags[8] |= 0xF0;
+    assert!(io::read_binary(&write("flags.daig", &flags)).is_err());
+    // Bad version.
+    let mut ver = full.clone();
+    ver[4] = 99;
+    assert!(io::read_binary(&write("ver.daig", &ver)).is_err());
+    // Bad magic.
+    let mut magic = full.clone();
+    magic[0] ^= 0xFF;
+    assert!(io::read_binary(&write("magic.daig", &magic)).is_err());
+    // Trailing garbage also breaks the length equation.
+    let mut long = full.clone();
+    long.extend_from_slice(&[0u8; 16]);
+    assert!(io::read_binary(&write("long.daig", &long)).is_err());
+}
+
+#[test]
+fn binary_corrupt_offsets_err_not_panic() {
+    let full = valid_daig_bytes("off", false);
+    // Offsets start right after the 28-byte header; scribble over the
+    // second offset so the prefix sum is no longer monotone.
+    let mut bad = full.clone();
+    bad[36..44].copy_from_slice(&u64::MAX.to_le_bytes());
+    let p = write("offsets.daig", &bad);
+    assert!(io::read_binary(&p).is_err());
+}
+
+#[test]
+fn binary_roundtrip_still_works() {
+    let g = GapGraph::Web.generate_weighted(7, 4);
+    let p = dir().join("ok.daig");
+    io::write_binary(&g, &p).unwrap();
+    assert_eq!(io::read_binary(&p).unwrap(), g);
+}
+
+// --------------------------------------------------------- matrix market --
+
+#[test]
+fn mm_zero_based_indices_err_with_line_number() {
+    let p = write("zero.mtx", b"%%MatrixMarket matrix coordinate pattern general\n3 3 2\n1 2\n0 1\n");
+    let e = io::read_matrix_market(&p).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("line 4"), "error must name the offending line: {msg}");
+    assert!(msg.contains("1-based"), "{msg}");
+}
+
+#[test]
+fn mm_out_of_range_index_errs() {
+    let p = write("oor.mtx", b"%%MatrixMarket matrix coordinate pattern general\n3 3 1\n1 9\n");
+    let e = io::read_matrix_market(&p).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("line 3") && msg.contains("out of range"), "{msg}");
+}
+
+#[test]
+fn mm_mixed_case_banner_accepted() {
+    // The MatrixMarket spec is explicit that the banner is not
+    // case-sensitive; `Symmetric` must also be recognized.
+    let p = write("mixed.mtx", b"%%matrixmarket MATRIX Coordinate Pattern Symmetric\n2 2 1\n1 2\n");
+    let g = io::read_matrix_market(&p).unwrap();
+    assert_eq!(g.num_edges(), 2, "symmetric qualifier must be honored");
+    assert!(!g.is_weighted());
+}
+
+#[test]
+fn mm_missing_banner_errs() {
+    let p = write("nobanner.mtx", b"% just a comment\n2 2 1\n1 2\n");
+    let e = io::read_matrix_market(&p).unwrap_err();
+    assert!(format!("{e:#}").contains("line 1"), "{e:#}");
+}
+
+#[test]
+fn mm_bad_weight_field_errs_with_line_number() {
+    let p = write("badw.mtx", b"%%MatrixMarket matrix coordinate real general\n2 2 2\n1 2 1.5\n2 1 bogus\n");
+    let e = io::read_matrix_market(&p).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("line 4") && msg.contains("bogus"), "{msg}");
+    // Non-finite weights are data corruption, not 1.0.
+    let p2 = write("nanw.mtx", b"%%MatrixMarket matrix coordinate real general\n2 2 1\n1 2 NaN\n");
+    assert!(io::read_matrix_market(&p2).is_err());
+}
+
+#[test]
+fn mm_garbage_size_line_errs() {
+    let p = write("badsize.mtx", b"%%MatrixMarket matrix coordinate pattern general\nthree by three\n");
+    let e = io::read_matrix_market(&p).unwrap_err();
+    assert!(format!("{e:#}").contains("line 2"), "{e:#}");
+}
+
+// ------------------------------------------------------------- edge list --
+
+#[test]
+fn edge_list_undersized_n_errs_cleanly() {
+    // max id is 7 but the caller claims n=4: must be an Err naming the
+    // line, not a panic inside GraphBuilder::build.
+    let p = write("small_n.el", b"0 1\n2 7\n");
+    let e = io::read_edge_list(&p, Some(4), false).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("line 2") && msg.contains("n=4"), "{msg}");
+    // The same file with a big-enough n parses.
+    assert_eq!(io::read_edge_list(&p, Some(8), false).unwrap().num_vertices(), 8);
+    // And with n inferred.
+    assert_eq!(io::read_edge_list(&p, None, false).unwrap().num_vertices(), 8);
+}
+
+#[test]
+fn edge_list_parse_errors_carry_line() {
+    let p = write("badnum.el", b"0 1\nx y\n");
+    assert!(io::read_edge_list(&p, None, false).is_err());
+}

@@ -114,6 +114,47 @@ fn pagerank_parity_for_every_mode_schedule_variant() {
 }
 
 #[test]
+fn stealing_parity_every_mode_schedule_algorithm() {
+    // Work-stealing acceptance: with chunked stealing enabled, every
+    // mode × schedule × algorithm still matches the serial oracle.
+    let gw = GapGraph::Kron.generate_weighted(9, 8);
+    let src = sssp::default_source(&gw);
+    let want_sssp = oracle::dijkstra(&gw, src);
+    let gr = GapGraph::Road.generate(9, 0);
+    let want_cc = oracle::components(&gr);
+    let gb = GapGraph::Web.generate(9, 4);
+    let want_bfs = oracle::bfs_levels(&gb, 3);
+    for mode in MODES {
+        for sched in SchedulePolicy::ALL {
+            let c = cfg(mode, sched, false).with_stealing();
+            let r = native::run(&gw, &sssp::Sssp::new(&gw, src), &c);
+            assert_eq!(r.values, want_sssp, "sssp {mode:?}/{sched:?}");
+            let r = native::run(&gr, &cc::Components::new(&gr), &c);
+            assert_eq!(r.values, want_cc, "cc {mode:?}/{sched:?}");
+            let r = native::run(&gb, &bfs::Bfs::new(&gb, 3), &c);
+            assert_eq!(r.values, want_bfs, "bfs {mode:?}/{sched:?}");
+        }
+    }
+}
+
+#[test]
+fn stealing_sync_pagerank_stays_bit_exact() {
+    // Sync mode reads only the stable front buffer, so chunk ownership is
+    // invisible: PageRank's f32 scores must be bit-identical to the
+    // static dense run under every schedule.
+    let g = GapGraph::Twitter.generate(9, 8);
+    let prcfg = pagerank::PrConfig::default();
+    let dense_sync = pagerank::run_native(&g, &EngineConfig::new(4, ExecutionMode::Synchronous), &prcfg);
+    for sched in SchedulePolicy::ALL {
+        let c = cfg(ExecutionMode::Synchronous, sched, false).with_stealing();
+        let r = pagerank::run_native(&g, &c, &prcfg);
+        assert!(r.run.converged, "{sched:?}");
+        assert_eq!(r.run.values, dense_sync.run.values, "{sched:?}");
+        assert_eq!(r.run.num_rounds(), dense_sync.run.num_rounds(), "{sched:?}");
+    }
+}
+
+#[test]
 fn sim_executor_schedule_parity() {
     let m = Machine::haswell();
     // SSSP: unique fixed point, exact across modes and schedules.
@@ -222,15 +263,19 @@ fn prop_random_graphs_schedule_parity() {
         let sched = *g.choose(&[SchedulePolicy::Frontier, SchedulePolicy::Adaptive]);
         let conditional = g.chance(0.5);
         let local = g.chance(0.3);
+        let stealing = g.chance(0.5);
         let dense = native::run(&graph, &MinProp(&graph, conditional), &EngineConfig::new(threads, mode));
         let mut ecfg = EngineConfig::new(threads, mode).with_schedule(sched);
         if local {
             ecfg = ecfg.with_local_reads();
         }
+        if stealing {
+            ecfg = ecfg.with_stealing();
+        }
         let sparse = native::run(&graph, &MinProp(&graph, conditional), &ecfg);
         if sparse.values != dense.values {
             return Err(format!(
-                "{mode:?}/{sched:?} t={threads} cond={conditional} local={local}: fixed points differ"
+                "{mode:?}/{sched:?} t={threads} cond={conditional} local={local} steal={stealing}: fixed points differ"
             ));
         }
         if !sparse.converged {
@@ -248,11 +293,14 @@ fn prop_sim_schedule_deterministic_and_exact() {
         let mode = *g.choose(&[ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(16)]);
         let sched = *g.choose(&[SchedulePolicy::Frontier, SchedulePolicy::Adaptive]);
         let m = Machine::haswell();
-        let ecfg = EngineConfig::new(threads, mode).with_schedule(sched);
+        let mut ecfg = EngineConfig::new(threads, mode).with_schedule(sched);
+        if g.chance(0.5) {
+            ecfg = ecfg.with_stealing();
+        }
         let a = daig::engine::sim::run(&graph, &MinProp(&graph, false), &ecfg, &m);
         let b = daig::engine::sim::run(&graph, &MinProp(&graph, false), &ecfg, &m);
         if a.result.values != b.result.values || a.metrics != b.metrics {
-            return Err(format!("sim nondeterministic under {mode:?}/{sched:?}"));
+            return Err(format!("sim nondeterministic under {mode:?}/{sched:?} steal={}", ecfg.stealing));
         }
         let dense = daig::engine::sim::run(&graph, &MinProp(&graph, false), &EngineConfig::new(threads, mode), &m);
         if a.result.values != dense.result.values {
