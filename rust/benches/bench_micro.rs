@@ -176,6 +176,66 @@ fn main() {
     std::fs::write("BENCH_steal.json", steal_doc.to_string()).expect("write BENCH_steal.json");
     println!("wrote BENCH_steal.json");
 
+    bench::section("adaptive: online δ controller vs static δ (native wall clock, 4 threads)");
+    // Kron/pagerank is the dense-update regime (the controller should
+    // settle near the offline seed and stay close to the best static δ);
+    // road/cc is the sparse regime (the controller should shrink toward
+    // asynchronous as the frontier collapses). Results land in
+    // BENCH_adaptive.json so the regret trajectory is recorded across
+    // PRs.
+    let mut adaptive_json: Vec<(String, Json)> = Vec::new();
+    for (gname, graph, algo) in [("kron", &g, "pagerank"), ("road", &road, "cc")] {
+        let mut mode_json: Vec<(&str, Json)> = Vec::new();
+        let mut static_min = 0.0f64;
+        let variants = [
+            ("d256", ExecutionMode::Delayed(256)),
+            ("async", ExecutionMode::Asynchronous),
+            ("adaptive", ExecutionMode::Adaptive),
+        ];
+        for (mlabel, mode) in variants {
+            let ecfg = EngineConfig::new(4, mode);
+            let mut stats = (0usize, 0u64, None::<usize>);
+            let label = format!("{algo} {gname}@{scale} {mlabel} 4t");
+            let s = match algo {
+                "cc" => bench::case(&label, 3, || {
+                    let r = cc::run_native(graph, &ecfg);
+                    stats = (r.run.num_rounds(), r.run.total_flushes(), r.run.final_delta_median());
+                    r
+                }),
+                _ => bench::case(&label, 3, || {
+                    let r = pagerank::run_native(graph, &ecfg, &PrConfig::default());
+                    stats = (r.run.num_rounds(), r.run.total_flushes(), r.run.final_delta_median());
+                    r
+                }),
+            };
+            let (rounds, flushes, final_delta) = stats;
+            if mlabel == "d256" {
+                static_min = s.min_s;
+            } else {
+                println!("  -> {:.2}x vs d256", static_min / s.min_s);
+            }
+            mode_json.push((
+                mlabel,
+                Json::obj(vec![
+                    ("total_s_min", Json::Num(s.min_s)),
+                    ("rounds", Json::Num(rounds as f64)),
+                    ("flushes", Json::Num(flushes as f64)),
+                    ("final_delta", final_delta.map_or(Json::Null, |d| Json::Num(d as f64))),
+                    ("speedup_vs_d256", Json::Num(static_min / s.min_s)),
+                ]),
+            ));
+        }
+        adaptive_json.push((format!("{gname}/{algo}"), Json::obj(mode_json)));
+    }
+    let adaptive_doc = Json::obj(vec![
+        ("bench", Json::Str("adaptive".into())),
+        ("scale", Json::Num(scale as f64)),
+        ("threads", Json::Num(4.0)),
+        ("workloads", Json::Obj(adaptive_json.into_iter().collect())),
+    ]);
+    std::fs::write("BENCH_adaptive.json", adaptive_doc.to_string()).expect("write BENCH_adaptive.json");
+    println!("wrote BENCH_adaptive.json");
+
     bench::section("PJRT dense-block step (L1/L2 artifact path)");
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = daig::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();

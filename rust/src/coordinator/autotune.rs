@@ -28,7 +28,7 @@
 //! urand-SSSP), and the recommendation matches or beats plain
 //! asynchronous execution on 8 of 10 suite workloads.
 
-use crate::engine::delay_buffer::round_delta;
+use crate::engine::controller;
 use crate::engine::ExecutionMode;
 use crate::graph::{properties, Csr};
 use crate::partition::blocked;
@@ -37,8 +37,9 @@ use super::Algo;
 
 /// Topology threshold above which buffering is predicted useless (Web
 /// measures ~0.88, all buffer-friendly graphs < 0.05; the gate sits far
-/// from both).
-pub const LOCALITY_GATE: f64 = 0.5;
+/// from both). Shared with the online adaptive controller
+/// ([`crate::engine::controller`]), which seeds from this same rule.
+pub const LOCALITY_GATE: f64 = controller::LOCALITY_GATE;
 
 /// Diameter threshold for the Road-like "already slow information flow"
 /// case (§IV-D).
@@ -96,11 +97,11 @@ pub fn recommend(g: &Csr, algo: Algo, threads: usize) -> Recommendation {
     // trajectory (EXPERIMENTS.md Fig 4: 2048→512→512→256→256 for ranges
     // ≈2340→146) brackets range/2 — buffer about half a block's worth,
     // publishing once or twice per round, which shrinks automatically as
-    // thread count grows (the paper's Figs 3–4 trend).
+    // thread count grows (the paper's Figs 3–4 trend). The formula lives
+    // in `engine::controller` so the online adaptive mode seeds from the
+    // identical rule.
     let range = blocked::partition(g, threads).max_len();
-    let target = (range / 2).clamp(16, 32_768);
-    let pow2 = if target.is_power_of_two() { target } else { target.next_power_of_two() / 2 };
-    let delta = round_delta(pow2).max(16);
+    let delta = controller::dense_rule_delta(range);
     Recommendation {
         mode: ExecutionMode::Delayed(delta),
         locality,
@@ -150,6 +151,23 @@ mod tests {
         let g = GapGraph::Kron.generate(11, 0);
         let r = recommend(&g, Algo::Sssp, 32);
         assert_eq!(r.mode, ExecutionMode::Delayed(16));
+    }
+
+    #[test]
+    fn offline_rule_and_controller_seed_agree() {
+        // The adaptive controller must start exactly where the offline
+        // rule would have pointed (single source of truth).
+        let g = GapGraph::Urand.generate(12, 0);
+        let threads = 16;
+        let rec = recommend(&g, Algo::PageRank, threads);
+        let ExecutionMode::Delayed(d) = rec.mode else {
+            panic!("urand PR should buffer: {rec:?}");
+        };
+        let range = blocked::partition(&g, threads).max_len();
+        assert_eq!(d, controller::dense_rule_delta(range));
+        assert_eq!(controller::seed_delta(rec.locality, range, 1 << 20), d, "controller seeds from the same rule");
+        // And the §IV-C gate sends both to asynchronous together.
+        assert_eq!(controller::seed_delta(LOCALITY_GATE + 0.1, range, 1 << 20), 0);
     }
 
     #[test]

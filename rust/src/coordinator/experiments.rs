@@ -11,6 +11,7 @@
 //! | `fig6` | SSSP speedup over sync, 112 threads | [`fig6`] |
 //! | `ablations` | DESIGN.md ablations (partition, local reads, stripe, conditional) | [`ablations`] |
 //! | `steal` | static vs work-stealing round execution (beyond the paper) | [`steal`] |
+//! | `adaptive` | online δ controller vs exhaustive static sweep (§V online) | [`adaptive`] |
 //!
 //! All drivers run on the simulator (DESIGN.md §3: deterministic stand-in
 //! for the paper's 32/112-thread machines).
@@ -64,10 +65,11 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "autotune" => autotune_validation(opts),
         "schedule" => schedule(opts),
         "steal" => steal(opts),
+        "adaptive" => adaptive(opts),
         "all" => {
             let ids = [
                 "table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune", "schedule",
-                "steal",
+                "steal", "adaptive",
             ];
             for id in ids {
                 run(id, opts)?;
@@ -118,6 +120,41 @@ pub fn autotune_validation(opts: &ExpOptions) -> Result<()> {
 
 fn fmt_mode(p: &SweepPoint) -> String {
     p.mode.label()
+}
+
+/// Online adaptive δ (§V made online): regret of
+/// [`ExecutionMode::Adaptive`] against the exhaustive static sweep —
+/// sync + async + every δ in the paper's grid — on the four paper
+/// graphs, for the dense-update (PageRank) and sparse-update (SSSP)
+/// regimes. The acceptance target is regret ≤ 5% everywhere: the
+/// controller may never be meaningfully worse than the best static δ an
+/// offline oracle could have picked, and a negative regret means the
+/// online resize beat every static choice.
+pub fn adaptive(opts: &ExpOptions) -> Result<()> {
+    let m = Machine::haswell();
+    let threads = 32;
+    let mut t = Table::new(
+        "Adaptive — online δ controller vs exhaustive static sweep (simulated 32-thread Haswell)",
+        &["algo", "graph", "adaptive time", "rounds", "final δ", "best static", "best time", "regret"],
+    );
+    for algo in [Algo::PageRank, Algo::Sssp] {
+        for g in [GapGraph::Kron, GapGraph::Urand, GapGraph::Road, GapGraph::Web] {
+            let graph = opts.graph(g, algo);
+            let base = EngineConfig::new(threads, ExecutionMode::Synchronous);
+            let (ap, best, _regret) = sweep::adaptive_regret(&graph, algo, &m, &base);
+            t.row(vec![
+                algo.name().into(),
+                g.name().into(),
+                fmt::secs(ap.time_s),
+                ap.rounds.to_string(),
+                ap.final_delta.map_or_else(|| "-".into(), |d| d.to_string()),
+                best.mode.label(),
+                fmt::secs(best.time_s),
+                fmt::pct_delta(ap.time_s / best.time_s),
+            ]);
+        }
+    }
+    opts.report.emit("adaptive", &t)
 }
 
 /// Schedule dimension (beyond the paper): dense vs frontier vs adaptive

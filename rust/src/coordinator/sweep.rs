@@ -25,6 +25,9 @@ pub struct SweepPoint {
     pub active_total: u64,
     /// Chunks executed away from their owner (zero without stealing).
     pub steals: u64,
+    /// Median final-round δ under [`ExecutionMode::Adaptive`] (`None`
+    /// for static modes).
+    pub final_delta: Option<usize>,
 }
 
 /// Sweep sync + async + the paper's δ grid at a fixed thread count,
@@ -94,7 +97,28 @@ pub fn point_config(g: &Csr, algo: Algo, machine: &Machine, ecfg: &EngineConfig)
         flushes: sim.result.total_flushes(),
         active_total: sim.result.total_active(),
         steals: sim.result.total_steals(),
+        final_delta: sim.result.final_delta_median(),
     }
+}
+
+/// Online-vs-offline δ: run [`ExecutionMode::Adaptive`] under `base`,
+/// then the full static mode sweep (sync + async + the δ grid) under the
+/// same base, and report `(adaptive, best_static, regret)` where
+/// `best_static` is the fastest static point of the whole sweep — the
+/// choices an oracle with perfect offline knowledge picks among — and
+/// `regret = adaptive.time_s / best_static.time_s − 1` (≤ 0 means the
+/// controller beat every static choice).
+pub fn adaptive_regret(g: &Csr, algo: Algo, machine: &Machine, base: &EngineConfig) -> (SweepPoint, SweepPoint, f64) {
+    let mut acfg = base.clone();
+    acfg.mode = ExecutionMode::Adaptive;
+    let adaptive = point_config(g, algo, machine, &acfg);
+    let statics = modes_base(g, algo, machine, base);
+    let best = statics
+        .into_iter()
+        .min_by(|a, b| a.time_s.partial_cmp(&b.time_s).unwrap())
+        .expect("modes_base always yields points");
+    let regret = adaptive.time_s / best.time_s - 1.0;
+    (adaptive, best, regret)
 }
 
 /// The straggler-recovery pair: one configuration run statically and with
@@ -169,6 +193,22 @@ mod tests {
         assert_eq!(st.mode, dy.mode);
         assert_eq!(st.schedule, dy.schedule);
         assert!(dy.rounds > 0 && dy.time_s > 0.0);
+    }
+
+    #[test]
+    fn adaptive_regret_reports_both_points() {
+        let g = GapGraph::Kron.generate(9, 8);
+        let base = EngineConfig::new(8, ExecutionMode::Synchronous);
+        let (ap, best, regret) = adaptive_regret(&g, Algo::PageRank, &Machine::haswell(), &base);
+        assert_eq!(ap.mode, ExecutionMode::Adaptive);
+        assert!(ap.final_delta.is_some(), "adaptive point carries its final δ");
+        assert!(best.final_delta.is_none(), "static points carry no δ trace");
+        assert!(ap.rounds > 0 && best.rounds > 0);
+        assert!((ap.time_s / best.time_s - 1.0 - regret).abs() < 1e-12);
+        // Determinism: the sim makes regret reproducible.
+        let (ap2, _, regret2) = adaptive_regret(&g, Algo::PageRank, &Machine::haswell(), &base);
+        assert_eq!(ap.time_s, ap2.time_s);
+        assert_eq!(regret, regret2);
     }
 
     #[test]

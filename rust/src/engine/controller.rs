@@ -1,0 +1,453 @@
+//! Online adaptive δ controller — closing the paper's §V open question
+//! ("further work must be done to determine what buffer size to use,
+//! dependent on both the graph's topology and the number of threads")
+//! with a runtime feedback loop instead of a one-shot offline rule.
+//!
+//! Under [`super::ExecutionMode::Adaptive`] every worker owns one
+//! [`DeltaController`] and resizes its delay buffer *between rounds*
+//! from three per-round signals (DESIGN.md §7):
+//!
+//! 1. **Flush-burst cost** — cost per flushed cache line. Each controller
+//!    remembers the cheapest per-line flush it has ever seen (the
+//!    uncontended baseline); a round whose per-line cost exceeds
+//!    [`CONTENTION_FACTOR`] × that baseline is *flush-contended*: other
+//!    threads are invalidating the lines this thread publishes.
+//! 2. **Update density** — the fraction of vertices whose stored value
+//!    actually *changed* this round (Maiter-style observed usefulness).
+//!    Under a sparse schedule this is the set `RoundStats::active`
+//!    sweeps next round's frontier from; unlike the swept count it
+//!    remains meaningful under the paper's dense sweeps, where SSSP/CC
+//!    touch every vertex but change almost none. Dense change means
+//!    updates are plentiful and staleness is cheap; sparse change
+//!    (§IV-D) means every update is precious.
+//! 3. **Residual improvement** — the round-over-round ratio of the
+//!    summed convergence metric. Growing δ is only considered while the
+//!    residual is still shrinking: delaying harder when progress has
+//!    stalled would slow information flow further.
+//!
+//! Policy: **double δ** when flushes are contended and progress is dense
+//! and improving; **halve toward asynchronous** after
+//! [`SHRINK_STREAK`] consecutive sparse rounds (hysteresis, so one
+//! sparse round under an adaptive *schedule* never triggers a spurious
+//! shrink); otherwise hold. Every move is guarded by a regression check:
+//! a resize that worsens this thread's per-vertex round cost by more
+//! than [`REGRESSION_GATE`] is undone the next round, and each reverted
+//! move doubles the evidence required to try that direction again
+//! (exponential backoff), so oscillating around a good operating point
+//! costs a geometrically vanishing share of the run — which is how the
+//! `daig experiment adaptive` regret against the exhaustive static-δ
+//! sweep stays small.
+//!
+//! The initial δ comes from the same offline rule as
+//! [`crate::coordinator::autotune`] (which now delegates here): the
+//! §IV-C diagonal-locality gate seeds web-like topologies at δ = 0 and
+//! everything else at [`dense_rule_delta`] of the thread's own range.
+//!
+//! Bounds and invariants (property-tested in `rust/tests/prop_engine.rs`):
+//! every δ the controller emits is a whole number of cache lines
+//! ([`round_delta`]), lies in `[0, max]`, and consecutive values differ
+//! by at most one [`grow_step`]/[`shrink_step`]. δ = 0 buffers nothing,
+//! so a round executed at δ = 0 charges no flushes.
+//!
+//! Determinism: the controller is a pure function of its telemetry. The
+//! simulator feeds it deterministic cycle counts, so simulated δ traces
+//! are bit-identical across runs; the native executor feeds wall-clock
+//! times, so its trace may differ run to run — harmlessly, because δ
+//! affects only performance, never the fixed point (chaotic relaxation).
+
+use crate::VALUES_PER_LINE;
+
+use super::delay_buffer::round_delta;
+use super::schedule::ADAPTIVE_SPARSE_DIVISOR;
+
+/// Topology threshold above which buffering is predicted useless (§IV-C:
+/// Web measures ~0.88, all buffer-friendly graphs < 0.05). Shared with
+/// the offline rule in [`crate::coordinator::autotune`].
+pub const LOCALITY_GATE: f64 = 0.5;
+
+/// A round is flush-contended when its cost per flushed line exceeds
+/// this multiple of the cheapest per-line flush the thread has seen.
+pub const CONTENTION_FACTOR: f64 = 1.5;
+
+/// Consecutive sparse rounds required before δ actually halves —
+/// hysteresis so a single sparse round (e.g. the adaptive *schedule*
+/// dipping below its density threshold once) cannot trigger a shrink.
+pub const SHRINK_STREAK: u32 = 2;
+
+/// A resize that worsens per-vertex round cost by more than this factor
+/// is reverted on the next observation.
+pub const REGRESSION_GATE: f64 = 1.10;
+
+/// Upper bound on the exponential backoff counters (shrink evidence
+/// requirement and grow suppression span, in rounds).
+pub const BACKOFF_CAP: u32 = 64;
+
+/// The offline dense-update rule (§IV, Figs 3–4): δ ≈ half the
+/// per-thread range, snapped to a power of two inside the paper's sweep
+/// `[16, 32768]`, cache-line rounded. [`crate::coordinator::autotune`]
+/// applies it ahead of time; the adaptive controller uses it as a seed.
+pub fn dense_rule_delta(range: usize) -> usize {
+    let target = (range / 2).clamp(16, 32_768);
+    let pow2 = if target.is_power_of_two() { target } else { target.next_power_of_two() / 2 };
+    round_delta(pow2).max(VALUES_PER_LINE)
+}
+
+/// Seed δ for one thread: the §IV-C locality gate sends web-like
+/// topologies straight to asynchronous (δ = 0); everything else starts
+/// at the offline dense rule over the thread's own range, clamped to the
+/// controller's upper bound.
+pub fn seed_delta(locality: f64, range: usize, max: usize) -> usize {
+    if locality > LOCALITY_GATE || range == 0 || max == 0 {
+        0
+    } else {
+        dense_rule_delta(range).min(max)
+    }
+}
+
+/// One controller step up: δ = 0 grows to a single cache line, anything
+/// else doubles, capped at `max`.
+pub fn grow_step(cur: usize, max: usize) -> usize {
+    if cur == 0 {
+        if max >= VALUES_PER_LINE {
+            VALUES_PER_LINE
+        } else {
+            0
+        }
+    } else {
+        (cur * 2).min(max)
+    }
+}
+
+/// One controller step down: a single cache line (or less) collapses to
+/// asynchronous, anything else halves (cache-line rounded).
+pub fn shrink_step(cur: usize) -> usize {
+    if cur <= VALUES_PER_LINE {
+        0
+    } else {
+        round_delta(cur / 2)
+    }
+}
+
+/// One round of per-thread measurements, in whatever cost unit the
+/// executor uses (seconds native, cycles sim) — the controller only ever
+/// compares costs against each other, never across executors.
+#[derive(Debug, Clone, Copy)]
+pub struct Telemetry {
+    /// Vertices this thread swept this round (own plus stolen chunks).
+    pub processed: u64,
+    /// Cache lines this thread's delay-buffer flushes dirtied this round.
+    pub flush_lines: u64,
+    /// Cost spent inside flushes this round.
+    pub flush_cost: f64,
+    /// Total cost of this thread's round.
+    pub round_cost: f64,
+    /// Global fraction of vertices whose stored value changed this
+    /// round (changed ÷ n — the Maiter-style usefulness signal; under a
+    /// sparse schedule this is what next round's frontier grows from).
+    pub density: f64,
+    /// This round's summed residual over the previous round's (≤ 1 means
+    /// converging; 1.0 on the first round).
+    pub residual_ratio: f64,
+}
+
+/// Per-thread online δ controller (see module docs for the policy).
+#[derive(Debug, Clone)]
+pub struct DeltaController {
+    /// δ for the upcoming round (cache-line rounded; 0 = asynchronous).
+    cur: usize,
+    /// Upper bound (cache-line rounded; the thread's range, or n under
+    /// work stealing, mirroring the static executors' cap).
+    max: usize,
+    /// Cheapest cost-per-flushed-line seen — the uncontended baseline.
+    best_line_cost: f64,
+    /// Consecutive sparse-round shrink votes.
+    shrink_votes: u32,
+    /// Votes required before a shrink fires; starts at
+    /// [`SHRINK_STREAK`] and doubles (capped at [`BACKOFF_CAP`]) every
+    /// time a shrink is reverted, so a workload that punishes small δ
+    /// is probed geometrically less often.
+    shrink_need: u32,
+    /// Rounds during which growth stays suppressed after a reverted
+    /// grow; the suppression span doubles per reverted grow.
+    grow_cooldown: u32,
+    grow_penalty: u32,
+    /// `Some(grew)` when the previous round ran a *fresh policy move*
+    /// whose regression check is still pending. Reverts and holds leave
+    /// this `None`, so noise after a revert can neither "revert the
+    /// revert" nor back off a direction that was never attempted.
+    pending: Option<bool>,
+    /// δ used in the previous observed round (revert target).
+    last_delta: usize,
+    /// Per-vertex round cost of the previous observed round.
+    last_cost: f64,
+}
+
+impl DeltaController {
+    /// Controller starting at `seed`, bounded by `round_delta(max)`.
+    pub fn new(seed: usize, max: usize) -> Self {
+        let max = round_delta(max);
+        let cur = round_delta(seed).min(max);
+        Self {
+            cur,
+            max,
+            best_line_cost: f64::INFINITY,
+            shrink_votes: 0,
+            shrink_need: SHRINK_STREAK,
+            grow_cooldown: 0,
+            grow_penalty: SHRINK_STREAK,
+            pending: None,
+            last_delta: cur,
+            last_cost: f64::INFINITY,
+        }
+    }
+
+    /// δ for the next round.
+    pub fn delta(&self) -> usize {
+        self.cur
+    }
+
+    /// The controller's upper bound.
+    pub fn bound(&self) -> usize {
+        self.max
+    }
+
+    /// Digest one round of telemetry; returns the δ for the next round.
+    pub fn observe(&mut self, t: &Telemetry) -> usize {
+        if t.processed == 0 {
+            // Nothing measured (empty partition or fully-skipped sparse
+            // round): hold, and forget any pending regression check.
+            self.pending = None;
+            self.last_delta = self.cur;
+            return self.cur;
+        }
+        let cost = t.round_cost / t.processed as f64;
+        let line_cost = if t.flush_lines > 0 { t.flush_cost / t.flush_lines as f64 } else { f64::INFINITY };
+        if line_cost < self.best_line_cost {
+            self.best_line_cost = line_cost;
+        }
+
+        // Regression guard, evaluated only for the round that ran a
+        // fresh policy move (`pending`): a resize that made this
+        // thread's per-vertex round cost worse is undone (one step back,
+        // by construction), and the direction that failed backs off
+        // exponentially so re-probing it costs a vanishing share of the
+        // run. The revert itself leaves `pending` empty, so a noisy
+        // post-revert round can neither bounce back to the rejected δ
+        // nor back off a direction that was never attempted.
+        if let Some(grew) = self.pending.take() {
+            if self.last_cost.is_finite() && cost > self.last_cost * REGRESSION_GATE {
+                if grew {
+                    self.grow_penalty = (self.grow_penalty * 2).min(BACKOFF_CAP);
+                    self.grow_cooldown = self.grow_penalty;
+                } else {
+                    self.shrink_need = (self.shrink_need * 2).min(BACKOFF_CAP);
+                }
+                let back = self.last_delta;
+                self.last_delta = self.cur;
+                self.last_cost = cost;
+                self.cur = back;
+                self.shrink_votes = 0;
+                return self.cur;
+            }
+        }
+        self.grow_cooldown = self.grow_cooldown.saturating_sub(1);
+
+        let dense = t.density * ADAPTIVE_SPARSE_DIVISOR as f64 >= 1.0;
+        let improving = t.residual_ratio <= 1.0;
+        let contended = line_cost.is_finite()
+            && self.best_line_cost.is_finite()
+            && line_cost > CONTENTION_FACTOR * self.best_line_cost;
+
+        let next = if contended && dense && improving && self.grow_cooldown == 0 {
+            self.shrink_votes = 0;
+            grow_step(self.cur, self.max)
+        } else if !dense {
+            self.shrink_votes += 1;
+            if self.shrink_votes >= self.shrink_need {
+                self.shrink_votes = 0;
+                shrink_step(self.cur)
+            } else {
+                self.cur
+            }
+        } else {
+            self.shrink_votes = 0;
+            self.cur
+        };
+        if next != self.cur {
+            self.pending = Some(next > self.cur);
+        }
+        self.last_delta = self.cur;
+        self.last_cost = cost;
+        self.cur = next;
+        self.cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tel(processed: u64, density: f64) -> Telemetry {
+        Telemetry {
+            processed,
+            flush_lines: 4,
+            flush_cost: 4.0,
+            round_cost: 1000.0,
+            density,
+            residual_ratio: 0.9,
+        }
+    }
+
+    #[test]
+    fn steps_are_line_rounded_and_inverse() {
+        assert_eq!(grow_step(0, 1024), VALUES_PER_LINE);
+        assert_eq!(grow_step(16, 1024), 32);
+        assert_eq!(grow_step(512, 1024), 1024);
+        assert_eq!(grow_step(1024, 1024), 1024, "capped at max");
+        assert_eq!(grow_step(0, 0), 0, "no room to grow");
+        assert_eq!(shrink_step(0), 0);
+        assert_eq!(shrink_step(16), 0);
+        assert_eq!(shrink_step(32), 16);
+        assert_eq!(shrink_step(1024), 512);
+        for d in [0usize, 16, 32, 64, 4096] {
+            assert_eq!(grow_step(d, 1 << 20) % VALUES_PER_LINE, 0);
+            assert_eq!(shrink_step(d) % VALUES_PER_LINE, 0);
+        }
+    }
+
+    #[test]
+    fn seed_respects_locality_gate_and_bounds() {
+        assert_eq!(seed_delta(0.9, 1000, 1024), 0, "web-like: async start");
+        assert_eq!(seed_delta(0.1, 0, 1024), 0, "empty range");
+        assert_eq!(seed_delta(0.1, 1000, 0), 0, "zero bound");
+        let s = seed_delta(0.1, 1000, 1024);
+        assert_eq!(s, 256, "range/2 snapped to 2^k");
+        assert_eq!(seed_delta(0.1, 1000, 64), 64, "clamped to max");
+        assert_eq!(dense_rule_delta(4), 16, "floor of the paper's sweep");
+        assert_eq!(dense_rule_delta(1 << 20), 32_768, "ceiling of the paper's sweep");
+    }
+
+    #[test]
+    fn sparse_rounds_shrink_only_after_streak() {
+        let mut c = DeltaController::new(64, 1024);
+        assert_eq!(c.observe(&tel(100, 0.01)), 64, "one sparse round holds");
+        assert_eq!(c.observe(&tel(100, 0.01)), 32, "second sparse round halves");
+        assert_eq!(c.observe(&tel(100, 0.01)), 32);
+        assert_eq!(c.observe(&tel(100, 0.01)), 16);
+        assert_eq!(c.observe(&tel(100, 0.01)), 16);
+        assert_eq!(c.observe(&tel(100, 0.01)), 0, "one line collapses to async");
+        assert_eq!(c.observe(&tel(100, 0.01)), 0, "absorbing at 0");
+    }
+
+    #[test]
+    fn dense_round_resets_shrink_votes() {
+        let mut c = DeltaController::new(64, 1024);
+        c.observe(&tel(100, 0.01));
+        c.observe(&tel(100, 0.9)); // dense round in between
+        assert_eq!(c.observe(&tel(100, 0.01)), 64, "streak was reset");
+        assert_eq!(c.observe(&tel(100, 0.01)), 32);
+    }
+
+    #[test]
+    fn contended_dense_improving_grows() {
+        let mut c = DeltaController::new(64, 1024);
+        // Establish a cheap flush baseline.
+        let cheap = Telemetry { flush_cost: 4.0, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&cheap), 64);
+        // Now flushes cost 3x per line: contended, dense, improving.
+        let hot = Telemetry { flush_cost: 12.0, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&hot), 128);
+        // Stalled residual blocks further growth.
+        let stalled = Telemetry { residual_ratio: 1.5, ..hot };
+        assert_eq!(c.observe(&stalled), 128);
+    }
+
+    #[test]
+    fn regression_reverts_one_step() {
+        let mut c = DeltaController::new(64, 1024);
+        let cheap = Telemetry { flush_cost: 4.0, ..tel(100, 0.9) };
+        c.observe(&cheap);
+        let hot = Telemetry { flush_cost: 12.0, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&hot), 128, "grew on contention");
+        // The grown round costs 50% more per vertex: revert.
+        let worse = Telemetry { round_cost: 1500.0, flush_cost: 12.0, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&worse), 64, "regression reverted");
+    }
+
+    #[test]
+    fn noise_after_revert_neither_bounces_nor_misattributes() {
+        let mut c = DeltaController::new(64, 1024);
+        let cheap = Telemetry { flush_cost: 4.0, ..tel(100, 0.9) };
+        c.observe(&cheap); // flush baseline
+        let hot = Telemetry { flush_cost: 12.0, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&hot), 128, "grew on contention");
+        let worse = Telemetry { round_cost: 1500.0, flush_cost: 12.0, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&worse), 64, "regression reverted");
+        // A noisy round right after the revert must hold: no policy move
+        // is pending, so there is nothing to re-revert, and growth is on
+        // cooldown.
+        let noisy = Telemetry { round_cost: 2500.0, flush_cost: 12.0, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&noisy), 64, "no bounce back to the rejected δ");
+        // And the shrink hysteresis was not inflated by the noise: two
+        // sparse votes still shrink.
+        c.observe(&tel(100, 0.01));
+        assert_eq!(c.observe(&tel(100, 0.01)), 32, "shrink_need untouched by a reverted *grow*");
+    }
+
+    #[test]
+    fn reverted_shrink_backs_off_exponentially() {
+        let mut c = DeltaController::new(64, 1024);
+        // Two sparse rounds shrink 64 -> 32.
+        c.observe(&tel(100, 0.01));
+        assert_eq!(c.observe(&tel(100, 0.01)), 32);
+        // The shrunken round costs 50% more per vertex: revert to 64 and
+        // double the evidence requirement.
+        let worse = Telemetry { round_cost: 1500.0, ..tel(100, 0.01) };
+        assert_eq!(c.observe(&worse), 64, "shrink reverted");
+        // Now 4 sparse votes are needed before the next shrink attempt
+        // (cost back to baseline so no further reverts fire).
+        let back = Telemetry { round_cost: 1440.0, ..tel(100, 0.01) };
+        assert_eq!(c.observe(&back), 64, "vote 1/4");
+        assert_eq!(c.observe(&back), 64, "vote 2/4");
+        assert_eq!(c.observe(&back), 64, "vote 3/4");
+        assert_eq!(c.observe(&back), 32, "vote 4/4 shrinks again");
+    }
+
+    #[test]
+    fn zero_processed_holds() {
+        let mut c = DeltaController::new(64, 1024);
+        for _ in 0..10 {
+            assert_eq!(c.observe(&tel(0, 0.0)), 64);
+        }
+    }
+
+    #[test]
+    fn trace_invariants_under_arbitrary_telemetry() {
+        // Whatever the signals, δ stays line-rounded, bounded, and moves
+        // by at most one step.
+        let mut rng = crate::util::rng::SplitMix64::new(0xADA9);
+        let max = 4096usize;
+        let mut c = DeltaController::new(seed_delta(0.1, 5000, max), max);
+        let mut prev = c.delta();
+        for _ in 0..500 {
+            let t = Telemetry {
+                processed: rng.next_below(200),
+                flush_lines: rng.next_below(64),
+                flush_cost: rng.next_f64() * 100.0,
+                round_cost: rng.next_f64() * 10_000.0,
+                density: rng.next_f64(),
+                residual_ratio: rng.next_f64() * 2.0,
+            };
+            let d = c.observe(&t);
+            assert_eq!(d % VALUES_PER_LINE, 0);
+            assert!(d <= max);
+            let one_step = d == prev
+                || d == grow_step(prev, max)
+                || d == shrink_step(prev)
+                || prev == grow_step(d, max)
+                || prev == shrink_step(d);
+            assert!(one_step, "{prev} -> {d} is more than one step");
+            prev = d;
+        }
+    }
+}

@@ -22,6 +22,13 @@ pub struct DelayBuffer {
     base: VertexId,
     /// Number of flushes performed (reported in RunResult).
     flushes: u64,
+    /// Cache lines dirtied by those flushes (adaptive-δ telemetry).
+    lines_flushed: u64,
+    /// When true, wall time spent inside [`Self::flush`] accumulates in
+    /// `flush_secs` — the adaptive controller's flush-burst cost signal.
+    /// Off by default: static modes pay no timing overhead.
+    timed: bool,
+    flush_secs: f64,
 }
 
 /// Round δ up to a whole number of cache lines (and at least one line),
@@ -37,12 +44,41 @@ pub fn round_delta(delta: usize) -> usize {
 impl DelayBuffer {
     /// Buffer with capacity [`round_delta`]`(delta)` elements.
     pub fn new(delta: usize) -> Self {
-        Self { buf: AlignedBuf::with_capacity(round_delta(delta)), base: 0, flushes: 0 }
+        Self {
+            buf: AlignedBuf::with_capacity(round_delta(delta)),
+            base: 0,
+            flushes: 0,
+            lines_flushed: 0,
+            timed: false,
+            flush_secs: 0.0,
+        }
     }
 
     /// Capacity after cache-line rounding.
     pub fn capacity(&self) -> usize {
         self.buf.capacity()
+    }
+
+    /// Replace the (empty) backing storage with one of capacity
+    /// [`round_delta`]`(delta)`, preserving the flush counters. The
+    /// adaptive controller calls this between rounds — after the
+    /// end-of-range flush, so no staged values can be lost.
+    pub fn resize(&mut self, delta: usize) {
+        assert!(self.buf.is_empty(), "resize with unflushed data");
+        let cap = round_delta(delta);
+        if cap != self.buf.capacity() {
+            self.buf = AlignedBuf::with_capacity(cap);
+        }
+    }
+
+    /// Enable or disable flush wall-time accounting (see `timed` field).
+    pub fn set_timed(&mut self, on: bool) {
+        self.timed = on;
+    }
+
+    /// Drain the accumulated flush wall time (seconds) since last taken.
+    pub fn take_flush_secs(&mut self) -> f64 {
+        std::mem::take(&mut self.flush_secs)
     }
 
     /// Prepare for a sweep that will next write global index `start`.
@@ -77,10 +113,18 @@ impl DelayBuffer {
         if self.buf.is_empty() {
             return;
         }
+        let t0 = self.timed.then(std::time::Instant::now);
+        let len = self.buf.len();
         global.store_run(self.base, &self.buf);
-        self.base += self.buf.len() as VertexId;
+        let first = self.base as usize / VALUES_PER_LINE;
+        let last = (self.base as usize + len - 1) / VALUES_PER_LINE;
+        self.lines_flushed += (last - first + 1) as u64;
+        self.base += len as VertexId;
         self.buf.clear();
         self.flushes += 1;
+        if let Some(t0) = t0 {
+            self.flush_secs += t0.elapsed().as_secs_f64();
+        }
     }
 
     /// Conditional-write extension (§V future work): the next vertex in
@@ -129,6 +173,11 @@ impl DelayBuffer {
     /// Flush count so far.
     pub fn flushes(&self) -> u64 {
         self.flushes
+    }
+
+    /// Cache lines dirtied by flushes so far.
+    pub fn lines_flushed(&self) -> u64 {
+        self.lines_flushed
     }
 }
 
@@ -246,6 +295,81 @@ mod tests {
         assert_eq!(g.load(5), 7);
         assert_eq!(g.load(9), 8);
         assert_eq!(b.flushes(), 0);
+    }
+
+    #[test]
+    fn resize_preserves_counters_and_requires_empty() {
+        let g = SharedValues::from_bits(vec![0; 128]);
+        let mut b = DelayBuffer::new(16);
+        b.begin(0);
+        for i in 0..20u32 {
+            b.push(&g, i);
+        }
+        b.flush(&g);
+        let (f, l) = (b.flushes(), b.lines_flushed());
+        assert!(f > 0 && l > 0);
+        b.resize(64);
+        assert_eq!(b.capacity(), 64);
+        assert_eq!(b.flushes(), f, "counters survive resize");
+        assert_eq!(b.lines_flushed(), l);
+        b.resize(0);
+        assert_eq!(b.capacity(), 0);
+        // Write-through still works after shrinking to async.
+        b.begin(100);
+        b.push(&g, 7);
+        assert_eq!(g.load(100), 7);
+        assert_eq!(b.flushes(), f, "δ=0 charges no flushes");
+        b.resize(30);
+        assert_eq!(b.capacity(), 32, "resize is cache-line rounded");
+    }
+
+    #[test]
+    #[should_panic(expected = "resize with unflushed data")]
+    fn resize_with_pending_data_panics() {
+        let g = SharedValues::from_bits(vec![0; 64]);
+        let mut b = DelayBuffer::new(16);
+        b.begin(0);
+        b.push(&g, 1);
+        b.resize(32);
+    }
+
+    #[test]
+    fn lines_flushed_counts_spanned_lines() {
+        let g = SharedValues::from_bits(vec![0; 128]);
+        let mut b = DelayBuffer::new(32);
+        b.begin(0);
+        for i in 0..32u32 {
+            b.push(&g, i);
+        }
+        b.flush(&g);
+        assert_eq!(b.flushes(), 1);
+        assert_eq!(b.lines_flushed(), 2, "32 aligned values = 2 lines");
+        // An unaligned run spanning a line boundary counts both lines.
+        b.begin(40);
+        b.push(&g, 1);
+        b.push(&g, 2);
+        b.flush(&g);
+        assert_eq!(b.lines_flushed(), 3, "40..42 stays inside one line");
+        b.begin(47);
+        b.push(&g, 1);
+        b.push(&g, 2);
+        b.flush(&g);
+        assert_eq!(b.lines_flushed(), 5, "47..49 spans two lines");
+    }
+
+    #[test]
+    fn timed_flushes_accumulate_and_drain() {
+        let g = SharedValues::from_bits(vec![0; 64]);
+        let mut b = DelayBuffer::new(16);
+        b.set_timed(true);
+        b.begin(0);
+        for i in 0..40u32 {
+            b.push(&g, i);
+        }
+        b.flush(&g);
+        let t = b.take_flush_secs();
+        assert!(t >= 0.0);
+        assert_eq!(b.take_flush_secs(), 0.0, "drained");
     }
 
     #[test]

@@ -21,6 +21,7 @@
 //! a round touches: the paper's dense sweep, a frontier of activated
 //! vertices, or an adaptive dense↔sparse hybrid (DESIGN.md §4).
 
+pub mod controller;
 pub mod convergence;
 pub mod delay_buffer;
 pub mod native;
@@ -48,24 +49,41 @@ pub enum ExecutionMode {
     /// `Delayed(0)` behaves exactly like `Asynchronous`;
     /// `Delayed(≥ thread range)` approaches `Synchronous`.
     Delayed(usize),
+    /// Online δ: every worker owns a [`controller::DeltaController`] that
+    /// resizes its delay buffer between rounds from flush-contention,
+    /// update-density, and residual telemetry, seeded by the §IV-C
+    /// locality gate (the offline [`crate::coordinator::autotune`] rule).
+    Adaptive,
 }
 
 impl ExecutionMode {
-    /// Canonical short label for reports ("sync", "async", "d256"…).
+    /// Canonical short label for reports ("sync", "async", "d256",
+    /// "adaptive").
     pub fn label(&self) -> String {
         match self {
             ExecutionMode::Synchronous => "sync".into(),
             ExecutionMode::Asynchronous => "async".into(),
             ExecutionMode::Delayed(d) => format!("d{d}"),
+            ExecutionMode::Adaptive => "adaptive".into(),
         }
     }
 
-    /// Parse labels produced by [`Self::label`].
+    /// Parse labels produced by [`Self::label`] (case-insensitive).
+    /// `None` means the label is not one of `sync | async | dN |
+    /// adaptive`; CLI call sites must surface that explicitly rather
+    /// than fall back silently.
     pub fn from_label(s: &str) -> Option<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "sync" => Some(ExecutionMode::Synchronous),
             "async" => Some(ExecutionMode::Asynchronous),
-            _ => s.strip_prefix('d').and_then(|d| d.parse().ok()).map(ExecutionMode::Delayed),
+            "adaptive" => Some(ExecutionMode::Adaptive),
+            other => other
+                .strip_prefix('d')
+                // All-digits only: `usize::from_str` would also accept a
+                // leading '+', which `label()` never emits.
+                .filter(|digits| !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()))
+                .and_then(|digits| digits.parse().ok())
+                .map(ExecutionMode::Delayed),
         }
     }
 }
@@ -149,10 +167,12 @@ impl EngineConfig {
     }
 
     /// Effective δ for a thread range of `len` elements: `Synchronous`
-    /// buffers everything, `Asynchronous` nothing.
+    /// buffers everything, `Asynchronous` nothing. For `Adaptive` this is
+    /// the controller's *upper bound* (`len`); the actual per-round δ is
+    /// chosen at runtime by [`controller::DeltaController`].
     pub fn effective_delta(&self, len: usize) -> usize {
         match self.mode {
-            ExecutionMode::Synchronous => len,
+            ExecutionMode::Synchronous | ExecutionMode::Adaptive => len,
             ExecutionMode::Asynchronous => 0,
             ExecutionMode::Delayed(d) => d.min(len),
         }
@@ -165,10 +185,21 @@ mod tests {
 
     #[test]
     fn mode_labels_roundtrip() {
-        for m in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(256)] {
+        for m in [
+            ExecutionMode::Synchronous,
+            ExecutionMode::Asynchronous,
+            ExecutionMode::Delayed(256),
+            ExecutionMode::Delayed(0),
+            ExecutionMode::Adaptive,
+        ] {
             assert_eq!(ExecutionMode::from_label(&m.label()), Some(m));
         }
-        assert_eq!(ExecutionMode::from_label("bogus"), None);
+        assert_eq!(ExecutionMode::from_label("ADAPTIVE"), Some(ExecutionMode::Adaptive), "case-insensitive");
+        assert_eq!(ExecutionMode::from_label(" d64 "), Some(ExecutionMode::Delayed(64)), "whitespace-tolerant");
+        // Unknown labels must surface as None, never as a silent default.
+        for bad in ["bogus", "d", "dxyz", "d-5", "d+5", "d 5", "delayed", ""] {
+            assert_eq!(ExecutionMode::from_label(bad), None, "{bad:?}");
+        }
     }
 
     #[test]
@@ -195,5 +226,7 @@ mod tests {
         assert_eq!(s.effective_delta(500), 500);
         let a = EngineConfig::new(4, ExecutionMode::Asynchronous);
         assert_eq!(a.effective_delta(500), 0);
+        let ad = EngineConfig::new(4, ExecutionMode::Adaptive);
+        assert_eq!(ad.effective_delta(500), 500, "adaptive reports its upper bound");
     }
 }

@@ -38,9 +38,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex};
 use std::time::Instant;
 
-use crate::graph::{Csr, VertexId};
+use crate::graph::{properties, Csr, VertexId};
 
-use super::delay_buffer::DelayBuffer;
+use super::controller::{self, DeltaController, Telemetry};
+use super::delay_buffer::{round_delta, DelayBuffer};
 use super::program::{ValueReader, VertexProgram};
 use super::schedule::{AtomicBitmap, SchedulePolicy, ADAPTIVE_SPARSE_DIVISOR};
 use super::shared::{SharedValues, SliceReader};
@@ -82,10 +83,18 @@ struct Ctrl {
     flushes: Vec<AtomicU64>,
     /// Per-thread vertices swept this round.
     processed: Vec<AtomicU64>,
+    /// Per-thread vertices whose stored value changed this round — the
+    /// adaptive controller's update-density signal (meaningful under
+    /// dense sweeps too, where `processed` is always the full range).
+    changed: Vec<AtomicU64>,
     /// Per-thread vertices *newly* activated for the next round.
     activated: Vec<AtomicU64>,
     /// Per-thread chunks stolen this round.
     steals: Vec<AtomicU64>,
+    /// Per-thread δ (delay-buffer capacity) in effect this round,
+    /// written by the owner only; collected into
+    /// [`RoundStats::delta_trace`] under the adaptive controller.
+    delta_used: Vec<AtomicU64>,
     /// Whether the next round sweeps sparsely (thread 0 decides between
     /// the barriers; round 0 is always dense).
     sparse_next: AtomicBool,
@@ -115,14 +124,21 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
     }
     let frontiers = frontier_on.then(|| Frontiers { maps: [AtomicBitmap::new(n), AtomicBitmap::new(n)] });
     let grid = cfg.stealing.then(|| StealGrid::new(&pm, DEFAULT_CHUNK));
+    // Adaptive mode: the §IV-C topology gate that seeds every worker's
+    // controller is computed once, outside the gang (O(m), like the
+    // transpose build above).
+    let locality = matches!(cfg.mode, ExecutionMode::Adaptive)
+        .then(|| properties::diagonal_locality(g, t_count.max(2)));
 
     let ctrl = Ctrl {
         barrier: Barrier::new(t_count),
         deltas: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         flushes: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         processed: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        changed: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         activated: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         steals: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        delta_used: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         sparse_next: AtomicBool::new(false),
         done: AtomicBool::new(false),
     };
@@ -141,7 +157,10 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
             let rounds_out = &rounds_out;
             let converged_out = &converged_out;
             let handle = move || {
-                worker(t, range, g, prog, cfg, ctrl, global, back, frontiers, grid, rounds_out, converged_out);
+                worker(
+                    t, range, g, prog, cfg, locality, ctrl, global, back, frontiers, grid, rounds_out,
+                    converged_out,
+                );
             };
             if t == t_count - 1 {
                 // Run the last worker on the caller thread: saves one
@@ -184,6 +203,7 @@ fn worker<P: VertexProgram>(
     g: &Csr,
     prog: &P,
     cfg: &EngineConfig,
+    locality: Option<f64>,
     ctrl: &Ctrl,
     global: &SharedValues,
     back: &SharedValues,
@@ -194,18 +214,35 @@ fn worker<P: VertexProgram>(
 ) {
     let n = g.num_vertices();
     let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
+    let adaptive = matches!(cfg.mode, ExecutionMode::Adaptive);
     // Stealing can hand this thread chunks anywhere in the graph, so the
     // delayed-mode buffer is capped against n rather than the own range.
     // Sync mode never stages (the double buffer *is* the delay).
+    let delta_bound = if grid.is_some() { n } else { range.len() };
+    // Adaptive: the controller seeds from the offline rule over this
+    // thread's own range (locality was precomputed in `run`) and may
+    // resize the buffer between any two rounds within [0, bound].
+    let mut ctl: Option<DeltaController> = locality.map(|loc| {
+        let max = round_delta(delta_bound);
+        DeltaController::new(controller::seed_delta(loc, range.len(), max), max)
+    });
     let delta_cap = if sync_mode {
         0
-    } else if grid.is_some() {
-        cfg.effective_delta(n)
+    } else if let Some(c) = &ctl {
+        c.delta()
     } else {
-        cfg.effective_delta(range.len())
+        cfg.effective_delta(delta_bound)
     };
     let buf = RefCell::new(DelayBuffer::new(delta_cap));
+    if ctl.is_some() {
+        // Flush wall time is the controller's contention signal; static
+        // modes skip the timing overhead entirely.
+        buf.borrow_mut().set_timed(true);
+    }
     let conditional = prog.conditional_writes();
+    // Telemetry deltas for the controller (cumulative counters → per-round).
+    let mut prev_flush_lines = 0u64;
+    let mut prev_residual = f64::INFINITY;
 
     // Sync-mode frontier bookkeeping: the vertices we swept last round.
     // Their fresh value lives only in this round's *read* buffer, so if
@@ -217,9 +254,12 @@ fn worker<P: VertexProgram>(
     let mut round = 0usize;
     let mut sparse = false; // round 0 is always dense
     let mut t0 = Instant::now();
+    // Per-thread round timer (t0 above belongs to thread 0's RoundStats).
+    let mut my_t0 = Instant::now();
     loop {
         let mut delta = 0.0f64;
         let mut processed = 0u64;
+        let mut changed = 0u64;
         let mut activated = 0u64;
         let mut steals = 0u64;
         let (cur, nxt) = match frontiers {
@@ -301,6 +341,7 @@ fn worker<P: VertexProgram>(
                         let mut rd = SharedReaderShim(front);
                         let new = prog.update(v, &mut rd);
                         delta += prog.delta(old, new);
+                        changed += (new != old) as u64;
                         activate(old, new, v, &mut activated);
                         // Sync must carry unchanged values across the swap.
                         write.store(v, if conditional && new == old { old } else { new });
@@ -317,6 +358,7 @@ fn worker<P: VertexProgram>(
                         let mut rd = SharedReaderShim(front);
                         let new = prog.update(v, &mut rd);
                         delta += prog.delta(old, new);
+                        changed += (new != old) as u64;
                         activate(old, new, v, &mut activated);
                         write.store(v, if conditional && new == old { old } else { new });
                     }
@@ -336,6 +378,7 @@ fn worker<P: VertexProgram>(
                     prog.update(v, &mut rd)
                 };
                 delta += prog.delta(old, new);
+                changed += (new != old) as u64;
                 activate(old, new, v, &mut activated);
                 let mut b = buf.borrow_mut();
                 if conditional && new == old {
@@ -358,11 +401,14 @@ fn worker<P: VertexProgram>(
             buf.borrow_mut().flush(global);
         }
 
+        let my_round_secs = my_t0.elapsed().as_secs_f64();
         ctrl.deltas[t].store(delta.to_bits(), Ordering::Relaxed);
         ctrl.flushes[t].store(buf.borrow().flushes(), Ordering::Relaxed);
         ctrl.processed[t].store(processed, Ordering::Relaxed);
+        ctrl.changed[t].store(changed, Ordering::Relaxed);
         ctrl.activated[t].store(activated, Ordering::Relaxed);
         ctrl.steals[t].store(steals, Ordering::Relaxed);
+        ctrl.delta_used[t].store(buf.borrow().capacity() as u64, Ordering::Relaxed);
 
         // ---- barrier 1: all writes of the round done ----
         ctrl.barrier.wait();
@@ -381,6 +427,32 @@ fn worker<P: VertexProgram>(
         if let Some(gr) = grid {
             gr.part(t).reset();
         }
+        if let Some(c) = ctl.as_mut() {
+            // Adaptive δ: digest this round's telemetry and resize the
+            // (flushed-empty) buffer before the next round begins. The
+            // resize is purely thread-local — no other thread ever touches
+            // this buffer, stolen chunks ride the *executing* thread's
+            // buffer via `seek` — so racing the steal deque is safe.
+            let total_changed: u64 = ctrl.changed.iter().map(|x| x.load(Ordering::Relaxed)).sum();
+            let residual: f64 = ctrl.deltas.iter().map(|d| f64::from_bits(d.load(Ordering::Relaxed))).sum();
+            let residual_ratio =
+                if prev_residual.is_finite() && prev_residual > 0.0 { residual / prev_residual } else { 1.0 };
+            prev_residual = residual;
+            let mut b = buf.borrow_mut();
+            let tel = Telemetry {
+                processed,
+                flush_lines: b.lines_flushed() - prev_flush_lines,
+                flush_cost: b.take_flush_secs(),
+                round_cost: my_round_secs,
+                density: total_changed as f64 / n.max(1) as f64,
+                residual_ratio,
+            };
+            prev_flush_lines = b.lines_flushed();
+            let next = c.observe(&tel);
+            if next != b.capacity() {
+                b.resize(next);
+            }
+        }
 
         if t == 0 {
             let round_delta: f64 = ctrl.deltas.iter().map(|d| f64::from_bits(d.load(Ordering::Relaxed))).sum();
@@ -395,6 +467,11 @@ fn worker<P: VertexProgram>(
                 flushes: total_flushes - prev_flushes,
                 active: total_active,
                 steals: total_steals,
+                delta_trace: if adaptive {
+                    ctrl.delta_used.iter().map(|d| d.load(Ordering::Relaxed) as usize).collect()
+                } else {
+                    Vec::new()
+                },
             });
             let conv = prog.converged(round_delta);
             if conv || rounds.len() >= cfg.max_rounds {
@@ -421,6 +498,7 @@ fn worker<P: VertexProgram>(
         if t == 0 {
             t0 = Instant::now();
         }
+        my_t0 = Instant::now();
         round += 1;
     }
 }
@@ -462,6 +540,7 @@ pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -
             flushes: 0,
             active: n as u64,
             steals: 0,
+            delta_trace: Vec::new(),
         });
         if prog.converged(delta) {
             converged = true;
@@ -740,6 +819,56 @@ mod tests {
             assert!(r.converged, "{mode:?}");
             assert_eq!(r.values.len(), 3, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn adaptive_mode_reaches_fixed_point_every_schedule_and_stealing() {
+        let g = GapGraph::Kron.generate(9, 8);
+        let oracle = fixed_point_serial(&g);
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                let mut cfg = EngineConfig::new(4, ExecutionMode::Adaptive).with_schedule(sched);
+                if steal {
+                    cfg = cfg.with_stealing();
+                }
+                let r = run(&g, &MaxProp { g: &g }, &cfg);
+                assert!(r.converged, "{sched:?} steal={steal}");
+                assert_eq!(r.values, oracle, "{sched:?} steal={steal}");
+                // Every round carries a full per-thread δ trace,
+                // cache-line rounded.
+                for rs in &r.rounds {
+                    assert_eq!(rs.delta_trace.len(), r.threads, "{sched:?} steal={steal}");
+                    for &d in &rs.delta_trace {
+                        assert_eq!(d % crate::VALUES_PER_LINE, 0, "{sched:?} steal={steal}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_trace_seeds_from_offline_rule() {
+        // Low-locality graph: round 0's δ equals the offline dense rule
+        // over each thread's own range; non-adaptive runs carry no trace.
+        let g = GapGraph::Urand.generate(9, 8);
+        let cfg = EngineConfig::new(4, ExecutionMode::Adaptive);
+        let pm = cfg.partition_map(&g);
+        let r = run(&g, &MaxProp { g: &g }, &cfg);
+        let loc = properties::diagonal_locality(&g, 4);
+        for (t, &d) in r.rounds[0].delta_trace.iter().enumerate() {
+            let max = round_delta(pm.len(t));
+            assert_eq!(d, controller::seed_delta(loc, pm.len(t), max), "thread {t}");
+        }
+        let st = run(&g, &MaxProp { g: &g }, &EngineConfig::new(4, ExecutionMode::Delayed(64)));
+        assert!(st.rounds.iter().all(|rs| rs.delta_trace.is_empty()), "static runs carry no trace");
+    }
+
+    #[test]
+    fn adaptive_with_more_threads_than_vertices() {
+        let g = crate::graph::GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(8, ExecutionMode::Adaptive).with_stealing());
+        assert!(r.converged);
+        assert_eq!(r.values.len(), 3);
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub struct CostModel {
     /// per stolen chunk; owner-side claims stay on an owned line and are
     /// folded into `vertex_base`.
     pub steal: u64,
+    /// Reallocating a delay buffer when the adaptive controller resizes
+    /// δ between rounds (an allocator round trip plus first-touch of the
+    /// new lines). Charged to the resizing thread at its next round
+    /// start.
+    pub resize: u64,
 }
 
 impl Default for CostModel {
@@ -47,6 +52,7 @@ impl Default for CostModel {
             edge_compute: 2,
             buffer_push: 1,
             steal: 40,
+            resize: 200,
         }
     }
 }
@@ -126,6 +132,9 @@ mod tests {
         // Stealing pays a contended CAS: pricier than local work, cheaper
         // than a cross-socket forward.
         assert!(c.steal >= c.llc && c.steal < c.remote_socket);
+        // A resize is an allocator round trip: pricier than any single
+        // memory access, far below a round's work.
+        assert!(c.resize >= c.dram);
     }
 
     #[test]

@@ -40,13 +40,14 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 use std::ops::Range;
 
+use super::controller::{self, DeltaController, Telemetry};
 use super::delay_buffer::round_delta;
 use super::program::{ValueReader, VertexProgram};
 use super::schedule::{bits, SchedulePolicy, ADAPTIVE_SPARSE_DIVISOR};
 use super::stats::{RoundStats, RunResult};
 use super::steal::DEFAULT_CHUNK;
 use super::{EngineConfig, ExecutionMode};
-use crate::graph::{Csr, VertexId};
+use crate::graph::{properties, Csr, VertexId};
 use crate::partition::{chunk_bounds, PartitionMap};
 use cache::LineTable;
 use cost::Machine;
@@ -90,6 +91,18 @@ impl SimBuffer {
         let off = v.checked_sub(self.base)? as usize;
         self.data.get(off).copied()
     }
+}
+
+/// Per-thread, per-round flush accounting — the simulator twin of the
+/// native `DelayBuffer` counters, feeding both [`RoundStats::flushes`]
+/// and the adaptive controller's telemetry.
+#[derive(Debug, Default, Clone, Copy)]
+struct FlushAcct {
+    flushes: u64,
+    /// Cache lines the flushes dirtied.
+    lines: u64,
+    /// Cycles charged for the flushes.
+    cycles: u64,
 }
 
 /// One stealable unit of a round's sweep: a dense vertex span or (on
@@ -277,6 +290,23 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
     let mut table = LineTable::new(n);
     let mut table_back = LineTable::new(n);
 
+    // Adaptive mode: one deterministic controller per logical thread,
+    // seeded exactly like the native executor (§IV-C locality gate over
+    // the offline rule). All of its telemetry below is cycle-exact, so
+    // the per-round δ trace is bit-identical across repeated runs.
+    let adaptive = matches!(cfg.mode, ExecutionMode::Adaptive);
+    let mut controllers: Vec<DeltaController> = if adaptive {
+        let locality = properties::diagonal_locality(g, t_count.max(2));
+        (0..t_count)
+            .map(|t| {
+                let max = round_delta(if cfg.stealing { n } else { pm.len(t) });
+                DeltaController::new(controller::seed_delta(locality, pm.len(t), max), max)
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+
     // Stealing can hand a thread chunks anywhere in the graph, so the
     // delayed-mode buffer caps against n instead of the own range (sync
     // mode never stages — the double buffer is the delay).
@@ -284,6 +314,8 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
         .map(|t| {
             let cap = if sync_mode {
                 0
+            } else if adaptive {
+                controllers[t].delta()
             } else if cfg.stealing {
                 cfg.effective_delta(n)
             } else {
@@ -314,11 +346,20 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
     let mut nxt = bits::words_for(n);
     let mut sparse = false; // round 0 is always dense
     let mut prev_lists: Option<Vec<Vec<VertexId>>> = None;
+    // Adaptive bookkeeping: the allocator cost of a between-round resize
+    // lands at the resizing thread's next round start, and the residual
+    // ratio needs the previous round's summed delta.
+    let mut resize_carry = vec![0u64; t_count];
+    let mut prev_residual = f64::INFINITY;
 
     while rounds.len() < cfg.max_rounds {
-        let mut clocks = vec![clock_base; t_count];
+        let round_start = clock_base;
+        let mut clocks: Vec<u64> = (0..t_count).map(|t| clock_base + std::mem::take(&mut resize_carry[t])).collect();
         let mut deltas = vec![0.0f64; t_count];
-        let mut flushes = 0u64;
+        let mut facct = vec![FlushAcct::default(); t_count];
+        // Vertices whose stored value changed this round — the adaptive
+        // controller's update-density signal.
+        let mut changed = 0u64;
 
         // Materialize per-thread worklists for sparse rounds (dense
         // rounds iterate partition ranges directly, as before).
@@ -417,7 +458,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                                     &mut metrics,
                                     machine,
                                     t_count,
-                                    &mut flushes,
+                                    &mut facct[t],
                                 );
                             }
                             break;
@@ -500,7 +541,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                                 &mut metrics,
                                 machine,
                                 t_count,
-                                &mut flushes,
+                                &mut facct[t],
                             );
                             buf.base = v;
                         }
@@ -515,8 +556,16 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                         }
                     } else if conditional && new == old {
                         // Publish pending, skip this slot.
-                        cost +=
-                            flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
+                        cost += flush_buffer(
+                            t,
+                            buf,
+                            &mut values,
+                            &mut table,
+                            &mut metrics,
+                            machine,
+                            t_count,
+                            &mut facct[t],
+                        );
                         buf.base += 1;
                     } else {
                         if buf.data.len() == buf.cap {
@@ -528,7 +577,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                                 &mut metrics,
                                 machine,
                                 t_count,
-                                &mut flushes,
+                                &mut facct[t],
                             );
                         }
                         buf.data.push(new);
@@ -545,6 +594,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                 }
 
                 deltas[t] += prog.delta(old, new);
+                changed += (new != old) as u64;
                 idx[t] += 1;
                 clock += cost;
                 clocks[t] = clock;
@@ -557,8 +607,16 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                     if !sync_mode {
                         // End of range: final flush, charged to this thread.
                         let buf = &mut buffers[t];
-                        clocks[t] +=
-                            flush_buffer(t, buf, &mut values, &mut table, &mut metrics, machine, t_count, &mut flushes);
+                        clocks[t] += flush_buffer(
+                            t,
+                            buf,
+                            &mut values,
+                            &mut table,
+                            &mut metrics,
+                            machine,
+                            t_count,
+                            &mut facct[t],
+                        );
                     }
                     break;
                 }
@@ -585,13 +643,42 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
         rounds.push(RoundStats {
             time_s: round_cycles as f64 / machine.clock_hz,
             delta: round_delta,
-            flushes,
+            flushes: facct.iter().map(|a| a.flushes).sum(),
             active: total_active,
             steals: ws.as_ref().map_or(0, |w| w.steals),
+            // Captured before the controllers observe: the δ in effect
+            // *during* this round.
+            delta_trace: if adaptive { controllers.iter().map(|c| c.delta()).collect() } else { Vec::new() },
         });
         if prog.converged(round_delta) {
             converged = true;
             break;
+        }
+
+        if adaptive {
+            // Deterministic mirror of the native controller step: all
+            // inputs are cycle counts and deterministic aggregates, so
+            // the δ trace is bit-identical across repeated runs. A resize
+            // charges `cost.resize` at the thread's next round start.
+            let residual_ratio =
+                if prev_residual.is_finite() && prev_residual > 0.0 { round_delta / prev_residual } else { 1.0 };
+            prev_residual = round_delta;
+            let density = changed as f64 / n.max(1) as f64;
+            for t in 0..t_count {
+                let tel = Telemetry {
+                    processed: idx[t] as u64,
+                    flush_lines: facct[t].lines,
+                    flush_cost: facct[t].cycles as f64,
+                    round_cost: (clocks[t] - round_start) as f64,
+                    density,
+                    residual_ratio,
+                };
+                let next = controllers[t].observe(&tel);
+                if next != buffers[t].cap {
+                    buffers[t].cap = next;
+                    resize_carry[t] = machine.cost.resize;
+                }
+            }
         }
 
         if frontier_on {
@@ -622,7 +709,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
 }
 
 /// Publish a SimBuffer: one coherence write per cache line spanned plus a
-/// line-sized copy. Returns the cycle cost.
+/// line-sized copy. Returns the cycle cost (also accumulated in `acct`).
 #[allow(clippy::too_many_arguments)]
 fn flush_buffer(
     t: usize,
@@ -632,7 +719,7 @@ fn flush_buffer(
     metrics: &mut SimMetrics,
     machine: &Machine,
     active: usize,
-    flushes: &mut u64,
+    acct: &mut FlushAcct,
 ) -> u64 {
     if buf.data.is_empty() {
         return 0;
@@ -652,7 +739,9 @@ fn flush_buffer(
     }
     buf.base += len as VertexId;
     buf.data.clear();
-    *flushes += 1;
+    acct.flushes += 1;
+    acct.lines += (last_line - first_line + 1) as u64;
+    acct.cycles += cost;
     cost
 }
 
@@ -901,6 +990,61 @@ mod tests {
             }
         }
         b.build()
+    }
+
+    #[test]
+    fn adaptive_trace_bit_identical_across_runs() {
+        let g = GapGraph::Kron.generate(8, 8);
+        let p = MaxProp { g: &g };
+        let m = Machine::haswell();
+        let oracle = crate::engine::native::run_serial_sync(&g, &p, 10_000).values;
+        for steal in [false, true] {
+            for sched in [SchedulePolicy::Dense, SchedulePolicy::Frontier] {
+                let mut cfg = EngineConfig::new(8, ExecutionMode::Adaptive).with_schedule(sched);
+                if steal {
+                    cfg = cfg.with_stealing();
+                }
+                let a = run(&g, &p, &cfg, &m);
+                let b = run(&g, &p, &cfg, &m);
+                assert_eq!(a.result.values, oracle, "steal={steal} {sched:?}");
+                assert_eq!(a.result.values, b.result.values, "steal={steal} {sched:?}");
+                assert_eq!(a.metrics, b.metrics, "steal={steal} {sched:?}");
+                let ta: Vec<&[usize]> = a.result.rounds.iter().map(|r| r.delta_trace.as_slice()).collect();
+                let tb: Vec<&[usize]> = b.result.rounds.iter().map(|r| r.delta_trace.as_slice()).collect();
+                assert_eq!(ta, tb, "δ trace must be bit-identical (steal={steal}, {sched:?})");
+                assert!(ta.iter().all(|tr| tr.len() == 8), "one δ per thread per round");
+            }
+        }
+    }
+
+    /// Banded graph: every edge stays within ±2 ids, so nearly all edges
+    /// are internal to their partition block — diagonal locality far
+    /// above the §IV-C gate, which must seed the controller at δ = 0.
+    fn banded_graph(n: usize) -> Csr {
+        let mut b = crate::graph::GraphBuilder::new(n);
+        for v in 2..n as VertexId {
+            b.push(v - 1, v, 1);
+            b.push(v - 2, v, 1);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn adaptive_zero_delta_means_zero_flushes() {
+        let g = banded_graph(512);
+        let p = MaxProp { g: &g };
+        let s = run(&g, &p, &EngineConfig::new(8, ExecutionMode::Adaptive), &Machine::haswell());
+        assert!(
+            s.result.rounds[0].delta_trace.iter().all(|&d| d == 0),
+            "high locality must seed δ=0: {:?}",
+            s.result.rounds[0].delta_trace
+        );
+        for r in &s.result.rounds {
+            if r.delta_trace.iter().all(|&d| d == 0) {
+                assert_eq!(r.flushes, 0, "δ=0 rounds charge no flushes");
+            }
+        }
+        assert_eq!(s.result.total_flushes(), 0, "controller never left async");
     }
 
     #[test]

@@ -20,6 +20,12 @@ pub struct RoundStats {
     /// Chunks executed by a thread other than their owner this round
     /// (zero under the paper's static schedule; see `engine::steal`).
     pub steals: u64,
+    /// Per-thread δ in effect during this round under
+    /// [`ExecutionMode::Adaptive`] (`delta_trace[t]` = thread `t`'s
+    /// delay-buffer capacity, cache-line rounded, 0 = asynchronous).
+    /// Empty for every other mode: static δ never changes, so a trace
+    /// would carry no information.
+    pub delta_trace: Vec<usize>,
 }
 
 /// Result of one engine run.
@@ -82,6 +88,24 @@ impl RunResult {
     pub fn values_f32(&self) -> Vec<f32> {
         self.values.iter().map(|&b| f32::from_bits(b)).collect()
     }
+
+    /// Thread `t`'s per-round δ under the adaptive controller (empty for
+    /// non-adaptive runs or out-of-range `t`).
+    pub fn delta_trace_of(&self, t: usize) -> Vec<usize> {
+        self.rounds.iter().filter_map(|r| r.delta_trace.get(t).copied()).collect()
+    }
+
+    /// Median δ across threads in the final round — the operating point
+    /// the adaptive controller settled on (`None` for non-adaptive runs).
+    pub fn final_delta_median(&self) -> Option<usize> {
+        let last = self.rounds.last()?;
+        if last.delta_trace.is_empty() {
+            return None;
+        }
+        let mut v = last.delta_trace.clone();
+        v.sort_unstable();
+        Some(v[v.len() / 2])
+    }
 }
 
 #[cfg(test)]
@@ -92,8 +116,8 @@ mod tests {
         RunResult {
             values: vec![1f32.to_bits(), 2f32.to_bits()],
             rounds: vec![
-                RoundStats { time_s: 0.5, delta: 1.0, flushes: 3, active: 2, steals: 1 },
-                RoundStats { time_s: 1.5, delta: 0.0, flushes: 2, active: 1, steals: 0 },
+                RoundStats { time_s: 0.5, delta: 1.0, flushes: 3, active: 2, steals: 1, delta_trace: vec![64, 32] },
+                RoundStats { time_s: 1.5, delta: 0.0, flushes: 2, active: 1, steals: 0, delta_trace: vec![32, 32] },
             ],
             mode: ExecutionMode::Delayed(64),
             schedule: SchedulePolicy::Frontier,
@@ -113,6 +137,10 @@ mod tests {
         assert_eq!(r.total_steals(), 1);
         assert_eq!(r.active_counts(), vec![2, 1]);
         assert_eq!(r.values_f32(), vec![1.0, 2.0]);
+        assert_eq!(r.delta_trace_of(0), vec![64, 32]);
+        assert_eq!(r.delta_trace_of(1), vec![32, 32]);
+        assert!(r.delta_trace_of(2).is_empty());
+        assert_eq!(r.final_delta_median(), Some(32));
     }
 
     #[test]
@@ -121,5 +149,7 @@ mod tests {
         r.rounds.clear();
         assert_eq!(r.avg_round_time(), 0.0);
         assert_eq!(r.total_active(), 0);
+        assert_eq!(r.final_delta_median(), None);
+        assert!(r.delta_trace_of(0).is_empty());
     }
 }

@@ -66,21 +66,39 @@ commands:
 common options:
   --graph kron|urand|twitter|web|road   --scale N (log2 vertices)
   --ef N (edge factor)                  --algo pagerank|sssp|cc|bfs
-  --mode sync|async|dN                  --threads N
+  --mode sync|async|dN|adaptive         --threads N
   --engine sim|native                   --machine haswell|cascadelake
   --schedule dense|frontier|adaptive    (which vertices each round sweeps)
   --steal                               (work-stealing round execution)
+
+`--mode adaptive` runs the online δ controller: each worker resizes its
+delay buffer between rounds from flush-contention / frontier-density /
+residual telemetry (see `daig experiment adaptive` for its regret vs the
+exhaustive static sweep).
 ";
 
 /// Parse the `--schedule` option (default dense, the paper's behavior).
+/// Unknown labels are a hard error naming the offending input — never a
+/// silent fallback.
 fn parse_schedule(args: &Args) -> Result<SchedulePolicy> {
-    SchedulePolicy::from_label(&args.opt_str("schedule", "dense")).context("bad --schedule")
+    let label = args.opt_str("schedule", "dense");
+    SchedulePolicy::from_label(&label)
+        .with_context(|| format!("bad --schedule '{label}' (expected dense | frontier | adaptive)"))
 }
 
-/// Render the per-round active-vertex trajectory, elided in the middle
-/// for long runs — the visible evidence that sparse scheduling engages.
-fn fmt_actives(r: &RunResult) -> String {
-    let a = r.active_counts();
+/// Parse the `--mode` option. `ExecutionMode::from_label` returns `None`
+/// for anything it does not recognize; surfacing the rejected label here
+/// is what keeps typos like `--mode d256x` from silently running a
+/// default configuration.
+fn parse_mode(args: &Args, default: &str) -> Result<ExecutionMode> {
+    let label = args.opt_str("mode", default);
+    ExecutionMode::from_label(&label)
+        .with_context(|| format!("bad --mode '{label}' (expected sync | async | dN | adaptive)"))
+}
+
+/// Elide a long per-round series in the middle (shared by the
+/// active-vertex and adaptive-δ trajectories).
+fn fmt_series(a: &[u64]) -> String {
     let shown: Vec<String> = if a.len() <= 12 {
         a.iter().map(u64::to_string).collect()
     } else {
@@ -90,6 +108,19 @@ fn fmt_actives(r: &RunResult) -> String {
         s
     };
     format!("[{}]", shown.join(", "))
+}
+
+/// Render the per-round active-vertex trajectory, elided in the middle
+/// for long runs — the visible evidence that sparse scheduling engages.
+fn fmt_actives(r: &RunResult) -> String {
+    fmt_series(&r.active_counts())
+}
+
+/// Render thread 0's per-round δ trajectory — the visible evidence that
+/// the adaptive controller engages (empty trace = non-adaptive run).
+fn fmt_deltas(r: &RunResult) -> String {
+    let t0: Vec<u64> = r.delta_trace_of(0).into_iter().map(|d| d as u64).collect();
+    fmt_series(&t0)
 }
 
 fn parse_workload(args: &Args) -> Result<(Workload, Csr)> {
@@ -106,7 +137,7 @@ fn parse_workload(args: &Args) -> Result<(Workload, Csr)> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let (w, g) = parse_workload(args)?;
-    let mode = ExecutionMode::from_label(&args.opt_str("mode", "d256")).context("bad --mode")?;
+    let mode = parse_mode(args, "d256")?;
     let threads: usize = args.opt("threads", 32)?;
     let schedule = parse_schedule(args)?;
     let mut ecfg = EngineConfig::new(threads, mode).with_schedule(schedule);
@@ -142,6 +173,13 @@ fn cmd_run(args: &Args) -> Result<()> {
             if schedule != SchedulePolicy::Dense {
                 println!("active/round = {}", fmt_actives(&r));
             }
+            if mode == ExecutionMode::Adaptive {
+                println!(
+                    "δ/round (t0) = {} (final median δ = {})",
+                    fmt_deltas(&r),
+                    r.final_delta_median().unwrap_or(0)
+                );
+            }
         }
         "sim" => {
             let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
@@ -160,6 +198,13 @@ fn cmd_run(args: &Args) -> Result<()> {
             );
             if schedule != SchedulePolicy::Dense {
                 println!("active/round = {}", fmt_actives(&s.result));
+            }
+            if mode == ExecutionMode::Adaptive {
+                println!(
+                    "δ/round (t0) = {} (final median δ = {})",
+                    fmt_deltas(&s.result),
+                    s.result.final_delta_median().unwrap_or(0)
+                );
             }
         }
         other => bail!("unknown engine '{other}'"),

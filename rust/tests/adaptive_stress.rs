@@ -1,0 +1,123 @@
+//! Concurrency stress: the adaptive controller's between-round buffer
+//! resizes racing the steal deque. The workload is engineered so that
+//! *every* round both steals chunks and gives the controllers reason to
+//! move: a hub block concentrates nearly all pull work in the first
+//! partition (stealable straggler chunks, as in the engine's skew
+//! tests) while a backward chain keeps the run alive for hundreds of
+//! short rounds (one label hop per round) and keeps re-activating the
+//! hubs. Assertions: no update is ever lost (the fixed point matches
+//! the serial oracle bit-exactly on every iteration) and the
+//! steals/flushes/δ-trace accounting stays consistent.
+
+use daig::engine::program::{ValueReader, VertexProgram};
+use daig::engine::{native, EngineConfig, ExecutionMode, PartitionStrategy, SchedulePolicy};
+use daig::graph::{Csr, GraphBuilder, VertexId};
+
+/// 4096 vertices over 8 equal-vertex partitions = 512 per partition =
+/// two cache-line-aligned chunks each, so the straggler partition always
+/// has a trailing chunk for thieves to take.
+const N: usize = 4096;
+/// Hub vertices: every vertex feeds each of them, so partition 0's first
+/// chunk holds almost all pull work (with equal-vertex partitioning) and
+/// its owner is a guaranteed straggler.
+const HUBS: u32 = 8;
+/// Backward chain over the top ids: label 0 starts at the far end and
+/// moves exactly one vertex per round — >100 short rounds, each of which
+/// re-activates every hub.
+const CHAIN_START: u32 = (N - 128) as u32;
+
+fn stress_graph() -> Csr {
+    let mut b = GraphBuilder::new(N);
+    for v in 0..N as VertexId {
+        for h in 0..HUBS {
+            if v != h {
+                b.push(v, h, 1);
+            }
+        }
+    }
+    for v in (CHAIN_START + 1)..N as VertexId {
+        b.push(v, v - 1, 1); // v-1 pulls from v
+    }
+    b.build()
+}
+
+/// Min-label flood whose only zero starts at the chain's far end.
+struct MinProp<'g>(&'g Csr);
+
+impl VertexProgram for MinProp<'_> {
+    fn name(&self) -> &'static str {
+        "minprop-stress"
+    }
+    fn init(&self, v: VertexId) -> u32 {
+        if v == N as VertexId - 1 {
+            0
+        } else {
+            100_000 + v
+        }
+    }
+    fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let mut best = r.read(v);
+        for &u in self.0.in_neighbors(v) {
+            best = best.min(r.read(u));
+        }
+        best
+    }
+    fn delta(&self, old: u32, new: u32) -> f64 {
+        (old != new) as u32 as f64
+    }
+    fn converged(&self, d: f64) -> bool {
+        d == 0.0
+    }
+}
+
+#[test]
+fn adaptive_resize_races_steal_deque() {
+    let g = stress_graph();
+    let p = MinProp(&g);
+    let oracle = native::run_serial_sync(&g, &p, 10_000).values;
+    // Equal-vertex partitioning pins the hub work to partition 0; eight
+    // workers oversubscribe the host so the thieves' claim CAS and the
+    // owners' between-barrier resizes interleave aggressively.
+    for sched in [SchedulePolicy::Dense, SchedulePolicy::Frontier, SchedulePolicy::Adaptive] {
+        for iter in 0..2 {
+            let cfg = EngineConfig::new(8, ExecutionMode::Adaptive)
+                .with_partition(PartitionStrategy::EqualVertex)
+                .with_schedule(sched)
+                .with_stealing();
+            let r = native::run(&g, &p, &cfg);
+            let tag = format!("{sched:?} iter={iter}");
+            assert!(r.converged, "{tag}");
+            // No lost updates, ever: the fixed point is exact.
+            assert_eq!(r.values, oracle, "{tag}");
+            // The chain forces a long run: plenty of rounds for resizes
+            // to race claims.
+            assert!(r.num_rounds() > 100, "{tag}: expected a long run, got {} rounds", r.num_rounds());
+            // Accounting stays consistent under the races.
+            let mut flushes_sum = 0u64;
+            let mut steals_sum = 0u64;
+            for rs in &r.rounds {
+                assert_eq!(rs.delta_trace.len(), r.threads, "{tag}: trace width");
+                for &d in &rs.delta_trace {
+                    assert_eq!(d % 16, 0, "{tag}: δ={d} not cache-line rounded");
+                }
+                if rs.delta_trace.iter().all(|&d| d == 0) {
+                    assert_eq!(rs.flushes, 0, "{tag}: δ=0 round charged flushes");
+                }
+                assert!(rs.flushes < 1 << 40, "{tag}: flush counter wrapped: {}", rs.flushes);
+                flushes_sum += rs.flushes;
+                steals_sum += rs.steals;
+            }
+            assert_eq!(flushes_sum, r.total_flushes(), "{tag}");
+            assert_eq!(steals_sum, r.total_steals(), "{tag}");
+            assert!(r.total_steals() > 0, "{tag}: the hub straggler must get its chunks stolen");
+        }
+    }
+    // Control: the same adaptive workload without stealing reports zero
+    // steals and the same fixed point.
+    let static_cfg = EngineConfig::new(8, ExecutionMode::Adaptive)
+        .with_partition(PartitionStrategy::EqualVertex)
+        .with_schedule(SchedulePolicy::Frontier);
+    let st = native::run(&g, &p, &static_cfg);
+    assert_eq!(st.total_steals(), 0);
+    assert_eq!(st.values, oracle);
+}

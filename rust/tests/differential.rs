@@ -1,0 +1,233 @@
+//! Differential test harness: the **full** execution matrix —
+//! every [`ExecutionMode`] (sync, async, delayed, adaptive) × every
+//! algorithm (PageRank, SSSP, CC, BFS) × every [`SchedulePolicy`]
+//! (dense, frontier, adaptive) × stealing {off, on} — on seeded random
+//! graphs of three topology classes:
+//!
+//! * **uniform** — edges drawn uniformly (urand-like; low diagonal
+//!   locality, the buffering-friendly regime),
+//! * **skewed** — destinations biased toward low ids (kron/twitter-like
+//!   hubs; exercises the straggler/steal path and degree imbalance),
+//! * **near-diagonal** — edges confined to a narrow band (web-like;
+//!   diagonal locality above the §IV-C gate, so the adaptive controller
+//!   seeds at δ = 0).
+//!
+//! Every cell is asserted against the serial oracles in
+//! `algorithms/oracle.rs` (unique fixed points compare bit-exactly;
+//! PageRank compares bit-exactly in synchronous mode and to 1e-3
+//! against the deterministic sync baseline under async interleavings).
+//! The per-feature parity suites (`schedule_parity.rs`, engine unit
+//! tests) sample this matrix; this harness is the exhaustive closure.
+//! CI runs it twice: debug with the workspace suite and `--release`
+//! with real thread counts (see `.github/workflows/ci.yml`).
+
+use daig::algorithms::{bfs, cc, oracle, pagerank, sssp};
+use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
+use daig::graph::{Csr, GraphBuilder};
+use daig::util::rng::SplitMix64;
+
+const MODES: [ExecutionMode; 4] = [
+    ExecutionMode::Synchronous,
+    ExecutionMode::Asynchronous,
+    ExecutionMode::Delayed(32),
+    ExecutionMode::Adaptive,
+];
+const THREADS: usize = 4;
+
+/// One configuration cell of the matrix.
+fn cfg(mode: ExecutionMode, sched: SchedulePolicy, steal: bool) -> EngineConfig {
+    let c = EngineConfig::new(THREADS, mode).with_schedule(sched);
+    if steal {
+        c.with_stealing()
+    } else {
+        c
+    }
+}
+
+/// Every (mode, schedule, stealing) cell.
+fn matrix() -> Vec<(ExecutionMode, SchedulePolicy, bool)> {
+    let mut cells = Vec::new();
+    for mode in MODES {
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                cells.push((mode, sched, steal));
+            }
+        }
+    }
+    cells
+}
+
+fn build(n: usize, edges: &[(u32, u32)], weighted: bool, rng: &mut SplitMix64) -> Csr {
+    let mut b = GraphBuilder::new(n);
+    if weighted {
+        b = b.with_weights();
+    }
+    for &(s, d) in edges {
+        let w = rng.range_u32(1, 64);
+        b.push(s, d, w);
+    }
+    b.build()
+}
+
+/// Uniform random digraph (urand-like).
+fn uniform_graph(seed: u64, n: usize, m: usize, weighted: bool) -> Csr {
+    let mut rng = SplitMix64::new(seed);
+    let edges: Vec<(u32, u32)> =
+        (0..m).map(|_| (rng.index(n) as u32, rng.index(n) as u32)).collect();
+    build(n, &edges, weighted, &mut rng)
+}
+
+/// Destination-skewed digraph (kron/twitter-like): destinations biased
+/// toward low ids by nesting two uniform draws, so a handful of hub
+/// vertices collect most of the pull work.
+fn skewed_graph(seed: u64, n: usize, m: usize, weighted: bool) -> Csr {
+    let mut rng = SplitMix64::new(seed);
+    let edges: Vec<(u32, u32)> = (0..m)
+        .map(|_| {
+            let d = rng.index(rng.index(n) + 1) as u32;
+            (rng.index(n) as u32, d)
+        })
+        .collect();
+    build(n, &edges, weighted, &mut rng)
+}
+
+/// Banded digraph (web-like): every edge stays within ±8 ids, so almost
+/// all edges are internal to their partition block.
+fn near_diagonal_graph(seed: u64, n: usize, m: usize, weighted: bool) -> Csr {
+    let mut rng = SplitMix64::new(seed);
+    let edges: Vec<(u32, u32)> = (0..m)
+        .map(|_| {
+            let s = rng.index(n);
+            let off = rng.index(17) as i64 - 8;
+            let d = (s as i64 + off).rem_euclid(n as i64) as u32;
+            (s as u32, d)
+        })
+        .collect();
+    build(n, &edges, weighted, &mut rng)
+}
+
+/// The three topology classes at harness scale. Distinct seeds per
+/// weighted/unweighted so SSSP does not reuse the unweighted layouts.
+fn graphs(weighted: bool) -> Vec<(&'static str, Csr)> {
+    let s = if weighted { 0xD1FF_0100 } else { 0xD1FF_0200 };
+    vec![
+        ("uniform", uniform_graph(s + 1, 180, 900, weighted)),
+        ("skewed", skewed_graph(s + 2, 180, 900, weighted)),
+        ("near-diagonal", near_diagonal_graph(s + 3, 180, 1200, weighted)),
+    ]
+}
+
+#[test]
+fn differential_sssp_full_matrix() {
+    for (gname, g) in graphs(true) {
+        let src = sssp::default_source(&g);
+        let want = oracle::dijkstra(&g, src);
+        for (mode, sched, steal) in matrix() {
+            let r = sssp::run_native(&g, src, &cfg(mode, sched, steal));
+            assert!(r.run.converged, "sssp {gname} {mode:?}/{sched:?} steal={steal}");
+            assert_eq!(r.dist, want, "sssp {gname} {mode:?}/{sched:?} steal={steal}");
+        }
+    }
+}
+
+#[test]
+fn differential_cc_full_matrix() {
+    for (gname, g) in graphs(false) {
+        let want = oracle::components(&g);
+        for (mode, sched, steal) in matrix() {
+            let r = cc::run_native(&g, &cfg(mode, sched, steal));
+            assert!(r.run.converged, "cc {gname} {mode:?}/{sched:?} steal={steal}");
+            assert_eq!(r.labels, want, "cc {gname} {mode:?}/{sched:?} steal={steal}");
+        }
+    }
+}
+
+#[test]
+fn differential_bfs_full_matrix() {
+    for (gname, g) in graphs(false) {
+        let src = sssp::default_source(&g);
+        let want = oracle::bfs_levels(&g, src);
+        for (mode, sched, steal) in matrix() {
+            let r = bfs::run_native(&g, src, &cfg(mode, sched, steal));
+            assert!(r.run.converged, "bfs {gname} {mode:?}/{sched:?} steal={steal}");
+            assert_eq!(r.levels, want, "bfs {gname} {mode:?}/{sched:?} steal={steal}");
+        }
+    }
+}
+
+#[test]
+fn differential_pagerank_full_matrix() {
+    let prcfg = pagerank::PrConfig::default();
+    for (gname, g) in graphs(false) {
+        // The serial Jacobi oracle anchors the engine's sync baseline…
+        let (oracle_scores, _) = oracle::pagerank(&g, prcfg.damping, prcfg.epsilon, 10_000);
+        let dense_sync = pagerank::run_native(&g, &EngineConfig::new(THREADS, ExecutionMode::Synchronous), &prcfg);
+        for (v, (a, b)) in dense_sync.values.iter().zip(&oracle_scores).enumerate() {
+            assert!((a - b).abs() < 1e-4, "{gname} sync vs serial oracle at v{v}: {a} vs {b}");
+        }
+        // …and every cell must agree with that baseline: bit-exactly in
+        // synchronous mode (the schedule/steal dimensions are invisible
+        // to deterministic Jacobi), to 1e-3 under async interleavings.
+        for (mode, sched, steal) in matrix() {
+            let r = pagerank::run_native(&g, &cfg(mode, sched, steal), &prcfg);
+            assert!(r.run.converged, "pagerank {gname} {mode:?}/{sched:?} steal={steal}");
+            if mode == ExecutionMode::Synchronous {
+                assert_eq!(
+                    r.run.values, dense_sync.run.values,
+                    "pagerank {gname} sync/{sched:?} steal={steal} must be bit-exact"
+                );
+            } else {
+                for v in 0..g.num_vertices() {
+                    assert!(
+                        (r.values[v] - dense_sync.values[v]).abs() < 1e-3,
+                        "pagerank {gname} {mode:?}/{sched:?} steal={steal} v{v}: {} vs {}",
+                        r.values[v],
+                        dense_sync.values[v]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_cells_carry_valid_traces() {
+    // The adaptive cells of the matrix must expose a full per-thread,
+    // cache-line-rounded δ trace; static cells must expose none.
+    for (gname, g) in graphs(false) {
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                let r = cc::run_native(&g, &cfg(ExecutionMode::Adaptive, sched, steal));
+                for rs in &r.run.rounds {
+                    assert_eq!(rs.delta_trace.len(), r.run.threads, "{gname} {sched:?} steal={steal}");
+                    for &d in &rs.delta_trace {
+                        assert_eq!(d % 16, 0, "{gname} {sched:?} steal={steal}: δ={d} not line-rounded");
+                    }
+                }
+                let st = cc::run_native(&g, &cfg(ExecutionMode::Delayed(32), sched, steal));
+                assert!(st.run.rounds.iter().all(|rs| rs.delta_trace.is_empty()), "{gname} static trace leak");
+            }
+        }
+    }
+}
+
+#[test]
+fn adaptive_sim_trace_deterministic_on_every_topology() {
+    // Acceptance criterion: the simulator's adaptive δ trace is
+    // bit-identical across repeated runs, on every topology class, with
+    // and without stealing.
+    use daig::engine::sim::cost::Machine;
+    let m = Machine::haswell();
+    for (gname, g) in graphs(false) {
+        for steal in [false, true] {
+            let c = cfg(ExecutionMode::Adaptive, SchedulePolicy::Frontier, steal);
+            let (a, sa) = cc::run_sim(&g, &c, &m);
+            let (b, sb) = cc::run_sim(&g, &c, &m);
+            assert_eq!(a.labels, b.labels, "{gname} steal={steal}");
+            assert_eq!(sa.metrics, sb.metrics, "{gname} steal={steal}");
+            let ta: Vec<&[usize]> = a.run.rounds.iter().map(|r| r.delta_trace.as_slice()).collect();
+            let tb: Vec<&[usize]> = b.run.rounds.iter().map(|r| r.delta_trace.as_slice()).collect();
+            assert_eq!(ta, tb, "{gname} steal={steal}: δ trace must be bit-identical");
+        }
+    }
+}

@@ -2,12 +2,13 @@
 //! framework; replay failures with DAIG_PROP_SEED=<master-seed>).
 
 use daig::algorithms::{oracle, pagerank, sssp};
+use daig::engine::controller::{grow_step, shrink_step};
 use daig::engine::delay_buffer::{round_delta, DelayBuffer};
 use daig::engine::native;
 use daig::engine::program::{ValueReader, VertexProgram};
 use daig::engine::shared::SharedValues;
 use daig::engine::sim::cost::Machine;
-use daig::engine::{EngineConfig, ExecutionMode};
+use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
 use daig::graph::{Csr, GraphBuilder, VertexId};
 use daig::prop::{forall, forall_res, Gen};
 
@@ -126,6 +127,162 @@ fn prop_sssp_all_modes_match_dijkstra() {
         let r = sssp::run_native(&graph, src, &EngineConfig::new(threads, mode));
         if r.dist != want {
             return Err(format!("{mode:?} t={threads} differs from dijkstra"));
+        }
+        Ok(())
+    });
+}
+
+/// Min-label propagation — unique fixed point, cheap updates; the
+/// workhorse for the adaptive-δ properties below.
+struct MinLabel<'g>(&'g Csr);
+
+impl VertexProgram for MinLabel<'_> {
+    fn name(&self) -> &'static str {
+        "minlabel"
+    }
+    fn init(&self, v: VertexId) -> u32 {
+        v.wrapping_mul(2654435761) >> 8
+    }
+    fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let mut best = r.read(v);
+        for &u in self.0.in_neighbors(v) {
+            best = best.min(r.read(u));
+        }
+        best
+    }
+    fn delta(&self, old: u32, new: u32) -> f64 {
+        (old != new) as u32 as f64
+    }
+    fn converged(&self, d: f64) -> bool {
+        d == 0.0
+    }
+}
+
+#[test]
+fn prop_adaptive_trace_line_rounded_bounded_and_stepwise() {
+    // The adaptive δ trace must be: one entry per thread per round,
+    // cache-line rounded, within the controller's [0, bound] box, and
+    // consecutive entries at most one grow/shrink step apart (reverts
+    // are one step back, so the relation is symmetric).
+    forall_res(24, |g| {
+        let graph = random_graph(g, false);
+        let threads = g.usize(1..7);
+        let stealing = g.chance(0.5);
+        let sched = *g.choose(&[SchedulePolicy::Dense, SchedulePolicy::Frontier, SchedulePolicy::Adaptive]);
+        let mut ecfg = EngineConfig::new(threads, ExecutionMode::Adaptive).with_schedule(sched);
+        if stealing {
+            ecfg = ecfg.with_stealing();
+        }
+        let pm = ecfg.partition_map(&graph);
+        let r = native::run(&graph, &MinLabel(&graph), &ecfg);
+        if !r.converged {
+            return Err("adaptive run did not converge".into());
+        }
+        for (i, rs) in r.rounds.iter().enumerate() {
+            if rs.delta_trace.len() != r.threads {
+                return Err(format!("round {i}: trace width {} != {}", rs.delta_trace.len(), r.threads));
+            }
+        }
+        for t in 0..r.threads {
+            let bound = round_delta(if stealing { graph.num_vertices() } else { pm.len(t) });
+            let trace = r.delta_trace_of(t);
+            for (i, &d) in trace.iter().enumerate() {
+                if d % 16 != 0 {
+                    return Err(format!("t{t} round {i}: δ={d} not line-rounded"));
+                }
+                if d > bound {
+                    return Err(format!("t{t} round {i}: δ={d} above bound {bound}"));
+                }
+            }
+            for (i, w) in trace.windows(2).enumerate() {
+                let (a, b) = (w[0], w[1]);
+                let one_step = b == a
+                    || b == grow_step(a, bound)
+                    || b == shrink_step(a)
+                    || a == grow_step(b, bound)
+                    || a == shrink_step(b);
+                if !one_step {
+                    return Err(format!("t{t} rounds {i}->{}: δ jumped {a} -> {b}", i + 1));
+                }
+            }
+        }
+        // δ = 0 everywhere ⇒ nothing was buffered ⇒ no flushes charged.
+        for (i, rs) in r.rounds.iter().enumerate() {
+            if rs.delta_trace.iter().all(|&d| d == 0) && rs.flushes != 0 {
+                return Err(format!("round {i}: all-zero δ but {} flushes", rs.flushes));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_adaptive_matches_static_fixed_point() {
+    // δ resizing is performance-only: the adaptive fixed point must be
+    // identical to the static run's on every topology/thread/schedule.
+    forall_res(24, |g| {
+        let graph = random_graph(g, false);
+        let threads = g.usize(1..7);
+        let sched = *g.choose(&[SchedulePolicy::Dense, SchedulePolicy::Frontier, SchedulePolicy::Adaptive]);
+        let stealing = g.chance(0.5);
+        let mut acfg = EngineConfig::new(threads, ExecutionMode::Adaptive).with_schedule(sched);
+        let mut scfg = EngineConfig::new(threads, ExecutionMode::Delayed(32)).with_schedule(sched);
+        if stealing {
+            acfg = acfg.with_stealing();
+            scfg = scfg.with_stealing();
+        }
+        let a = native::run(&graph, &MinLabel(&graph), &acfg);
+        let s = native::run(&graph, &MinLabel(&graph), &scfg);
+        if a.values != s.values {
+            return Err(format!("adaptive differs from static ({sched:?}, t={threads}, steal={stealing})"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_zero_capacity_buffer_never_charges_flushes() {
+    // δ = 0 ⇔ write-through: arbitrary push/skip/seek sequences on a
+    // zero-capacity buffer must store values correctly and never count a
+    // flush (the engine-level `δ=0 ⇒ no flushes` invariant in miniature).
+    forall_res(96, |g| {
+        let total = g.usize(16..200);
+        let shared = SharedValues::from_bits(vec![u32::MAX; total]);
+        let mut buf = DelayBuffer::new(0);
+        let mut expected = vec![u32::MAX; total];
+        let mut pos = 0u32;
+        buf.begin(0);
+        for i in 0..g.usize(1..100) {
+            match g.usize(0..10) {
+                0..=5 => {
+                    if (pos as usize) < total {
+                        buf.push(&shared, i as u32);
+                        expected[pos as usize] = i as u32;
+                        pos += 1;
+                    }
+                }
+                6..=7 => {
+                    if (pos as usize) < total {
+                        buf.skip(&shared);
+                        pos += 1;
+                    }
+                }
+                _ => {
+                    pos = g.u32(0..total as u32);
+                    buf.seek(&shared, pos);
+                }
+            }
+        }
+        buf.flush(&shared);
+        if buf.flushes() != 0 {
+            return Err(format!("zero-capacity buffer charged {} flushes", buf.flushes()));
+        }
+        if buf.lines_flushed() != 0 {
+            return Err("zero-capacity buffer counted flushed lines".into());
+        }
+        let got = shared.to_vec();
+        if got != expected {
+            return Err("write-through mismatch".into());
         }
         Ok(())
     });
