@@ -236,6 +236,67 @@ fn main() {
     std::fs::write("BENCH_adaptive.json", adaptive_doc.to_string()).expect("write BENCH_adaptive.json");
     println!("wrote BENCH_adaptive.json");
 
+    bench::section("batch: multi-query lanes, queries/sec vs k (native wall clock, 4 threads)");
+    // The serving dimension: k SSSP sources (and k personalized-PageRank
+    // teleport sets) answered by one lane-batched run. queries/sec must
+    // grow with k because every neighbor read and delay-buffer flush is
+    // shared by the live lanes. Results land in BENCH_batch.json so the
+    // serving-throughput trajectory is recorded across PRs.
+    let kron_w = GapGraph::Kron.generate_weighted(scale, 8);
+    let mut batch_json: Vec<(String, Json)> = Vec::new();
+    for (aname, pr_not_sssp) in [("sssp", false), ("pagerank", true)] {
+        let mut k_json: Vec<(String, Json)> = Vec::new();
+        let mut qps_k1 = 0.0f64;
+        for k in daig::engine::lanes::LANE_COUNTS {
+            let ecfg = EngineConfig::new(4, ExecutionMode::Delayed(256));
+            let mut stats = (0usize, 0u64);
+            let label = format!("{aname} kron@{scale} batch k={k} d256 4t");
+            let s = if pr_not_sssp {
+                let teleports = daig::algorithms::pagerank::default_teleports(&g, k);
+                bench::case(&label, 3, || {
+                    let r = daig::algorithms::pagerank::run_native_batch(&g, &teleports, &ecfg, &PrConfig::default());
+                    stats = (r.run.num_rounds(), r.run.total_flushes());
+                    r
+                })
+            } else {
+                let sources = daig::algorithms::sssp::default_sources(&kron_w, k);
+                bench::case(&label, 3, || {
+                    let r = daig::algorithms::sssp::run_native_batch(&kron_w, &sources, &ecfg);
+                    stats = (r.run.num_rounds(), r.run.total_flushes());
+                    r
+                })
+            };
+            let (rounds, flushes) = stats;
+            let qps = k as f64 / s.min_s;
+            if k == 1 {
+                qps_k1 = qps;
+            } else {
+                println!("  -> {:.2}x queries/s vs k=1", qps / qps_k1);
+            }
+            k_json.push((
+                format!("k{k}"),
+                Json::obj(vec![
+                    ("total_s_min", Json::Num(s.min_s)),
+                    ("rounds", Json::Num(rounds as f64)),
+                    ("flushes", Json::Num(flushes as f64)),
+                    ("queries_per_s", Json::Num(qps)),
+                    ("speedup_vs_k1", Json::Num(qps / qps_k1)),
+                ]),
+            ));
+        }
+        batch_json.push((aname.to_string(), Json::Obj(k_json.into_iter().collect())));
+    }
+    let batch_doc = Json::obj(vec![
+        ("bench", Json::Str("batch".into())),
+        ("scale", Json::Num(scale as f64)),
+        ("threads", Json::Num(4.0)),
+        ("mode", Json::Str("d256".into())),
+        ("graph", Json::Str("kron".into())),
+        ("workloads", Json::Obj(batch_json.into_iter().collect())),
+    ]);
+    std::fs::write("BENCH_batch.json", batch_doc.to_string()).expect("write BENCH_batch.json");
+    println!("wrote BENCH_batch.json");
+
     bench::section("PJRT dense-block step (L1/L2 artifact path)");
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = daig::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();

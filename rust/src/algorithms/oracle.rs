@@ -39,8 +39,12 @@ pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<u32> {
     dist
 }
 
-/// Serial double-buffered (Jacobi) PageRank — matches the engine's
-/// synchronous mode bit-for-bit when summation order is identical.
+/// Serial double-buffered (Jacobi) PageRank. The iterates match the
+/// engine's synchronous mode bit-for-bit when summation order is
+/// identical; like the engine's decoder, the returned scores are
+/// L1-normalized — the exact dangling-vertex mass redistribution (see
+/// `algorithms::pagerank` module docs), so they sum to 1 ± fp error on
+/// every graph.
 pub fn pagerank(g: &Csr, damping: f32, epsilon: f64, max_rounds: usize) -> (Vec<f32>, usize) {
     let n = g.num_vertices();
     let nf = n.max(1) as f32;
@@ -60,10 +64,61 @@ pub fn pagerank(g: &Csr, damping: f32, epsilon: f64, max_rounds: usize) -> (Vec<
         }
         std::mem::swap(&mut front, &mut back);
         if delta < epsilon {
+            normalize_mass(&mut front);
             return (front, round);
         }
     }
+    normalize_mass(&mut front);
     (front, max_rounds)
+}
+
+/// Serial Jacobi personalized PageRank: teleport distribution uniform
+/// over `teleport` instead of over all vertices. Scores L1-normalized
+/// like [`pagerank`]. The ground truth for the batched
+/// `MultiPageRank` lanes.
+pub fn personalized_pagerank(
+    g: &Csr,
+    damping: f32,
+    epsilon: f64,
+    teleport: &[VertexId],
+    max_rounds: usize,
+) -> (Vec<f32>, usize) {
+    let n = g.num_vertices();
+    assert!(!teleport.is_empty(), "teleport set must be non-empty");
+    let share = 1.0f32 / teleport.len() as f32;
+    let mut base = vec![0.0f32; n];
+    let mut front = vec![0.0f32; n];
+    for &v in teleport {
+        base[v as usize] += (1.0 - damping) * share;
+        front[v as usize] += share;
+    }
+    let inv: Vec<f32> = g.out_degrees().iter().map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 }).collect();
+    let mut back = vec![0.0f32; n];
+    for round in 1..=max_rounds {
+        let mut delta = 0.0f64;
+        for v in 0..n {
+            let mut acc = 0.0f32;
+            for &u in g.in_neighbors(v as VertexId) {
+                acc += front[u as usize] * inv[u as usize];
+            }
+            back[v] = base[v] + damping * acc;
+            delta += (back[v] - front[v]).abs() as f64;
+        }
+        std::mem::swap(&mut front, &mut back);
+        if delta < epsilon {
+            normalize_mass(&mut front);
+            return (front, round);
+        }
+    }
+    normalize_mass(&mut front);
+    (front, max_rounds)
+}
+
+/// The engine decoder's exact dangling-mass redistribution — one shared
+/// implementation so the oracle can never drift from what
+/// `PrResult`/`MultiPrResult`/the PJRT backend apply.
+fn normalize_mass(scores: &mut [f32]) {
+    crate::algorithms::pagerank::redistribute_dangling(scores);
 }
 
 /// Connected components via repeated min-label flooding (undirected
@@ -134,6 +189,37 @@ mod tests {
         assert!(rounds < 1000);
         for &s in &scores {
             assert!((s - 1.0 / 3.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pagerank_mass_is_one_with_sinks() {
+        // Chain into an absorbing sink: without redistribution the sink
+        // leaks every round; the oracle must still sum to 1.
+        let g = GraphBuilder::new(5).edges(&[(0, 1), (1, 2), (2, 3), (3, 4)]).build();
+        let (scores, _) = pagerank(&g, 0.85, 1e-8, 10_000);
+        let mass: f64 = scores.iter().map(|&s| s as f64).sum();
+        assert!((mass - 1.0).abs() < 1e-5, "mass {mass}");
+    }
+
+    #[test]
+    fn personalized_pagerank_concentrates_and_conserves() {
+        // Symmetric path: teleporting onto vertex 0 must rank it highest
+        // and keep unit mass.
+        let g = GraphBuilder::new(6).edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]).symmetrize().build();
+        let (scores, rounds) = personalized_pagerank(&g, 0.85, 1e-8, &[0], 10_000);
+        assert!(rounds < 10_000);
+        let mass: f64 = scores.iter().map(|&s| s as f64).sum();
+        assert!((mass - 1.0).abs() < 1e-5, "mass {mass}");
+        for v in 1..6 {
+            assert!(scores[0] > scores[v], "teleport vertex must rank highest (v{v})");
+        }
+        // Uniform teleport over every vertex reproduces classic PageRank.
+        let all: Vec<u32> = (0..6).collect();
+        let (uni, _) = personalized_pagerank(&g, 0.85, 1e-8, &all, 10_000);
+        let (classic, _) = pagerank(&g, 0.85, 1e-8, 10_000);
+        for v in 0..6 {
+            assert!((uni[v] - classic[v]).abs() < 1e-6, "v{v}");
         }
     }
 

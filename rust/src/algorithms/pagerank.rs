@@ -5,10 +5,27 @@
 //! Scores are f32 (stored as raw bits in the 32-bit value array), damping
 //! d = 0.85, and the convergence criterion matches the paper exactly:
 //! stop when the summed |ΔPR| of a round falls below 1e-4.
-//! Dangling vertices (outdeg 0) leak rank as in the GAP reference
-//! implementation — acceptable because scores are compared across
-//! execution modes, not against an external ranking.
+//!
+//! **Dangling vertices** (outdeg 0): the GAP reference iteration leaks
+//! their rank, so raw scores sum below 1 on graphs with sinks. The
+//! decoded results here redistribute that mass exactly, via the closed
+//! form rather than a per-round global sum: with `P` the column-
+//! stochastic-on-non-dangling pull matrix and `s` the teleport
+//! distribution, the redistributed fixed point solves
+//! `x = c·s + d·P·x` for the scalar `c = (1-d) + d·(dangling mass of
+//! x)`, while the leaky iterate solves `y = (1-d)·s + d·P·y` — the same
+//! linear system up to the scalar on `s`, so `x = y / ‖y‖₁` exactly
+//! (and `‖x‖₁ = 1` by construction). [`PrResult`]/[`MultiPrResult`]
+//! apply that normalization when decoding, which redistributes each
+//! round's leaked mass without adding a global reduction to the
+//! engine's hot loop.
+//!
+//! **Batched personalization** ([`MultiPageRank`]): k teleport sets run
+//! as k value lanes per vertex (`crate::engine::lanes`), so one
+//! neighbor read feeds all still-live queries and converged queries
+//! drop out of the sweep early.
 
+use crate::engine::lanes::{self, LaneReader};
 use crate::engine::program::{ValueReader, VertexProgram};
 use crate::engine::sim::cost::Machine;
 use crate::engine::sim::SimRun;
@@ -94,6 +111,101 @@ impl VertexProgram for PageRank<'_> {
     }
 }
 
+/// Batched personalized PageRank: lane `l` solves
+/// `PR_l(v) = (1-d)·s_l(v) + d · Σ PR_l(u)/outdeg(u)` for teleport
+/// distribution `s_l` (uniform over the l-th teleport set). One engine
+/// run answers every teleport set at once through the lane machinery.
+pub struct MultiPageRank<'g> {
+    g: &'g Csr,
+    inv_outdeg: Vec<f32>,
+    damping: f32,
+    epsilon: f64,
+    k: usize,
+    /// Flattened n×k per-lane bases `(1-d)·s_l(v)`.
+    base: Vec<f32>,
+    /// Flattened n×k per-lane initial scores `s_l(v)`.
+    init: Vec<f32>,
+}
+
+impl<'g> MultiPageRank<'g> {
+    /// Build for `teleports.len()` lanes. Panics on an illegal lane
+    /// count, an empty teleport set, or an out-of-range vertex.
+    pub fn new(g: &'g Csr, cfg: &PrConfig, teleports: &[Vec<VertexId>]) -> Self {
+        let k = teleports.len();
+        assert!(
+            lanes::valid_lane_count(k),
+            "batch size {k} is not a legal lane count (1, 2, 4, 8, or 16)"
+        );
+        let n = g.num_vertices();
+        let inv_outdeg = g.out_degrees().iter().map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 }).collect();
+        let mut base = vec![0.0f32; n * k];
+        let mut init = vec![0.0f32; n * k];
+        for (l, set) in teleports.iter().enumerate() {
+            assert!(!set.is_empty(), "teleport set {l} is empty");
+            let share = 1.0 / set.len() as f32;
+            for &v in set {
+                assert!((v as usize) < n, "teleport vertex {v} out of range for n={n}");
+                base[v as usize * k + l] += (1.0 - cfg.damping) * share;
+                init[v as usize * k + l] += share;
+            }
+        }
+        Self { g, inv_outdeg, damping: cfg.damping, epsilon: cfg.epsilon, k, base, init }
+    }
+}
+
+impl VertexProgram for MultiPageRank<'_> {
+    fn name(&self) -> &'static str {
+        "pagerank-batch"
+    }
+
+    fn lanes(&self) -> usize {
+        self.k
+    }
+
+    fn init(&self, v: VertexId) -> u32 {
+        self.init_lane(v, 0)
+    }
+
+    fn init_lane(&self, v: VertexId, lane: usize) -> u32 {
+        self.init[v as usize * self.k + lane].to_bits()
+    }
+
+    /// Lane-0 scalar view (the engine uses [`Self::update_lanes`] for
+    /// every batch size above 1).
+    #[inline]
+    fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let mut acc = 0.0f32;
+        for &u in self.g.in_neighbors(v) {
+            acc += f32::from_bits(r.read(u)) * self.inv_outdeg[u as usize];
+        }
+        (self.base[v as usize * self.k] + self.damping * acc).to_bits()
+    }
+
+    #[inline]
+    fn update_lanes<R: LaneReader>(&self, v: VertexId, r: &mut R, out: &mut [u32], live: u32) {
+        // One group read per in-neighbor feeds every live lane.
+        let k = self.k;
+        let mut acc = [0.0f32; lanes::MAX_LANES];
+        let mut nb = [0u32; lanes::MAX_LANES];
+        for &u in self.g.in_neighbors(v) {
+            r.read_group(u, &mut nb[..k]);
+            let inv = self.inv_outdeg[u as usize];
+            lanes::for_each_live(live, |l| acc[l] += f32::from_bits(nb[l]) * inv);
+        }
+        let vb = v as usize * k;
+        lanes::for_each_live(live, |l| out[l] = (self.base[vb + l] + self.damping * acc[l]).to_bits());
+    }
+
+    #[inline]
+    fn delta(&self, old: u32, new: u32) -> f64 {
+        (f32::from_bits(new) - f32::from_bits(old)).abs() as f64
+    }
+
+    fn converged(&self, round_delta: f64) -> bool {
+        round_delta < self.epsilon
+    }
+}
+
 /// Run on the real-thread executor.
 pub fn run_native(g: &Csr, ecfg: &EngineConfig, cfg: &PrConfig) -> PrResult {
     let p = PageRank::new(g, cfg);
@@ -107,22 +219,88 @@ pub fn run_sim(g: &Csr, ecfg: &EngineConfig, cfg: &PrConfig, machine: &Machine) 
     (PrResult::from(sim.result.clone()), sim)
 }
 
+/// Run a batched personalized query on the real-thread executor.
+pub fn run_native_batch(g: &Csr, teleports: &[Vec<VertexId>], ecfg: &EngineConfig, cfg: &PrConfig) -> MultiPrResult {
+    let p = MultiPageRank::new(g, cfg, teleports);
+    MultiPrResult::from(native::run(g, &p, ecfg))
+}
+
+/// Run a batched personalized query on the multicore simulator.
+pub fn run_sim_batch(
+    g: &Csr,
+    teleports: &[Vec<VertexId>],
+    ecfg: &EngineConfig,
+    cfg: &PrConfig,
+    machine: &Machine,
+) -> (MultiPrResult, SimRun) {
+    let p = MultiPageRank::new(g, cfg, teleports);
+    let sim = crate::engine::sim::run(g, &p, ecfg, machine);
+    (MultiPrResult::from(sim.result.clone()), sim)
+}
+
+/// Deterministic batch of `k` teleport sets: singletons on the `k`
+/// highest out-degree hubs (the personalized-PageRank analog of
+/// [`super::sssp::default_sources`]).
+pub fn default_teleports(g: &Csr, k: usize) -> Vec<Vec<VertexId>> {
+    super::sssp::default_sources(g, k).into_iter().map(|v| vec![v]).collect()
+}
+
+/// Divide by the L1 mass — the exact dangling-vertex redistribution
+/// (see the module docs for why the normalized leaky fixed point *is*
+/// the redistributed one). Crate-visible so the dense-block PJRT
+/// backend decodes identically.
+pub(crate) fn redistribute_dangling(scores: &mut [f32]) {
+    let mass: f64 = scores.iter().map(|&x| x as f64).sum();
+    if mass > 0.0 {
+        let inv = (1.0 / mass) as f32;
+        for s in scores {
+            *s *= inv;
+        }
+    }
+}
+
 /// Decoded PageRank result.
 #[derive(Debug, Clone)]
 pub struct PrResult {
-    /// Scores per vertex.
+    /// Scores per vertex; dangling mass redistributed, so they sum to
+    /// 1 ± fp error on every graph (sinks included).
     pub values: Vec<f32>,
     pub run: RunResult,
 }
 
 impl From<RunResult> for PrResult {
     fn from(run: RunResult) -> Self {
-        Self { values: run.values_f32(), run }
+        let mut values = run.values_f32();
+        redistribute_dangling(&mut values);
+        Self { values, run }
+    }
+}
+
+/// Decoded batched personalized PageRank result.
+#[derive(Debug, Clone)]
+pub struct MultiPrResult {
+    /// `values[l][v]` = lane l's score of v, per-lane mass-normalized
+    /// like [`PrResult::values`].
+    pub values: Vec<Vec<f32>>,
+    pub run: RunResult,
+}
+
+impl From<RunResult> for MultiPrResult {
+    fn from(run: RunResult) -> Self {
+        let values = (0..run.lanes)
+            .map(|l| {
+                let mut lane: Vec<f32> = run.lane_values(l).into_iter().map(f32::from_bits).collect();
+                redistribute_dangling(&mut lane);
+                lane
+            })
+            .collect();
+        Self { values, run }
     }
 }
 
 impl PrResult {
-    /// Sum of scores (≈1 up to dangling-vertex leakage and fp error).
+    /// Sum of scores (exactly 1 up to fp error: dangling mass is
+    /// redistributed at decode).
     pub fn total_mass(&self) -> f64 {
         self.values.iter().map(|&x| x as f64).sum()
     }
@@ -157,14 +335,22 @@ mod tests {
     }
 
     #[test]
-    fn mass_conserved_without_dangling() {
-        // Symmetric graphs have no dangling vertices unless isolated.
-        let g = GapGraph::Kron.generate(9, 8);
-        let r = run_native(&g, &EngineConfig::new(4, ExecutionMode::Asynchronous), &PrConfig::default());
-        assert!(r.run.converged);
-        // Isolated vertices (RMAT leaves many) keep only base rank, so
-        // total mass dips below 1; it must stay in a sane band.
-        assert!(r.total_mass() > 0.6 && r.total_mass() <= 1.001, "mass {}", r.total_mass());
+    fn mass_conserved_on_every_topology() {
+        // The dangling-mass redistribution must hold scores at 1 ± ε on
+        // symmetric graphs (isolated vertices are sinks), directed
+        // graphs with organic sinks (web), and a generated digraph where
+        // every path funnels into an absorbing sink.
+        let mut sink_heavy = crate::graph::GraphBuilder::new(64);
+        for v in 0..63u32 {
+            sink_heavy.push(v, v + 1, 1); // chain ending in sink 63
+            sink_heavy.push(v, 63, 1); // every vertex also feeds the sink
+        }
+        let graphs = [GapGraph::Kron.generate(9, 8), GapGraph::Web.generate(9, 4), sink_heavy.build()];
+        for (i, g) in graphs.iter().enumerate() {
+            let r = run_native(g, &EngineConfig::new(4, ExecutionMode::Asynchronous), &PrConfig::default());
+            assert!(r.run.converged, "graph {i}");
+            assert!((r.total_mass() - 1.0).abs() < 1e-3, "graph {i}: mass {}", r.total_mass());
+        }
     }
 
     #[test]
@@ -183,9 +369,11 @@ mod tests {
         let sync = run_native(&g, &EngineConfig::new(4, ExecutionMode::Synchronous), &cfg);
         let asyn = run_native(&g, &EngineConfig::new(4, ExecutionMode::Asynchronous), &cfg);
         let del = run_native(&g, &EngineConfig::new(4, ExecutionMode::Delayed(64)), &cfg);
+        // 2e-4: the dangling redistribution divides by the leaked mass,
+        // which amplifies per-vertex async noise by up to ~1/mass.
         for v in 0..g.num_vertices() {
-            assert!((sync.values[v] - asyn.values[v]).abs() < 1e-4, "v{v}");
-            assert!((sync.values[v] - del.values[v]).abs() < 1e-4, "v{v}");
+            assert!((sync.values[v] - asyn.values[v]).abs() < 2e-4, "v{v}");
+            assert!((sync.values[v] - del.values[v]).abs() < 2e-4, "v{v}");
         }
     }
 
@@ -226,5 +414,77 @@ mod tests {
         let (sim, _) = run_sim(&g, &EngineConfig::new(4, ExecutionMode::Synchronous), &cfg, &Machine::haswell());
         assert_eq!(nat.run.values, sim.run.values);
         assert_eq!(nat.run.num_rounds(), sim.run.num_rounds());
+    }
+
+    #[test]
+    fn uniform_batch_lane_matches_classic_pagerank() {
+        // A k=1 "batch" whose teleport set is every vertex is exactly
+        // classic PageRank: same base, same init, same float ops.
+        let g = GapGraph::Kron.generate(8, 8);
+        let cfg = PrConfig::default();
+        let all: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
+        let classic = run_native(&g, &EngineConfig::new(1, ExecutionMode::Synchronous), &cfg);
+        let batched = run_native_batch(&g, &[all], &EngineConfig::new(1, ExecutionMode::Synchronous), &cfg);
+        assert_eq!(batched.run.values, classic.run.values, "bit-identical raw iterates");
+        assert_eq!(batched.values[0], classic.values);
+    }
+
+    #[test]
+    fn batched_teleports_match_independent_runs() {
+        let g = GapGraph::Web.generate(9, 4);
+        // Tight epsilon: personalized scores concentrate at the teleport
+        // hub, so the async-vs-sync residual must be driven well below
+        // the comparison tolerance.
+        let cfg = PrConfig { damping: 0.85, epsilon: 1e-6 };
+        let teleports = default_teleports(&g, 4);
+        let ecfg = EngineConfig::new(4, ExecutionMode::Delayed(64));
+        let batched = run_native_batch(&g, &teleports, &ecfg, &cfg);
+        assert!(batched.run.converged);
+        for (l, t) in teleports.iter().enumerate() {
+            let single = run_native_batch(&g, std::slice::from_ref(t), &ecfg, &cfg);
+            assert!((mass(&batched.values[l]) - 1.0).abs() < 1e-3, "lane {l} mass");
+            for v in 0..g.num_vertices() {
+                assert!(
+                    (batched.values[l][v] - single.values[0][v]).abs() < 2e-4,
+                    "lane {l} v{v}: {} vs {}",
+                    batched.values[l][v],
+                    single.values[0][v]
+                );
+            }
+        }
+    }
+
+    fn mass(scores: &[f32]) -> f64 {
+        scores.iter().map(|&x| x as f64).sum()
+    }
+
+    #[test]
+    fn batched_sync_is_bitexact_with_independent_runs() {
+        // In sync mode each lane's Jacobi iterates are bit-identical to
+        // its independent run's, and a converged lane freezes at exactly
+        // the value its single run stops at.
+        let g = GapGraph::Web.generate(9, 4);
+        let cfg = PrConfig::default();
+        let teleports = default_teleports(&g, 4);
+        let ecfg = EngineConfig::new(4, ExecutionMode::Synchronous);
+        let batched = run_native_batch(&g, &teleports, &ecfg, &cfg);
+        for (l, t) in teleports.iter().enumerate() {
+            let single = run_native_batch(&g, std::slice::from_ref(t), &ecfg, &cfg);
+            assert_eq!(batched.run.lane_values(l), single.run.values, "lane {l} raw bits");
+        }
+    }
+
+    #[test]
+    fn personalized_scores_concentrate_near_teleport() {
+        // Star pointing at the hub: a teleport set pinned on a leaf must
+        // rank that leaf above every other leaf.
+        let es: Vec<(u32, u32)> = (1..16).map(|s| (s, 0u32)).collect();
+        let g = GraphBuilder::new(16).edges(&es).symmetrize().build();
+        let ecfg = EngineConfig::new(2, ExecutionMode::Asynchronous);
+        let r = run_native_batch(&g, &[vec![5u32]], &ecfg, &PrConfig::default());
+        let scores = &r.values[0];
+        for leaf in (1..16).filter(|&v| v != 5) {
+            assert!(scores[5] > scores[leaf], "teleport leaf must outrank leaf {leaf}");
+        }
     }
 }

@@ -11,6 +11,7 @@
 //! flips on the §V future-work variant where unchanged distances are not
 //! written.
 
+use crate::engine::lanes::{self, LaneReader};
 use crate::engine::program::{ValueReader, VertexProgram};
 use crate::engine::sim::cost::Machine;
 use crate::engine::sim::SimRun;
@@ -79,6 +80,153 @@ impl VertexProgram for Sssp<'_> {
     fn conditional_writes(&self) -> bool {
         self.conditional
     }
+}
+
+/// Batched multi-source Bellman-Ford: one engine run answers `k`
+/// independent SSSP queries through the lane machinery
+/// ([`crate::engine::lanes`]). Lane `l` computes distances from
+/// `sources[l]`; each neighbor lane-group read and each delay-buffer
+/// flush is shared by all still-live queries, and a query whose lane
+/// produced no update in a round drops out of subsequent sweeps.
+pub struct MultiSssp<'g> {
+    g: &'g Csr,
+    sources: Vec<VertexId>,
+    conditional: bool,
+}
+
+impl<'g> MultiSssp<'g> {
+    /// Program computing distances from each of `sources` (one lane per
+    /// source). Panics if `g` is unweighted, a source is out of range,
+    /// or the source count is not a legal lane count.
+    pub fn new(g: &'g Csr, sources: &[VertexId]) -> Self {
+        assert!(g.is_weighted(), "SSSP requires a weighted graph");
+        assert!(
+            lanes::valid_lane_count(sources.len()),
+            "batch size {} is not a legal lane count (1, 2, 4, 8, or 16)",
+            sources.len()
+        );
+        let n = g.num_vertices() as VertexId;
+        for &s in sources {
+            assert!(s < n, "source {s} out of range for n={n}");
+        }
+        Self { g, sources: sources.to_vec(), conditional: false }
+    }
+
+    /// Enable conditional writes (§V extension): a vertex none of whose
+    /// live lanes changed stages nothing.
+    pub fn conditional(mut self) -> Self {
+        self.conditional = true;
+        self
+    }
+}
+
+impl VertexProgram for MultiSssp<'_> {
+    fn name(&self) -> &'static str {
+        "sssp-batch"
+    }
+
+    fn lanes(&self) -> usize {
+        self.sources.len()
+    }
+
+    fn init(&self, v: VertexId) -> u32 {
+        self.init_lane(v, 0)
+    }
+
+    fn init_lane(&self, v: VertexId, lane: usize) -> u32 {
+        if v == self.sources[lane] {
+            0
+        } else {
+            INF
+        }
+    }
+
+    /// Lane-0 scalar view (the engine uses [`Self::update_lanes`] for
+    /// every batch size above 1).
+    #[inline]
+    fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let mut best = r.read(v);
+        for (u, w) in self.g.in_neighbors_weighted(v) {
+            let du = r.read(u);
+            if du != INF {
+                best = best.min(du.saturating_add(w));
+            }
+        }
+        best
+    }
+
+    #[inline]
+    fn update_lanes<R: LaneReader>(&self, v: VertexId, r: &mut R, out: &mut [u32], live: u32) {
+        // One group read per in-neighbor feeds every live lane — the
+        // lane amortization this batching exists for.
+        let k = self.sources.len();
+        let mut nb = [0u32; lanes::MAX_LANES];
+        for (u, w) in self.g.in_neighbors_weighted(v) {
+            r.read_group(u, &mut nb[..k]);
+            lanes::for_each_live(live, |l| {
+                let du = nb[l];
+                if du != INF {
+                    out[l] = out[l].min(du.saturating_add(w));
+                }
+            });
+        }
+    }
+
+    #[inline]
+    fn delta(&self, old: u32, new: u32) -> f64 {
+        (old != new) as u32 as f64
+    }
+
+    fn converged(&self, round_delta: f64) -> bool {
+        round_delta == 0.0
+    }
+
+    fn conditional_writes(&self) -> bool {
+        self.conditional
+    }
+}
+
+/// Decoded multi-source SSSP result: one distance vector per query.
+#[derive(Debug, Clone)]
+pub struct MultiSsspResult {
+    /// `dist[l][v]` = distance of `v` from the l-th source.
+    pub dist: Vec<Vec<u32>>,
+    pub run: RunResult,
+}
+
+impl From<RunResult> for MultiSsspResult {
+    fn from(run: RunResult) -> Self {
+        let dist = (0..run.lanes).map(|l| run.lane_values(l)).collect();
+        Self { dist, run }
+    }
+}
+
+/// Run a batched multi-source query on the real-thread executor.
+pub fn run_native_batch(g: &Csr, sources: &[VertexId], ecfg: &EngineConfig) -> MultiSsspResult {
+    MultiSsspResult::from(native::run(g, &MultiSssp::new(g, sources), ecfg))
+}
+
+/// Run a batched multi-source query on the multicore simulator.
+pub fn run_sim_batch(
+    g: &Csr,
+    sources: &[VertexId],
+    ecfg: &EngineConfig,
+    machine: &Machine,
+) -> (MultiSsspResult, SimRun) {
+    let sim = crate::engine::sim::run(g, &MultiSssp::new(g, sources), ecfg, machine);
+    (MultiSsspResult::from(sim.result.clone()), sim)
+}
+
+/// Deterministic batch of `k` "interesting" sources: the `k` highest
+/// out-degree vertices (distinct; ties to the higher id so that lane 0
+/// is exactly [`default_source`]) — hubs keep small graphs mostly
+/// reachable.
+pub fn default_sources(g: &Csr, k: usize) -> Vec<VertexId> {
+    let mut by_degree: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
+    by_degree.sort_by_key(|&v| (std::cmp::Reverse(g.out_degree(v)), std::cmp::Reverse(v)));
+    by_degree.truncate(k);
+    assert_eq!(by_degree.len(), k, "graph has fewer than {k} vertices");
+    by_degree
 }
 
 /// Decoded SSSP result.
@@ -196,5 +344,62 @@ mod tests {
     fn unweighted_rejected() {
         let g = GraphBuilder::new(2).edges(&[(0, 1)]).build();
         let _ = Sssp::new(&g, 0);
+    }
+
+    #[test]
+    fn batched_matches_dijkstra_per_lane() {
+        let g = GapGraph::Kron.generate_weighted(9, 8);
+        for k in [1usize, 4, 8] {
+            let sources = default_sources(&g, k);
+            let r = run_native_batch(&g, &sources, &EngineConfig::new(4, ExecutionMode::Delayed(64)));
+            assert!(r.run.converged, "k={k}");
+            assert_eq!(r.run.lanes, k);
+            for (l, &src) in sources.iter().enumerate() {
+                assert_eq!(r.dist[l], oracle::dijkstra(&g, src), "k={k} lane {l}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_sim_bit_matches_independent_runs() {
+        let g = GapGraph::Road.generate_weighted(9, 0);
+        let sources = default_sources(&g, 4);
+        let m = Machine::haswell();
+        let ecfg = EngineConfig::new(8, ExecutionMode::Delayed(32));
+        let (batched, _) = run_sim_batch(&g, &sources, &ecfg, &m);
+        for (l, &src) in sources.iter().enumerate() {
+            let (single, _) = run_sim(&g, src, &ecfg, &m);
+            assert_eq!(batched.dist[l], single.dist, "lane {l} vs independent sim run");
+        }
+    }
+
+    #[test]
+    fn batched_conditional_variant_matches() {
+        let g = GapGraph::Twitter.generate_weighted(9, 8);
+        let sources = default_sources(&g, 4);
+        let p = MultiSssp::new(&g, &sources).conditional();
+        let r = MultiSsspResult::from(native::run(&g, &p, &EngineConfig::new(4, ExecutionMode::Delayed(64))));
+        for (l, &src) in sources.iter().enumerate() {
+            assert_eq!(r.dist[l], oracle::dijkstra(&g, src), "lane {l}");
+        }
+    }
+
+    #[test]
+    fn default_sources_are_distinct_hubs() {
+        let g = GapGraph::Kron.generate_weighted(8, 8);
+        let s = default_sources(&g, 8);
+        assert_eq!(s.len(), 8);
+        let mut dedup = s.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), 8, "sources must be distinct: {s:?}");
+        assert_eq!(s[0], default_source(&g), "lane 0 is the single-query default source");
+    }
+
+    #[test]
+    #[should_panic(expected = "not a legal lane count")]
+    fn bad_batch_size_rejected() {
+        let g = GraphBuilder::new(4).weighted_edges(&[(0, 1, 1)]).build();
+        let _ = MultiSssp::new(&g, &[0, 1, 2]);
     }
 }

@@ -12,6 +12,7 @@
 //! | `ablations` | DESIGN.md ablations (partition, local reads, stripe, conditional) | [`ablations`] |
 //! | `steal` | static vs work-stealing round execution (beyond the paper) | [`steal`] |
 //! | `adaptive` | online δ controller vs exhaustive static sweep (§V online) | [`adaptive`] |
+//! | `batch` | multi-query lanes: queries/sec vs batch size k (serving) | [`batch`] |
 //!
 //! All drivers run on the simulator (DESIGN.md §3: deterministic stand-in
 //! for the paper's 32/112-thread machines).
@@ -66,10 +67,11 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "schedule" => schedule(opts),
         "steal" => steal(opts),
         "adaptive" => adaptive(opts),
+        "batch" => batch(opts),
         "all" => {
             let ids = [
                 "table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune", "schedule",
-                "steal", "adaptive",
+                "steal", "adaptive", "batch",
             ];
             for id in ids {
                 run(id, opts)?;
@@ -155,6 +157,57 @@ pub fn adaptive(opts: &ExpOptions) -> Result<()> {
         }
     }
     opts.report.emit("adaptive", &t)
+}
+
+/// Batched multi-query lanes (the serving dimension): queries/sec vs
+/// batch size k for multi-source SSSP and multi-teleport personalized
+/// PageRank on the kron generator, across mode × schedule × stealing.
+/// The acceptance bar: delayed-mode batched SSSP must serve ≥2x the
+/// queries/sec at k=8 vs k=1 — one flushed cache line carries k
+/// queries' updates, so the contention amortization multiplies with the
+/// batch (DESIGN.md §8).
+pub fn batch(opts: &ExpOptions) -> Result<()> {
+    let m = Machine::haswell();
+    let threads = 32;
+    let ks = crate::engine::lanes::LANE_COUNTS;
+    let mut t = Table::new(
+        "Batch — multi-query lanes, queries/sec vs k (simulated 32-thread Haswell, kron)",
+        &["algo", "mode", "schedule", "steal", "k", "rounds", "time", "queries/s", "speedup vs k=1"],
+    );
+    for algo in [Algo::Sssp, Algo::PageRank] {
+        let graph = opts.graph(GapGraph::Kron, algo);
+        for mode in [
+            ExecutionMode::Synchronous,
+            ExecutionMode::Asynchronous,
+            ExecutionMode::Delayed(64),
+            ExecutionMode::Adaptive,
+        ] {
+            for schedule in [SchedulePolicy::Dense, SchedulePolicy::Frontier] {
+                for stealing in [false, true] {
+                    let mut base = EngineConfig::new(threads, mode).with_schedule(schedule);
+                    if stealing {
+                        base = base.with_stealing();
+                    }
+                    let pts = sweep::batch_throughput(&graph, algo, &m, &base, &ks);
+                    let base_qps = pts[0].queries_per_s;
+                    for p in &pts {
+                        t.row(vec![
+                            algo.name().into(),
+                            mode.label(),
+                            schedule.label().into(),
+                            if stealing { "on" } else { "off" }.into(),
+                            p.k.to_string(),
+                            p.rounds.to_string(),
+                            fmt::secs(p.time_s),
+                            format!("{:.1}", p.queries_per_s),
+                            format!("{:.2}x", p.queries_per_s / base_qps),
+                        ]);
+                    }
+                }
+            }
+        }
+    }
+    opts.report.emit("batch", &t)
 }
 
 /// Schedule dimension (beyond the paper): dense vs frontier vs adaptive

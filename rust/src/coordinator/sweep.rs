@@ -1,7 +1,9 @@
 //! Mode/δ/thread/schedule sweeps on the simulator — the inner loop of
 //! every figure driver.
 
+use crate::algorithms::{pagerank, sssp};
 use crate::engine::sim::cost::Machine;
+use crate::engine::sim::SimRun;
 use crate::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
 use crate::graph::Csr;
 use crate::partition::blocked;
@@ -121,6 +123,62 @@ pub fn adaptive_regret(g: &Csr, algo: Algo, machine: &Machine, base: &EngineConf
     (adaptive, best, regret)
 }
 
+/// One point of a batched multi-query throughput sweep
+/// ([`batch_throughput`]).
+#[derive(Debug, Clone)]
+pub struct BatchPoint {
+    /// Queries batched into the run (lane count).
+    pub k: usize,
+    pub mode: ExecutionMode,
+    pub schedule: SchedulePolicy,
+    pub stealing: bool,
+    pub rounds: usize,
+    /// Total simulated seconds for all `k` queries.
+    pub time_s: f64,
+    /// The serving headline: `k / time_s`.
+    pub queries_per_s: f64,
+    pub invalidations: u64,
+    pub flushes: u64,
+    pub steals: u64,
+}
+
+/// Batched multi-query throughput on the simulator: run `algo`
+/// (SSSP: multi-source; PageRank: multi-teleport personalized) at each
+/// lane count in `ks` under `base`, reporting queries/sec. Query sets
+/// are the deterministic top-degree hubs, nested so the k=1 point is a
+/// prefix of every larger batch. Panics for algorithms without a
+/// batched variant (CC/BFS).
+pub fn batch_throughput(g: &Csr, algo: Algo, machine: &Machine, base: &EngineConfig, ks: &[usize]) -> Vec<BatchPoint> {
+    ks.iter()
+        .map(|&k| {
+            let sim: SimRun = match algo {
+                Algo::Sssp => {
+                    let sources = sssp::default_sources(g, k);
+                    sssp::run_sim_batch(g, &sources, base, machine).1
+                }
+                Algo::PageRank => {
+                    let teleports = pagerank::default_teleports(g, k);
+                    pagerank::run_sim_batch(g, &teleports, base, &pagerank::PrConfig::default(), machine).1
+                }
+                other => panic!("{other:?} has no batched lane variant"),
+            };
+            let time_s = sim.result.total_time();
+            BatchPoint {
+                k,
+                mode: base.mode,
+                schedule: base.schedule,
+                stealing: base.stealing,
+                rounds: sim.result.num_rounds(),
+                time_s,
+                queries_per_s: if time_s > 0.0 { k as f64 / time_s } else { 0.0 },
+                invalidations: sim.metrics.invalidations,
+                flushes: sim.result.total_flushes(),
+                steals: sim.result.total_steals(),
+            }
+        })
+        .collect()
+}
+
 /// The straggler-recovery pair: one configuration run statically and with
 /// intra-round work stealing.
 pub fn steal_pair(
@@ -209,6 +267,29 @@ mod tests {
         let (ap2, _, regret2) = adaptive_regret(&g, Algo::PageRank, &Machine::haswell(), &base);
         assert_eq!(ap.time_s, ap2.time_s);
         assert_eq!(regret, regret2);
+    }
+
+    #[test]
+    fn batch_throughput_scales_queries_per_second() {
+        // The tentpole's acceptance shape at sweep level: delayed-mode
+        // batched SSSP on kron must serve ≥2x the queries/sec at k=8
+        // than at k=1 (one flushed line carries 8 queries' updates).
+        let g = GapGraph::Kron.generate_weighted(9, 8);
+        let base = EngineConfig::new(8, ExecutionMode::Delayed(64));
+        let pts = batch_throughput(&g, Algo::Sssp, &Machine::haswell(), &base, &[1, 8]);
+        assert_eq!(pts.len(), 2);
+        assert_eq!((pts[0].k, pts[1].k), (1, 8));
+        assert!(pts[0].rounds > 0 && pts[1].rounds > 0);
+        assert!(
+            pts[1].queries_per_s >= 2.0 * pts[0].queries_per_s,
+            "k=8 {} q/s vs k=1 {} q/s",
+            pts[1].queries_per_s,
+            pts[0].queries_per_s
+        );
+        // PageRank batching goes through the same driver.
+        let pr = batch_throughput(&g, Algo::PageRank, &Machine::haswell(), &base, &[4]);
+        assert_eq!(pr[0].k, 4);
+        assert!(pr[0].queries_per_s > 0.0);
     }
 
     #[test]

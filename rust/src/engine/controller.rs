@@ -148,6 +148,12 @@ pub struct Telemetry {
     /// This round's summed residual over the previous round's (≤ 1 means
     /// converging; 1.0 on the first round).
     pub residual_ratio: f64,
+    /// Value lanes still live this round (1 for single-query runs).
+    /// Under batched execution every flushed line carries this many
+    /// queries' updates, so the contention signal divides the per-line
+    /// flush cost by it: a line that costs 2× but serves 8 queries is
+    /// cheap, not contended.
+    pub live_lanes: u64,
 }
 
 /// Per-thread online δ controller (see module docs for the policy).
@@ -221,7 +227,13 @@ impl DeltaController {
             return self.cur;
         }
         let cost = t.round_cost / t.processed as f64;
-        let line_cost = if t.flush_lines > 0 { t.flush_cost / t.flush_lines as f64 } else { f64::INFINITY };
+        // Lane-aware per-line flush cost: a flushed line carries one
+        // update per live lane, so its cost is split across them.
+        let line_cost = if t.flush_lines > 0 {
+            t.flush_cost / (t.flush_lines * t.live_lanes.max(1)) as f64
+        } else {
+            f64::INFINITY
+        };
         if line_cost < self.best_line_cost {
             self.best_line_cost = line_cost;
         }
@@ -295,6 +307,7 @@ mod tests {
             round_cost: 1000.0,
             density,
             residual_ratio: 0.9,
+            live_lanes: 1,
         }
     }
 
@@ -360,6 +373,19 @@ mod tests {
         // Stalled residual blocks further growth.
         let stalled = Telemetry { residual_ratio: 1.5, ..hot };
         assert_eq!(c.observe(&stalled), 128);
+    }
+
+    #[test]
+    fn dying_lanes_raise_per_query_line_cost() {
+        let mut c = DeltaController::new(64, 1024);
+        let batched = Telemetry { live_lanes: 8, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&batched), 64, "baseline at 8 live lanes");
+        // Identical physical flush cost after 7 of the 8 queries
+        // finished: each flushed line now carries one update instead of
+        // eight, so the per-query line cost is 8× the baseline —
+        // contended + dense + improving ⇒ grow.
+        let solo = Telemetry { live_lanes: 1, ..tel(100, 0.9) };
+        assert_eq!(c.observe(&solo), 128);
     }
 
     #[test]
@@ -437,6 +463,7 @@ mod tests {
                 round_cost: rng.next_f64() * 10_000.0,
                 density: rng.next_f64(),
                 residual_ratio: rng.next_f64() * 2.0,
+                live_lanes: 1 + rng.next_below(16),
             };
             let d = c.observe(&t);
             assert_eq!(d % VALUES_PER_LINE, 0);

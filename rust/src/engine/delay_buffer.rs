@@ -59,12 +59,22 @@ impl DelayBuffer {
         self.buf.capacity()
     }
 
-    /// Replace the (empty) backing storage with one of capacity
-    /// [`round_delta`]`(delta)`, preserving the flush counters. The
-    /// adaptive controller calls this between rounds — after the
-    /// end-of-range flush, so no staged values can be lost.
-    pub fn resize(&mut self, delta: usize) {
-        assert!(self.buf.is_empty(), "resize with unflushed data");
+    /// Replace the backing storage with one of capacity
+    /// [`round_delta`]`(delta)`, preserving the flush counters.
+    ///
+    /// Any values still staged are published to `global` first (charged
+    /// to the flush telemetry like every other flush), so a resize can
+    /// never lose updates: the adaptive path calls this between rounds
+    /// right after the end-of-range flush, but one missed `flush()` in a
+    /// future call site must degrade to an extra flush, not abort a
+    /// long-lived serving worker. The empty-buffer invariant that used
+    /// to be a hard `assert!` survives as a `debug_assert!` on the
+    /// post-flush state.
+    pub fn resize(&mut self, global: &SharedValues, delta: usize) {
+        if !self.buf.is_empty() {
+            self.flush(global);
+        }
+        debug_assert!(self.buf.is_empty(), "flush() must leave the buffer empty");
         let cap = round_delta(delta);
         if cap != self.buf.capacity() {
             self.buf = AlignedBuf::with_capacity(cap);
@@ -133,10 +143,18 @@ impl DelayBuffer {
     /// published first and the base advances past the skipped slot.
     #[inline]
     pub fn skip(&mut self, global: &SharedValues) {
+        self.skip_n(global, 1);
+    }
+
+    /// Skip `n` consecutive elements — the lane-group form of
+    /// [`Self::skip`]: a batched conditional write skips a whole
+    /// `lanes`-wide vertex group at once.
+    #[inline]
+    pub fn skip_n(&mut self, global: &SharedValues, n: usize) {
         if self.buf.capacity() != 0 {
             self.flush(global);
         }
-        self.base += 1;
+        self.base += n as VertexId;
     }
 
     /// Generalized skip for non-contiguous (frontier-scheduled) sweeps:
@@ -298,7 +316,7 @@ mod tests {
     }
 
     #[test]
-    fn resize_preserves_counters_and_requires_empty() {
+    fn resize_preserves_counters() {
         let g = SharedValues::from_bits(vec![0; 128]);
         let mut b = DelayBuffer::new(16);
         b.begin(0);
@@ -308,29 +326,62 @@ mod tests {
         b.flush(&g);
         let (f, l) = (b.flushes(), b.lines_flushed());
         assert!(f > 0 && l > 0);
-        b.resize(64);
+        b.resize(&g, 64);
         assert_eq!(b.capacity(), 64);
         assert_eq!(b.flushes(), f, "counters survive resize");
         assert_eq!(b.lines_flushed(), l);
-        b.resize(0);
+        b.resize(&g, 0);
         assert_eq!(b.capacity(), 0);
         // Write-through still works after shrinking to async.
         b.begin(100);
         b.push(&g, 7);
         assert_eq!(g.load(100), 7);
         assert_eq!(b.flushes(), f, "δ=0 charges no flushes");
-        b.resize(30);
+        b.resize(&g, 30);
         assert_eq!(b.capacity(), 32, "resize is cache-line rounded");
     }
 
     #[test]
-    #[should_panic(expected = "resize with unflushed data")]
-    fn resize_with_pending_data_panics() {
+    fn resize_with_pending_data_self_flushes() {
+        // One missed flush() before a resize must cost an extra flush,
+        // not a worker abort: the staged run is published first and the
+        // flush is charged to the telemetry counters.
+        let g = SharedValues::from_bits(vec![0; 64]);
+        let mut b = DelayBuffer::new(16);
+        b.set_timed(true);
+        b.begin(3);
+        b.push(&g, 30);
+        b.push(&g, 31);
+        b.resize(&g, 32);
+        assert_eq!(b.capacity(), 32);
+        assert_eq!(g.load(3), 30, "pending values published, not lost");
+        assert_eq!(g.load(4), 31);
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.flushes(), 1, "self-flush charged to telemetry");
+        assert_eq!(b.lines_flushed(), 1);
+        assert!(b.take_flush_secs() >= 0.0);
+        // The next contiguous push lands after the published run.
+        b.push(&g, 32);
+        b.flush(&g);
+        assert_eq!(g.load(5), 32);
+    }
+
+    #[test]
+    fn skip_n_flushes_and_jumps_group() {
         let g = SharedValues::from_bits(vec![0; 64]);
         let mut b = DelayBuffer::new(16);
         b.begin(0);
-        b.push(&g, 1);
-        b.resize(32);
+        b.push(&g, 10);
+        b.push(&g, 11);
+        // Skip a whole 4-lane group: pending run publishes, base jumps 4.
+        b.skip_n(&g, 4);
+        assert_eq!(b.flushes(), 1);
+        assert_eq!(g.load(0), 10);
+        assert_eq!(g.load(1), 11);
+        b.push(&g, 60);
+        b.flush(&g);
+        assert_eq!(g.load(6), 60, "base advanced past the skipped group");
+        assert_eq!(g.load(2), 0, "skipped slots untouched");
     }
 
     #[test]

@@ -1,0 +1,150 @@
+//! Multi-query execution lanes — batching k queries into one sweep.
+//!
+//! A serving workload answers many *independent* queries over the same
+//! graph: SSSP from k sources, personalized PageRank for k teleport
+//! sets. Run naively that is k full engine runs, and the delay-buffer
+//! machinery amortizes nothing across them. Lanes change the value
+//! layout instead: the shared array holds a **lane group** of k 32-bit
+//! values per vertex (vertex-major, lanes interleaved), so
+//!
+//! * one neighbor *read* brings in the cache line carrying all k lanes
+//!   of that vertex — the pull loop's coherence traffic is paid once
+//!   per edge, not once per edge per query;
+//! * one delay-buffer *flush* publishes a contiguous run of whole lane
+//!   groups — each invalidation-causing line commit now carries k
+//!   queries' updates (the paper's "make every committed line carry
+//!   many useful writes", multiplied by k; cf. Maiter's accumulated
+//!   batching in PAPERS.md).
+//!
+//! Layout: lane l of vertex v lives at element `v*k + l`. k must divide
+//! [`crate::VALUES_PER_LINE`] (so k ∈ {1, 2, 4, 8, 16} for 64-byte
+//! lines), which makes every lane group start and end inside a single
+//! cache line — a group never straddles a line boundary, so the
+//! flush-lines accounting and the simulator's line-granularity model
+//! stay exact without explicit padding. δ keeps its meaning of *32-bit
+//! elements*: a buffer of δ elements stages δ/k vertex groups.
+//!
+//! Convergence is tracked **per lane**: a query whose round residual
+//! meets its criterion drops out of the sweep (its lane is masked dead,
+//! its values freeze) while the remaining lanes keep iterating — short
+//! queries never pay for the longest one. The live mask is a `u32`
+//! bitmask re-published by thread 0 between rounds.
+
+use crate::graph::VertexId;
+use crate::VALUES_PER_LINE;
+
+/// Largest supported lane count: one full cache line of 32-bit lanes.
+pub const MAX_LANES: usize = VALUES_PER_LINE;
+
+/// The lane counts the CLI / sweeps expose (`--batch k`).
+pub const LANE_COUNTS: [usize; 4] = [1, 4, 8, 16];
+
+/// Whether `k` is a legal lane count: non-zero, at most a cache line,
+/// and dividing [`VALUES_PER_LINE`] so groups never straddle lines.
+pub fn valid_lane_count(k: usize) -> bool {
+    k >= 1 && k <= MAX_LANES && VALUES_PER_LINE % k == 0
+}
+
+/// First element index of vertex `v`'s lane group under `k` lanes.
+#[inline]
+pub fn group_base(v: VertexId, k: usize) -> VertexId {
+    v * k as VertexId
+}
+
+/// Bitmask with the low `k` lane bits live.
+#[inline]
+pub fn full_mask(k: usize) -> u32 {
+    debug_assert!(k <= 32);
+    if k == 32 {
+        u32::MAX
+    } else {
+        (1u32 << k) - 1
+    }
+}
+
+/// Visit every live lane index in `mask`, ascending.
+#[inline]
+pub fn for_each_live<F: FnMut(usize)>(mask: u32, mut f: F) {
+    let mut m = mask;
+    while m != 0 {
+        let l = m.trailing_zeros() as usize;
+        m &= m - 1;
+        f(l);
+    }
+}
+
+/// Read access to whole lane groups — the batched twin of
+/// [`super::program::ValueReader`]. Implementations mirror the
+/// single-lane readers: the shared global array (native), the sync-mode
+/// front buffer, the simulator's line-charging accessor, and the
+/// delay-buffer-patched local reader.
+pub trait LaneReader {
+    /// Fill `out` (length = lane count) with the current lane group of
+    /// vertex `v`.
+    fn read_group(&mut self, v: VertexId, out: &mut [u32]);
+}
+
+/// [`super::program::ValueReader`] view of one lane of a [`LaneReader`]
+/// — backs the trait's generic per-lane fallback, and lets single-lane
+/// programs run unchanged on the lane engine path.
+pub struct LaneProjection<'a, R: LaneReader> {
+    pub reader: &'a mut R,
+    /// Which lane this projection exposes.
+    pub lane: usize,
+    /// Total lanes per group.
+    pub lanes: usize,
+}
+
+impl<R: LaneReader> super::program::ValueReader for LaneProjection<'_, R> {
+    #[inline]
+    fn read(&mut self, v: VertexId) -> u32 {
+        let mut group = [0u32; MAX_LANES];
+        self.reader.read_group(v, &mut group[..self.lanes]);
+        group[self.lane]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_count_validation() {
+        for k in LANE_COUNTS {
+            assert!(valid_lane_count(k), "{k}");
+        }
+        assert!(valid_lane_count(2), "2 divides a line");
+        for k in [0usize, 3, 5, 6, 7, 9, 12, 17, 32] {
+            assert!(!valid_lane_count(k), "{k}");
+        }
+    }
+
+    #[test]
+    fn masks_and_groups() {
+        assert_eq!(full_mask(1), 0b1);
+        assert_eq!(full_mask(4), 0b1111);
+        assert_eq!(full_mask(16), 0xFFFF);
+        assert_eq!(group_base(5, 8), 40);
+        let mut seen = Vec::new();
+        for_each_live(0b1011, |l| seen.push(l));
+        assert_eq!(seen, vec![0, 1, 3]);
+        for_each_live(0, |_| panic!("empty mask must not visit"));
+    }
+
+    #[test]
+    fn projection_reads_one_lane() {
+        struct Fixed;
+        impl LaneReader for Fixed {
+            fn read_group(&mut self, v: VertexId, out: &mut [u32]) {
+                for (l, o) in out.iter_mut().enumerate() {
+                    *o = v * 100 + l as u32;
+                }
+            }
+        }
+        use crate::engine::program::ValueReader;
+        let mut r = Fixed;
+        let mut p = LaneProjection { reader: &mut r, lane: 2, lanes: 4 };
+        assert_eq!(p.read(3), 302);
+        assert_eq!(p.read(0), 2);
+    }
+}

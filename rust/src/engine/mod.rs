@@ -20,10 +20,18 @@
 //! Orthogonal to the mode, [`SchedulePolicy`] decides *which vertices*
 //! a round touches: the paper's dense sweep, a frontier of activated
 //! vertices, or an adaptive dense↔sparse hybrid (DESIGN.md §4).
+//!
+//! A fourth dimension is *how many queries* one sweep answers:
+//! [`lanes`] packs k independent queries as interleaved value lanes per
+//! vertex, so each neighbor read and each delay-buffer flush is
+//! amortized across all k (DESIGN.md §8). Programs opt in by reporting
+//! [`VertexProgram::lanes`] > 1; finished queries drop out of the sweep
+//! via per-lane convergence.
 
 pub mod controller;
 pub mod convergence;
 pub mod delay_buffer;
+pub mod lanes;
 pub mod native;
 pub mod program;
 pub mod schedule;
@@ -32,6 +40,7 @@ pub mod sim;
 pub mod stats;
 pub mod steal;
 
+pub use lanes::LaneReader;
 pub use program::{ValueReader, VertexProgram};
 pub use schedule::SchedulePolicy;
 pub use stats::{RoundStats, RunResult};

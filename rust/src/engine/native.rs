@@ -34,7 +34,7 @@
 
 use std::cell::RefCell;
 use std::ops::Range;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex};
 use std::time::Instant;
 
@@ -42,6 +42,7 @@ use crate::graph::{properties, Csr, VertexId};
 
 use super::controller::{self, DeltaController, Telemetry};
 use super::delay_buffer::{round_delta, DelayBuffer};
+use super::lanes;
 use super::program::{ValueReader, VertexProgram};
 use super::schedule::{AtomicBitmap, SchedulePolicy, ADAPTIVE_SPARSE_DIVISOR};
 use super::shared::{SharedValues, SliceReader};
@@ -65,6 +66,43 @@ impl ValueReader for AsyncReader<'_> {
             }
         }
         self.global.load(v)
+    }
+}
+
+/// Lane-group reader for batched async/delayed modes: the lane twin of
+/// [`AsyncReader`], patching each element of the group from the thread's
+/// own unflushed run under §III-C local reads.
+struct LaneAsyncReader<'a> {
+    global: &'a SharedValues,
+    local: Option<&'a RefCell<DelayBuffer>>,
+    lanes: usize,
+}
+
+impl lanes::LaneReader for LaneAsyncReader<'_> {
+    #[inline]
+    fn read_group(&mut self, v: VertexId, out: &mut [u32]) {
+        if let Some(buf) = self.local {
+            let b = buf.borrow();
+            let e = lanes::group_base(v, self.lanes);
+            for (l, o) in out.iter_mut().enumerate() {
+                *o = match b.pending(e + l as VertexId) {
+                    Some(bits) => bits,
+                    None => self.global.load(e + l as VertexId),
+                };
+            }
+        } else {
+            self.global.load_group(v, out);
+        }
+    }
+}
+
+/// Lane-group reader over the sync-mode front buffer.
+struct LaneFrontReader<'a>(&'a SharedValues);
+
+impl lanes::LaneReader for LaneFrontReader<'_> {
+    #[inline]
+    fn read_group(&mut self, v: VertexId, out: &mut [u32]) {
+        self.0.load_group(v, out);
     }
 }
 
@@ -95,6 +133,13 @@ struct Ctrl {
     /// written by the owner only; collected into
     /// [`RoundStats::delta_trace`] under the adaptive controller.
     delta_used: Vec<AtomicU64>,
+    /// Batched runs only: per-(thread, lane) round delta (f64 bits),
+    /// flattened `t * lanes + l`, written by the owner. Thread 0 sums
+    /// per lane to drive per-lane convergence. Empty when `lanes == 1`.
+    lane_deltas: Vec<AtomicU64>,
+    /// Bitmask of not-yet-converged lanes; thread 0 clears bits between
+    /// the barriers as queries finish. Always `1` for single-lane runs.
+    live: AtomicU32,
     /// Whether the next round sweeps sparsely (thread 0 decides between
     /// the barriers; round 0 is always dense).
     sparse_next: AtomicBool,
@@ -110,11 +155,24 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
     let n = g.num_vertices();
     let pm = cfg.partition_map(g);
     let t_count = pm.num_parts();
-    let init: Vec<u32> = (0..n as VertexId).map(|v| prog.init(v)).collect();
+    let lane_count = prog.lanes();
+    assert!(
+        lanes::valid_lane_count(lane_count),
+        "program reports {lane_count} lanes; lane counts must divide a cache line"
+    );
+    // Element indices (v·lanes + l) ride in VertexId, so the widened
+    // value space must still fit the u32 id range.
+    assert!(n * lane_count <= u32::MAX as usize, "{n} vertices x {lane_count} lanes exceeds the u32 element space");
+    let mut init: Vec<u32> = Vec::with_capacity(n * lane_count);
+    for v in 0..n as VertexId {
+        for l in 0..lane_count {
+            init.push(prog.init_lane(v, l));
+        }
+    }
 
-    let global = SharedValues::from_bits(init.iter().copied());
+    let global = SharedValues::from_bits_lanes(init.iter().copied(), lane_count);
     // Double buffer for sync mode only (async/delayed read+write `global`).
-    let back = SharedValues::from_bits(init.iter().copied());
+    let back = SharedValues::from_bits_lanes(init.iter().copied(), lane_count);
 
     let frontier_on = cfg.schedule != SchedulePolicy::Dense;
     if frontier_on {
@@ -139,6 +197,12 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
         activated: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         steals: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
         delta_used: (0..t_count).map(|_| AtomicU64::new(0)).collect(),
+        lane_deltas: if lane_count > 1 {
+            (0..t_count * lane_count).map(|_| AtomicU64::new(0)).collect()
+        } else {
+            Vec::new()
+        },
+        live: AtomicU32::new(lanes::full_mask(lane_count)),
         sparse_next: AtomicBool::new(false),
         done: AtomicBool::new(false),
     };
@@ -192,6 +256,7 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
         mode: cfg.mode,
         schedule: cfg.schedule,
         threads: t_count,
+        lanes: lane_count,
         converged: converged_out.load(Ordering::SeqCst),
     }
 }
@@ -215,16 +280,23 @@ fn worker<P: VertexProgram>(
     let n = g.num_vertices();
     let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
     let adaptive = matches!(cfg.mode, ExecutionMode::Adaptive);
+    // Batched multi-query lanes: every vertex owns a `lane_n`-wide lane
+    // group; δ and the delay buffer keep their *element* units, so a
+    // buffer of δ elements stages δ/lane_n vertex groups.
+    let lane_n = prog.lanes();
+    let multi = lane_n > 1;
     // Stealing can hand this thread chunks anywhere in the graph, so the
-    // delayed-mode buffer is capped against n rather than the own range.
-    // Sync mode never stages (the double buffer *is* the delay).
-    let delta_bound = if grid.is_some() { n } else { range.len() };
+    // delayed-mode buffer is capped against n rather than the own range
+    // (both in elements, i.e. scaled by the lane count). Sync mode never
+    // stages (the double buffer *is* the delay).
+    let vert_bound = if grid.is_some() { n } else { range.len() };
+    let delta_bound = vert_bound * lane_n;
     // Adaptive: the controller seeds from the offline rule over this
     // thread's own range (locality was precomputed in `run`) and may
     // resize the buffer between any two rounds within [0, bound].
     let mut ctl: Option<DeltaController> = locality.map(|loc| {
         let max = round_delta(delta_bound);
-        DeltaController::new(controller::seed_delta(loc, range.len(), max), max)
+        DeltaController::new(controller::seed_delta(loc, range.len() * lane_n, max), max)
     });
     let delta_cap = if sync_mode {
         0
@@ -262,20 +334,24 @@ fn worker<P: VertexProgram>(
         let mut changed = 0u64;
         let mut activated = 0u64;
         let mut steals = 0u64;
+        // Batched runs: the lanes still live this round (thread 0
+        // re-publishes the mask between rounds as queries converge) and
+        // this thread's per-lane residual accumulators.
+        let live = if multi { ctrl.live.load(Ordering::SeqCst) } else { 1u32 };
+        let mut lane_delta = [0.0f64; lanes::MAX_LANES];
         let (cur, nxt) = match frontiers {
             Some(f) => (Some(&f.maps[round % 2]), Some(&f.maps[(round + 1) % 2])),
             None => (None, None),
         };
-        // Shared by every sweep variant: a changed vertex re-activates
-        // its out-neighbors for the next round, counting newly set bits
+        // Shared by every sweep variant: a vertex whose update activates
+        // (any live lane, for batched runs) re-activates its
+        // out-neighbors for the next round, counting newly set bits
         // (thread 0 sums them for the adaptive density decision).
-        let activate = |old: u32, new: u32, v: VertexId, activated: &mut u64| {
+        let activate_out = |v: VertexId, activated: &mut u64| {
             if let Some(nx) = nxt {
-                if prog.activates(old, new) {
-                    for &w in g.out_neighbors(v) {
-                        if nx.set(w) {
-                            *activated += 1;
-                        }
+                for &w in g.out_neighbors(v) {
+                    if nx.set(w) {
+                        *activated += 1;
                     }
                 }
             }
@@ -314,37 +390,81 @@ fn worker<P: VertexProgram>(
             // Buffers swap roles each round; `front` is read-only here
             // because every writer targets `write` and ranges are disjoint.
             let (front, write) = if round % 2 == 0 { (global, back) } else { (back, global) };
+            // Per-vertex sync update, shared by the dense and sparse
+            // sweeps. Batched runs read and write whole lane groups; the
+            // double buffer must carry every lane (live or dead) across
+            // the swap, exactly like the unchanged-value store below.
+            let mut sync_body = |v: VertexId,
+                                 delta: &mut f64,
+                                 lane_delta: &mut [f64],
+                                 changed: &mut u64,
+                                 activated: &mut u64| {
+                if multi {
+                    let mut group = [0u32; lanes::MAX_LANES];
+                    let gv = &mut group[..lane_n];
+                    front.load_group(v, gv);
+                    let mut old = [0u32; lanes::MAX_LANES];
+                    old[..lane_n].copy_from_slice(gv);
+                    let mut rd = LaneFrontReader(front);
+                    prog.update_lanes(v, &mut rd, gv, live);
+                    let mut changed_any = false;
+                    let mut act_any = false;
+                    lanes::for_each_live(live, |l| {
+                        let d = prog.lane_delta(l, old[l], gv[l]);
+                        lane_delta[l] += d;
+                        *delta += d;
+                        changed_any |= gv[l] != old[l];
+                        act_any |= prog.activates(old[l], gv[l]);
+                    });
+                    *changed += changed_any as u64;
+                    if act_any {
+                        activate_out(v, activated);
+                    }
+                    write.store_group(v, gv);
+                } else {
+                    let old = front.load(v);
+                    let mut rd = SharedReaderShim(front);
+                    let new = prog.update(v, &mut rd);
+                    *delta += prog.delta(old, new);
+                    *changed += (new != old) as u64;
+                    if prog.activates(old, new) {
+                        activate_out(v, activated);
+                    }
+                    // Sync must carry unchanged values across the swap.
+                    write.store(v, if conditional && new == old { old } else { new });
+                }
+            };
             if sparse {
                 let cur = cur.expect("sparse rounds require frontiers");
                 // Copy-down: values we computed last round for vertices
                 // skipped this round exist only in `front`.
+                let copy_down = |v: VertexId| {
+                    if !cur.get(v) {
+                        if multi {
+                            let mut gbuf = [0u32; lanes::MAX_LANES];
+                            front.load_group(v, &mut gbuf[..lane_n]);
+                            write.store_group(v, &gbuf[..lane_n]);
+                        } else {
+                            write.store(v, front.load(v));
+                        }
+                    }
+                };
                 match &prev_swept {
                     None => {
                         for v in range.clone() {
-                            if !cur.get(v) {
-                                write.store(v, front.load(v));
-                            }
+                            copy_down(v);
                         }
                     }
                     Some(list) => {
                         for &v in list {
-                            if !cur.get(v) {
-                                write.store(v, front.load(v));
-                            }
+                            copy_down(v);
                         }
                     }
                 }
                 let mut swept: Vec<VertexId> = Vec::new();
                 while let Some(c) = next_chunk(&mut steals) {
                     cur.for_each_in(c, |v| {
-                        let old = front.load(v);
-                        let mut rd = SharedReaderShim(front);
-                        let new = prog.update(v, &mut rd);
-                        delta += prog.delta(old, new);
-                        changed += (new != old) as u64;
-                        activate(old, new, v, &mut activated);
-                        // Sync must carry unchanged values across the swap.
-                        write.store(v, if conditional && new == old { old } else { new });
+                        sync_body(v, &mut delta, &mut lane_delta, &mut changed, &mut activated);
                         swept.push(v);
                     });
                 }
@@ -354,37 +474,75 @@ fn worker<P: VertexProgram>(
                 while let Some(c) = next_chunk(&mut steals) {
                     processed += c.len() as u64;
                     for v in c {
-                        let old = front.load(v);
-                        let mut rd = SharedReaderShim(front);
-                        let new = prog.update(v, &mut rd);
-                        delta += prog.delta(old, new);
-                        changed += (new != old) as u64;
-                        activate(old, new, v, &mut activated);
-                        write.store(v, if conditional && new == old { old } else { new });
+                        sync_body(v, &mut delta, &mut lane_delta, &mut changed, &mut activated);
                     }
                 }
                 prev_swept = None;
             }
         } else {
-            buf.borrow_mut().begin(range.start);
+            buf.borrow_mut().begin(lanes::group_base(range.start, lane_n));
             let mut body = |v: VertexId| {
                 // No-op on contiguous (dense) sweeps; on sparse sweeps and
                 // stolen chunks publishes the pending run before jumping
-                // the gap.
-                buf.borrow_mut().seek(global, v);
-                let old = global.load(v);
-                let new = {
-                    let mut rd = AsyncReader { global, local: cfg.local_reads.then_some(&buf) };
-                    prog.update(v, &mut rd)
-                };
-                delta += prog.delta(old, new);
-                changed += (new != old) as u64;
-                activate(old, new, v, &mut activated);
-                let mut b = buf.borrow_mut();
-                if conditional && new == old {
-                    b.skip(global);
+                // the gap. Element units: vertex v's lane group starts at
+                // v * lane_n.
+                buf.borrow_mut().seek(global, lanes::group_base(v, lane_n));
+                if multi {
+                    let mut group = [0u32; lanes::MAX_LANES];
+                    let gv = &mut group[..lane_n];
+                    global.load_group(v, gv);
+                    let mut old = [0u32; lanes::MAX_LANES];
+                    old[..lane_n].copy_from_slice(gv);
+                    {
+                        let mut rd =
+                            LaneAsyncReader { global, local: cfg.local_reads.then_some(&buf), lanes: lane_n };
+                        prog.update_lanes(v, &mut rd, gv, live);
+                    }
+                    let mut changed_any = false;
+                    let mut act_any = false;
+                    lanes::for_each_live(live, |l| {
+                        let d = prog.lane_delta(l, old[l], gv[l]);
+                        lane_delta[l] += d;
+                        delta += d;
+                        changed_any |= gv[l] != old[l];
+                        act_any |= prog.activates(old[l], gv[l]);
+                    });
+                    changed += changed_any as u64;
+                    if act_any {
+                        activate_out(v, &mut activated);
+                    }
+                    let mut b = buf.borrow_mut();
+                    if conditional && !changed_any {
+                        // No live lane changed: skip the whole group —
+                        // one flush-and-jump, exactly like the scalar
+                        // conditional write.
+                        b.skip_n(global, lane_n);
+                    } else {
+                        // Stage the whole group; dead lanes re-publish
+                        // their frozen bits so flushed runs stay
+                        // contiguous (and the line they share with live
+                        // lanes is dirtied only once).
+                        for &x in gv.iter() {
+                            b.push(global, x);
+                        }
+                    }
                 } else {
-                    b.push(global, new);
+                    let old = global.load(v);
+                    let new = {
+                        let mut rd = AsyncReader { global, local: cfg.local_reads.then_some(&buf) };
+                        prog.update(v, &mut rd)
+                    };
+                    delta += prog.delta(old, new);
+                    changed += (new != old) as u64;
+                    if prog.activates(old, new) {
+                        activate_out(v, &mut activated);
+                    }
+                    let mut b = buf.borrow_mut();
+                    if conditional && new == old {
+                        b.skip(global);
+                    } else {
+                        b.push(global, new);
+                    }
                 }
                 processed += 1;
             };
@@ -403,6 +561,11 @@ fn worker<P: VertexProgram>(
 
         let my_round_secs = my_t0.elapsed().as_secs_f64();
         ctrl.deltas[t].store(delta.to_bits(), Ordering::Relaxed);
+        if multi {
+            for (l, &d) in lane_delta[..lane_n].iter().enumerate() {
+                ctrl.lane_deltas[t * lane_n + l].store(d.to_bits(), Ordering::Relaxed);
+            }
+        }
         ctrl.flushes[t].store(buf.borrow().flushes(), Ordering::Relaxed);
         ctrl.processed[t].store(processed, Ordering::Relaxed);
         ctrl.changed[t].store(changed, Ordering::Relaxed);
@@ -446,11 +609,12 @@ fn worker<P: VertexProgram>(
                 round_cost: my_round_secs,
                 density: total_changed as f64 / n.max(1) as f64,
                 residual_ratio,
+                live_lanes: live.count_ones() as u64,
             };
             prev_flush_lines = b.lines_flushed();
             let next = c.observe(&tel);
             if next != b.capacity() {
-                b.resize(next);
+                b.resize(global, next);
             }
         }
 
@@ -459,6 +623,26 @@ fn worker<P: VertexProgram>(
             let total_flushes: u64 = ctrl.flushes.iter().map(|f| f.load(Ordering::Relaxed)).sum();
             let total_active: u64 = ctrl.processed.iter().map(|p| p.load(Ordering::Relaxed)).sum();
             let total_steals: u64 = ctrl.steals.iter().map(|s| s.load(Ordering::Relaxed)).sum();
+            // Batched runs: per-lane residuals drive per-lane drop-out —
+            // a lane whose criterion is met is cleared from the live
+            // mask, and the run converges once every query is answered.
+            let (lane_sums, next_live) = if multi {
+                let mut sums = vec![0.0f64; lane_n];
+                for chunk in ctrl.lane_deltas.chunks_exact(lane_n) {
+                    for (s, d) in sums.iter_mut().zip(chunk) {
+                        *s += f64::from_bits(d.load(Ordering::Relaxed));
+                    }
+                }
+                let mut mask = live;
+                lanes::for_each_live(live, |l| {
+                    if prog.lane_converged(l, sums[l]) {
+                        mask &= !(1u32 << l);
+                    }
+                });
+                (sums, mask)
+            } else {
+                (Vec::new(), live)
+            };
             let mut rounds = rounds_out.lock().unwrap();
             let prev_flushes: u64 = rounds.iter().map(|r: &RoundStats| r.flushes).sum();
             rounds.push(RoundStats {
@@ -472,20 +656,26 @@ fn worker<P: VertexProgram>(
                 } else {
                     Vec::new()
                 },
+                lane_deltas: lane_sums,
             });
-            let conv = prog.converged(round_delta);
+            let conv = if multi { next_live == 0 } else { prog.converged(round_delta) };
             if conv || rounds.len() >= cfg.max_rounds {
                 ctrl.done.store(true, Ordering::SeqCst);
                 converged_out.store(conv, Ordering::SeqCst);
-            } else if frontiers.is_some() {
-                let next_size: u64 = ctrl.activated.iter().map(|a| a.load(Ordering::Relaxed)).sum();
-                let sparse_next = match cfg.schedule {
-                    SchedulePolicy::Dense => false,
-                    SchedulePolicy::Frontier => true,
-                    // DO-BFS-style density switch, re-evaluated per round.
-                    SchedulePolicy::Adaptive => (next_size as usize) * ADAPTIVE_SPARSE_DIVISOR < n,
-                };
-                ctrl.sparse_next.store(sparse_next, Ordering::SeqCst);
+            } else {
+                if multi && next_live != live {
+                    ctrl.live.store(next_live, Ordering::SeqCst);
+                }
+                if frontiers.is_some() {
+                    let next_size: u64 = ctrl.activated.iter().map(|a| a.load(Ordering::Relaxed)).sum();
+                    let sparse_next = match cfg.schedule {
+                        SchedulePolicy::Dense => false,
+                        SchedulePolicy::Frontier => true,
+                        // DO-BFS-style density switch, re-evaluated per round.
+                        SchedulePolicy::Adaptive => (next_size as usize) * ADAPTIVE_SPARSE_DIVISOR < n,
+                    };
+                    ctrl.sparse_next.store(sparse_next, Ordering::SeqCst);
+                }
             }
         }
 
@@ -519,6 +709,7 @@ impl ValueReader for SharedReaderShim<'_> {
 /// bit-exactly for any thread count (and, for frontier schedules, any
 /// schedule — skipped vertices recompute identically by construction).
 pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -> RunResult {
+    assert_eq!(prog.lanes(), 1, "the serial oracle is single-lane; oracle batched runs lane by lane");
     let n = g.num_vertices();
     let mut front: Vec<u32> = (0..n as VertexId).map(|v| prog.init(v)).collect();
     let mut back = front.clone();
@@ -541,6 +732,7 @@ pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -
             active: n as u64,
             steals: 0,
             delta_trace: Vec::new(),
+            lane_deltas: Vec::new(),
         });
         if prog.converged(delta) {
             converged = true;
@@ -553,6 +745,7 @@ pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -
         mode: ExecutionMode::Synchronous,
         schedule: SchedulePolicy::Dense,
         threads: 1,
+        lanes: 1,
         converged,
     }
 }
@@ -869,6 +1062,175 @@ mod tests {
         let r = run(&g, &MaxProp { g: &g }, &EngineConfig::new(8, ExecutionMode::Adaptive).with_stealing());
         assert!(r.converged);
         assert_eq!(r.values.len(), 3);
+    }
+
+    /// k-lane batched MaxProp: lane `l` floods the max of a per-lane
+    /// salted init — k independent label propagations in one sweep, each
+    /// with a unique fixed point (so every mode must match bit-exactly).
+    struct MultiMax<'g> {
+        g: &'g Csr,
+        k: usize,
+    }
+
+    fn salted_init(v: VertexId, l: usize) -> u32 {
+        (v as u64 * (7919 + 13 * l as u64) % (10007 + l as u64)) as u32
+    }
+
+    impl VertexProgram for MultiMax<'_> {
+        fn name(&self) -> &'static str {
+            "multimax"
+        }
+        fn lanes(&self) -> usize {
+            self.k
+        }
+        fn init(&self, v: VertexId) -> u32 {
+            salted_init(v, 0)
+        }
+        fn init_lane(&self, v: VertexId, l: usize) -> u32 {
+            salted_init(v, l)
+        }
+        fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+            let mut best = r.read(v);
+            for &u in self.g.in_neighbors(v) {
+                best = best.max(r.read(u));
+            }
+            best
+        }
+        fn update_lanes<R: lanes::LaneReader>(&self, v: VertexId, r: &mut R, out: &mut [u32], live: u32) {
+            let mut nb = [0u32; lanes::MAX_LANES];
+            for &u in self.g.in_neighbors(v) {
+                r.read_group(u, &mut nb[..self.k]);
+                lanes::for_each_live(live, |l| out[l] = out[l].max(nb[l]));
+            }
+        }
+        fn delta(&self, old: u32, new: u32) -> f64 {
+            (old != new) as u32 as f64
+        }
+        fn converged(&self, d: f64) -> bool {
+            d == 0.0
+        }
+    }
+
+    /// Lane `l` of [`MultiMax`] as an independent single-query program.
+    struct SaltedMax<'g> {
+        g: &'g Csr,
+        l: usize,
+    }
+
+    impl VertexProgram for SaltedMax<'_> {
+        fn name(&self) -> &'static str {
+            "saltedmax"
+        }
+        fn init(&self, v: VertexId) -> u32 {
+            salted_init(v, self.l)
+        }
+        fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+            let mut best = r.read(v);
+            for &u in self.g.in_neighbors(v) {
+                best = best.max(r.read(u));
+            }
+            best
+        }
+        fn delta(&self, old: u32, new: u32) -> f64 {
+            (old != new) as u32 as f64
+        }
+        fn converged(&self, d: f64) -> bool {
+            d == 0.0
+        }
+    }
+
+    #[test]
+    fn batched_lanes_match_independent_runs_every_mode() {
+        let g = GapGraph::Web.generate(9, 4);
+        let k = 4;
+        let oracles: Vec<Vec<u32>> =
+            (0..k).map(|l| run_serial_sync(&g, &SaltedMax { g: &g, l }, 10_000).values).collect();
+        for mode in [
+            ExecutionMode::Synchronous,
+            ExecutionMode::Asynchronous,
+            ExecutionMode::Delayed(32),
+            ExecutionMode::Adaptive,
+        ] {
+            for sched in SchedulePolicy::ALL {
+                for steal in [false, true] {
+                    let mut cfg = EngineConfig::new(4, mode).with_schedule(sched);
+                    if steal {
+                        cfg = cfg.with_stealing();
+                    }
+                    let r = run(&g, &MultiMax { g: &g, k }, &cfg);
+                    assert!(r.converged, "{mode:?}/{sched:?} steal={steal}");
+                    assert_eq!(r.lanes, k);
+                    assert_eq!(r.values.len(), g.num_vertices() * k);
+                    for (l, want) in oracles.iter().enumerate() {
+                        assert_eq!(&r.lane_values(l), want, "lane {l} {mode:?}/{sched:?} steal={steal}");
+                    }
+                    for rs in &r.rounds {
+                        assert_eq!(rs.lane_deltas.len(), k, "{mode:?}/{sched:?} steal={steal}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn converged_lanes_drop_out_early() {
+        // Lane 1 starts at its fixed point (constant 0 floods nothing);
+        // lane 0 is a real propagation. The dead lane must report a 0.0
+        // residual from round 0 on and keep its frozen values, while the
+        // live lane iterates to the oracle.
+        struct HalfDead<'g> {
+            g: &'g Csr,
+        }
+        impl VertexProgram for HalfDead<'_> {
+            fn name(&self) -> &'static str {
+                "halfdead"
+            }
+            fn lanes(&self) -> usize {
+                2
+            }
+            fn init(&self, v: VertexId) -> u32 {
+                salted_init(v, 0)
+            }
+            fn init_lane(&self, v: VertexId, l: usize) -> u32 {
+                if l == 0 {
+                    salted_init(v, 0)
+                } else {
+                    0
+                }
+            }
+            fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+                let mut best = r.read(v);
+                for &u in self.g.in_neighbors(v) {
+                    best = best.max(r.read(u));
+                }
+                best
+            }
+            fn update_lanes<R: lanes::LaneReader>(&self, v: VertexId, r: &mut R, out: &mut [u32], live: u32) {
+                let mut nb = [0u32; 2];
+                for &u in self.g.in_neighbors(v) {
+                    r.read_group(u, &mut nb);
+                    lanes::for_each_live(live, |l| out[l] = out[l].max(nb[l]));
+                }
+            }
+            fn delta(&self, old: u32, new: u32) -> f64 {
+                (old != new) as u32 as f64
+            }
+            fn converged(&self, d: f64) -> bool {
+                d == 0.0
+            }
+        }
+        let g = GapGraph::Road.generate(9, 0);
+        let oracle = run_serial_sync(&g, &SaltedMax { g: &g, l: 0 }, 10_000).values;
+        let r = run(&g, &HalfDead { g: &g }, &EngineConfig::new(4, ExecutionMode::Delayed(64)));
+        assert!(r.converged);
+        assert!(r.num_rounds() > 2, "lane 0 must outlive lane 1");
+        assert_eq!(r.lane_values(0), oracle);
+        assert!(r.lane_values(1).iter().all(|&x| x == 0), "dead lane frozen at its init");
+        let t1 = r.lane_delta_trace(1);
+        assert!(t1.iter().all(|&d| d == 0.0), "lane 1 never produced a residual: {t1:?}");
+        let t0 = r.lane_delta_trace(0);
+        assert!(t0[0] > 0.0, "lane 0 starts live: {t0:?}");
+        assert_eq!(*t0.last().unwrap(), 0.0, "lane 0 ends converged");
     }
 
     #[test]

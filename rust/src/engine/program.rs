@@ -64,6 +64,56 @@ pub trait VertexProgram: Sync {
     fn activates(&self, old: u32, new: u32) -> bool {
         old != new
     }
+
+    // ---- batched multi-query lanes (see `engine::lanes`) -------------
+
+    /// Number of value lanes per vertex: 1 for single-query programs,
+    /// k for batched programs answering k independent queries in one
+    /// sweep. Must satisfy [`crate::engine::lanes::valid_lane_count`].
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    /// Initial value of lane `lane` of vertex `v`. Single-query default:
+    /// lane 0 is [`Self::init`].
+    fn init_lane(&self, v: VertexId, lane: usize) -> u32 {
+        debug_assert_eq!(lane, 0, "single-lane program asked for lane {lane}");
+        self.init(v)
+    }
+
+    /// Batched update path: recompute the **live** lanes of `v` into
+    /// `out` (length [`Self::lanes`]), pulling neighbor lane groups
+    /// through `reader`. `out` arrives pre-loaded with `v`'s current
+    /// lane values; dead lanes (bits clear in `live`) must be left
+    /// untouched so the engine republishes identical bits for them.
+    ///
+    /// The default recomputes each live lane independently through a
+    /// one-lane projection of `reader` — correct for any program, but it
+    /// re-reads every neighbor group once per lane. Batched programs
+    /// override it to pull each neighbor group **once** and feed all
+    /// lanes from it; that amortization is the whole point of lanes.
+    fn update_lanes<R: super::lanes::LaneReader>(&self, v: VertexId, reader: &mut R, out: &mut [u32], live: u32) {
+        let k = out.len();
+        super::lanes::for_each_live(live, |l| {
+            let mut proj = super::lanes::LaneProjection { reader: &mut *reader, lane: l, lanes: k };
+            out[l] = self.update(v, &mut proj);
+        });
+    }
+
+    /// Per-lane contribution to lane `lane`'s convergence metric.
+    /// Default: the single-query [`Self::delta`] (all lanes share it).
+    #[inline]
+    fn lane_delta(&self, _lane: usize, old: u32, new: u32) -> f64 {
+        self.delta(old, new)
+    }
+
+    /// Whether lane `lane` has converged given its summed round delta —
+    /// a converged lane drops out of subsequent sweeps (its query is
+    /// answered). Default: the single-query [`Self::converged`].
+    #[inline]
+    fn lane_converged(&self, _lane: usize, lane_round_delta: f64) -> bool {
+        self.converged(lane_round_delta)
+    }
 }
 
 #[cfg(test)]
@@ -113,5 +163,31 @@ mod tests {
         let p = MaxProp { g: &g };
         assert!(p.activates(1, 2));
         assert!(!p.activates(7, 7));
+    }
+
+    #[test]
+    fn default_lane_path_matches_update() {
+        // The generic per-lane fallback must reproduce `update` on lane
+        // 0 of a single-lane program and leave dead lanes untouched.
+        use crate::engine::lanes::LaneReader;
+        struct OneLane<'v>(&'v [u32]);
+        impl LaneReader for OneLane<'_> {
+            fn read_group(&mut self, v: VertexId, out: &mut [u32]) {
+                out[0] = self.0[v as usize];
+            }
+        }
+        let g = crate::graph::GraphBuilder::new(3).edges(&[(0, 1), (2, 1)]).build();
+        let p = MaxProp { g: &g };
+        assert_eq!(p.lanes(), 1);
+        let vals = [5u32, 0, 9];
+        let mut out = [0u32];
+        p.update_lanes(1, &mut OneLane(&vals), &mut out, 0b1);
+        assert_eq!(out, [9]);
+        let mut frozen = [77u32];
+        p.update_lanes(1, &mut OneLane(&vals), &mut frozen, 0b0);
+        assert_eq!(frozen, [77], "dead lanes stay frozen");
+        assert_eq!(p.init_lane(2, 0), p.init(2));
+        assert_eq!(p.lane_delta(0, 1, 2), p.delta(1, 2));
+        assert!(p.lane_converged(0, 0.0));
     }
 }

@@ -16,14 +16,39 @@ use super::program::ValueReader;
 
 /// Shared value array. Heap layout is 64-byte aligned so partition ranges
 /// map cleanly onto cache lines.
+///
+/// Under multi-query batching ([`crate::engine::lanes`]) the array holds
+/// `lanes` interleaved 32-bit values per vertex (vertex-major lane
+/// groups: lane `l` of vertex `v` at element `v*lanes + l`). Element
+/// indices — [`Self::load`], [`Self::store`], [`Self::store_run`] — are
+/// *flat* indices into that layout, which is what the delay buffer
+/// stages and flushes; [`Self::load_group`]/[`Self::store_group`]
+/// address whole per-vertex groups. `lanes == 1` is the classic
+/// single-query array where element index = vertex id.
 pub struct SharedValues {
     slots: Vec<AtomicU32>,
+    lanes: usize,
 }
 
 impl SharedValues {
-    /// Build from initial raw-bit values.
+    /// Build from initial raw-bit values (single lane per vertex).
     pub fn from_bits(bits: impl IntoIterator<Item = u32>) -> Self {
-        Self { slots: bits.into_iter().map(AtomicU32::new).collect() }
+        Self::from_bits_lanes(bits, 1)
+    }
+
+    /// Build from initial raw-bit values laid out as `lanes`-wide vertex
+    /// groups (`bits.len()` must be a multiple of `lanes`).
+    pub fn from_bits_lanes(bits: impl IntoIterator<Item = u32>, lanes: usize) -> Self {
+        assert!(crate::engine::lanes::valid_lane_count(lanes), "bad lane count {lanes}");
+        let slots: Vec<AtomicU32> = bits.into_iter().map(AtomicU32::new).collect();
+        assert_eq!(slots.len() % lanes, 0, "value count must be a multiple of the lane count");
+        Self { slots, lanes }
+    }
+
+    /// Lanes per vertex group.
+    #[inline]
+    pub fn lanes(&self) -> usize {
+        self.lanes
     }
 
     /// Number of values.
@@ -56,6 +81,26 @@ impl SharedValues {
     pub fn store_run(&self, base: VertexId, values: &[u32]) {
         for (i, &x) in values.iter().enumerate() {
             self.slots[base as usize + i].store(x, Ordering::Relaxed);
+        }
+    }
+
+    /// Load vertex `v`'s whole lane group into `out` (length `lanes`).
+    #[inline]
+    pub fn load_group(&self, v: VertexId, out: &mut [u32]) {
+        debug_assert_eq!(out.len(), self.lanes);
+        let base = v as usize * self.lanes;
+        for (l, o) in out.iter_mut().enumerate() {
+            *o = self.slots[base + l].load(Ordering::Relaxed);
+        }
+    }
+
+    /// Store vertex `v`'s whole lane group from `vals` (length `lanes`).
+    #[inline]
+    pub fn store_group(&self, v: VertexId, vals: &[u32]) {
+        debug_assert_eq!(vals.len(), self.lanes);
+        let base = v as usize * self.lanes;
+        for (l, &x) in vals.iter().enumerate() {
+            self.slots[base + l].store(x, Ordering::Relaxed);
         }
     }
 
@@ -120,6 +165,28 @@ mod tests {
         let snap = s.to_vec();
         let mut sr = SliceReader(&snap);
         assert_eq!(sr.read(0), 10);
+    }
+
+    #[test]
+    fn lane_groups_roundtrip() {
+        // 3 vertices × 4 lanes.
+        let s = SharedValues::from_bits_lanes(vec![0; 12], 4);
+        assert_eq!(s.lanes(), 4);
+        s.store_group(1, &[10, 11, 12, 13]);
+        let mut g = [0u32; 4];
+        s.load_group(1, &mut g);
+        assert_eq!(g, [10, 11, 12, 13]);
+        // Element addressing sees the same interleaved slots.
+        assert_eq!(s.load(4), 10);
+        assert_eq!(s.load(7), 13);
+        s.load_group(0, &mut g);
+        assert_eq!(g, [0, 0, 0, 0], "neighboring groups untouched");
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of the lane count")]
+    fn lane_length_mismatch_rejected() {
+        let _ = SharedValues::from_bits_lanes(vec![0; 10], 4);
     }
 
     #[test]

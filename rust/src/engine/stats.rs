@@ -26,6 +26,12 @@ pub struct RoundStats {
     /// Empty for every other mode: static δ never changes, so a trace
     /// would carry no information.
     pub delta_trace: Vec<usize>,
+    /// Per-lane summed convergence metric of the round under batched
+    /// multi-query execution (`lane_deltas[l]` = query l's residual;
+    /// exactly 0.0 once the lane has dropped out). Empty for
+    /// single-lane runs, where [`Self::delta`] carries the same
+    /// information.
+    pub lane_deltas: Vec<f64>,
 }
 
 /// Result of one engine run.
@@ -38,6 +44,11 @@ pub struct RunResult {
     /// Which vertices each round swept (dense / frontier / adaptive).
     pub schedule: SchedulePolicy,
     pub threads: usize,
+    /// Value lanes per vertex: 1 for single-query runs, k when the run
+    /// batched k queries ([`crate::engine::lanes`]). `values` then holds
+    /// `n × lanes` elements, vertex-major (decode via
+    /// [`Self::lane_values`]).
+    pub lanes: usize,
     /// True if the convergence criterion was met (false = hit max_rounds).
     pub converged: bool,
 }
@@ -89,6 +100,20 @@ impl RunResult {
         self.values.iter().map(|&b| f32::from_bits(b)).collect()
     }
 
+    /// De-interleave lane `l`'s per-vertex values out of the lane-group
+    /// layout (the identity copy for single-lane runs' lane 0).
+    pub fn lane_values(&self, l: usize) -> Vec<u32> {
+        assert!(l < self.lanes, "lane {l} out of range for {} lanes", self.lanes);
+        self.values.iter().skip(l).step_by(self.lanes).copied().collect()
+    }
+
+    /// Per-round residuals of lane `l` (empty for single-lane runs) —
+    /// the visible evidence that finished queries drop out: a dead
+    /// lane's entries are exactly 0.0 from its drop-out round on.
+    pub fn lane_delta_trace(&self, l: usize) -> Vec<f64> {
+        self.rounds.iter().filter_map(|r| r.lane_deltas.get(l).copied()).collect()
+    }
+
     /// Thread `t`'s per-round δ under the adaptive controller (empty for
     /// non-adaptive runs or out-of-range `t`).
     pub fn delta_trace_of(&self, t: usize) -> Vec<usize> {
@@ -116,12 +141,29 @@ mod tests {
         RunResult {
             values: vec![1f32.to_bits(), 2f32.to_bits()],
             rounds: vec![
-                RoundStats { time_s: 0.5, delta: 1.0, flushes: 3, active: 2, steals: 1, delta_trace: vec![64, 32] },
-                RoundStats { time_s: 1.5, delta: 0.0, flushes: 2, active: 1, steals: 0, delta_trace: vec![32, 32] },
+                RoundStats {
+                    time_s: 0.5,
+                    delta: 1.0,
+                    flushes: 3,
+                    active: 2,
+                    steals: 1,
+                    delta_trace: vec![64, 32],
+                    lane_deltas: Vec::new(),
+                },
+                RoundStats {
+                    time_s: 1.5,
+                    delta: 0.0,
+                    flushes: 2,
+                    active: 1,
+                    steals: 0,
+                    delta_trace: vec![32, 32],
+                    lane_deltas: Vec::new(),
+                },
             ],
             mode: ExecutionMode::Delayed(64),
             schedule: SchedulePolicy::Frontier,
             threads: 4,
+            lanes: 1,
             converged: true,
         }
     }
@@ -141,6 +183,21 @@ mod tests {
         assert_eq!(r.delta_trace_of(1), vec![32, 32]);
         assert!(r.delta_trace_of(2).is_empty());
         assert_eq!(r.final_delta_median(), Some(32));
+    }
+
+    #[test]
+    fn lane_accessors() {
+        let mut r = mk();
+        assert_eq!(r.lane_values(0), r.values, "single lane is the identity view");
+        assert!(r.lane_delta_trace(0).is_empty(), "single-lane rounds carry no lane residuals");
+        // Re-interpret as a 2-lane run over one vertex.
+        r.lanes = 2;
+        r.rounds[0].lane_deltas = vec![1.0, 0.5];
+        r.rounds[1].lane_deltas = vec![0.0, 0.5];
+        assert_eq!(r.lane_values(0), vec![1f32.to_bits()]);
+        assert_eq!(r.lane_values(1), vec![2f32.to_bits()]);
+        assert_eq!(r.lane_delta_trace(0), vec![1.0, 0.0], "lane 0 dropped out after round 0");
+        assert_eq!(r.lane_delta_trace(1), vec![0.5, 0.5]);
     }
 
     #[test]

@@ -6,6 +6,14 @@
 //! Bellman-Ford benefits from them and the GAP reference builder also
 //! removes them), and optional symmetrization inserts the reverse of
 //! every edge.
+//!
+//! Validation is `Result`-based ([`GraphBuilder::try_build`]) with the
+//! same indexed error style as `graph/io.rs`, so a corrupt in-memory
+//! edge list surfaces as an error a serving process can handle —
+//! [`GraphBuilder::build`] is the panicking convenience wrapper for
+//! trusted (generated/test) inputs.
+
+use anyhow::{bail, Result};
 
 use super::csr::{Csr, VertexId};
 
@@ -20,9 +28,10 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
-    /// Builder for a graph over vertices `0..n`.
+    /// Builder for a graph over vertices `0..n`. Oversized `n` is
+    /// reported by [`Self::try_build`] (or panics in [`Self::build`]),
+    /// so staging edges can never abort a long-lived process.
     pub fn new(n: usize) -> Self {
-        assert!(n <= u32::MAX as usize, "vertex ids are u32");
         Self { n, triples: Vec::new(), weighted: false, symmetrize: false, keep_self_loops: false }
     }
 
@@ -68,12 +77,30 @@ impl GraphBuilder {
         self.triples.len()
     }
 
-    /// Finalize into CSR (pull orientation).
+    /// Finalize into CSR (pull orientation), panicking on invalid input
+    /// — the convenience wrapper over [`Self::try_build`] for trusted
+    /// (generated/test) edge lists.
     pub fn build(self) -> Csr {
+        match self.try_build() {
+            Ok(g) => g,
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Finalize into CSR (pull orientation). Invalid input — an edge
+    /// endpoint outside `0..n`, or an `n` beyond the u32 id space — is a
+    /// clean `Err` in the `graph/io.rs` style (`edge <index>: …`), so
+    /// corrupt in-memory edge lists can't abort a serving process.
+    pub fn try_build(self) -> Result<Csr> {
         let Self { n, mut triples, weighted, symmetrize, keep_self_loops } = self;
 
-        for &(s, d, _) in &triples {
-            assert!((s as usize) < n && (d as usize) < n, "edge ({s},{d}) out of range for n={n}");
+        if n > u32::MAX as usize {
+            bail!("vertex count {n} exceeds the u32 id space");
+        }
+        for (i, &(s, d, _)) in triples.iter().enumerate() {
+            if (s as usize) >= n || (d as usize) >= n {
+                bail!("edge {i}: ({s},{d}) out of range for n={n}");
+            }
         }
         if !keep_self_loops {
             triples.retain(|&(s, d, _)| s != d);
@@ -104,7 +131,7 @@ impl GraphBuilder {
             out_degrees[s as usize] += 1;
         }
 
-        Csr::from_parts(offsets, sources, weights, out_degrees, symmetrize)
+        Ok(Csr::from_parts(offsets, sources, weights, out_degrees, symmetrize))
     }
 }
 
@@ -159,6 +186,24 @@ mod tests {
     #[should_panic(expected = "out of range")]
     fn out_of_range_edge_panics() {
         GraphBuilder::new(2).edges(&[(0, 5)]).build();
+    }
+
+    #[test]
+    fn try_build_reports_indexed_errors() {
+        // The edge index and endpoints are named, io.rs-style, so a
+        // serving process can log which staged edge was corrupt.
+        let err = GraphBuilder::new(3).edges(&[(0, 1), (7, 2), (2, 0)]).try_build().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("edge 1") && msg.contains("(7,2)") && msg.contains("n=3"), "{msg}");
+        // Valid input still builds through the fallible path.
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (2, 1)]).try_build().unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn try_build_rejects_oversized_n() {
+        let err = GraphBuilder::new(u32::MAX as usize + 1).try_build().unwrap_err();
+        assert!(err.to_string().contains("u32 id space"), "{err}");
     }
 
     #[test]

@@ -34,8 +34,9 @@ pub fn write_edge_list(g: &Csr, path: &Path) -> Result<()> {
 
 /// Read a whitespace-separated edge list. Lines starting with `#` or `%`
 /// are comments. Vertex count is `max id + 1` unless `n` is given; an
-/// explicit `n` smaller than some vertex id is a clean `Err` (the builder
-/// would otherwise panic mid-`build`).
+/// explicit `n` smaller than some vertex id is a clean line-numbered
+/// `Err` here, and the fallible `try_build` backstop catches anything
+/// that slips through.
 pub fn read_edge_list(path: &Path, n: Option<usize>, symmetrize: bool) -> Result<Csr> {
     let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
     let mut triples: Vec<(u32, u32, u32)> = Vec::new();
@@ -80,7 +81,7 @@ pub fn read_edge_list(path: &Path, n: Option<usize>, symmetrize: bool) -> Result
     for (s, d, w) in triples {
         b.push(s, d, w);
     }
-    Ok(b.build())
+    b.try_build().with_context(|| format!("{path:?}"))
 }
 
 // -------------------------------------------------------------- binary --
@@ -285,7 +286,7 @@ pub fn read_matrix_market(path: &Path) -> Result<Csr> {
         };
         b.as_mut().unwrap().push((i - 1) as u32, (j - 1) as u32, w);
     }
-    Ok(b.with_context(|| format!("{path:?}: no size line"))?.build())
+    b.with_context(|| format!("{path:?}: no size line"))?.try_build().with_context(|| format!("{path:?}"))
 }
 
 /// Parse one whitespace-separated field with file/line context.

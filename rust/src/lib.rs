@@ -39,9 +39,9 @@
 //! let cfg = EngineConfig::new(4, ExecutionMode::Delayed(64));
 //! let result = pagerank::run_native(&g, &cfg, &pagerank::PrConfig::default());
 //! assert!(result.run.converged);
-//! // Scores are positive and sum to ≤ 1 (isolated vertices keep base rank).
+//! // Dangling mass is redistributed at decode: scores sum to 1 ± ε.
 //! let mass: f64 = result.values.iter().map(|v| *v as f64).sum();
-//! assert!(mass > 0.5 && mass <= 1.001);
+//! assert!((mass - 1.0).abs() < 1e-3);
 //! ```
 
 pub mod algorithms;

@@ -2,9 +2,9 @@
 //! Graph Algorithms library.
 //!
 //! ```text
-//! daig run        --algo pagerank --graph kron --scale 14 --mode d256 --threads 32 [--engine sim|native] [--schedule dense|frontier|adaptive] [--machine haswell|cascadelake]
+//! daig run        --algo pagerank --graph kron --scale 14 --mode d256 --threads 32 [--engine sim|native] [--schedule dense|frontier|adaptive] [--machine haswell|cascadelake] [--batch k]
 //! daig sweep      --algo pagerank --graph kron --scale 14 --threads 32 [--schedule dense] [--machine haswell]
-//! daig experiment <table1|table2|fig2|fig3|fig4|fig5|fig6|ablations|schedule|all> [--out results] [--scale 14]
+//! daig experiment <table1|table2|fig2|fig3|fig4|fig5|fig6|ablations|schedule|batch|all> [--out results] [--scale 14]
 //! daig stats      --graph web --scale 14 | --file graph.daig
 //! daig gengraph   --graph kron --scale 14 --out kron.daig [--weighted]
 //! daig pjrt-demo  [--graph kron] [--scale 8] [--artifacts artifacts]
@@ -56,7 +56,7 @@ const HELP: &str = "daig — delayed asynchronous iterative graph algorithms
 commands:
   run         run one algorithm/graph/mode configuration
   sweep       sync/async/δ-grid sweep at a fixed thread count
-  experiment  regenerate a paper table/figure (table1 table2 fig2..fig6 ablations schedule all)
+  experiment  regenerate a paper table/figure (table1 table2 fig2..fig6 ablations schedule steal adaptive batch all)
   stats       graph statistics (Table II columns)
   gengraph    generate a GAP-analog graph to a .daig file
   autotune    recommend an execution mode/δ from topology (§V future work)
@@ -70,6 +70,10 @@ common options:
   --engine sim|native                   --machine haswell|cascadelake
   --schedule dense|frontier|adaptive    (which vertices each round sweeps)
   --steal                               (work-stealing round execution)
+  --batch k                             (k ∈ 1|2|4|8|16: answer k queries in one
+                                         run — SSSP: k sources, PageRank: k
+                                         teleport sets — as interleaved value
+                                         lanes; see `daig experiment batch`)
 
 `--mode adaptive` runs the online δ controller: each worker resizes its
 delay buffer between rounds from flush-contention / frontier-density /
@@ -147,6 +151,13 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flag("steal") {
         ecfg = ecfg.with_stealing();
     }
+    // Anything but the default single-query batch goes through the
+    // batched path — including illegal values like 0, which it rejects
+    // with a clear error instead of silently running one query.
+    let batch: usize = args.opt("batch", 1)?;
+    if batch != 1 {
+        return cmd_run_batched(args, &w, &g, &ecfg, batch);
+    }
     println!(
         "{} on {} (n={}, m={}), mode={}, schedule={}, threads={}{}",
         w.algo.name(),
@@ -209,6 +220,72 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         other => bail!("unknown engine '{other}'"),
     }
+    Ok(())
+}
+
+/// `daig run --batch k`: answer k independent queries in one
+/// lane-batched engine run (SSSP: the k top-degree sources; PageRank: k
+/// singleton teleport sets on the same hubs). Reports the serving
+/// headline — queries/sec — plus when each query's lane settled.
+fn cmd_run_batched(args: &Args, w: &Workload, g: &Csr, ecfg: &EngineConfig, k: usize) -> Result<()> {
+    use daig::algorithms::{pagerank, sssp};
+    use daig::engine::lanes;
+    if !lanes::valid_lane_count(k) {
+        bail!("bad --batch {k} (expected 1, 2, 4, 8, or 16: lane groups must divide a cache line)");
+    }
+    if k > g.num_vertices() {
+        bail!("--batch {k} needs at least {k} vertices for distinct queries (graph has {})", g.num_vertices());
+    }
+    println!(
+        "{} x{k} batched on {} (n={}, m={}), mode={}, schedule={}, threads={}{}",
+        w.algo.name(),
+        args.opt_str("graph", "kron"),
+        g.num_vertices(),
+        g.num_edges(),
+        ecfg.mode.label(),
+        ecfg.schedule.label(),
+        ecfg.threads,
+        if ecfg.stealing { ", stealing" } else { "" }
+    );
+    let engine = args.opt_str("engine", "sim");
+    let run: RunResult = match (w.algo, engine.as_str()) {
+        (Algo::Sssp, "native") => sssp::run_native_batch(g, &sssp::default_sources(g, k), ecfg).run,
+        (Algo::Sssp, "sim") => {
+            let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
+            sssp::run_sim_batch(g, &sssp::default_sources(g, k), ecfg, &machine).0.run
+        }
+        (Algo::PageRank, "native") => {
+            let teleports = pagerank::default_teleports(g, k);
+            pagerank::run_native_batch(g, &teleports, ecfg, &pagerank::PrConfig::default()).run
+        }
+        (Algo::PageRank, "sim") => {
+            let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
+            let teleports = pagerank::default_teleports(g, k);
+            pagerank::run_sim_batch(g, &teleports, ecfg, &pagerank::PrConfig::default(), &machine).0.run
+        }
+        (algo, "sim" | "native") => bail!("--batch supports sssp | pagerank (got {})", algo.name()),
+        (_, other) => bail!("unknown engine '{other}'"),
+    };
+    let total = run.total_time();
+    println!(
+        "rounds={} total={} queries/s={:.1} updates={} flushes={} steals={} converged={}",
+        run.num_rounds(),
+        fmt::secs(total),
+        if total > 0.0 { k as f64 / total } else { 0.0 },
+        fmt::si(run.total_active() as f64),
+        run.total_flushes(),
+        run.total_steals(),
+        run.converged
+    );
+    // Per-query drop-out: the round after which each lane went quiet.
+    let settle: Vec<String> = (0..k)
+        .map(|l| {
+            let trace = run.lane_delta_trace(l);
+            let r = trace.iter().rposition(|&d| d != 0.0).map_or(0, |i| i + 1);
+            format!("q{l}:{r}")
+        })
+        .collect();
+    println!("lane settle rounds = [{}]", settle.join(", "));
     Ok(())
 }
 

@@ -73,6 +73,10 @@ pub fn pagerank(rt: &Runtime, g: &Csr, cfg: &PrConfig, max_rounds: usize) -> Res
         }
     }
     scores.truncate(n);
+    // Decode like the sparse engine: redistribute dangling mass exactly
+    // (see `algorithms::pagerank` module docs), so backends agree on
+    // graphs with sinks too.
+    crate::algorithms::pagerank::redistribute_dangling(&mut scores);
     Ok(BlockRunResult { values: scores, rounds, converged })
 }
 

@@ -20,6 +20,14 @@
 //! tests) sample this matrix; this harness is the exhaustive closure.
 //! CI runs it twice: debug with the workspace suite and `--release`
 //! with real thread counts (see `.github/workflows/ci.yml`).
+//!
+//! The **lane-parity suite** (`lane_parity_*` below) extends the matrix
+//! to batched multi-query execution: every cell also runs the k-lane
+//! SSSP/PageRank variants and compares each lane against k independent
+//! single-query runs — bit-exactly where the fixed point is unique or
+//! the execution deterministic (SSSP everywhere, PageRank lanes on the
+//! deterministic simulator in sync mode), to ε under native async
+//! interleavings.
 
 use daig::algorithms::{bfs, cc, oracle, pagerank, sssp};
 use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
@@ -187,6 +195,158 @@ fn differential_pagerank_full_matrix() {
                 }
             }
         }
+    }
+}
+
+const LANE_K: usize = 4;
+
+#[test]
+fn lane_parity_sssp_full_matrix() {
+    // Batched k-lane SSSP vs k independent single-query runs on every
+    // mode × schedule × stealing cell. Distances have a unique fixed
+    // point, so every lane must match the per-source Dijkstra oracle
+    // bit-exactly regardless of interleaving.
+    for (gname, g) in graphs(true) {
+        let sources = sssp::default_sources(&g, LANE_K);
+        let oracles: Vec<Vec<u32>> = sources.iter().map(|&s| oracle::dijkstra(&g, s)).collect();
+        for (mode, sched, steal) in matrix() {
+            let r = sssp::run_native_batch(&g, &sources, &cfg(mode, sched, steal));
+            assert!(r.run.converged, "sssp-batch {gname} {mode:?}/{sched:?} steal={steal}");
+            assert_eq!(r.run.lanes, LANE_K);
+            for (l, want) in oracles.iter().enumerate() {
+                assert_eq!(&r.dist[l], want, "sssp-batch {gname} lane {l} {mode:?}/{sched:?} steal={steal}");
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_parity_sssp_sim_bit_compares_to_independent_runs() {
+    // On the deterministic simulator the batched lanes are compared
+    // against k actually-executed independent single-query sim runs
+    // (not just the oracle), bit for bit, on every cell.
+    use daig::engine::sim::cost::Machine;
+    let m = Machine::haswell();
+    for (gname, g) in graphs(true) {
+        let sources = sssp::default_sources(&g, LANE_K);
+        for (mode, sched, steal) in matrix() {
+            let c = cfg(mode, sched, steal);
+            let (batched, _) = sssp::run_sim_batch(&g, &sources, &c, &m);
+            for (l, &src) in sources.iter().enumerate() {
+                let (single, _) = sssp::run_sim(&g, src, &c, &m);
+                assert_eq!(
+                    batched.dist[l], single.dist,
+                    "sssp-batch sim {gname} lane {l} {mode:?}/{sched:?} steal={steal}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_parity_pagerank_full_matrix() {
+    // Batched personalized PageRank vs k independent runs: bit-exact in
+    // synchronous mode (each lane's Jacobi iterates are bit-identical
+    // and freeze at its own convergence round), ε-compare elsewhere.
+    // Tight epsilon: personalized scores concentrate at the teleport
+    // hub, so async residuals must sit well below the 1e-3 tolerance.
+    let prcfg = pagerank::PrConfig { damping: 0.85, epsilon: 1e-6 };
+    for (gname, g) in graphs(false) {
+        let teleports = pagerank::default_teleports(&g, LANE_K);
+        // Independent single-query baselines (deterministic sync).
+        let singles: Vec<Vec<f32>> = teleports
+            .iter()
+            .map(|t| {
+                let sync = EngineConfig::new(THREADS, ExecutionMode::Synchronous);
+                pagerank::run_native_batch(&g, std::slice::from_ref(t), &sync, &prcfg).values[0].clone()
+            })
+            .collect();
+        // …anchored against the serial personalized oracle.
+        for (l, t) in teleports.iter().enumerate() {
+            let (want, _) = oracle::personalized_pagerank(&g, prcfg.damping, prcfg.epsilon, t, 10_000);
+            for (v, (a, b)) in singles[l].iter().zip(&want).enumerate() {
+                assert!((a - b).abs() < 1e-4, "{gname} lane {l} sync vs serial oracle at v{v}: {a} vs {b}");
+            }
+        }
+        for (mode, sched, steal) in matrix() {
+            let r = pagerank::run_native_batch(&g, &teleports, &cfg(mode, sched, steal), &prcfg);
+            assert!(r.run.converged, "pagerank-batch {gname} {mode:?}/{sched:?} steal={steal}");
+            for l in 0..LANE_K {
+                for v in 0..g.num_vertices() {
+                    assert!(
+                        (r.values[l][v] - singles[l][v]).abs() < 1e-3,
+                        "pagerank-batch {gname} lane {l} {mode:?}/{sched:?} steal={steal} v{v}: {} vs {}",
+                        r.values[l][v],
+                        singles[l][v]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_parity_pagerank_sim_sync_is_bit_exact() {
+    // Sim + sync: fully deterministic, so each batched lane must equal
+    // its independent single-query sim run bit for bit — including the
+    // freeze round (per-lane drop-out must not disturb the iterates).
+    // Static execution only: under stealing the vertex→thread map is
+    // clock-dependent, so float residuals can round differently between
+    // a batched and a single run — the stealing cells are bit-covered
+    // by the SSSP suite (integral residuals) and ε-covered for PageRank
+    // by `lane_parity_pagerank_full_matrix`.
+    use daig::engine::sim::cost::Machine;
+    let m = Machine::haswell();
+    let prcfg = pagerank::PrConfig::default();
+    for (gname, g) in graphs(false) {
+        let teleports = pagerank::default_teleports(&g, LANE_K);
+        for sched in SchedulePolicy::ALL {
+            let c = cfg(ExecutionMode::Synchronous, sched, false);
+            let (batched, _) = pagerank::run_sim_batch(&g, &teleports, &c, &prcfg, &m);
+            for (l, t) in teleports.iter().enumerate() {
+                let (single, _) = pagerank::run_sim_batch(&g, std::slice::from_ref(t), &c, &prcfg, &m);
+                assert_eq!(
+                    batched.run.lane_values(l),
+                    single.run.values,
+                    "pagerank-batch sim {gname} lane {l} {sched:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_parity_conditional_writes_compose() {
+    // The §V conditional-write variant must compose with lane batching
+    // on every schedule/steal cell (group-wise skip keeps runs exact).
+    for (gname, g) in graphs(true) {
+        let sources = sssp::default_sources(&g, LANE_K);
+        let oracles: Vec<Vec<u32>> = sources.iter().map(|&s| oracle::dijkstra(&g, s)).collect();
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                let p = sssp::MultiSssp::new(&g, &sources).conditional();
+                let r = daig::engine::native::run(&g, &p, &cfg(ExecutionMode::Delayed(32), sched, steal));
+                for (l, want) in oracles.iter().enumerate() {
+                    assert_eq!(&r.lane_values(l), want, "conditional {gname} lane {l} {sched:?} steal={steal}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn lane_drop_out_is_observable_in_round_stats() {
+    // Per-lane convergence must be visible: every batched cell reports
+    // k lane residuals per round, and lanes that answered early show
+    // exactly-0.0 tails while later lanes stay live.
+    for (gname, g) in graphs(true) {
+        let sources = sssp::default_sources(&g, LANE_K);
+        let r = sssp::run_native_batch(&g, &sources, &cfg(ExecutionMode::Delayed(32), SchedulePolicy::Dense, false));
+        for rs in &r.run.rounds {
+            assert_eq!(rs.lane_deltas.len(), LANE_K, "{gname}");
+        }
+        let last = r.run.rounds.last().unwrap();
+        assert!(last.lane_deltas.iter().all(|&d| d == 0.0), "{gname}: final round must answer every query");
     }
 }
 

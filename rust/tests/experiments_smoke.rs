@@ -140,6 +140,42 @@ fn adaptive_experiment() {
 }
 
 #[test]
+fn batch_experiment() {
+    let dir = tmpdir("batch");
+    experiments::run("batch", &opts(&dir)).unwrap();
+    let csv = std::fs::read_to_string(std::path::Path::new(&dir).join("batch.csv")).unwrap();
+    // 2 algorithms × 4 modes × 2 schedules × 2 steal variants × 4 batch
+    // sizes + header.
+    assert_eq!(csv.lines().count(), 129, "{csv}");
+    let cell = |l: &str, i: usize| l.split(',').nth(i).unwrap().to_string();
+    for l in csv.lines().skip(1) {
+        assert!(cell(l, 4).parse::<usize>().is_ok(), "k column must be numeric: {l}");
+    }
+    // The acceptance bar: delayed-mode batched SSSP (dense, static) must
+    // report ≥2x queries/sec at k=8 vs k=1.
+    let speedup = |want_k: &str| -> f64 {
+        csv.lines()
+            .skip(1)
+            .find(|l| {
+                cell(l, 0) == "sssp"
+                    && cell(l, 1) == "d64"
+                    && cell(l, 2) == "dense"
+                    && cell(l, 3) == "off"
+                    && cell(l, 4) == want_k
+            })
+            .unwrap_or_else(|| panic!("missing sssp/d64/dense/off k={want_k} row:\n{csv}"))
+            .rsplit(',')
+            .next()
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap()
+    };
+    assert!((speedup("1") - 1.0).abs() < 1e-9, "k=1 is its own baseline");
+    assert!(speedup("8") >= 2.0, "k=8 must serve ≥2x the queries/sec: {}x", speedup("8"));
+}
+
+#[test]
 fn autotune_validation_runs() {
     let dir = tmpdir("autotune");
     experiments::run("autotune", &opts(&dir)).unwrap();
