@@ -11,6 +11,7 @@ use daig::engine::shared::SharedValues;
 use daig::engine::sim::cost::Machine;
 use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
 use daig::graph::gap::GapGraph;
+use daig::graph::Csr;
 use daig::util::bench;
 use daig::util::json::Json;
 
@@ -297,6 +298,91 @@ fn main() {
     std::fs::write("BENCH_batch.json", batch_doc.to_string()).expect("write BENCH_batch.json");
     println!("wrote BENCH_batch.json");
 
+    bench::section("simd: scalar vs dispatched lane kernels (native wall clock, 4 threads)");
+    // Scalar-vs-SIMD speedup of the batched sweeps, measured in-binary:
+    // `kernels::set_force_scalar(true)` pins dispatch to the scalar
+    // reference, so one `--features simd` process produces both sides
+    // of the ratio (in a scalar build both sides run the same code and
+    // the ratio hovers at 1.0 — the `simd` flag in the JSON says which
+    // artifact you are reading). Results land in BENCH_simd.json; the
+    // acceptance bar is ≥1.3x on k=8 MultiPageRank at scale 14.
+    let mut simd_json: Vec<(String, Json)> = Vec::new();
+    for (aname, pr_not_sssp) in [("pagerank", true), ("sssp", false)] {
+        let mut mode_json: Vec<(String, Json)> = Vec::new();
+        for (mlabel, mode) in [
+            ("sync", ExecutionMode::Synchronous),
+            ("async", ExecutionMode::Asynchronous),
+            ("d256", ExecutionMode::Delayed(256)),
+        ] {
+            for sched in [SchedulePolicy::Dense, SchedulePolicy::Frontier] {
+                let mut k_json: Vec<(String, Json)> = Vec::new();
+                for k in [4usize, 8, 16] {
+                    let ecfg = EngineConfig::new(4, mode).with_schedule(sched);
+                    daig::engine::kernels::set_force_scalar(true);
+                    let s_scalar = timed_batch(
+                        &format!("{aname} k={k} {mlabel} {} scalar", sched.label()),
+                        pr_not_sssp,
+                        &g,
+                        &kron_w,
+                        k,
+                        &ecfg,
+                    );
+                    daig::engine::kernels::set_force_scalar(false);
+                    let s_simd = timed_batch(
+                        &format!("{aname} k={k} {mlabel} {} dispatched", sched.label()),
+                        pr_not_sssp,
+                        &g,
+                        &kron_w,
+                        k,
+                        &ecfg,
+                    );
+                    let speedup = s_scalar.min_s / s_simd.min_s;
+                    println!("  -> {:.2}x vs scalar", speedup);
+                    k_json.push((
+                        format!("k{k}"),
+                        Json::obj(vec![
+                            ("scalar_s_min", Json::Num(s_scalar.min_s)),
+                            ("simd_s_min", Json::Num(s_simd.min_s)),
+                            ("speedup", Json::Num(speedup)),
+                        ]),
+                    ));
+                }
+                mode_json.push((format!("{mlabel}/{}", sched.label()), Json::Obj(k_json.into_iter().collect())));
+            }
+        }
+        simd_json.push((aname.to_string(), Json::Obj(mode_json.into_iter().collect())));
+    }
+    // The atomics-light async PageRank path (`--mode async --no-atomics`)
+    // rides along in the same document: CAS-free owned-range publication
+    // vs the plain async arm, same convergence criterion.
+    let async_cfg = EngineConfig::new(4, ExecutionMode::Asynchronous);
+    let s_atomic = bench::case(&format!("pagerank kron@{scale} async 4t"), 3, || {
+        pagerank::run_native(&g, &async_cfg, &PrConfig::default())
+    });
+    let na_cfg = async_cfg.clone().with_no_atomics();
+    let s_na = bench::case(&format!("pagerank kron@{scale} async no-atomics 4t"), 3, || {
+        pagerank::run_native(&g, &na_cfg, &PrConfig::default())
+    });
+    println!("  -> {:.2}x vs plain async", s_atomic.min_s / s_na.min_s);
+    let simd_doc = Json::obj(vec![
+        ("bench", Json::Str("simd".into())),
+        ("simd", Json::Bool(daig::engine::kernels::simd_enabled())),
+        ("scale", Json::Num(scale as f64)),
+        ("threads", Json::Num(4.0)),
+        ("graph", Json::Str("kron".into())),
+        ("workloads", Json::Obj(simd_json.into_iter().collect())),
+        (
+            "no_atomics",
+            Json::obj(vec![
+                ("async_s_min", Json::Num(s_atomic.min_s)),
+                ("no_atomics_s_min", Json::Num(s_na.min_s)),
+                ("speedup", Json::Num(s_atomic.min_s / s_na.min_s)),
+            ]),
+        ),
+    ]);
+    std::fs::write("BENCH_simd.json", simd_doc.to_string()).expect("write BENCH_simd.json");
+    println!("wrote BENCH_simd.json");
+
     bench::section("PJRT dense-block step (L1/L2 artifact path)");
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = daig::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();
@@ -306,5 +392,25 @@ fn main() {
         });
     } else {
         println!("(artifacts missing — run `make artifacts`)");
+    }
+}
+
+/// One timed batched run for the BENCH_simd section (PageRank on the
+/// unweighted kron, SSSP on the weighted one). A named fn so the scalar
+/// and dispatched timings share the exact same code path.
+fn timed_batch(
+    label: &str,
+    pr_not_sssp: bool,
+    g: &Csr,
+    gw: &Csr,
+    k: usize,
+    ecfg: &EngineConfig,
+) -> bench::Sample {
+    if pr_not_sssp {
+        let teleports = pagerank::default_teleports(g, k);
+        bench::case(label, 3, || pagerank::run_native_batch(g, &teleports, ecfg, &PrConfig::default()))
+    } else {
+        let sources = daig::algorithms::sssp::default_sources(gw, k);
+        bench::case(label, 3, || daig::algorithms::sssp::run_native_batch(gw, &sources, ecfg))
     }
 }

@@ -25,6 +25,7 @@
 //! neighbor read feeds all still-live queries and converged queries
 //! drop out of the sweep early.
 
+use crate::engine::kernels;
 use crate::engine::lanes::{self, LaneReader};
 use crate::engine::program::{ValueReader, VertexProgram};
 use crate::engine::sim::cost::Machine;
@@ -65,6 +66,7 @@ pub struct PageRank<'g> {
     damping: f32,
     epsilon: f64,
     init: f32,
+    prefetch: usize,
 }
 
 impl<'g> PageRank<'g> {
@@ -79,7 +81,15 @@ impl<'g> PageRank<'g> {
             damping: cfg.damping,
             epsilon: cfg.epsilon,
             init: 1.0 / n,
+            prefetch: 0,
         }
+    }
+
+    /// Set the software-prefetch look-ahead distance (in neighbors; 0
+    /// disables). Results are distance-invariant: a prefetch is a hint.
+    pub fn with_prefetch(mut self, dist: usize) -> Self {
+        self.prefetch = dist;
+        self
     }
 }
 
@@ -94,8 +104,10 @@ impl VertexProgram for PageRank<'_> {
 
     #[inline]
     fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let ns = self.g.in_neighbors(v);
         let mut acc = 0.0f32;
-        for &u in self.g.in_neighbors(v) {
+        for (i, &u) in ns.iter().enumerate() {
+            kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch(a));
             acc += f32::from_bits(r.read(u)) * self.inv_outdeg[u as usize];
         }
         (self.base + self.damping * acc).to_bits()
@@ -125,6 +137,7 @@ pub struct MultiPageRank<'g> {
     base: Vec<f32>,
     /// Flattened n×k per-lane initial scores `s_l(v)`.
     init: Vec<f32>,
+    prefetch: usize,
 }
 
 impl<'g> MultiPageRank<'g> {
@@ -149,7 +162,14 @@ impl<'g> MultiPageRank<'g> {
                 init[v as usize * k + l] += share;
             }
         }
-        Self { g, inv_outdeg, damping: cfg.damping, epsilon: cfg.epsilon, k, base, init }
+        Self { g, inv_outdeg, damping: cfg.damping, epsilon: cfg.epsilon, k, base, init, prefetch: 0 }
+    }
+
+    /// Set the software-prefetch look-ahead distance (in neighbors; 0
+    /// disables). Results are distance-invariant: a prefetch is a hint.
+    pub fn with_prefetch(mut self, dist: usize) -> Self {
+        self.prefetch = dist;
+        self
     }
 }
 
@@ -174,8 +194,10 @@ impl VertexProgram for MultiPageRank<'_> {
     /// every batch size above 1).
     #[inline]
     fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+        let ns = self.g.in_neighbors(v);
         let mut acc = 0.0f32;
-        for &u in self.g.in_neighbors(v) {
+        for (i, &u) in ns.iter().enumerate() {
+            kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch(a));
             acc += f32::from_bits(r.read(u)) * self.inv_outdeg[u as usize];
         }
         (self.base[v as usize * self.k] + self.damping * acc).to_bits()
@@ -183,17 +205,23 @@ impl VertexProgram for MultiPageRank<'_> {
 
     #[inline]
     fn update_lanes<R: LaneReader>(&self, v: VertexId, r: &mut R, out: &mut [u32], live: u32) {
-        // One group read per in-neighbor feeds every live lane.
+        // One group read per in-neighbor feeds every live lane. The
+        // rank arithmetic runs in the lane-group kernels (SIMD under
+        // the `simd` feature, the same scalar loop otherwise — both
+        // unfused multiply-then-add, so the builds stay bit-identical);
+        // the gather stays out here so both builds touch the same
+        // cache lines.
         let k = self.k;
         let mut acc = [0.0f32; lanes::MAX_LANES];
         let mut nb = [0u32; lanes::MAX_LANES];
-        for &u in self.g.in_neighbors(v) {
+        let ns = self.g.in_neighbors(v);
+        for (i, &u) in ns.iter().enumerate() {
+            kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch_group(a));
             r.read_group(u, &mut nb[..k]);
-            let inv = self.inv_outdeg[u as usize];
-            lanes::for_each_live(live, |l| acc[l] += f32::from_bits(nb[l]) * inv);
+            kernels::pr_accumulate(&mut acc[..k], &nb[..k], self.inv_outdeg[u as usize], live);
         }
         let vb = v as usize * k;
-        lanes::for_each_live(live, |l| out[l] = (self.base[vb + l] + self.damping * acc[l]).to_bits());
+        kernels::pr_finish(out, &self.base[vb..vb + k], &acc[..k], self.damping, live);
     }
 
     #[inline]
@@ -208,20 +236,20 @@ impl VertexProgram for MultiPageRank<'_> {
 
 /// Run on the real-thread executor.
 pub fn run_native(g: &Csr, ecfg: &EngineConfig, cfg: &PrConfig) -> PrResult {
-    let p = PageRank::new(g, cfg);
+    let p = PageRank::new(g, cfg).with_prefetch(ecfg.prefetch);
     PrResult::from(native::run(g, &p, ecfg))
 }
 
 /// Run on the multicore simulator.
 pub fn run_sim(g: &Csr, ecfg: &EngineConfig, cfg: &PrConfig, machine: &Machine) -> (PrResult, SimRun) {
-    let p = PageRank::new(g, cfg);
+    let p = PageRank::new(g, cfg).with_prefetch(ecfg.prefetch);
     let sim = crate::engine::sim::run(g, &p, ecfg, machine);
     (PrResult::from(sim.result.clone()), sim)
 }
 
 /// Run a batched personalized query on the real-thread executor.
 pub fn run_native_batch(g: &Csr, teleports: &[Vec<VertexId>], ecfg: &EngineConfig, cfg: &PrConfig) -> MultiPrResult {
-    let p = MultiPageRank::new(g, cfg, teleports);
+    let p = MultiPageRank::new(g, cfg, teleports).with_prefetch(ecfg.prefetch);
     MultiPrResult::from(native::run(g, &p, ecfg))
 }
 
@@ -233,7 +261,7 @@ pub fn run_sim_batch(
     cfg: &PrConfig,
     machine: &Machine,
 ) -> (MultiPrResult, SimRun) {
-    let p = MultiPageRank::new(g, cfg, teleports);
+    let p = MultiPageRank::new(g, cfg, teleports).with_prefetch(ecfg.prefetch);
     let sim = crate::engine::sim::run(g, &p, ecfg, machine);
     (MultiPrResult::from(sim.result.clone()), sim)
 }
@@ -471,6 +499,38 @@ mod tests {
         for (l, t) in teleports.iter().enumerate() {
             let single = run_native_batch(&g, std::slice::from_ref(t), &ecfg, &cfg);
             assert_eq!(batched.run.lane_values(l), single.run.values, "lane {l} raw bits");
+        }
+    }
+
+    #[test]
+    fn prefetch_distance_does_not_change_scores() {
+        // A prefetch is a pure hint: any look-ahead distance must give
+        // bit-identical raw iterates in sync mode.
+        let g = GapGraph::Web.generate(9, 4);
+        let cfg = PrConfig::default();
+        let teleports = default_teleports(&g, 8);
+        let base = run_native(&g, &EngineConfig::new(4, ExecutionMode::Synchronous), &cfg);
+        let bb = run_native_batch(&g, &teleports, &EngineConfig::new(4, ExecutionMode::Synchronous), &cfg);
+        for dist in [1usize, 4, 16, 1024] {
+            let ecfg = EngineConfig::new(4, ExecutionMode::Synchronous).with_prefetch(dist);
+            assert_eq!(run_native(&g, &ecfg, &cfg).run.values, base.run.values, "prefetch={dist}");
+            let b = run_native_batch(&g, &teleports, &ecfg, &cfg);
+            assert_eq!(b.run.values, bb.run.values, "batched prefetch={dist}");
+        }
+    }
+
+    #[test]
+    fn batched_every_lane_count_converges_and_conserves_mass() {
+        // Covers k=2 (newly exposed in LANE_COUNTS) and the kernel
+        // vector widths 4/8/16.
+        let g = GapGraph::Web.generate(8, 4);
+        for k in crate::engine::lanes::LANE_COUNTS {
+            let teleports = default_teleports(&g, k);
+            let r = run_native_batch(&g, &teleports, &EngineConfig::new(2, ExecutionMode::Asynchronous), &PrConfig::default());
+            assert!(r.run.converged, "k={k}");
+            for (l, lane) in r.values.iter().enumerate() {
+                assert!((mass(lane) - 1.0).abs() < 1e-3, "k={k} lane {l} mass {}", mass(lane));
+            }
         }
     }
 

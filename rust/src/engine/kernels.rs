@@ -1,0 +1,412 @@
+//! Lane-group compute kernels: a scalar reference path (always built,
+//! stable toolchain) and — under `--features simd` (nightly
+//! `portable_simd`) — `std::simd` vector versions dispatched at runtime
+//! on the lane count.
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Post-gather vectorization.** Kernels operate on a lane group
+//!    *after* [`super::lanes::LaneReader::read_group`] has produced it,
+//!    so the reader call sequence — and therefore the simulator's
+//!    line-access charging — is identical for the scalar and vector
+//!    paths. SIMD changes how a group is *combined*, never how it is
+//!    *fetched*.
+//! 2. **Bit parity with the scalar path.** Where the engine is bit-exact
+//!    (sync mode, the deterministic simulator), scalar and SIMD runs
+//!    must produce identical bits. For SSSP that is free: the branchless
+//!    `min(out, du saturating+ w)` form is bit-identical to the
+//!    INF-guarded scalar relax (`INF` saturates back to `INF`, which
+//!    loses every `min`). For PageRank it means the vector kernel uses a
+//!    *separate* multiply and add — a fused mul-add would round once
+//!    where the scalar path rounds twice, breaking parity — so the SIMD
+//!    win comes from width, not from fusion.
+//! 3. **Mask-driven lane drop-out.** Converged queries (dead lanes)
+//!    must keep their frozen bits. The vector kernels blend with the
+//!    live-lane mask, writing back the original bits of dead lanes —
+//!    observationally identical to the scalar `for_each_live` loop.
+//!
+//! Lane counts 4/8/16 take the vector path (`u32x4/8/16`, `f32x4/8/16`);
+//! k ∈ {1, 2} always runs scalar (a 2-lane vector spans 8 bytes — below
+//! the width where the mask/select overhead pays for itself).
+
+use crate::graph::VertexId;
+
+use super::lanes;
+
+#[cfg(feature = "simd")]
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// When set (SIMD builds only), the dispatchers below ignore the vector
+/// kernels and run the scalar reference — the in-binary baseline that
+/// lets one `--features simd` process measure its own scalar-vs-SIMD
+/// speedup (`bench_micro` → BENCH_simd.json) and lets the differential
+/// suite compare the two paths end-to-end through the engine.
+#[cfg(feature = "simd")]
+static FORCE_SCALAR: AtomicBool = AtomicBool::new(false);
+
+/// Force (or stop forcing) the scalar path in a SIMD build. A no-op in
+/// scalar builds, where the scalar path is all there is. Not meant for
+/// concurrent toggling mid-run: flip it between engine runs only.
+pub fn set_force_scalar(on: bool) {
+    #[cfg(feature = "simd")]
+    FORCE_SCALAR.store(on, Ordering::Relaxed);
+    #[cfg(not(feature = "simd"))]
+    let _ = on;
+}
+
+/// Whether dispatch is currently pinned to the scalar reference.
+pub fn force_scalar() -> bool {
+    #[cfg(feature = "simd")]
+    {
+        FORCE_SCALAR.load(Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        false
+    }
+}
+
+/// Distance marker for unreachable vertices, duplicated from
+/// `algorithms::sssp::INF` to keep the engine layer free of algorithm
+/// imports (the two are asserted equal in tests).
+pub const RELAX_INF: u32 = u32::MAX;
+
+/// Issue a prefetch-into-L1 hint for the cache line holding `*p`.
+/// Compiles to `prefetcht0` on x86-64 and to nothing elsewhere. A
+/// prefetch has no memory effects (it is legal for any address, mapped
+/// or not), so callers may hint speculatively past the end of a
+/// neighbor list.
+#[inline(always)]
+pub fn prefetch_read<T>(p: *const T) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: prefetch is a hint with no architectural side effects;
+    // it cannot fault even on invalid addresses.
+    unsafe {
+        core::arch::x86_64::_mm_prefetch::<{ core::arch::x86_64::_MM_HINT_T0 }>(p as *const i8)
+    };
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = p;
+}
+
+/// Relax every live lane of `out` against neighbor group `nb` over an
+/// edge of weight `w`: `out[l] = min(out[l], nb[l] saturating+ w)`.
+/// Dead lanes keep their bits. Dispatches to the vector kernel for
+/// k ∈ {4, 8, 16} when built with `--features simd`.
+#[inline]
+pub fn sssp_relax(out: &mut [u32], nb: &[u32], w: u32, live: u32) {
+    #[cfg(feature = "simd")]
+    if !force_scalar() {
+        match out.len() {
+            4 => return vector::sssp_relax::<4>(out, nb, w, live),
+            8 => return vector::sssp_relax::<8>(out, nb, w, live),
+            16 => return vector::sssp_relax::<16>(out, nb, w, live),
+            _ => {}
+        }
+    }
+    scalar::sssp_relax(out, nb, w, live);
+}
+
+/// Accumulate one neighbor's PageRank contribution into every live lane:
+/// `acc[l] += f32(nb[l]) * inv`. Dead lanes keep their bits.
+#[inline]
+pub fn pr_accumulate(acc: &mut [f32], nb: &[u32], inv: f32, live: u32) {
+    #[cfg(feature = "simd")]
+    if !force_scalar() {
+        match acc.len() {
+            4 => return vector::pr_accumulate::<4>(acc, nb, inv, live),
+            8 => return vector::pr_accumulate::<8>(acc, nb, inv, live),
+            16 => return vector::pr_accumulate::<16>(acc, nb, inv, live),
+            _ => {}
+        }
+    }
+    scalar::pr_accumulate(acc, nb, inv, live);
+}
+
+/// Finish a PageRank group: `out[l] = bits(base[l] + damping * acc[l])`
+/// for live lanes; dead lanes keep their bits.
+#[inline]
+pub fn pr_finish(out: &mut [u32], base: &[f32], acc: &[f32], damping: f32, live: u32) {
+    #[cfg(feature = "simd")]
+    if !force_scalar() {
+        match out.len() {
+            4 => return vector::pr_finish::<4>(out, base, acc, damping, live),
+            8 => return vector::pr_finish::<8>(out, base, acc, damping, live),
+            16 => return vector::pr_finish::<16>(out, base, acc, damping, live),
+            _ => {}
+        }
+    }
+    scalar::pr_finish(out, base, acc, damping, live);
+}
+
+/// Whether this build dispatches lane counts 4/8/16 to `std::simd`
+/// kernels (reported into BENCH_simd.json so scalar and SIMD artifacts
+/// are distinguishable).
+pub const fn simd_enabled() -> bool {
+    cfg!(feature = "simd")
+}
+
+/// The scalar reference kernels — the portable fallback, and the
+/// definition of correct (and, where applicable, bit-exact) results
+/// that the vector path must reproduce.
+pub mod scalar {
+    use super::lanes;
+
+    /// See [`super::sssp_relax`].
+    #[inline]
+    pub fn sssp_relax(out: &mut [u32], nb: &[u32], w: u32, live: u32) {
+        lanes::for_each_live(live, |l| {
+            let du = nb[l];
+            if du != super::RELAX_INF {
+                out[l] = out[l].min(du.saturating_add(w));
+            }
+        });
+    }
+
+    /// See [`super::pr_accumulate`].
+    #[inline]
+    pub fn pr_accumulate(acc: &mut [f32], nb: &[u32], inv: f32, live: u32) {
+        lanes::for_each_live(live, |l| acc[l] += f32::from_bits(nb[l]) * inv);
+    }
+
+    /// See [`super::pr_finish`].
+    #[inline]
+    pub fn pr_finish(out: &mut [u32], base: &[f32], acc: &[f32], damping: f32, live: u32) {
+        lanes::for_each_live(live, |l| out[l] = (base[l] + damping * acc[l]).to_bits());
+    }
+}
+
+/// `std::simd` kernels (nightly `portable_simd`). One vector spans the
+/// whole lane group — exactly the register shape the interleaved lane
+/// layout was designed to be (`engine::lanes` module docs).
+#[cfg(feature = "simd")]
+pub mod vector {
+    use std::simd::cmp::{SimdOrd, SimdPartialEq};
+    use std::simd::num::{SimdFloat, SimdUint};
+    use std::simd::{LaneCount, Mask, Simd, SupportedLaneCount};
+
+    /// Per-element mask from the engine's live-lane bitmask: lane `l`
+    /// is on iff bit `l` of `live` is set.
+    #[inline]
+    fn live_mask<const N: usize>(live: u32) -> Mask<i32, N>
+    where
+        LaneCount<N>: SupportedLaneCount,
+    {
+        let bits = Simd::<u32, N>::from_array(std::array::from_fn(|l| 1u32 << l));
+        (Simd::splat(live) & bits).simd_ne(Simd::splat(0))
+    }
+
+    /// Vector min-relax: saturating add subsumes the scalar INF guard
+    /// bit-exactly (module docs, constraint 2).
+    #[inline]
+    pub fn sssp_relax<const N: usize>(out: &mut [u32], nb: &[u32], w: u32, live: u32)
+    where
+        LaneCount<N>: SupportedLaneCount,
+    {
+        let old = Simd::<u32, N>::from_slice(out);
+        let cand = Simd::<u32, N>::from_slice(nb).saturating_add(Simd::splat(w));
+        live_mask::<N>(live).select(old.simd_min(cand), old).copy_to_slice(out);
+    }
+
+    /// Vector rank accumulation. Deliberately *unfused* multiply-then-
+    /// add: the scalar path rounds the product and the sum separately,
+    /// and sync/sim bit parity is an acceptance gate (module docs,
+    /// constraint 2).
+    #[inline]
+    pub fn pr_accumulate<const N: usize>(acc: &mut [f32], nb: &[u32], inv: f32, live: u32)
+    where
+        LaneCount<N>: SupportedLaneCount,
+    {
+        let old = Simd::<f32, N>::from_slice(acc);
+        let contrib = Simd::<f32, N>::from_bits(Simd::<u32, N>::from_slice(nb)) * Simd::splat(inv);
+        live_mask::<N>(live).select(old + contrib, old).copy_to_slice(acc);
+    }
+
+    /// Vector PageRank finish (same unfused-rounding argument).
+    #[inline]
+    pub fn pr_finish<const N: usize>(out: &mut [u32], base: &[f32], acc: &[f32], damping: f32, live: u32)
+    where
+        LaneCount<N>: SupportedLaneCount,
+    {
+        let old = Simd::<u32, N>::from_slice(out);
+        let fresh = Simd::<f32, N>::from_slice(base) + Simd::splat(damping) * Simd::<f32, N>::from_slice(acc);
+        live_mask::<N>(live).select(fresh.to_bits(), old).copy_to_slice(out);
+    }
+}
+
+/// Prefetch look-ahead driver for CSR gather loops: hints the group of
+/// the neighbor `dist` positions ahead of index `i` in `neighbors`
+/// (no-op when `dist == 0` or past the end of the list).
+#[inline(always)]
+pub fn prefetch_ahead<F: FnMut(VertexId)>(neighbors: &[VertexId], i: usize, dist: usize, mut hint: F) {
+    if dist != 0 {
+        if let Some(&a) = neighbors.get(i + dist) {
+            hint(a);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic test-vector generator (SplitMix64).
+    fn mix(state: &mut u64) -> u64 {
+        *state = state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = *state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    fn rand_u32s(seed: u64, n: usize, inf_every: usize) -> Vec<u32> {
+        let mut s = seed;
+        (0..n)
+            .map(|i| if inf_every != 0 && i % inf_every == 0 { RELAX_INF } else { mix(&mut s) as u32 })
+            .collect()
+    }
+
+    #[test]
+    fn inf_marker_matches_sssp() {
+        assert_eq!(RELAX_INF, crate::algorithms::sssp::INF);
+    }
+
+    #[test]
+    fn scalar_relax_masks_and_saturates() {
+        let mut out = [10, 20, 30, 40];
+        // Lane 1 dead; lane 2's neighbor is INF (must not wrap to a
+        // tiny distance); lane 3 relaxes.
+        scalar::sssp_relax(&mut out, &[5, 1, RELAX_INF, 7], 3, 0b1101);
+        assert_eq!(out, [8, 20, 30, 10]);
+        // Saturation near the top of the range.
+        let mut out = [RELAX_INF; 1];
+        scalar::sssp_relax(&mut out, &[RELAX_INF - 1], 5, 0b1);
+        assert_eq!(out, [RELAX_INF], "u32::MAX - 1 + 5 saturates to INF");
+    }
+
+    #[test]
+    fn scalar_pr_kernels_match_inline_arithmetic() {
+        let nb = [1.5f32.to_bits(), 2.0f32.to_bits()];
+        let mut acc = [0.25f32, 9.0];
+        scalar::pr_accumulate(&mut acc, &nb, 0.5, 0b01);
+        assert_eq!(acc, [0.25 + 1.5 * 0.5, 9.0], "dead lane untouched");
+        let mut out = [0u32, 77];
+        scalar::pr_finish(&mut out, &[0.15, 0.15], &acc, 0.85, 0b01);
+        assert_eq!(out, [(0.15f32 + 0.85 * 1.0).to_bits(), 77]);
+    }
+
+    #[test]
+    fn dispatch_leaves_dead_lanes_frozen_every_k() {
+        for k in crate::engine::lanes::LANE_COUNTS {
+            let nb = rand_u32s(7 + k as u64, k, 3);
+            let mut out = rand_u32s(99 + k as u64, k, 0);
+            let frozen = out.clone();
+            sssp_relax(&mut out, &nb, 4, 0);
+            assert_eq!(out, frozen, "k={k}: empty mask must not move bits");
+        }
+    }
+
+    #[test]
+    fn force_scalar_toggle_roundtrips() {
+        // Other tests in this binary either pass an empty mask or call
+        // the scalar/vector kernels directly, so flipping the global
+        // toggle here cannot change their results.
+        assert!(!force_scalar(), "default is dispatched");
+        set_force_scalar(true);
+        assert_eq!(force_scalar(), simd_enabled(), "toggle only bites in SIMD builds");
+        set_force_scalar(false);
+        assert!(!force_scalar());
+    }
+
+    #[test]
+    fn prefetch_is_safe_and_lookahead_bounded() {
+        // Smoke: hinting a real address and the null page must not fault.
+        let x = 42u32;
+        prefetch_read(&x as *const u32);
+        prefetch_read(std::ptr::null::<u32>());
+        let ns: Vec<VertexId> = (0..10).collect();
+        let mut hits = Vec::new();
+        for i in 0..ns.len() {
+            prefetch_ahead(&ns, i, 4, |v| hits.push(v));
+        }
+        assert_eq!(hits, vec![4, 5, 6, 7, 8, 9], "look-ahead stops at the end");
+        hits.clear();
+        for i in 0..ns.len() {
+            prefetch_ahead(&ns, i, 0, |v| hits.push(v));
+        }
+        assert!(hits.is_empty(), "distance 0 disables hinting");
+    }
+
+    /// The SIMD acceptance gate at kernel granularity: for every vector
+    /// width and a spread of live masks, the vector kernels must be
+    /// bit-identical to the scalar reference on randomized groups.
+    #[cfg(feature = "simd")]
+    mod simd_parity {
+        use super::*;
+        use crate::engine::lanes::full_mask;
+
+        fn masks(k: usize) -> Vec<u32> {
+            let full = full_mask(k);
+            vec![full, 0, 1, full & 0b1010_1010_1010_1010, full >> 1]
+        }
+
+        #[test]
+        fn sssp_relax_bit_exact() {
+            for k in [4usize, 8, 16] {
+                for live in masks(k) {
+                    for trial in 0..50u64 {
+                        let nb = rand_u32s(trial * 3 + k as u64, k, 4);
+                        let w = (trial as u32).wrapping_mul(2654435761) % 300;
+                        let mut a = rand_u32s(trial * 5 + 1, k, 6);
+                        let mut b = a.clone();
+                        scalar::sssp_relax(&mut a, &nb, w, live);
+                        match k {
+                            4 => vector::sssp_relax::<4>(&mut b, &nb, w, live),
+                            8 => vector::sssp_relax::<8>(&mut b, &nb, w, live),
+                            _ => vector::sssp_relax::<16>(&mut b, &nb, w, live),
+                        }
+                        assert_eq!(a, b, "k={k} live={live:#b} trial={trial}");
+                    }
+                }
+            }
+        }
+
+        #[test]
+        fn pr_kernels_bit_exact() {
+            for k in [4usize, 8, 16] {
+                for live in masks(k) {
+                    for trial in 0..50u64 {
+                        let mut s = trial + 1000 * k as u64;
+                        // Finite, well-scaled scores (the engine only
+                        // ever stores finite f32 rank bits).
+                        let nb: Vec<u32> =
+                            (0..k).map(|_| ((mix(&mut s) as f64 / u64::MAX as f64) as f32).to_bits()).collect();
+                        let base: Vec<f32> = (0..k).map(|_| (mix(&mut s) % 1000) as f32 * 1e-4).collect();
+                        let inv = 1.0 / ((mix(&mut s) % 63 + 1) as f32);
+                        let mut acc_a: Vec<f32> = (0..k).map(|_| (mix(&mut s) % 997) as f32 * 1e-3).collect();
+                        let mut acc_b = acc_a.clone();
+                        scalar::pr_accumulate(&mut acc_a, &nb, inv, live);
+                        match k {
+                            4 => vector::pr_accumulate::<4>(&mut acc_b, &nb, inv, live),
+                            8 => vector::pr_accumulate::<8>(&mut acc_b, &nb, inv, live),
+                            _ => vector::pr_accumulate::<16>(&mut acc_b, &nb, inv, live),
+                        }
+                        assert_eq!(
+                            acc_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            acc_b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                            "accumulate k={k} live={live:#b} trial={trial}"
+                        );
+                        let mut out_a = rand_u32s(trial, k, 0);
+                        let mut out_b = out_a.clone();
+                        scalar::pr_finish(&mut out_a, &base, &acc_a, 0.85, live);
+                        match k {
+                            4 => vector::pr_finish::<4>(&mut out_b, &base, &acc_b, 0.85, live),
+                            8 => vector::pr_finish::<8>(&mut out_b, &base, &acc_b, 0.85, live),
+                            _ => vector::pr_finish::<16>(&mut out_b, &base, &acc_b, 0.85, live),
+                        }
+                        assert_eq!(out_a, out_b, "finish k={k} live={live:#b} trial={trial}");
+                    }
+                }
+            }
+        }
+    }
+}

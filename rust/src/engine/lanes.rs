@@ -36,8 +36,9 @@ use crate::VALUES_PER_LINE;
 /// Largest supported lane count: one full cache line of 32-bit lanes.
 pub const MAX_LANES: usize = VALUES_PER_LINE;
 
-/// The lane counts the CLI / sweeps expose (`--batch k`).
-pub const LANE_COUNTS: [usize; 4] = [1, 4, 8, 16];
+/// The lane counts the CLI / sweeps expose (`--batch k`): every k that
+/// divides [`VALUES_PER_LINE`], as the module docs promise.
+pub const LANE_COUNTS: [usize; 5] = [1, 2, 4, 8, 16];
 
 /// Whether `k` is a legal lane count: non-zero, at most a cache line,
 /// and dividing [`VALUES_PER_LINE`] so groups never straddle lines.
@@ -82,6 +83,16 @@ pub trait LaneReader {
     /// Fill `out` (length = lane count) with the current lane group of
     /// vertex `v`.
     fn read_group(&mut self, v: VertexId, out: &mut [u32]);
+
+    /// Hint that vertex `v`'s lane group will be read shortly — the CSR
+    /// gather loop calls this a configurable distance ahead of the
+    /// neighbor it is consuming. Native readers issue a software
+    /// prefetch of the cache line holding the group; the default no-op
+    /// serves the simulator (a prefetch is a hint with no memory
+    /// effects, so it charges nothing and accounting is unchanged) and
+    /// any reader without a stable backing address.
+    #[inline]
+    fn prefetch_group(&mut self, _v: VertexId) {}
 }
 
 /// [`super::program::ValueReader`] view of one lane of a [`LaneReader`]
@@ -101,6 +112,11 @@ impl<R: LaneReader> super::program::ValueReader for LaneProjection<'_, R> {
         let mut group = [0u32; MAX_LANES];
         self.reader.read_group(v, &mut group[..self.lanes]);
         group[self.lane]
+    }
+
+    #[inline]
+    fn prefetch(&mut self, v: VertexId) {
+        self.reader.prefetch_group(v);
     }
 }
 

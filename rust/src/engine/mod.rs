@@ -31,6 +31,7 @@
 pub mod controller;
 pub mod convergence;
 pub mod delay_buffer;
+pub mod kernels;
 pub mod lanes;
 pub mod native;
 pub mod program;
@@ -124,6 +125,20 @@ pub struct EngineConfig {
     /// chunks from the most loaded victim (see [`steal`]). Default off —
     /// the paper's static schedule.
     pub stealing: bool,
+    /// Atomics-light asynchronous sweeps (the non-blocking-PageRank
+    /// scheme, PAPERS.md): results for vertices the sweeping thread
+    /// *owns* are published with one plain Relaxed store per group — no
+    /// CAS, no RMW, no per-element buffer bookkeeping — while writes
+    /// landing outside the own range (stolen chunks) route through a
+    /// one-line delay buffer. Requires `Asynchronous` mode (the native
+    /// executor asserts this). CLI: `--mode async --no-atomics`.
+    pub no_atomics: bool,
+    /// Software-prefetch look-ahead distance for CSR gather loops, in
+    /// neighbors: while consuming neighbor `i` the reader is hinted
+    /// about neighbor `i + prefetch`'s lane group. `0` (default)
+    /// disables hinting. Results are distance-invariant — a prefetch is
+    /// a hint — which the differential suite asserts.
+    pub prefetch: usize,
     /// Safety valve: abort after this many rounds.
     pub max_rounds: usize,
 }
@@ -139,6 +154,8 @@ impl EngineConfig {
             schedule: SchedulePolicy::default(),
             local_reads: false,
             stealing: false,
+            no_atomics: false,
+            prefetch: 0,
             max_rounds: 10_000,
         }
     }
@@ -164,6 +181,19 @@ impl EngineConfig {
     /// Builder-style: choose the round schedule.
     pub fn with_schedule(mut self, s: SchedulePolicy) -> Self {
         self.schedule = s;
+        self
+    }
+
+    /// Builder-style: enable the atomics-light async write path.
+    pub fn with_no_atomics(mut self) -> Self {
+        self.no_atomics = true;
+        self
+    }
+
+    /// Builder-style: set the software-prefetch look-ahead distance
+    /// (in neighbors; 0 disables).
+    pub fn with_prefetch(mut self, dist: usize) -> Self {
+        self.prefetch = dist;
         self
     }
 
@@ -217,6 +247,16 @@ mod tests {
         assert_eq!(c.schedule, SchedulePolicy::Dense);
         let f = c.with_schedule(SchedulePolicy::Frontier);
         assert_eq!(f.schedule, SchedulePolicy::Frontier);
+    }
+
+    #[test]
+    fn no_atomics_and_prefetch_builders_and_defaults() {
+        let c = EngineConfig::new(4, ExecutionMode::Asynchronous);
+        assert!(!c.no_atomics, "the paper's atomic-store sweep is the default");
+        assert_eq!(c.prefetch, 0, "hinting is opt-in");
+        let c = c.with_no_atomics().with_prefetch(8);
+        assert!(c.no_atomics);
+        assert_eq!(c.prefetch, 8);
     }
 
     #[test]

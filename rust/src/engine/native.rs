@@ -67,6 +67,14 @@ impl ValueReader for AsyncReader<'_> {
         }
         self.global.load(v)
     }
+
+    #[inline]
+    fn prefetch(&mut self, v: VertexId) {
+        // Always hint the shared line: even under local reads the
+        // pending-patch lookup is a register/L1 affair, while the miss
+        // being hidden lives in the global array.
+        self.global.prefetch(v as usize);
+    }
 }
 
 /// Lane-group reader for batched async/delayed modes: the lane twin of
@@ -94,6 +102,12 @@ impl lanes::LaneReader for LaneAsyncReader<'_> {
             self.global.load_group(v, out);
         }
     }
+
+    #[inline]
+    fn prefetch_group(&mut self, v: VertexId) {
+        // One hint covers the whole group: groups never straddle lines.
+        self.global.prefetch(lanes::group_base(v, self.lanes) as usize);
+    }
 }
 
 /// Lane-group reader over the sync-mode front buffer.
@@ -103,6 +117,11 @@ impl lanes::LaneReader for LaneFrontReader<'_> {
     #[inline]
     fn read_group(&mut self, v: VertexId, out: &mut [u32]) {
         self.0.load_group(v, out);
+    }
+
+    #[inline]
+    fn prefetch_group(&mut self, v: VertexId) {
+        self.0.prefetch(lanes::group_base(v, self.0.lanes()) as usize);
     }
 }
 
@@ -153,6 +172,14 @@ struct Ctrl {
 /// fixed point (chaotic relaxation).
 pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult {
     let n = g.num_vertices();
+    if cfg.no_atomics {
+        assert!(
+            matches!(cfg.mode, ExecutionMode::Asynchronous),
+            "no_atomics is an asynchronous-mode variant (got {:?}): sync publishes through the \
+             double buffer and delayed/adaptive publish through sized buffers already",
+            cfg.mode
+        );
+    }
     let pm = cfg.partition_map(g);
     let t_count = pm.num_parts();
     let lane_count = prog.lanes();
@@ -305,7 +332,11 @@ fn worker<P: VertexProgram>(
     } else {
         cfg.effective_delta(delta_bound)
     };
-    let buf = RefCell::new(DelayBuffer::new(delta_cap));
+    // Atomics-light async sweeps bypass the buffer for owned vertices;
+    // the buffer only routes writes landing outside the own range
+    // (stolen chunks), coalesced to whole lines.
+    let no_atomics = cfg.no_atomics && !sync_mode;
+    let buf = RefCell::new(DelayBuffer::new(if no_atomics { crate::VALUES_PER_LINE } else { delta_cap }));
     if ctl.is_some() {
         // Flush wall time is the controller's contention signal; static
         // modes skip the timing overhead entirely.
@@ -479,6 +510,102 @@ fn worker<P: VertexProgram>(
                 }
                 prev_swept = None;
             }
+        } else if no_atomics {
+            // Atomics-light async sweep (the non-blocking-PageRank
+            // scheme; DESIGN.md §9). Updates are accumulated in
+            // registers by `update`/`update_lanes` as always, but
+            // publication splits on ownership:
+            //
+            // * vertices inside this thread's own range — one plain
+            //   Relaxed store per group, straight to the shared array:
+            //   no CAS, no RMW, no per-element buffer bookkeeping.
+            //   Safe because a partition has exactly one writer: chunks
+            //   are claimed through the steal deque exactly once per
+            //   round, and this arm's direct stores target only the
+            //   range no other static sweep touches.
+            // * vertices outside the own range (stolen chunks) — routed
+            //   through the one-line delay buffer, so a remote line is
+            //   dirtied once per line instead of once per element.
+            buf.borrow_mut().begin(lanes::group_base(range.start, lane_n));
+            let mut body = |v: VertexId| {
+                let owned = range.contains(&v);
+                if multi {
+                    let mut group = [0u32; lanes::MAX_LANES];
+                    let gv = &mut group[..lane_n];
+                    global.load_group(v, gv);
+                    let mut old = [0u32; lanes::MAX_LANES];
+                    old[..lane_n].copy_from_slice(gv);
+                    {
+                        let mut rd =
+                            LaneAsyncReader { global, local: cfg.local_reads.then_some(&buf), lanes: lane_n };
+                        prog.update_lanes(v, &mut rd, gv, live);
+                    }
+                    let mut changed_any = false;
+                    let mut act_any = false;
+                    lanes::for_each_live(live, |l| {
+                        let d = prog.lane_delta(l, old[l], gv[l]);
+                        lane_delta[l] += d;
+                        delta += d;
+                        changed_any |= gv[l] != old[l];
+                        act_any |= prog.activates(old[l], gv[l]);
+                    });
+                    changed += changed_any as u64;
+                    if act_any {
+                        activate_out(v, &mut activated);
+                    }
+                    if owned {
+                        if !conditional || changed_any {
+                            global.store_group(v, gv);
+                        }
+                    } else {
+                        let mut b = buf.borrow_mut();
+                        b.seek(global, lanes::group_base(v, lane_n));
+                        if conditional && !changed_any {
+                            b.skip_n(global, lane_n);
+                        } else {
+                            for &x in gv.iter() {
+                                b.push(global, x);
+                            }
+                        }
+                    }
+                } else {
+                    let old = global.load(v);
+                    let new = {
+                        let mut rd = AsyncReader { global, local: cfg.local_reads.then_some(&buf) };
+                        prog.update(v, &mut rd)
+                    };
+                    delta += prog.delta(old, new);
+                    changed += (new != old) as u64;
+                    if prog.activates(old, new) {
+                        activate_out(v, &mut activated);
+                    }
+                    if owned {
+                        if !conditional || new != old {
+                            global.store(v, new);
+                        }
+                    } else {
+                        let mut b = buf.borrow_mut();
+                        b.seek(global, v);
+                        if conditional && new == old {
+                            b.skip(global);
+                        } else {
+                            b.push(global, new);
+                        }
+                    }
+                }
+                processed += 1;
+            };
+            while let Some(c) = next_chunk(&mut steals) {
+                match (sparse, cur) {
+                    (true, Some(cur)) => cur.for_each_in(c, &mut body),
+                    _ => {
+                        for v in c {
+                            body(v);
+                        }
+                    }
+                }
+            }
+            buf.borrow_mut().flush(global);
         } else {
             buf.borrow_mut().begin(lanes::group_base(range.start, lane_n));
             let mut body = |v: VertexId| {
@@ -701,6 +828,11 @@ impl ValueReader for SharedReaderShim<'_> {
     #[inline]
     fn read(&mut self, v: VertexId) -> u32 {
         self.0.load(v)
+    }
+
+    #[inline]
+    fn prefetch(&mut self, v: VertexId) {
+        self.0.prefetch(v as usize);
     }
 }
 
@@ -1231,6 +1363,105 @@ mod tests {
         let t0 = r.lane_delta_trace(0);
         assert!(t0[0] > 0.0, "lane 0 starts live: {t0:?}");
         assert_eq!(*t0.last().unwrap(), 0.0, "lane 0 ends converged");
+    }
+
+    #[test]
+    fn no_atomics_matches_async_fixed_point_every_schedule_and_stealing() {
+        let g = GapGraph::Web.generate(9, 4);
+        let oracle = fixed_point_serial(&g);
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                let mut cfg = EngineConfig::new(4, ExecutionMode::Asynchronous).with_no_atomics().with_schedule(sched);
+                if steal {
+                    cfg = cfg.with_stealing();
+                }
+                let r = run(&g, &MaxProp { g: &g }, &cfg);
+                assert!(r.converged, "{sched:?} steal={steal}");
+                assert_eq!(r.values, oracle, "{sched:?} steal={steal}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_atomics_batched_lanes_match_independent_runs() {
+        let g = GapGraph::Web.generate(9, 4);
+        let k = 4;
+        let oracles: Vec<Vec<u32>> =
+            (0..k).map(|l| run_serial_sync(&g, &SaltedMax { g: &g, l }, 10_000).values).collect();
+        for steal in [false, true] {
+            let mut cfg = EngineConfig::new(4, ExecutionMode::Asynchronous).with_no_atomics();
+            if steal {
+                cfg = cfg.with_stealing();
+            }
+            let r = run(&g, &MultiMax { g: &g, k }, &cfg);
+            assert!(r.converged, "steal={steal}");
+            for (l, want) in oracles.iter().enumerate() {
+                assert_eq!(&r.lane_values(l), want, "lane {l} steal={steal}");
+            }
+        }
+    }
+
+    #[test]
+    fn no_atomics_routes_stolen_chunks_through_the_buffer() {
+        use crate::engine::PartitionStrategy;
+        // The hub graph forces steals; stolen (non-owned) chunks must be
+        // published via line-coalesced flushes, owned ones store plain.
+        let g = hub_graph(4096);
+        let p = MaxProp { g: &g };
+        let cfg = EngineConfig::new(4, ExecutionMode::Asynchronous)
+            .with_no_atomics()
+            .with_partition(PartitionStrategy::EqualVertex)
+            .with_stealing();
+        let r = run(&g, &p, &cfg);
+        assert!(r.converged);
+        assert!(r.total_steals() > 0, "straggler chunks must be stolen");
+        assert_eq!(r.values, fixed_point_serial(&g));
+        // A steal-free no-atomics run never touches the routing buffer.
+        let quiet = run(&g, &p, &EngineConfig::new(4, ExecutionMode::Asynchronous).with_no_atomics());
+        assert_eq!(quiet.total_flushes(), 0, "owned-range sweeps bypass the buffer entirely");
+    }
+
+    #[test]
+    fn no_atomics_composes_with_conditional_writes() {
+        struct CondMax<'g> {
+            g: &'g Csr,
+        }
+        impl VertexProgram for CondMax<'_> {
+            fn name(&self) -> &'static str {
+                "condmax"
+            }
+            fn init(&self, v: VertexId) -> u32 {
+                v * 7919 % 10007
+            }
+            fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
+                let mut best = r.read(v);
+                for &u in self.g.in_neighbors(v) {
+                    best = best.max(r.read(u));
+                }
+                best
+            }
+            fn delta(&self, old: u32, new: u32) -> f64 {
+                (old != new) as u32 as f64
+            }
+            fn converged(&self, d: f64) -> bool {
+                d == 0.0
+            }
+            fn conditional_writes(&self) -> bool {
+                true
+            }
+        }
+        let g = GapGraph::Kron.generate(9, 8);
+        let oracle = fixed_point_serial(&g);
+        let r = run(&g, &CondMax { g: &g }, &EngineConfig::new(4, ExecutionMode::Asynchronous).with_no_atomics());
+        assert!(r.converged);
+        assert_eq!(r.values, oracle);
+    }
+
+    #[test]
+    #[should_panic(expected = "no_atomics is an asynchronous-mode variant")]
+    fn no_atomics_rejects_non_async_modes() {
+        let g = crate::graph::GraphBuilder::new(2).edges(&[(0, 1)]).build();
+        let _ = run(&g, &MaxProp { g: &g }, &EngineConfig::new(2, ExecutionMode::Delayed(16)).with_no_atomics());
     }
 
     #[test]

@@ -13,6 +13,14 @@ use crate::graph::VertexId;
 pub trait ValueReader {
     /// Current value of `v` as raw bits.
     fn read(&mut self, v: VertexId) -> u32;
+
+    /// Hint that `v` will be read shortly (single-lane twin of
+    /// [`crate::engine::lanes::LaneReader::prefetch_group`]). Native
+    /// readers issue a software prefetch; the default no-op serves the
+    /// simulator — a prefetch is a hint, charges nothing — and closure
+    /// readers.
+    #[inline]
+    fn prefetch(&mut self, _v: VertexId) {}
 }
 
 /// Blanket impl so plain closures can be readers in tests.

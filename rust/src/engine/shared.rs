@@ -11,11 +11,23 @@
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use crate::graph::VertexId;
+use crate::VALUES_PER_LINE;
 
 use super::program::ValueReader;
 
-/// Shared value array. Heap layout is 64-byte aligned so partition ranges
-/// map cleanly onto cache lines.
+/// One cache line of value slots. The `#[repr(align(64))]` makes the
+/// 64-byte alignment a *type-level* guarantee: a `Vec<ValueLine>`
+/// allocation starts on a cache-line boundary, so every lane group —
+/// which never straddles a line (see [`crate::engine::lanes`]) — starts
+/// at an address aligned to its own width. The SIMD group loads/stores
+/// ([`crate::engine::kernels`]) and the flush-lines accounting both
+/// lean on that invariant; `shared::tests` asserts it for every
+/// supported lane count.
+#[repr(C, align(64))]
+pub struct ValueLine([AtomicU32; VALUES_PER_LINE]);
+
+/// Shared value array. Heap layout is genuinely 64-byte aligned (backed
+/// by [`ValueLine`]s) so partition ranges map cleanly onto cache lines.
 ///
 /// Under multi-query batching ([`crate::engine::lanes`]) the array holds
 /// `lanes` interleaved 32-bit values per vertex (vertex-major lane
@@ -26,7 +38,8 @@ use super::program::ValueReader;
 /// address whole per-vertex groups. `lanes == 1` is the classic
 /// single-query array where element index = vertex id.
 pub struct SharedValues {
-    slots: Vec<AtomicU32>,
+    lines: Vec<ValueLine>,
+    len: usize,
     lanes: usize,
 }
 
@@ -37,12 +50,28 @@ impl SharedValues {
     }
 
     /// Build from initial raw-bit values laid out as `lanes`-wide vertex
-    /// groups (`bits.len()` must be a multiple of `lanes`).
+    /// groups (`bits.len()` must be a multiple of `lanes`). The final
+    /// partial line, if any, is zero-padded (the padding is never
+    /// addressable through `len`-bounded callers).
     pub fn from_bits_lanes(bits: impl IntoIterator<Item = u32>, lanes: usize) -> Self {
         assert!(crate::engine::lanes::valid_lane_count(lanes), "bad lane count {lanes}");
-        let slots: Vec<AtomicU32> = bits.into_iter().map(AtomicU32::new).collect();
-        assert_eq!(slots.len() % lanes, 0, "value count must be a multiple of the lane count");
-        Self { slots, lanes }
+        let bits: Vec<u32> = bits.into_iter().collect();
+        assert_eq!(bits.len() % lanes, 0, "value count must be a multiple of the lane count");
+        let len = bits.len();
+        let lines = (0..len.div_ceil(VALUES_PER_LINE))
+            .map(|li| {
+                let base = li * VALUES_PER_LINE;
+                ValueLine(std::array::from_fn(|i| AtomicU32::new(bits.get(base + i).copied().unwrap_or(0))))
+            })
+            .collect();
+        Self { lines, len, lanes }
+    }
+
+    /// The slot holding element `idx`.
+    #[inline]
+    fn slot(&self, idx: usize) -> &AtomicU32 {
+        debug_assert!(idx < self.len, "element {idx} out of range for len {}", self.len);
+        &self.lines[idx / VALUES_PER_LINE].0[idx % VALUES_PER_LINE]
     }
 
     /// Lanes per vertex group.
@@ -54,24 +83,38 @@ impl SharedValues {
     /// Number of values.
     #[inline]
     pub fn len(&self) -> usize {
-        self.slots.len()
+        self.len
     }
 
     /// True if empty.
     pub fn is_empty(&self) -> bool {
-        self.slots.is_empty()
+        self.len == 0
+    }
+
+    /// Byte address of element `idx` — for alignment assertions and as
+    /// the prefetch target ([`Self::prefetch`]).
+    #[inline]
+    pub fn addr_of(&self, idx: usize) -> usize {
+        self.slot(idx) as *const AtomicU32 as usize
+    }
+
+    /// Software-prefetch the cache line holding element `idx` (no-op
+    /// off x86-64). A hint only: no memory effects, no ordering.
+    #[inline]
+    pub fn prefetch(&self, idx: usize) {
+        crate::engine::kernels::prefetch_read(self.slot(idx) as *const AtomicU32);
     }
 
     /// Relaxed load.
     #[inline]
     pub fn load(&self, v: VertexId) -> u32 {
-        self.slots[v as usize].load(Ordering::Relaxed)
+        self.slot(v as usize).load(Ordering::Relaxed)
     }
 
     /// Relaxed store.
     #[inline]
     pub fn store(&self, v: VertexId, bits: u32) {
-        self.slots[v as usize].store(bits, Ordering::Relaxed);
+        self.slot(v as usize).store(bits, Ordering::Relaxed);
     }
 
     /// Bulk store of a contiguous run starting at `base` — the delay
@@ -80,7 +123,7 @@ impl SharedValues {
     #[inline]
     pub fn store_run(&self, base: VertexId, values: &[u32]) {
         for (i, &x) in values.iter().enumerate() {
-            self.slots[base as usize + i].store(x, Ordering::Relaxed);
+            self.slot(base as usize + i).store(x, Ordering::Relaxed);
         }
     }
 
@@ -89,8 +132,12 @@ impl SharedValues {
     pub fn load_group(&self, v: VertexId, out: &mut [u32]) {
         debug_assert_eq!(out.len(), self.lanes);
         let base = v as usize * self.lanes;
+        // A group never straddles a line, so one line lookup serves all
+        // `lanes` slots.
+        let line = &self.lines[base / VALUES_PER_LINE].0;
+        let off = base % VALUES_PER_LINE;
         for (l, o) in out.iter_mut().enumerate() {
-            *o = self.slots[base + l].load(Ordering::Relaxed);
+            *o = line[off + l].load(Ordering::Relaxed);
         }
     }
 
@@ -99,21 +146,23 @@ impl SharedValues {
     pub fn store_group(&self, v: VertexId, vals: &[u32]) {
         debug_assert_eq!(vals.len(), self.lanes);
         let base = v as usize * self.lanes;
+        let line = &self.lines[base / VALUES_PER_LINE].0;
+        let off = base % VALUES_PER_LINE;
         for (l, &x) in vals.iter().enumerate() {
-            self.slots[base + l].store(x, Ordering::Relaxed);
+            line[off + l].store(x, Ordering::Relaxed);
         }
     }
 
     /// Snapshot into a plain vector.
     pub fn to_vec(&self) -> Vec<u32> {
-        self.slots.iter().map(|s| s.load(Ordering::Relaxed)).collect()
+        (0..self.len).map(|i| self.slot(i).load(Ordering::Relaxed)).collect()
     }
 
     /// Overwrite all slots from a plain slice (used at sync-round swap).
     pub fn copy_from(&self, bits: &[u32]) {
-        assert_eq!(bits.len(), self.slots.len());
-        for (s, &b) in self.slots.iter().zip(bits) {
-            s.store(b, Ordering::Relaxed);
+        assert_eq!(bits.len(), self.len);
+        for (i, &b) in bits.iter().enumerate() {
+            self.slot(i).store(b, Ordering::Relaxed);
         }
     }
 }
@@ -126,6 +175,11 @@ impl ValueReader for SharedReader<'_> {
     fn read(&mut self, v: VertexId) -> u32 {
         self.0.load(v)
     }
+
+    #[inline]
+    fn prefetch(&mut self, v: VertexId) {
+        self.0.prefetch(v as usize);
+    }
 }
 
 /// Reader over an immutable snapshot (sync mode front buffer).
@@ -135,6 +189,11 @@ impl ValueReader for SliceReader<'_> {
     #[inline]
     fn read(&mut self, v: VertexId) -> u32 {
         self.0[v as usize]
+    }
+
+    #[inline]
+    fn prefetch(&mut self, v: VertexId) {
+        crate::engine::kernels::prefetch_read(&self.0[v as usize] as *const u32);
     }
 }
 
@@ -187,6 +246,53 @@ mod tests {
     #[should_panic(expected = "multiple of the lane count")]
     fn lane_length_mismatch_rejected() {
         let _ = SharedValues::from_bits_lanes(vec![0; 10], 4);
+    }
+
+    #[test]
+    fn value_line_type_is_exactly_one_cache_line() {
+        assert_eq!(std::mem::align_of::<ValueLine>(), crate::CACHE_LINE_BYTES, "#[repr(align(64))]");
+        assert_eq!(std::mem::size_of::<ValueLine>(), crate::CACHE_LINE_BYTES, "no padding between lines");
+    }
+
+    #[test]
+    fn lane_groups_start_cache_line_aligned_for_every_k() {
+        // The SIMD group loads assume every lane group starts at an
+        // address aligned to its own width and never crosses a line.
+        use crate::engine::lanes;
+        for k in lanes::LANE_COUNTS {
+            // Odd vertex count: the last line is partial, exercising the
+            // zero-padded tail.
+            let n = 97usize;
+            let s = SharedValues::from_bits_lanes(vec![0u32; n * k], k);
+            assert_eq!(s.addr_of(0) % crate::CACHE_LINE_BYTES, 0, "k={k}: base must open a line");
+            for v in 0..n as VertexId {
+                let a = s.addr_of(lanes::group_base(v, k) as usize);
+                assert_eq!(a % (k * 4), 0, "k={k} v={v}: group start unaligned to group width");
+                let off = a % crate::CACHE_LINE_BYTES;
+                assert!(off + k * 4 <= crate::CACHE_LINE_BYTES, "k={k} v={v}: group straddles a line");
+                if (v as usize * k) % crate::VALUES_PER_LINE == 0 {
+                    assert_eq!(off, 0, "k={k} v={v}: line-opening group must start the line");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn partial_tail_line_is_padded_not_lost() {
+        // 5 values with k=1: one line backs them, padding unaddressed.
+        let s = SharedValues::from_bits([1, 2, 3, 4, 5]);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.to_vec(), vec![1, 2, 3, 4, 5]);
+        s.store(4, 99);
+        assert_eq!(s.load(4), 99);
+    }
+
+    #[test]
+    fn prefetch_is_a_pure_hint() {
+        let s = SharedValues::from_bits([7, 8, 9]);
+        s.prefetch(0);
+        s.prefetch(2);
+        assert_eq!(s.to_vec(), vec![7, 8, 9], "prefetch must not move bits");
     }
 
     #[test]

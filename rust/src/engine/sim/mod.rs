@@ -269,6 +269,13 @@ impl ValueReader for SimReader<'_> {
         self.cost += a.cycles + self.machine.cost.edge_compute;
         self.values[v as usize]
     }
+
+    /// Prefetch is a pure hint: it moves no architectural state and is
+    /// deliberately *not charged* — so sweeps at any prefetch distance
+    /// (and the scalar vs SIMD kernels, which only differ after the
+    /// gather) stay bit-comparable with the charging model unchanged.
+    #[inline]
+    fn prefetch(&mut self, _v: VertexId) {}
 }
 
 /// Lane-group reader: one coherence access per neighbor group (a group
@@ -313,6 +320,11 @@ impl lanes::LaneReader for SimLaneReader<'_> {
         self.cost += a.cycles + self.live_n * self.machine.cost.edge_compute;
         out.copy_from_slice(&self.values[e..e + self.lanes]);
     }
+
+    /// Uncharged no-op, same argument as [`SimReader::prefetch`]: one
+    /// group access per neighbor is the charging model either way.
+    #[inline]
+    fn prefetch_group(&mut self, _v: VertexId) {}
 }
 
 /// Simulate `prog` on `g` with `cfg.threads` logical threads on `machine`.
@@ -322,6 +334,20 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
     let t_count = pm.num_parts();
     assert!(t_count <= cache::MAX_THREADS, "simulator supports ≤{} threads", cache::MAX_THREADS);
     let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
+    // The atomics-light variant is charged as plain async: for owned
+    // vertices both publish one immediate store per group (identical
+    // line traffic — the native win is dropped per-element bookkeeping,
+    // not fewer line transfers), and its stolen-chunk line coalescing
+    // is a native-executor micro-optimization below this model's
+    // resolution. Asserting the mode keeps the two executors' accepted
+    // configs identical.
+    if cfg.no_atomics {
+        assert!(
+            matches!(cfg.mode, ExecutionMode::Asynchronous),
+            "no_atomics is an asynchronous-mode variant (got {:?})",
+            cfg.mode
+        );
+    }
     let conditional = prog.conditional_writes();
     let frontier_on = cfg.schedule != SchedulePolicy::Dense;
     if frontier_on {

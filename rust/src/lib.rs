@@ -1,3 +1,4 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
 //! # daig — Delayed Asynchronous Iterative Graph Algorithms
 //!
 //! A reproduction of *"Delayed Asynchronous Iterative Graph Algorithms"*

@@ -74,12 +74,39 @@ common options:
                                          run — SSSP: k sources, PageRank: k
                                          teleport sets — as interleaved value
                                          lanes; see `daig experiment batch`)
+  --no-atomics                          (async mode only: owned vertices publish
+                                         with plain stores, stolen chunks route
+                                         through a one-line delay buffer)
+  --prefetch N                          (software-prefetch neighbor values N
+                                         neighbors ahead in the gather loop;
+                                         0 = off. A pure hint: results are
+                                         identical at every distance)
+
+Build with `--features simd` (nightly toolchain) to run the lane-group
+kernels on std::simd vectors; the default scalar build is bit-identical.
 
 `--mode adaptive` runs the online δ controller: each worker resizes its
 delay buffer between rounds from flush-contention / frontier-density /
 residual telemetry (see `daig experiment adaptive` for its regret vs the
 exhaustive static sweep).
 ";
+
+/// Render the run-headline suffix for the newer engine knobs: the
+/// no-atomics publication scheme, a non-zero prefetch distance, and
+/// whether this binary was built with the SIMD lane kernels.
+fn ecfg_extras(ecfg: &EngineConfig) -> String {
+    let mut s = String::new();
+    if ecfg.no_atomics {
+        s.push_str(", no-atomics");
+    }
+    if ecfg.prefetch != 0 {
+        s.push_str(&format!(", prefetch={}", ecfg.prefetch));
+    }
+    if daig::engine::kernels::simd_enabled() {
+        s.push_str(", simd");
+    }
+    s
+}
 
 /// Parse the `--schedule` option (default dense, the paper's behavior).
 /// Unknown labels are a hard error naming the offending input — never a
@@ -151,6 +178,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     if args.flag("steal") {
         ecfg = ecfg.with_stealing();
     }
+    if args.flag("no-atomics") {
+        if mode != ExecutionMode::Asynchronous {
+            bail!(
+                "--no-atomics requires --mode async (got {}): sync publishes through the \
+                 double buffer and delayed/adaptive already publish through sized buffers",
+                mode.label()
+            );
+        }
+        ecfg = ecfg.with_no_atomics();
+    }
+    ecfg = ecfg.with_prefetch(args.opt("prefetch", 0)?);
     // Anything but the default single-query batch goes through the
     // batched path — including illegal values like 0, which it rejects
     // with a clear error instead of silently running one query.
@@ -159,7 +197,7 @@ fn cmd_run(args: &Args) -> Result<()> {
         return cmd_run_batched(args, &w, &g, &ecfg, batch);
     }
     println!(
-        "{} on {} (n={}, m={}), mode={}, schedule={}, threads={}{}",
+        "{} on {} (n={}, m={}), mode={}, schedule={}, threads={}{}{}",
         w.algo.name(),
         args.opt_str("graph", "kron"),
         g.num_vertices(),
@@ -167,7 +205,8 @@ fn cmd_run(args: &Args) -> Result<()> {
         mode.label(),
         schedule.label(),
         threads,
-        if ecfg.stealing { ", stealing" } else { "" }
+        if ecfg.stealing { ", stealing" } else { "" },
+        ecfg_extras(&ecfg)
     );
     match args.opt_str("engine", "sim").as_str() {
         "native" => {
@@ -237,7 +276,7 @@ fn cmd_run_batched(args: &Args, w: &Workload, g: &Csr, ecfg: &EngineConfig, k: u
         bail!("--batch {k} needs at least {k} vertices for distinct queries (graph has {})", g.num_vertices());
     }
     println!(
-        "{} x{k} batched on {} (n={}, m={}), mode={}, schedule={}, threads={}{}",
+        "{} x{k} batched on {} (n={}, m={}), mode={}, schedule={}, threads={}{}{}",
         w.algo.name(),
         args.opt_str("graph", "kron"),
         g.num_vertices(),
@@ -245,7 +284,8 @@ fn cmd_run_batched(args: &Args, w: &Workload, g: &Csr, ecfg: &EngineConfig, k: u
         ecfg.mode.label(),
         ecfg.schedule.label(),
         ecfg.threads,
-        if ecfg.stealing { ", stealing" } else { "" }
+        if ecfg.stealing { ", stealing" } else { "" },
+        ecfg_extras(ecfg)
     );
     let engine = args.opt_str("engine", "sim");
     let run: RunResult = match (w.algo, engine.as_str()) {

@@ -28,6 +28,16 @@
 //! the execution deterministic (SSSP everywhere, PageRank lanes on the
 //! deterministic simulator in sync mode), to ε under native async
 //! interleavings.
+//!
+//! The **scalar-vs-SIMD parity suite** (`simd_scalar_parity_*`) pins
+//! kernel dispatch to the scalar reference and re-runs cells against
+//! the dispatched (vector, under `--features simd`) path: bit-exact
+//! wherever execution is deterministic (SSSP everywhere, PageRank in
+//! sync mode and on the simulator in every mode), ε-bounded under
+//! native async interleavings. `prefetch_distance_invariance_property`
+//! asserts look-ahead distance changes nothing — native results and
+//! simulated line traffic alike — and `no_atomics_*` covers the
+//! atomics-light async arm against the same oracles.
 
 use daig::algorithms::{bfs, cc, oracle, pagerank, sssp};
 use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
@@ -366,6 +376,180 @@ fn adaptive_cells_carry_valid_traces() {
                 }
                 let st = cc::run_native(&g, &cfg(ExecutionMode::Delayed(32), sched, steal));
                 assert!(st.run.rounds.iter().all(|rs| rs.delta_trace.is_empty()), "{gname} static trace leak");
+            }
+        }
+    }
+}
+
+/// Pin kernel dispatch to the scalar reference for the duration of a
+/// closure, restoring dispatched mode after. The toggle is process-wide,
+/// but flipping it concurrently with other tests is benign: the scalar
+/// and vector kernels are bit-identical by design (that is what this
+/// suite proves), so which one runs never changes a result.
+fn with_scalar_kernels<T>(f: impl FnOnce() -> T) -> T {
+    daig::engine::kernels::set_force_scalar(true);
+    let out = f();
+    daig::engine::kernels::set_force_scalar(false);
+    out
+}
+
+#[test]
+fn simd_scalar_parity_sssp_every_cell_bit_exact() {
+    // Scalar vs dispatched kernels through the whole native engine, on
+    // every mode × schedule × stealing cell and every vector width.
+    // SSSP's fixed point is unique and integral, so the two paths must
+    // agree bit for bit everywhere. (In a scalar build both runs take
+    // the same path and the comparison is trivially true — the nightly
+    // `--features simd` CI job is where this bites.)
+    for (gname, g) in graphs(true) {
+        for k in [4usize, 8, 16] {
+            let sources = sssp::default_sources(&g, k);
+            for (mode, sched, steal) in matrix() {
+                let c = cfg(mode, sched, steal);
+                let scalar = with_scalar_kernels(|| sssp::run_native_batch(&g, &sources, &c));
+                let simd = sssp::run_native_batch(&g, &sources, &c);
+                assert_eq!(
+                    scalar.dist, simd.dist,
+                    "sssp {gname} k={k} {mode:?}/{sched:?} steal={steal}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_scalar_parity_pagerank_sync_bit_exact_async_bounded() {
+    // PageRank: in sync mode the unfused vector kernels must reproduce
+    // the scalar rounding bit for bit; under async interleavings the
+    // runs see different timings, so the comparison is ε-bounded against
+    // the shared deterministic sync baseline.
+    let prcfg = pagerank::PrConfig { damping: 0.85, epsilon: 1e-6 };
+    for (gname, g) in graphs(false) {
+        for k in [4usize, 8, 16] {
+            let teleports = pagerank::default_teleports(&g, k);
+            let sync = cfg(ExecutionMode::Synchronous, SchedulePolicy::Dense, false);
+            let scalar_sync = with_scalar_kernels(|| pagerank::run_native_batch(&g, &teleports, &sync, &prcfg));
+            let simd_sync = pagerank::run_native_batch(&g, &teleports, &sync, &prcfg);
+            assert_eq!(
+                scalar_sync.run.values, simd_sync.run.values,
+                "pagerank {gname} k={k} sync must be bit-exact"
+            );
+            for mode in [ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+                let c = cfg(mode, SchedulePolicy::Dense, false);
+                let scalar = with_scalar_kernels(|| pagerank::run_native_batch(&g, &teleports, &c, &prcfg));
+                let simd = pagerank::run_native_batch(&g, &teleports, &c, &prcfg);
+                for l in 0..k {
+                    for v in 0..g.num_vertices() {
+                        assert!(
+                            (scalar.values[l][v] - simd.values[l][v]).abs() < 1e-3,
+                            "pagerank {gname} k={k} {mode:?} lane {l} v{v}: {} vs {}",
+                            scalar.values[l][v],
+                            simd.values[l][v]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_scalar_parity_sim_bit_exact_every_mode() {
+    // The deterministic simulator removes timing from the picture, so
+    // scalar vs dispatched kernels must agree bit for bit in *every*
+    // mode — including async/delayed — and charge identical line
+    // traffic (the kernels only run post-gather; ISSUE acceptance).
+    use daig::engine::sim::cost::Machine;
+    let m = Machine::haswell();
+    let prcfg = pagerank::PrConfig::default();
+    for ((gname, g), (_, gw)) in graphs(false).into_iter().zip(graphs(true)) {
+        for k in [4usize, 8, 16] {
+            let teleports = pagerank::default_teleports(&g, k);
+            let sources = sssp::default_sources(&gw, k);
+            for mode in MODES {
+                let c = cfg(mode, SchedulePolicy::Dense, false);
+                let (pr_a, sim_a) = with_scalar_kernels(|| pagerank::run_sim_batch(&g, &teleports, &c, &prcfg, &m));
+                let (pr_b, sim_b) = pagerank::run_sim_batch(&g, &teleports, &c, &prcfg, &m);
+                assert_eq!(pr_a.run.values, pr_b.run.values, "pagerank sim {gname} k={k} {mode:?}");
+                assert_eq!(sim_a.metrics, sim_b.metrics, "pagerank sim traffic {gname} k={k} {mode:?}");
+                let (ss_a, wsim_a) = with_scalar_kernels(|| sssp::run_sim_batch(&gw, &sources, &c, &m));
+                let (ss_b, wsim_b) = sssp::run_sim_batch(&gw, &sources, &c, &m);
+                assert_eq!(ss_a.dist, ss_b.dist, "sssp sim k={k} {mode:?}");
+                assert_eq!(wsim_a.metrics, wsim_b.metrics, "sssp sim traffic k={k} {mode:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prefetch_distance_invariance_property() {
+    // A software prefetch is a pure hint: for any look-ahead distance
+    // the native engine must produce identical results, and the
+    // simulator must charge *identical* line traffic (its prefetch hook
+    // is deliberately uncharged).
+    use daig::engine::sim::cost::Machine;
+    let m = Machine::haswell();
+    let prcfg = pagerank::PrConfig::default();
+    for (gname, g) in graphs(true) {
+        let sources = sssp::default_sources(&g, LANE_K);
+        let base_cfg = cfg(ExecutionMode::Delayed(32), SchedulePolicy::Dense, false);
+        let want = sssp::run_native_batch(&g, &sources, &base_cfg);
+        let (want_sim, base_metrics) = sssp::run_sim_batch(&g, &sources, &base_cfg, &m);
+        for dist in [1usize, 3, 16, 512] {
+            let c = base_cfg.clone().with_prefetch(dist);
+            assert_eq!(sssp::run_native_batch(&g, &sources, &c).dist, want.dist, "{gname} native dist={dist}");
+            let (got, metrics) = sssp::run_sim_batch(&g, &sources, &c, &m);
+            assert_eq!(got.dist, want_sim.dist, "{gname} sim dist={dist}");
+            assert_eq!(metrics.metrics, base_metrics.metrics, "{gname} sim traffic dist={dist}");
+        }
+    }
+    // Single-lane PageRank through the scalar update path too.
+    let g = graphs(false).remove(0).1;
+    let sync = EngineConfig::new(THREADS, ExecutionMode::Synchronous);
+    let want = pagerank::run_native(&g, &sync, &prcfg);
+    for dist in [1usize, 8, 64] {
+        let got = pagerank::run_native(&g, &sync.clone().with_prefetch(dist), &prcfg);
+        assert_eq!(got.run.values, want.run.values, "pagerank native dist={dist}");
+    }
+}
+
+#[test]
+fn no_atomics_async_matches_oracles_every_schedule() {
+    // The atomics-light async arm (owned ranges publish with plain
+    // stores, stolen chunks route through a one-line buffer) must reach
+    // the same fixed points as the CAS-path async arm on every
+    // schedule × stealing cell, single-lane and batched.
+    let prcfg = pagerank::PrConfig { damping: 0.85, epsilon: 1e-6 };
+    for (gname, g) in graphs(true) {
+        let src = sssp::default_source(&g);
+        let want = oracle::dijkstra(&g, src);
+        let sources = sssp::default_sources(&g, LANE_K);
+        let oracles: Vec<Vec<u32>> = sources.iter().map(|&s| oracle::dijkstra(&g, s)).collect();
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                let c = cfg(ExecutionMode::Asynchronous, sched, steal).with_no_atomics();
+                let r = sssp::run_native(&g, src, &c);
+                assert_eq!(r.dist, want, "sssp no-atomics {gname} {sched:?} steal={steal}");
+                let b = sssp::run_native_batch(&g, &sources, &c);
+                for (l, o) in oracles.iter().enumerate() {
+                    assert_eq!(&b.dist[l], o, "sssp-batch no-atomics {gname} lane {l} {sched:?} steal={steal}");
+                }
+            }
+        }
+    }
+    for (gname, g) in graphs(false) {
+        let sync_base = pagerank::run_native(&g, &EngineConfig::new(THREADS, ExecutionMode::Synchronous), &prcfg);
+        for steal in [false, true] {
+            let c = cfg(ExecutionMode::Asynchronous, SchedulePolicy::Dense, steal).with_no_atomics();
+            let r = pagerank::run_native(&g, &c, &prcfg);
+            assert!(r.run.converged, "pagerank no-atomics {gname} steal={steal}");
+            for v in 0..g.num_vertices() {
+                assert!(
+                    (r.values[v] - sync_base.values[v]).abs() < 1e-3,
+                    "pagerank no-atomics {gname} steal={steal} v{v}: {} vs {}",
+                    r.values[v],
+                    sync_base.values[v]
+                );
             }
         }
     }

@@ -144,9 +144,9 @@ fn batch_experiment() {
     let dir = tmpdir("batch");
     experiments::run("batch", &opts(&dir)).unwrap();
     let csv = std::fs::read_to_string(std::path::Path::new(&dir).join("batch.csv")).unwrap();
-    // 2 algorithms × 4 modes × 2 schedules × 2 steal variants × 4 batch
-    // sizes + header.
-    assert_eq!(csv.lines().count(), 129, "{csv}");
+    // 2 algorithms × 4 modes × 2 schedules × 2 steal variants × 5 batch
+    // sizes (LANE_COUNTS, k=2 included) + header.
+    assert_eq!(csv.lines().count(), 161, "{csv}");
     let cell = |l: &str, i: usize| l.split(',').nth(i).unwrap().to_string();
     for l in csv.lines().skip(1) {
         assert!(cell(l, 4).parse::<usize>().is_ok(), "k column must be numeric: {l}");
