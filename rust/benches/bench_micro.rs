@@ -1,6 +1,7 @@
 //! Micro-benchmarks on the L3 hot paths (used by the §Perf optimization
 //! loop): delay-buffer flush, CSR pull sweep, native engine rounds,
-//! simulator throughput, and PJRT dense-step latency when artifacts are
+//! simulator throughput, incremental recompute after edge mutations
+//! (BENCH_mutate.json), and PJRT dense-step latency when artifacts are
 //! present.
 
 use daig::algorithms::cc;
@@ -382,6 +383,79 @@ fn main() {
     ]);
     std::fs::write("BENCH_simd.json", simd_doc.to_string()).expect("write BENCH_simd.json");
     println!("wrote BENCH_simd.json");
+
+    bench::section("mutate: incremental recompute after 1% edge mutations (native wall clock, 4 threads)");
+    // A 1% random batch mutates the kron graphs through the
+    // VersionedGraph overlay; full recompute on the mutated overlay vs
+    // the warm-started resume (pre-mutation fixed point + mutation-
+    // touched dirty set), per mode, frontier schedule — the regime
+    // incremental recomputation targets. Results land in
+    // BENCH_mutate.json so the incremental-vs-full latency trajectory is
+    // recorded across PRs.
+    let mut mutate_json: Vec<(String, Json)> = Vec::new();
+    for (aname, pr_not_sssp) in [("sssp", false), ("pagerank", true)] {
+        let base: &Csr = if pr_not_sssp { &g } else { &kron_w };
+        let src = daig::algorithms::sssp::default_source(base);
+        let mut vg = daig::graph::VersionedGraph::new(base.clone());
+        let batch = vg.random_batch(0.01, 0xBE9C);
+        vg.apply_batch(&batch).expect("random batch must validate");
+        let mut mode_json: Vec<(&str, Json)> = Vec::new();
+        for (mlabel, mode) in [
+            ("sync", ExecutionMode::Synchronous),
+            ("async", ExecutionMode::Asynchronous),
+            ("d256", ExecutionMode::Delayed(256)),
+        ] {
+            let ecfg = EngineConfig::new(4, mode).with_schedule(SchedulePolicy::Frontier);
+            let (s_full, s_resumed, dirty) = if pr_not_sssp {
+                let cold = pagerank::run_native(base, &ecfg, &PrConfig::default()).run;
+                let s_full = bench::case(&format!("pagerank kron@{scale} {mlabel} full 4t"), 3, || {
+                    pagerank::run_native(&vg, &ecfg, &PrConfig::default())
+                });
+                let seed = pagerank::resume_seed(&vg, &cold, &batch);
+                let dirty = seed.dirty.len();
+                let rcfg = ecfg.clone().with_resume(seed);
+                let s_resumed = bench::case(&format!("pagerank kron@{scale} {mlabel} resumed 4t"), 3, || {
+                    pagerank::run_native(&vg, &rcfg, &PrConfig::default())
+                });
+                (s_full, s_resumed, dirty)
+            } else {
+                let cold = daig::algorithms::sssp::run_native(base, src, &ecfg).run;
+                let s_full = bench::case(&format!("sssp kron@{scale} {mlabel} full 4t"), 3, || {
+                    daig::algorithms::sssp::run_native(&vg, src, &ecfg)
+                });
+                let seed = daig::algorithms::sssp::resume_seed(&vg, src, &cold, &batch);
+                let dirty = seed.dirty.len();
+                let rcfg = ecfg.clone().with_resume(seed);
+                let s_resumed = bench::case(&format!("sssp kron@{scale} {mlabel} resumed 4t"), 3, || {
+                    daig::algorithms::sssp::run_native(&vg, src, &rcfg)
+                });
+                (s_full, s_resumed, dirty)
+            };
+            let speedup = s_full.min_s / s_resumed.min_s;
+            println!("  -> {speedup:.2}x vs full recompute ({dirty} dirty)");
+            mode_json.push((
+                mlabel,
+                Json::obj(vec![
+                    ("full_s_min", Json::Num(s_full.min_s)),
+                    ("resumed_s_min", Json::Num(s_resumed.min_s)),
+                    ("dirty", Json::Num(dirty as f64)),
+                    ("speedup_vs_full", Json::Num(speedup)),
+                ]),
+            ));
+        }
+        mutate_json.push((aname.to_string(), Json::obj(mode_json)));
+    }
+    let mutate_doc = Json::obj(vec![
+        ("bench", Json::Str("mutate".into())),
+        ("scale", Json::Num(scale as f64)),
+        ("threads", Json::Num(4.0)),
+        ("graph", Json::Str("kron".into())),
+        ("schedule", Json::Str("frontier".into())),
+        ("batch_frac", Json::Num(0.01)),
+        ("workloads", Json::Obj(mutate_json.into_iter().collect())),
+    ]);
+    std::fs::write("BENCH_mutate.json", mutate_doc.to_string()).expect("write BENCH_mutate.json");
+    println!("wrote BENCH_mutate.json");
 
     bench::section("PJRT dense-block step (L1/L2 artifact path)");
     if std::path::Path::new("artifacts/manifest.json").exists() {

@@ -12,21 +12,21 @@ use crate::engine::program::{ValueReader, VertexProgram};
 use crate::engine::sim::cost::Machine;
 use crate::engine::sim::SimRun;
 use crate::engine::{native, EngineConfig, RunResult};
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphStore, VertexId};
 
 /// Unreached marker.
 pub const UNREACHED: u32 = u32::MAX;
 
-/// Level-relaxation BFS program.
-pub struct Bfs<'g> {
-    g: &'g Csr,
+/// Level-relaxation BFS program over any [`GraphStore`] backend.
+pub struct Bfs<'g, G> {
+    g: &'g G,
     source: VertexId,
     conditional: bool,
 }
 
-impl<'g> Bfs<'g> {
+impl<'g, G: GraphStore> Bfs<'g, G> {
     /// BFS from `source`.
-    pub fn new(g: &'g Csr, source: VertexId) -> Self {
+    pub fn new(g: &'g G, source: VertexId) -> Self {
         Self { g, source, conditional: false }
     }
 
@@ -37,7 +37,7 @@ impl<'g> Bfs<'g> {
     }
 }
 
-impl VertexProgram for Bfs<'_> {
+impl<G: GraphStore> VertexProgram for Bfs<'_, G> {
     fn name(&self) -> &'static str {
         "bfs"
     }
@@ -53,7 +53,7 @@ impl VertexProgram for Bfs<'_> {
     #[inline]
     fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
         let mut best = r.read(v);
-        for &u in self.g.in_neighbors(v) {
+        for u in self.g.in_neighbors(v) {
             let lu = r.read(u);
             if lu != UNREACHED {
                 best = best.min(lu + 1);
@@ -76,12 +76,12 @@ impl VertexProgram for Bfs<'_> {
 }
 
 /// Run on the real-thread executor.
-pub fn run_native(g: &Csr, source: VertexId, ecfg: &EngineConfig) -> BfsResult {
+pub fn run_native<G: GraphStore>(g: &G, source: VertexId, ecfg: &EngineConfig) -> BfsResult {
     BfsResult::from(native::run(g, &Bfs::new(g, source), ecfg))
 }
 
 /// Run on the simulator.
-pub fn run_sim(g: &Csr, source: VertexId, ecfg: &EngineConfig, machine: &Machine) -> (BfsResult, SimRun) {
+pub fn run_sim<G: GraphStore>(g: &G, source: VertexId, ecfg: &EngineConfig, machine: &Machine) -> (BfsResult, SimRun) {
     let sim = crate::engine::sim::run(g, &Bfs::new(g, source), ecfg, machine);
     (BfsResult::from(sim.result.clone()), sim)
 }

@@ -12,17 +12,17 @@ use crate::engine::program::{ValueReader, VertexProgram};
 use crate::engine::sim::cost::Machine;
 use crate::engine::sim::SimRun;
 use crate::engine::{native, EngineConfig, RunResult};
-use crate::graph::{Csr, VertexId};
+use crate::graph::{GraphStore, VertexId};
 
-/// Min-label propagation program.
-pub struct Components<'g> {
-    g: &'g Csr,
+/// Min-label propagation program over any [`GraphStore`] backend.
+pub struct Components<'g, G> {
+    g: &'g G,
     conditional: bool,
 }
 
-impl<'g> Components<'g> {
+impl<'g, G: GraphStore> Components<'g, G> {
     /// Program for a (preferably symmetric) graph.
-    pub fn new(g: &'g Csr) -> Self {
+    pub fn new(g: &'g G) -> Self {
         Self { g, conditional: false }
     }
 
@@ -33,7 +33,7 @@ impl<'g> Components<'g> {
     }
 }
 
-impl VertexProgram for Components<'_> {
+impl<G: GraphStore> VertexProgram for Components<'_, G> {
     fn name(&self) -> &'static str {
         "cc"
     }
@@ -45,7 +45,7 @@ impl VertexProgram for Components<'_> {
     #[inline]
     fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
         let mut best = r.read(v);
-        for &u in self.g.in_neighbors(v) {
+        for u in self.g.in_neighbors(v) {
             best = best.min(r.read(u));
         }
         best
@@ -65,12 +65,12 @@ impl VertexProgram for Components<'_> {
 }
 
 /// Run on the real-thread executor.
-pub fn run_native(g: &Csr, ecfg: &EngineConfig) -> CcResult {
+pub fn run_native<G: GraphStore>(g: &G, ecfg: &EngineConfig) -> CcResult {
     CcResult::from(native::run(g, &Components::new(g), ecfg))
 }
 
 /// Run on the simulator.
-pub fn run_sim(g: &Csr, ecfg: &EngineConfig, machine: &Machine) -> (CcResult, SimRun) {
+pub fn run_sim<G: GraphStore>(g: &G, ecfg: &EngineConfig, machine: &Machine) -> (CcResult, SimRun) {
     let sim = crate::engine::sim::run(g, &Components::new(g), ecfg, machine);
     (CcResult::from(sim.result.clone()), sim)
 }

@@ -30,8 +30,8 @@ use crate::engine::lanes::{self, LaneReader};
 use crate::engine::program::{ValueReader, VertexProgram};
 use crate::engine::sim::cost::Machine;
 use crate::engine::sim::SimRun;
-use crate::engine::{native, EngineConfig, RunResult};
-use crate::graph::{Csr, VertexId};
+use crate::engine::{native, EngineConfig, ResumeSeed, RunResult};
+use crate::graph::{EdgeMutation, GraphStore, VertexId};
 
 /// PageRank hyper-parameters.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -59,8 +59,8 @@ impl Default for PrConfig {
 
 /// The vertex program. Holds reciprocal out-degrees so the hot loop is a
 /// multiply, not a divide.
-pub struct PageRank<'g> {
-    g: &'g Csr,
+pub struct PageRank<'g, G> {
+    g: &'g G,
     inv_outdeg: Vec<f32>,
     base: f32,
     damping: f32,
@@ -69,9 +69,9 @@ pub struct PageRank<'g> {
     prefetch: usize,
 }
 
-impl<'g> PageRank<'g> {
+impl<'g, G: GraphStore> PageRank<'g, G> {
     /// Build for a graph.
-    pub fn new(g: &'g Csr, cfg: &PrConfig) -> Self {
+    pub fn new(g: &'g G, cfg: &PrConfig) -> Self {
         let n = g.num_vertices().max(1) as f32;
         let inv_outdeg = g.out_degrees().iter().map(|&d| if d == 0 { 0.0 } else { 1.0 / d as f32 }).collect();
         Self {
@@ -93,7 +93,7 @@ impl<'g> PageRank<'g> {
     }
 }
 
-impl VertexProgram for PageRank<'_> {
+impl<G: GraphStore> VertexProgram for PageRank<'_, G> {
     fn name(&self) -> &'static str {
         "pagerank"
     }
@@ -104,9 +104,9 @@ impl VertexProgram for PageRank<'_> {
 
     #[inline]
     fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
-        let ns = self.g.in_neighbors(v);
+        let ns = self.g.in_neighbor_hint(v);
         let mut acc = 0.0f32;
-        for (i, &u) in ns.iter().enumerate() {
+        for (i, u) in self.g.in_neighbors(v).enumerate() {
             kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch(a));
             acc += f32::from_bits(r.read(u)) * self.inv_outdeg[u as usize];
         }
@@ -127,8 +127,8 @@ impl VertexProgram for PageRank<'_> {
 /// `PR_l(v) = (1-d)·s_l(v) + d · Σ PR_l(u)/outdeg(u)` for teleport
 /// distribution `s_l` (uniform over the l-th teleport set). One engine
 /// run answers every teleport set at once through the lane machinery.
-pub struct MultiPageRank<'g> {
-    g: &'g Csr,
+pub struct MultiPageRank<'g, G> {
+    g: &'g G,
     inv_outdeg: Vec<f32>,
     damping: f32,
     epsilon: f64,
@@ -140,10 +140,10 @@ pub struct MultiPageRank<'g> {
     prefetch: usize,
 }
 
-impl<'g> MultiPageRank<'g> {
+impl<'g, G: GraphStore> MultiPageRank<'g, G> {
     /// Build for `teleports.len()` lanes. Panics on an illegal lane
     /// count, an empty teleport set, or an out-of-range vertex.
-    pub fn new(g: &'g Csr, cfg: &PrConfig, teleports: &[Vec<VertexId>]) -> Self {
+    pub fn new(g: &'g G, cfg: &PrConfig, teleports: &[Vec<VertexId>]) -> Self {
         let k = teleports.len();
         assert!(
             lanes::valid_lane_count(k),
@@ -173,7 +173,7 @@ impl<'g> MultiPageRank<'g> {
     }
 }
 
-impl VertexProgram for MultiPageRank<'_> {
+impl<G: GraphStore> VertexProgram for MultiPageRank<'_, G> {
     fn name(&self) -> &'static str {
         "pagerank-batch"
     }
@@ -194,9 +194,9 @@ impl VertexProgram for MultiPageRank<'_> {
     /// every batch size above 1).
     #[inline]
     fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
-        let ns = self.g.in_neighbors(v);
+        let ns = self.g.in_neighbor_hint(v);
         let mut acc = 0.0f32;
-        for (i, &u) in ns.iter().enumerate() {
+        for (i, u) in self.g.in_neighbors(v).enumerate() {
             kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch(a));
             acc += f32::from_bits(r.read(u)) * self.inv_outdeg[u as usize];
         }
@@ -214,8 +214,8 @@ impl VertexProgram for MultiPageRank<'_> {
         let k = self.k;
         let mut acc = [0.0f32; lanes::MAX_LANES];
         let mut nb = [0u32; lanes::MAX_LANES];
-        let ns = self.g.in_neighbors(v);
-        for (i, &u) in ns.iter().enumerate() {
+        let ns = self.g.in_neighbor_hint(v);
+        for (i, u) in self.g.in_neighbors(v).enumerate() {
             kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch_group(a));
             r.read_group(u, &mut nb[..k]);
             kernels::pr_accumulate(&mut acc[..k], &nb[..k], self.inv_outdeg[u as usize], live);
@@ -235,27 +235,32 @@ impl VertexProgram for MultiPageRank<'_> {
 }
 
 /// Run on the real-thread executor.
-pub fn run_native(g: &Csr, ecfg: &EngineConfig, cfg: &PrConfig) -> PrResult {
+pub fn run_native<G: GraphStore>(g: &G, ecfg: &EngineConfig, cfg: &PrConfig) -> PrResult {
     let p = PageRank::new(g, cfg).with_prefetch(ecfg.prefetch);
     PrResult::from(native::run(g, &p, ecfg))
 }
 
 /// Run on the multicore simulator.
-pub fn run_sim(g: &Csr, ecfg: &EngineConfig, cfg: &PrConfig, machine: &Machine) -> (PrResult, SimRun) {
+pub fn run_sim<G: GraphStore>(g: &G, ecfg: &EngineConfig, cfg: &PrConfig, machine: &Machine) -> (PrResult, SimRun) {
     let p = PageRank::new(g, cfg).with_prefetch(ecfg.prefetch);
     let sim = crate::engine::sim::run(g, &p, ecfg, machine);
     (PrResult::from(sim.result.clone()), sim)
 }
 
 /// Run a batched personalized query on the real-thread executor.
-pub fn run_native_batch(g: &Csr, teleports: &[Vec<VertexId>], ecfg: &EngineConfig, cfg: &PrConfig) -> MultiPrResult {
+pub fn run_native_batch<G: GraphStore>(
+    g: &G,
+    teleports: &[Vec<VertexId>],
+    ecfg: &EngineConfig,
+    cfg: &PrConfig,
+) -> MultiPrResult {
     let p = MultiPageRank::new(g, cfg, teleports).with_prefetch(ecfg.prefetch);
     MultiPrResult::from(native::run(g, &p, ecfg))
 }
 
 /// Run a batched personalized query on the multicore simulator.
-pub fn run_sim_batch(
-    g: &Csr,
+pub fn run_sim_batch<G: GraphStore>(
+    g: &G,
     teleports: &[Vec<VertexId>],
     ecfg: &EngineConfig,
     cfg: &PrConfig,
@@ -269,8 +274,44 @@ pub fn run_sim_batch(
 /// Deterministic batch of `k` teleport sets: singletons on the `k`
 /// highest out-degree hubs (the personalized-PageRank analog of
 /// [`super::sssp::default_sources`]).
-pub fn default_teleports(g: &Csr, k: usize) -> Vec<Vec<VertexId>> {
+pub fn default_teleports<G: GraphStore>(g: &G, k: usize) -> Vec<Vec<VertexId>> {
     super::sssp::default_sources(g, k).into_iter().map(|v| vec![v]).collect()
+}
+
+/// Build a warm-start seed for re-running PageRank after `batch` mutated
+/// the graph (DESIGN.md §10).
+///
+/// Scores are carried over verbatim — unlike SSSP there is no
+/// monotonicity trap, since the pull update recomputes a vertex's score
+/// from scratch each sweep. What *does* need care is the dirty set: an
+/// edge mutation at `(src, dst)` changes `dst`'s in-list **and** `src`'s
+/// out-degree, and `1/outdeg(src)` feeds every one of `src`'s
+/// out-neighbors. The dirty set is therefore every mutation destination
+/// plus all post-mutation out-neighbors of every mutation source; the
+/// re-accumulated deltas then propagate outward through frontier
+/// activation exactly like Maiter-style delta iteration.
+///
+/// `g` is the **post-mutation** graph, `prev` a converged single-lane
+/// run on the pre-mutation graph (raw leaky iterates — decode still
+/// happens at [`PrResult`] construction).
+pub fn resume_seed<G: GraphStore>(g: &G, prev: &RunResult, batch: &[EdgeMutation]) -> ResumeSeed {
+    let n = g.num_vertices();
+    let mut seed = prev.resume_from(&[]);
+    assert_eq!(seed.values.len(), n, "previous run has {} values for n={n}", seed.values.len());
+    let mut dirty: Vec<VertexId> = Vec::new();
+    for m in batch {
+        let (EdgeMutation::Insert { src, dst, .. } | EdgeMutation::Delete { src, dst }) = *m;
+        dirty.push(dst);
+        // src's out-degree changed, so its rank contribution to every
+        // reader changed even where the edge set did not.
+        for w in g.out_neighbors(src) {
+            dirty.push(w);
+        }
+    }
+    dirty.sort_unstable();
+    dirty.dedup();
+    seed.dirty = dirty;
+    seed
 }
 
 /// Divide by the L1 mass — the exact dangling-vertex redistribution
@@ -531,6 +572,40 @@ mod tests {
             for (l, lane) in r.values.iter().enumerate() {
                 assert!((mass(lane) - 1.0).abs() < 1e-3, "k={k} lane {l} mass {}", mass(lane));
             }
+        }
+    }
+
+    #[test]
+    fn resumed_run_tracks_scratch_after_mutations() {
+        use crate::engine::SchedulePolicy;
+        use crate::graph::VersionedGraph;
+        let g = GapGraph::Web.generate(9, 4);
+        let cfg = PrConfig { damping: 0.85, epsilon: 1e-6 };
+        let ecfg = EngineConfig::new(4, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier);
+        let before = run_native(&g, &ecfg, &cfg);
+        assert!(before.run.converged);
+
+        let mut vg = VersionedGraph::new(g);
+        let batch = vg.random_batch(0.01, 0x9E37);
+        vg.apply_batch(&batch).unwrap();
+
+        let scratch = run_native(&vg, &ecfg, &cfg);
+        let seed = resume_seed(&vg, &before.run, &batch);
+        let resumed = run_native(&vg, &ecfg.clone().with_resume(seed), &cfg);
+        assert!(resumed.run.converged);
+        assert!(
+            resumed.run.num_rounds() < scratch.run.num_rounds(),
+            "warm start must save rounds: resumed {} vs scratch {}",
+            resumed.run.num_rounds(),
+            scratch.run.num_rounds()
+        );
+        for v in 0..scratch.values.len() {
+            assert!(
+                (resumed.values[v] - scratch.values[v]).abs() < 2e-4,
+                "v{v}: {} vs {}",
+                resumed.values[v],
+                scratch.values[v]
+            );
         }
     }
 

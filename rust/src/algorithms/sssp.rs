@@ -16,24 +16,24 @@ use crate::engine::lanes::{self, LaneReader};
 use crate::engine::program::{ValueReader, VertexProgram};
 use crate::engine::sim::cost::Machine;
 use crate::engine::sim::SimRun;
-use crate::engine::{native, EngineConfig, RunResult};
-use crate::graph::{Csr, VertexId};
+use crate::engine::{native, EngineConfig, ResumeSeed, RunResult};
+use crate::graph::{EdgeMutation, GraphStore, VertexId};
 
 /// Unreachable marker.
 pub const INF: u32 = u32::MAX;
 
-/// Bellman-Ford vertex program.
-pub struct Sssp<'g> {
-    g: &'g Csr,
+/// Bellman-Ford vertex program over any [`GraphStore`] backend.
+pub struct Sssp<'g, G> {
+    g: &'g G,
     source: VertexId,
     conditional: bool,
     prefetch: usize,
 }
 
-impl<'g> Sssp<'g> {
+impl<'g, G: GraphStore> Sssp<'g, G> {
     /// Program computing distances from `source`. Panics if `g` is
     /// unweighted.
-    pub fn new(g: &'g Csr, source: VertexId) -> Self {
+    pub fn new(g: &'g G, source: VertexId) -> Self {
         assert!(g.is_weighted(), "SSSP requires a weighted graph");
         Self { g, source, conditional: false, prefetch: 0 }
     }
@@ -52,7 +52,7 @@ impl<'g> Sssp<'g> {
     }
 }
 
-impl VertexProgram for Sssp<'_> {
+impl<G: GraphStore> VertexProgram for Sssp<'_, G> {
     fn name(&self) -> &'static str {
         "sssp"
     }
@@ -68,9 +68,10 @@ impl VertexProgram for Sssp<'_> {
     #[inline]
     fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
         let mut best = r.read(v);
-        // `in_neighbors` and `in_neighbors_weighted` walk the same
-        // lo..hi slice, so index-based look-ahead lines up exactly.
-        let ns = self.g.in_neighbors(v);
+        // The hint slice walks the same lo..hi base row the weighted
+        // iterator starts from, so index-based look-ahead lines up
+        // exactly on CSR (on overlays it is a prefix hint).
+        let ns = self.g.in_neighbor_hint(v);
         for (i, (u, w)) in self.g.in_neighbors_weighted(v).enumerate() {
             kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch(a));
             let du = r.read(u);
@@ -101,18 +102,18 @@ impl VertexProgram for Sssp<'_> {
 /// `sources[l]`; each neighbor lane-group read and each delay-buffer
 /// flush is shared by all still-live queries, and a query whose lane
 /// produced no update in a round drops out of subsequent sweeps.
-pub struct MultiSssp<'g> {
-    g: &'g Csr,
+pub struct MultiSssp<'g, G> {
+    g: &'g G,
     sources: Vec<VertexId>,
     conditional: bool,
     prefetch: usize,
 }
 
-impl<'g> MultiSssp<'g> {
+impl<'g, G: GraphStore> MultiSssp<'g, G> {
     /// Program computing distances from each of `sources` (one lane per
     /// source). Panics if `g` is unweighted, a source is out of range,
     /// or the source count is not a legal lane count.
-    pub fn new(g: &'g Csr, sources: &[VertexId]) -> Self {
+    pub fn new(g: &'g G, sources: &[VertexId]) -> Self {
         assert!(g.is_weighted(), "SSSP requires a weighted graph");
         assert!(
             lanes::valid_lane_count(sources.len()),
@@ -141,7 +142,7 @@ impl<'g> MultiSssp<'g> {
     }
 }
 
-impl VertexProgram for MultiSssp<'_> {
+impl<G: GraphStore> VertexProgram for MultiSssp<'_, G> {
     fn name(&self) -> &'static str {
         "sssp-batch"
     }
@@ -166,7 +167,7 @@ impl VertexProgram for MultiSssp<'_> {
     /// every batch size above 1).
     #[inline]
     fn update<R: ValueReader>(&self, v: VertexId, r: &mut R) -> u32 {
-        let ns = self.g.in_neighbors(v);
+        let ns = self.g.in_neighbor_hint(v);
         let mut best = r.read(v);
         for (i, (u, w)) in self.g.in_neighbors_weighted(v).enumerate() {
             kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch(a));
@@ -187,7 +188,7 @@ impl VertexProgram for MultiSssp<'_> {
         // gather stays out here so both builds touch the same lines.
         let k = self.sources.len();
         let mut nb = [0u32; lanes::MAX_LANES];
-        let ns = self.g.in_neighbors(v);
+        let ns = self.g.in_neighbor_hint(v);
         for (i, (u, w)) in self.g.in_neighbors_weighted(v).enumerate() {
             kernels::prefetch_ahead(ns, i, self.prefetch, |a| r.prefetch_group(a));
             r.read_group(u, &mut nb[..k]);
@@ -225,14 +226,14 @@ impl From<RunResult> for MultiSsspResult {
 }
 
 /// Run a batched multi-source query on the real-thread executor.
-pub fn run_native_batch(g: &Csr, sources: &[VertexId], ecfg: &EngineConfig) -> MultiSsspResult {
+pub fn run_native_batch<G: GraphStore>(g: &G, sources: &[VertexId], ecfg: &EngineConfig) -> MultiSsspResult {
     let p = MultiSssp::new(g, sources).with_prefetch(ecfg.prefetch);
     MultiSsspResult::from(native::run(g, &p, ecfg))
 }
 
 /// Run a batched multi-source query on the multicore simulator.
-pub fn run_sim_batch(
-    g: &Csr,
+pub fn run_sim_batch<G: GraphStore>(
+    g: &G,
     sources: &[VertexId],
     ecfg: &EngineConfig,
     machine: &Machine,
@@ -246,7 +247,7 @@ pub fn run_sim_batch(
 /// out-degree vertices (distinct; ties to the higher id so that lane 0
 /// is exactly [`default_source`]) — hubs keep small graphs mostly
 /// reachable.
-pub fn default_sources(g: &Csr, k: usize) -> Vec<VertexId> {
+pub fn default_sources<G: GraphStore>(g: &G, k: usize) -> Vec<VertexId> {
     let mut by_degree: Vec<VertexId> = (0..g.num_vertices() as VertexId).collect();
     by_degree.sort_by_key(|&v| (std::cmp::Reverse(g.out_degree(v)), std::cmp::Reverse(v)));
     by_degree.truncate(k);
@@ -276,13 +277,13 @@ impl SsspResult {
 }
 
 /// Run on the real-thread executor.
-pub fn run_native(g: &Csr, source: VertexId, ecfg: &EngineConfig) -> SsspResult {
+pub fn run_native<G: GraphStore>(g: &G, source: VertexId, ecfg: &EngineConfig) -> SsspResult {
     let p = Sssp::new(g, source).with_prefetch(ecfg.prefetch);
     SsspResult::from(native::run(g, &p, ecfg))
 }
 
 /// Run on the multicore simulator.
-pub fn run_sim(g: &Csr, source: VertexId, ecfg: &EngineConfig, machine: &Machine) -> (SsspResult, SimRun) {
+pub fn run_sim<G: GraphStore>(g: &G, source: VertexId, ecfg: &EngineConfig, machine: &Machine) -> (SsspResult, SimRun) {
     let p = Sssp::new(g, source).with_prefetch(ecfg.prefetch);
     let sim = crate::engine::sim::run(g, &p, ecfg, machine);
     (SsspResult::from(sim.result.clone()), sim)
@@ -290,8 +291,90 @@ pub fn run_sim(g: &Csr, source: VertexId, ecfg: &EngineConfig, machine: &Machine
 
 /// Deterministic "interesting" source: highest out-degree vertex (GAP
 /// uses random sources; a hub makes small graphs mostly reachable).
-pub fn default_source(g: &Csr) -> VertexId {
+pub fn default_source<G: GraphStore>(g: &G) -> VertexId {
     (0..g.num_vertices() as VertexId).max_by_key(|&v| g.out_degree(v)).unwrap_or(0)
+}
+
+/// Build a warm-start seed for re-running SSSP after `batch` mutated the
+/// graph, applying the **delete-monotonicity reset rule** (DESIGN.md
+/// §10).
+///
+/// Bellman-Ford's pull update takes a min that includes the vertex's own
+/// value, so distances can only decrease across a run: any carried-over
+/// value *below* the new true distance would survive as a wrong answer.
+/// Deletions can raise true distances, so every vertex whose old
+/// distance is no longer *supported* must be reset to [`INF`] before
+/// resuming. Support is checked by worklist propagation seeded from the
+/// deleted edges' destinations: `v` is supported iff some post-mutation
+/// in-edge `(u, w)` from a non-suspect `u` proves
+/// `dist[u] + w <= dist[v]`. Mutual support between two stale vertices
+/// is impossible (it would need a zero-weight cycle, and
+/// [`crate::graph::VersionedGraph::apply_batch`] rejects zero weights),
+/// so every surviving value is an achievable path length — an upper
+/// bound min-relaxation then tightens to the new fixed point.
+///
+/// `g` is the **post-mutation** graph, `prev` a converged single-lane
+/// run from `source` on the pre-mutation graph. The returned dirty set
+/// is the reset vertices plus every mutation destination.
+pub fn resume_seed<G: GraphStore>(
+    g: &G,
+    source: VertexId,
+    prev: &RunResult,
+    batch: &[EdgeMutation],
+) -> ResumeSeed {
+    use std::collections::VecDeque;
+    let n = g.num_vertices();
+    let mut seed = prev.resume_from(&[]);
+    assert_eq!(seed.values.len(), n, "previous run has {} values for n={n}", seed.values.len());
+    assert!((source as usize) < n, "source {source} out of range for n={n}");
+
+    let mut suspect = vec![false; n];
+    let mut queued = vec![false; n];
+    let mut work: VecDeque<VertexId> = VecDeque::new();
+    for m in batch {
+        if let EdgeMutation::Delete { dst, .. } = *m {
+            if !queued[dst as usize] {
+                queued[dst as usize] = true;
+                work.push_back(dst);
+            }
+        }
+    }
+    while let Some(v) = work.pop_front() {
+        queued[v as usize] = false;
+        if suspect[v as usize] || v == source || seed.values[v as usize] == INF {
+            continue;
+        }
+        let dv = seed.values[v as usize];
+        let supported = g.in_neighbors_weighted(v).any(|(u, w)| {
+            !suspect[u as usize] && seed.values[u as usize] != INF && seed.values[u as usize].saturating_add(w) <= dv
+        });
+        if !supported {
+            suspect[v as usize] = true;
+            // Readers of v may have leaned on it — re-examine them.
+            for w2 in g.out_neighbors(v) {
+                if !suspect[w2 as usize] && !queued[w2 as usize] {
+                    queued[w2 as usize] = true;
+                    work.push_back(w2);
+                }
+            }
+        }
+    }
+
+    let mut dirty: Vec<VertexId> = Vec::new();
+    for (v, &s) in suspect.iter().enumerate() {
+        if s {
+            seed.values[v] = INF;
+            dirty.push(v as VertexId);
+        }
+    }
+    for m in batch {
+        let (EdgeMutation::Insert { dst, .. } | EdgeMutation::Delete { dst, .. }) = *m;
+        dirty.push(dst);
+    }
+    dirty.sort_unstable();
+    dirty.dedup();
+    seed.dirty = dirty;
+    seed
 }
 
 #[cfg(test)]
@@ -446,6 +529,46 @@ mod tests {
             let b = run_native_batch(&g, &sources, &bcfg);
             assert_eq!(b.dist, base_batch.dist, "batched prefetch={dist}");
         }
+    }
+
+    #[test]
+    fn resume_seed_resets_unsupported_vertices() {
+        use crate::graph::{EdgeMutation, VersionedGraph};
+        // 0 →(1) 1 →(1) 2 with a weight-10 bypass 0 →(10) 2. Deleting
+        // (0,1) strands 1 and invalidates 2's distance through it.
+        let g = GraphBuilder::new(3).weighted_edges(&[(0, 1, 1), (1, 2, 1), (0, 2, 10)]).build();
+        let cfg = EngineConfig::new(1, ExecutionMode::Asynchronous);
+        let before = run_native(&g, 0, &cfg);
+        assert_eq!(before.dist, vec![0, 1, 2]);
+
+        let mut vg = VersionedGraph::new(g);
+        let batch = vec![EdgeMutation::Delete { src: 0, dst: 1 }];
+        vg.apply_batch(&batch).unwrap();
+        let seed = resume_seed(&vg, 0, &before.run, &batch);
+        assert_eq!(seed.values, vec![0, INF, INF], "1 and its dependent 2 are reset");
+        assert_eq!(seed.dirty, vec![1, 2]);
+
+        let after = run_native(&vg, 0, &cfg.clone().with_resume(seed));
+        assert_eq!(after.dist, vec![0, INF, 10]);
+    }
+
+    #[test]
+    fn resumed_run_matches_oracle_after_random_mutations() {
+        use crate::engine::SchedulePolicy;
+        use crate::graph::VersionedGraph;
+        let g = GapGraph::Kron.generate_weighted(9, 8);
+        let src = default_source(&g);
+        let cfg = EngineConfig::new(4, ExecutionMode::Asynchronous).with_schedule(SchedulePolicy::Frontier);
+        let before = run_native(&g, src, &cfg);
+        assert!(before.run.converged);
+
+        let mut vg = VersionedGraph::new(g);
+        let batch = vg.random_batch(0.01, 0xBEEF);
+        vg.apply_batch(&batch).unwrap();
+        let seed = resume_seed(&vg, src, &before.run, &batch);
+        let after = run_native(&vg, src, &cfg.clone().with_resume(seed));
+        assert!(after.run.converged);
+        assert_eq!(after.dist, oracle::dijkstra(&vg.to_csr(), src));
     }
 
     #[test]

@@ -13,6 +13,7 @@
 //! | `steal` | static vs work-stealing round execution (beyond the paper) | [`steal`] |
 //! | `adaptive` | online δ controller vs exhaustive static sweep (§V online) | [`adaptive`] |
 //! | `batch` | multi-query lanes: queries/sec vs batch size k (serving) | [`batch`] |
+//! | `mutate` | incremental recompute latency after edge mutations (overlays) | [`mutate`] |
 //!
 //! All drivers run on the simulator (DESIGN.md §3: deterministic stand-in
 //! for the paper's 32/112-thread machines).
@@ -68,10 +69,11 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "steal" => steal(opts),
         "adaptive" => adaptive(opts),
         "batch" => batch(opts),
+        "mutate" => mutate(opts),
         "all" => {
             let ids = [
                 "table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune", "schedule",
-                "steal", "adaptive", "batch",
+                "steal", "adaptive", "batch", "mutate",
             ];
             for id in ids {
                 run(id, opts)?;
@@ -208,6 +210,38 @@ pub fn batch(opts: &ExpOptions) -> Result<()> {
         }
     }
     opts.report.emit("batch", &t)
+}
+
+/// Mutation dimension (beyond the paper): latency of update-to-fresh-result
+/// after a 1% edge-mutation batch on a [`crate::graph::VersionedGraph`]
+/// overlay, incremental resume vs full recompute, per mode × schedule.
+/// SSSP exercises the delete-monotonicity reset rule; PageRank the
+/// Maiter-style delta re-accumulation. The acceptance bar is the
+/// frontier-schedule column: resumed must beat full recompute there,
+/// since only mutation-touched vertices seed the first round.
+pub fn mutate(opts: &ExpOptions) -> Result<()> {
+    let m = Machine::haswell();
+    let threads = 32;
+    let mut t = Table::new(
+        "Mutate — incremental recompute after 1% edge mutations (simulated 32-thread Haswell, kron)",
+        &["algo", "mode", "schedule", "full rounds", "full time", "resumed rounds", "resumed time", "speedup"],
+    );
+    for algo in [Algo::Sssp, Algo::PageRank] {
+        let graph = opts.graph(GapGraph::Kron, algo);
+        for p in sweep::mutation_latency(&graph, algo, threads, &m, 0.01, 0xDA1C) {
+            t.row(vec![
+                algo.name().into(),
+                p.mode.label(),
+                p.schedule.label().into(),
+                p.full_rounds.to_string(),
+                fmt::secs(p.full_time_s),
+                p.resumed_rounds.to_string(),
+                fmt::secs(p.resumed_time_s),
+                format!("{:.2}x", p.speedup),
+            ]);
+        }
+    }
+    opts.report.emit("mutate", &t)
 }
 
 /// Schedule dimension (beyond the paper): dense vs frontier vs adaptive

@@ -18,7 +18,7 @@ use crate::engine::sim::cost::Machine;
 use crate::engine::sim::SimRun;
 use crate::engine::{EngineConfig, RunResult};
 use crate::graph::gap::GapGraph;
-use crate::graph::Csr;
+use crate::graph::{Csr, GraphStore};
 
 /// The iterative algorithms the coordinator can drive.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -80,7 +80,8 @@ impl Workload {
 }
 
 /// Run a workload on the simulator; returns the run and its metrics.
-pub fn run_sim(g: &Csr, algo: Algo, ecfg: &EngineConfig, machine: &Machine) -> SimRun {
+/// Generic over [`GraphStore`], so overlays sweep through unchanged.
+pub fn run_sim<G: GraphStore>(g: &G, algo: Algo, ecfg: &EngineConfig, machine: &Machine) -> SimRun {
     match algo {
         Algo::PageRank => pagerank::run_sim(g, ecfg, &pagerank::PrConfig::default(), machine).1,
         Algo::Sssp => sssp::run_sim(g, sssp::default_source(g), ecfg, machine).1,
@@ -90,7 +91,7 @@ pub fn run_sim(g: &Csr, algo: Algo, ecfg: &EngineConfig, machine: &Machine) -> S
 }
 
 /// Run a workload on the native threaded engine.
-pub fn run_native(g: &Csr, algo: Algo, ecfg: &EngineConfig) -> RunResult {
+pub fn run_native<G: GraphStore>(g: &G, algo: Algo, ecfg: &EngineConfig) -> RunResult {
     match algo {
         Algo::PageRank => pagerank::run_native(g, ecfg, &pagerank::PrConfig::default()).run,
         Algo::Sssp => sssp::run_native(g, sssp::default_source(g), ecfg).run,

@@ -5,7 +5,7 @@ use crate::algorithms::{pagerank, sssp};
 use crate::engine::sim::cost::Machine;
 use crate::engine::sim::SimRun;
 use crate::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
-use crate::graph::Csr;
+use crate::graph::{Csr, GraphStore, VersionedGraph, VertexId};
 use crate::partition::blocked;
 
 use super::{delta_sweep, run_sim, Algo};
@@ -34,13 +34,13 @@ pub struct SweepPoint {
 
 /// Sweep sync + async + the paper's δ grid at a fixed thread count,
 /// dense-scheduled (the paper's configuration).
-pub fn modes(g: &Csr, algo: Algo, threads: usize, machine: &Machine) -> Vec<SweepPoint> {
+pub fn modes<G: GraphStore>(g: &G, algo: Algo, threads: usize, machine: &Machine) -> Vec<SweepPoint> {
     modes_scheduled(g, algo, threads, machine, SchedulePolicy::Dense)
 }
 
 /// Mode sweep under an explicit schedule policy.
-pub fn modes_scheduled(
-    g: &Csr,
+pub fn modes_scheduled<G: GraphStore>(
+    g: &G,
     algo: Algo,
     threads: usize,
     machine: &Machine,
@@ -51,7 +51,7 @@ pub fn modes_scheduled(
 
 /// Mode sweep preserving every non-mode dimension of `base` (schedule,
 /// stealing, partitioner, thread count).
-pub fn modes_base(g: &Csr, algo: Algo, machine: &Machine, base: &EngineConfig) -> Vec<SweepPoint> {
+pub fn modes_base<G: GraphStore>(g: &G, algo: Algo, machine: &Machine, base: &EngineConfig) -> Vec<SweepPoint> {
     let max_range = blocked::partition(g, base.threads).max_len();
     let mut list = vec![ExecutionMode::Synchronous, ExecutionMode::Asynchronous];
     list.extend(delta_sweep(max_range).into_iter().map(ExecutionMode::Delayed));
@@ -65,18 +65,24 @@ pub fn modes_base(g: &Csr, algo: Algo, machine: &Machine, base: &EngineConfig) -
 }
 
 /// Sweep all three schedule policies at one fixed execution mode.
-pub fn schedules(g: &Csr, algo: Algo, threads: usize, machine: &Machine, mode: ExecutionMode) -> Vec<SweepPoint> {
+pub fn schedules<G: GraphStore>(
+    g: &G,
+    algo: Algo,
+    threads: usize,
+    machine: &Machine,
+    mode: ExecutionMode,
+) -> Vec<SweepPoint> {
     SchedulePolicy::ALL.iter().map(|&s| point_scheduled(g, algo, threads, machine, mode, s)).collect()
 }
 
 /// Run one configuration (dense schedule).
-pub fn point(g: &Csr, algo: Algo, threads: usize, machine: &Machine, mode: ExecutionMode) -> SweepPoint {
+pub fn point<G: GraphStore>(g: &G, algo: Algo, threads: usize, machine: &Machine, mode: ExecutionMode) -> SweepPoint {
     point_scheduled(g, algo, threads, machine, mode, SchedulePolicy::Dense)
 }
 
 /// Run one fully specified configuration.
-pub fn point_scheduled(
-    g: &Csr,
+pub fn point_scheduled<G: GraphStore>(
+    g: &G,
     algo: Algo,
     threads: usize,
     machine: &Machine,
@@ -87,7 +93,7 @@ pub fn point_scheduled(
 }
 
 /// Run one explicit engine configuration.
-pub fn point_config(g: &Csr, algo: Algo, machine: &Machine, ecfg: &EngineConfig) -> SweepPoint {
+pub fn point_config<G: GraphStore>(g: &G, algo: Algo, machine: &Machine, ecfg: &EngineConfig) -> SweepPoint {
     let sim = run_sim(g, algo, ecfg, machine);
     SweepPoint {
         mode: ecfg.mode,
@@ -110,7 +116,12 @@ pub fn point_config(g: &Csr, algo: Algo, machine: &Machine, ecfg: &EngineConfig)
 /// choices an oracle with perfect offline knowledge picks among — and
 /// `regret = adaptive.time_s / best_static.time_s − 1` (≤ 0 means the
 /// controller beat every static choice).
-pub fn adaptive_regret(g: &Csr, algo: Algo, machine: &Machine, base: &EngineConfig) -> (SweepPoint, SweepPoint, f64) {
+pub fn adaptive_regret<G: GraphStore>(
+    g: &G,
+    algo: Algo,
+    machine: &Machine,
+    base: &EngineConfig,
+) -> (SweepPoint, SweepPoint, f64) {
     let mut acfg = base.clone();
     acfg.mode = ExecutionMode::Adaptive;
     let adaptive = point_config(g, algo, machine, &acfg);
@@ -148,7 +159,13 @@ pub struct BatchPoint {
 /// are the deterministic top-degree hubs, nested so the k=1 point is a
 /// prefix of every larger batch. Panics for algorithms without a
 /// batched variant (CC/BFS).
-pub fn batch_throughput(g: &Csr, algo: Algo, machine: &Machine, base: &EngineConfig, ks: &[usize]) -> Vec<BatchPoint> {
+pub fn batch_throughput<G: GraphStore>(
+    g: &G,
+    algo: Algo,
+    machine: &Machine,
+    base: &EngineConfig,
+    ks: &[usize],
+) -> Vec<BatchPoint> {
     ks.iter()
         .map(|&k| {
             let sim: SimRun = match algo {
@@ -179,10 +196,93 @@ pub fn batch_throughput(g: &Csr, algo: Algo, machine: &Machine, base: &EngineCon
         .collect()
 }
 
+/// One cell of the [`mutation_latency`] grid: update-to-fresh-result
+/// latency of incremental recomputation vs full recomputation after an
+/// edge-mutation batch, at one mode × schedule.
+#[derive(Debug, Clone)]
+pub struct MutationPoint {
+    pub mode: ExecutionMode,
+    pub schedule: SchedulePolicy,
+    /// Rounds / simulated seconds of the from-scratch run on the
+    /// mutated graph.
+    pub full_rounds: usize,
+    pub full_time_s: f64,
+    /// Rounds / simulated seconds of the warm-started run (previous
+    /// values + dirty frontier from the algorithm's `resume_seed`).
+    pub resumed_rounds: usize,
+    pub resumed_time_s: f64,
+    /// `full_time_s / resumed_time_s` (> 1 means incremental wins).
+    pub speedup: f64,
+}
+
+/// Incremental-recomputation latency sweep (DESIGN.md §10): converge
+/// `algo` on `g`, apply a random batch mutating `frac` of the edges
+/// (deterministic in `seed`), then measure the mutated-graph
+/// recomputation both from scratch and warm-started via the algorithm's
+/// `resume_seed`, for every static mode plus the adaptive controller
+/// under each schedule policy. Only SSSP and PageRank are resumable;
+/// panics otherwise.
+pub fn mutation_latency(
+    g: &Csr,
+    algo: Algo,
+    threads: usize,
+    machine: &Machine,
+    frac: f64,
+    seed: u64,
+) -> Vec<MutationPoint> {
+    assert!(
+        matches!(algo, Algo::Sssp | Algo::PageRank),
+        "mutation latency needs a resumable algorithm (sssp | pagerank), got {algo:?}"
+    );
+    // SSSP must keep the pre-mutation source: mutations can change which
+    // vertex has the highest out-degree, and the resumed run's values
+    // only make sense for the query they answer.
+    let source = sssp::default_source(g);
+    let mut vg = VersionedGraph::new(g.clone());
+    let batch = vg.random_batch(frac, seed);
+    vg.apply_batch(&batch).expect("random_batch yields a valid batch");
+
+    fn one<G: GraphStore>(g: &G, algo: Algo, source: VertexId, ecfg: &EngineConfig, machine: &Machine) -> SimRun {
+        match algo {
+            Algo::Sssp => sssp::run_sim(g, source, ecfg, machine).1,
+            _ => pagerank::run_sim(g, ecfg, &pagerank::PrConfig::default(), machine).1,
+        }
+    }
+
+    let modes =
+        [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(64), ExecutionMode::Adaptive];
+    let mut out = Vec::new();
+    for mode in modes {
+        for &schedule in SchedulePolicy::ALL.iter() {
+            let base = EngineConfig::new(threads, mode).with_schedule(schedule);
+            // The state an online system holds when the batch arrives.
+            let cold = one(g, algo, source, &base, machine);
+            let full = one(&vg, algo, source, &base, machine);
+            let rseed = match algo {
+                Algo::Sssp => sssp::resume_seed(&vg, source, &cold.result, &batch),
+                _ => pagerank::resume_seed(&vg, &cold.result, &batch),
+            };
+            let resumed = one(&vg, algo, source, &base.clone().with_resume(rseed), machine);
+            let full_time_s = full.result.total_time();
+            let resumed_time_s = resumed.result.total_time();
+            out.push(MutationPoint {
+                mode,
+                schedule,
+                full_rounds: full.result.num_rounds(),
+                full_time_s,
+                resumed_rounds: resumed.result.num_rounds(),
+                resumed_time_s,
+                speedup: if resumed_time_s > 0.0 { full_time_s / resumed_time_s } else { f64::INFINITY },
+            });
+        }
+    }
+    out
+}
+
 /// The straggler-recovery pair: one configuration run statically and with
 /// intra-round work stealing.
-pub fn steal_pair(
-    g: &Csr,
+pub fn steal_pair<G: GraphStore>(
+    g: &G,
     algo: Algo,
     threads: usize,
     machine: &Machine,
@@ -290,6 +390,25 @@ mod tests {
         let pr = batch_throughput(&g, Algo::PageRank, &Machine::haswell(), &base, &[4]);
         assert_eq!(pr[0].k, 4);
         assert!(pr[0].queries_per_s > 0.0);
+    }
+
+    #[test]
+    fn mutation_latency_reports_incremental_wins() {
+        let g = GapGraph::Kron.generate_weighted(8, 8);
+        let pts = mutation_latency(&g, Algo::Sssp, 4, &Machine::haswell(), 0.01, 0xFACE);
+        assert_eq!(pts.len(), 4 * SchedulePolicy::ALL.len());
+        for p in &pts {
+            assert!(p.full_rounds > 0 && p.resumed_rounds > 0, "{:?}/{:?}", p.mode, p.schedule);
+            assert!(p.full_time_s > 0.0 && p.resumed_time_s > 0.0);
+            assert!((p.speedup - p.full_time_s / p.resumed_time_s).abs() < 1e-12);
+        }
+        // Sparse-scheduled cells must show the incremental win: the warm
+        // start re-sweeps only the mutation cone instead of the graph.
+        let sparse_wins = pts
+            .iter()
+            .filter(|p| p.schedule == SchedulePolicy::Frontier)
+            .all(|p| p.resumed_time_s < p.full_time_s);
+        assert!(sparse_wins, "frontier-scheduled resume must beat full recompute: {pts:?}");
     }
 
     #[test]

@@ -245,6 +245,23 @@ pub fn prefetch_ahead<F: FnMut(VertexId)>(neighbors: &[VertexId], i: usize, dist
     }
 }
 
+/// Frontier activation gather: feed every out-neighbor of `v` to
+/// `sink`. The one place both executors' activation inner loops live —
+/// the native path sinks into an atomic frontier bitmap, the simulator
+/// sinks into its deterministic bitmap while charging buffer-push cost.
+/// Generic over [`crate::graph::GraphStore`], so overlay-backed graphs
+/// activate through insert/delete deltas with no executor changes.
+#[inline(always)]
+pub fn activate_out_neighbors<G, F>(g: &G, v: VertexId, mut sink: F)
+where
+    G: crate::graph::GraphStore,
+    F: FnMut(VertexId),
+{
+    for w in g.out_neighbors(v) {
+        sink(w);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -98,6 +98,27 @@ impl ExecutionMode {
     }
 }
 
+/// Warm-start seed for incremental recomputation after graph mutations
+/// (DESIGN.md §10): start from a previous run's values instead of the
+/// program's `init`, with the round-0 frontier restricted to the
+/// mutation-touched `dirty` set (under sparse schedules; a dense
+/// schedule still sweeps everything but converges from the warm values).
+///
+/// Build one with [`RunResult::resume_from`] — or the algorithm-level
+/// helpers ([`crate::algorithms::sssp::resume_seed`],
+/// [`crate::algorithms::pagerank::resume_seed`]), which also apply the
+/// algorithm's reset rule so the warm values are a *safe* starting
+/// point on the mutated graph.
+#[derive(Debug, Clone)]
+pub struct ResumeSeed {
+    /// Previous per-vertex values (raw bits, `n` elements; single-lane
+    /// runs only).
+    pub values: Vec<u32>,
+    /// Vertices whose inputs may have changed — the round-0 frontier.
+    /// Sorted and deduplicated.
+    pub dirty: Vec<crate::graph::VertexId>,
+}
+
 /// Which partitioner assigns vertices to threads.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum PartitionStrategy {
@@ -141,6 +162,12 @@ pub struct EngineConfig {
     pub prefetch: usize,
     /// Safety valve: abort after this many rounds.
     pub max_rounds: usize,
+    /// Warm-start seed: initialize values (and, under sparse schedules,
+    /// the round-0 frontier) from a previous run instead of
+    /// `VertexProgram::init`. `None` (default) is a cold run —
+    /// byte-identical behavior to before this field existed. Requires
+    /// single-lane programs; both executors assert that.
+    pub resume: Option<std::sync::Arc<ResumeSeed>>,
 }
 
 impl EngineConfig {
@@ -157,6 +184,7 @@ impl EngineConfig {
             no_atomics: false,
             prefetch: 0,
             max_rounds: 10_000,
+            resume: None,
         }
     }
 
@@ -197,8 +225,17 @@ impl EngineConfig {
         self
     }
 
-    /// Resolve the partition map for a graph.
-    pub fn partition_map(&self, g: &crate::graph::Csr) -> PartitionMap {
+    /// Builder-style: warm-start from a previous run's values + dirty
+    /// frontier (incremental recomputation after graph mutations).
+    pub fn with_resume(mut self, seed: ResumeSeed) -> Self {
+        self.resume = Some(std::sync::Arc::new(seed));
+        self
+    }
+
+    /// Resolve the partition map for a graph (any
+    /// [`crate::graph::GraphStore`] backend — overlays are partitioned
+    /// by their current degrees).
+    pub fn partition_map<G: crate::graph::GraphStore>(&self, g: &G) -> PartitionMap {
         match self.partition {
             PartitionStrategy::BlockedByDegree => crate::partition::blocked::partition(g, self.threads),
             PartitionStrategy::EqualVertex => crate::partition::equal_vertex::partition(g, self.threads),

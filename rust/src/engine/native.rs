@@ -38,7 +38,7 @@ use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Barrier, Mutex};
 use std::time::Instant;
 
-use crate::graph::{properties, Csr, VertexId};
+use crate::graph::{properties, GraphStore, VertexId};
 
 use super::controller::{self, DeltaController, Telemetry};
 use super::delay_buffer::{round_delta, DelayBuffer};
@@ -170,7 +170,13 @@ struct Ctrl {
 /// live for the whole run). Deterministic for `Synchronous` mode;
 /// async/delayed results depend on interleaving but converge to the same
 /// fixed point (chaotic relaxation).
-pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult {
+///
+/// Generic over [`GraphStore`] and monomorphized per backend: with
+/// `G = Csr` every trait call inlines to the same inherent accessor the
+/// pre-trait executor used, so static-CSR runs are unchanged; overlay
+/// backends ([`crate::graph::VersionedGraph`]) run the identical round
+/// machinery over their composed rows.
+pub fn run<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, cfg: &EngineConfig) -> RunResult {
     let n = g.num_vertices();
     if cfg.no_atomics {
         assert!(
@@ -190,12 +196,28 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
     // Element indices (v·lanes + l) ride in VertexId, so the widened
     // value space must still fit the u32 id range.
     assert!(n * lane_count <= u32::MAX as usize, "{n} vertices x {lane_count} lanes exceeds the u32 element space");
-    let mut init: Vec<u32> = Vec::with_capacity(n * lane_count);
-    for v in 0..n as VertexId {
-        for l in 0..lane_count {
-            init.push(prog.init_lane(v, l));
+    let init: Vec<u32> = match &cfg.resume {
+        // Warm start: carry the previous run's values instead of the
+        // program's cold init (incremental recomputation, DESIGN.md §10).
+        Some(seed) => {
+            assert_eq!(lane_count, 1, "resume seeds are single-lane; lane groups interleave k queries");
+            assert_eq!(seed.values.len(), n, "resume seed has {} values for {n} vertices", seed.values.len());
+            assert!(
+                seed.dirty.iter().all(|&v| (v as usize) < n),
+                "resume dirty set contains out-of-range vertices"
+            );
+            seed.values.clone()
         }
-    }
+        None => {
+            let mut init = Vec::with_capacity(n * lane_count);
+            for v in 0..n as VertexId {
+                for l in 0..lane_count {
+                    init.push(prog.init_lane(v, l));
+                }
+            }
+            init
+        }
+    };
 
     let global = SharedValues::from_bits_lanes(init.iter().copied(), lane_count);
     // Double buffer for sync mode only (async/delayed read+write `global`).
@@ -208,6 +230,22 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
         g.ensure_out_edges();
     }
     let frontiers = frontier_on.then(|| Frontiers { maps: [AtomicBitmap::new(n), AtomicBitmap::new(n)] });
+    // Resumed sparse schedules start round 0 from the dirty set instead
+    // of a dense sweep (the whole point: mutation-touched regions are
+    // tiny). Adaptive applies its usual density rule to the dirty size;
+    // a cold run (resume = None) keeps the dense round 0 unchanged.
+    let start_sparse = match (&cfg.resume, cfg.schedule) {
+        (Some(_), SchedulePolicy::Frontier) => true,
+        (Some(seed), SchedulePolicy::Adaptive) => seed.dirty.len() * ADAPTIVE_SPARSE_DIVISOR < n,
+        _ => false,
+    };
+    if start_sparse {
+        let f = frontiers.as_ref().expect("sparse start requires frontier maps");
+        let seed = cfg.resume.as_ref().expect("sparse start requires a resume seed");
+        for &v in &seed.dirty {
+            f.maps[0].set(v);
+        }
+    }
     let grid = cfg.stealing.then(|| StealGrid::new(&pm, DEFAULT_CHUNK));
     // Adaptive mode: the §IV-C topology gate that seeds every worker's
     // controller is computed once, outside the gang (O(m), like the
@@ -249,8 +287,8 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
             let converged_out = &converged_out;
             let handle = move || {
                 worker(
-                    t, range, g, prog, cfg, locality, ctrl, global, back, frontiers, grid, rounds_out,
-                    converged_out,
+                    t, range, g, prog, cfg, locality, start_sparse, ctrl, global, back, frontiers, grid,
+                    rounds_out, converged_out,
                 );
             };
             if t == t_count - 1 {
@@ -289,13 +327,14 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig) -> RunResult
 }
 
 #[allow(clippy::too_many_arguments)]
-fn worker<P: VertexProgram>(
+fn worker<G: GraphStore, P: VertexProgram>(
     t: usize,
     range: Range<VertexId>,
-    g: &Csr,
+    g: &G,
     prog: &P,
     cfg: &EngineConfig,
     locality: Option<f64>,
+    start_sparse: bool,
     ctrl: &Ctrl,
     global: &SharedValues,
     back: &SharedValues,
@@ -355,7 +394,9 @@ fn worker<P: VertexProgram>(
     let mut prev_swept: Option<Vec<VertexId>> = None;
 
     let mut round = 0usize;
-    let mut sparse = false; // round 0 is always dense
+    // Round 0 is dense on cold runs; resumed sparse schedules start it
+    // from the pre-seeded dirty frontier instead.
+    let mut sparse = start_sparse;
     let mut t0 = Instant::now();
     // Per-thread round timer (t0 above belongs to thread 0's RoundStats).
     let mut my_t0 = Instant::now();
@@ -380,11 +421,11 @@ fn worker<P: VertexProgram>(
         // (thread 0 sums them for the adaptive density decision).
         let activate_out = |v: VertexId, activated: &mut u64| {
             if let Some(nx) = nxt {
-                for &w in g.out_neighbors(v) {
+                super::kernels::activate_out_neighbors(g, v, |w| {
                     if nx.set(w) {
                         *activated += 1;
                     }
-                }
+                });
             }
         };
 
@@ -840,7 +881,7 @@ impl ValueReader for SharedReaderShim<'_> {
 /// Used as the oracle in tests: `run` with `Synchronous` must match this
 /// bit-exactly for any thread count (and, for frontier schedules, any
 /// schedule — skipped vertices recompute identically by construction).
-pub fn run_serial_sync<P: VertexProgram>(g: &Csr, prog: &P, max_rounds: usize) -> RunResult {
+pub fn run_serial_sync<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, max_rounds: usize) -> RunResult {
     assert_eq!(prog.lanes(), 1, "the serial oracle is single-lane; oracle batched runs lane by lane");
     let n = g.num_vertices();
     let mut front: Vec<u32> = (0..n as VertexId).map(|v| prog.init(v)).collect();
@@ -887,6 +928,7 @@ mod tests {
     use super::*;
     use crate::engine::program::ValueReader;
     use crate::graph::gap::GapGraph;
+    use crate::graph::Csr;
 
     /// Toy program: each vertex takes max(own, in-neighbors) — converges
     /// to per-component max; easy to verify and sensitive to value
@@ -1462,6 +1504,55 @@ mod tests {
     fn no_atomics_rejects_non_async_modes() {
         let g = crate::graph::GraphBuilder::new(2).edges(&[(0, 1)]).build();
         let _ = run(&g, &MaxProp { g: &g }, &EngineConfig::new(2, ExecutionMode::Delayed(16)).with_no_atomics());
+    }
+
+    #[test]
+    fn resume_from_fixed_point_is_near_instant() {
+        let g = GapGraph::Road.generate(9, 0);
+        let p = MaxProp { g: &g };
+        let cold_cfg =
+            EngineConfig::new(4, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier);
+        let cold = run(&g, &p, &cold_cfg);
+        assert!(cold.converged);
+        // Warm start at the fixed point with a tiny dirty set: round 0
+        // sweeps only the dirty vertices, finds no change, and the run
+        // confirms convergence immediately.
+        let cfg = cold_cfg.clone().with_resume(cold.resume_from(&[0, 1, 2]));
+        let r = run(&g, &p, &cfg);
+        assert!(r.converged);
+        assert_eq!(r.values, cold.values);
+        assert!(r.num_rounds() < cold.num_rounds(), "warm start must beat the cold run");
+        assert_eq!(r.num_rounds(), 1, "fixed-point resume confirms in one sparse round");
+        assert_eq!(r.total_active(), 3, "only the dirty vertices are swept");
+        // Dense schedules accept the seed too (values-only warm start).
+        let dense = run(&g, &p, &EngineConfig::new(4, ExecutionMode::Synchronous).with_resume(cold.resume_from(&[0])));
+        assert!(dense.converged);
+        assert_eq!(dense.values, cold.values);
+        assert_eq!(dense.num_rounds(), 1);
+    }
+
+    #[test]
+    fn resume_propagates_from_dirty_region() {
+        // Bump one vertex's value above the old fixed point and mark it
+        // dirty: the warm async run must flood the new max from there.
+        let g = GapGraph::Road.generate(9, 0);
+        let p = MaxProp { g: &g };
+        let cold = run(&g, &p, &EngineConfig::new(4, ExecutionMode::Asynchronous));
+        assert!(cold.converged);
+        let s = (0..g.num_vertices() as VertexId).find(|&v| g.out_degree(v) > 0).unwrap();
+        // Dirty = the vertices whose *inputs* changed: s's readers (its
+        // out-neighbors), plus s itself.
+        let dirty: Vec<VertexId> = std::iter::once(s).chain(g.out_neighbors(s).iter().copied()).collect();
+        let mut seed = cold.resume_from(&dirty);
+        seed.values[s as usize] = 1_000_000; // larger than any init value
+        let cfg = EngineConfig::new(4, ExecutionMode::Asynchronous)
+            .with_schedule(SchedulePolicy::Frontier)
+            .with_resume(seed);
+        let r = run(&g, &p, &cfg);
+        assert!(r.converged);
+        // s keeps the bump and its readers adopt it.
+        assert_eq!(r.values[s as usize], 1_000_000);
+        assert!(r.values.iter().filter(|&&x| x == 1_000_000).count() > 1, "the bump must spread");
     }
 
     #[test]

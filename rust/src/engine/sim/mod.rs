@@ -48,7 +48,7 @@ use super::schedule::{bits, SchedulePolicy, ADAPTIVE_SPARSE_DIVISOR};
 use super::stats::{RoundStats, RunResult};
 use super::steal::DEFAULT_CHUNK;
 use super::{EngineConfig, ExecutionMode};
-use crate::graph::{properties, Csr, VertexId};
+use crate::graph::{properties, GraphStore, VertexId};
 use crate::partition::{chunk_bounds, PartitionMap};
 use cache::LineTable;
 use cost::Machine;
@@ -328,7 +328,13 @@ impl lanes::LaneReader for SimLaneReader<'_> {
 }
 
 /// Simulate `prog` on `g` with `cfg.threads` logical threads on `machine`.
-pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Machine) -> SimRun {
+///
+/// Generic over [`GraphStore`], monomorphized per backend exactly like
+/// [`super::native::run`]: a static-CSR simulation charges precisely the
+/// accesses the pre-trait simulator charged, so sim metrics are
+/// bit-identical; overlay backends replay the same machinery over their
+/// composed rows.
+pub fn run<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, cfg: &EngineConfig, machine: &Machine) -> SimRun {
     let n = g.num_vertices();
     let pm = cfg.partition_map(g);
     let t_count = pm.num_parts();
@@ -368,12 +374,29 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
 
     // Front/back arrays with their own coherence tables. Async/delayed
     // use only the front pair.
-    let mut values: Vec<u32> = Vec::with_capacity(n * lane_n);
-    for v in 0..n as VertexId {
-        for l in 0..lane_n {
-            values.push(prog.init_lane(v, l));
+    let mut values: Vec<u32> = match &cfg.resume {
+        // Warm start: previous run's values instead of the cold init
+        // (incremental recomputation, DESIGN.md §10) — mirrors the
+        // native executor exactly.
+        Some(seed) => {
+            assert_eq!(lane_n, 1, "resume seeds are single-lane; lane groups interleave k queries");
+            assert_eq!(seed.values.len(), n, "resume seed has {} values for {n} vertices", seed.values.len());
+            assert!(
+                seed.dirty.iter().all(|&v| (v as usize) < n),
+                "resume dirty set contains out-of-range vertices"
+            );
+            seed.values.clone()
         }
-    }
+        None => {
+            let mut values = Vec::with_capacity(n * lane_n);
+            for v in 0..n as VertexId {
+                for l in 0..lane_n {
+                    values.push(prog.init_lane(v, l));
+                }
+            }
+            values
+        }
+    };
     let mut back = values.clone();
     let mut table = LineTable::new(n * lane_n);
     let mut table_back = LineTable::new(n * lane_n);
@@ -432,7 +455,24 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
     // (None = dense), needed by the sync-mode copy-down.
     let mut cur = bits::words_for(n);
     let mut nxt = bits::words_for(n);
-    let mut sparse = false; // round 0 is always dense
+    // Round 0 is dense on cold runs; resumed sparse schedules start it
+    // from the seeded dirty frontier instead (the same rule the native
+    // executor applies, so resumed sim traces mirror native behavior).
+    let mut sparse = false;
+    if let Some(seed) = &cfg.resume {
+        if frontier_on {
+            sparse = match cfg.schedule {
+                SchedulePolicy::Frontier => true,
+                SchedulePolicy::Adaptive => seed.dirty.len() * ADAPTIVE_SPARSE_DIVISOR < n,
+                SchedulePolicy::Dense => false,
+            };
+            if sparse {
+                for &v in &seed.dirty {
+                    bits::set(&mut cur, v);
+                }
+            }
+        }
+    }
     let mut prev_lists: Option<Vec<Vec<VertexId>>> = None;
     // Adaptive bookkeeping: the allocator cost of a between-round resize
     // lands at the resizing thread's next round start, and the residual
@@ -815,10 +855,10 @@ pub fn run<P: VertexProgram>(g: &Csr, prog: &P, cfg: &EngineConfig, machine: &Ma
                     deltas[t] += prog.delta(old, new);
                 }
                 if frontier_on && activate_this {
-                    for &w2 in g.out_neighbors(v) {
+                    super::kernels::activate_out_neighbors(g, v, |w2| {
                         bits::set(&mut nxt, w2);
                         cost += machine.cost.buffer_push;
-                    }
+                    });
                 }
 
                 changed += changed_this as u64;
@@ -1002,6 +1042,7 @@ mod tests {
     use super::*;
     use crate::engine::program::ValueReader;
     use crate::graph::gap::GapGraph;
+    use crate::graph::Csr;
 
     struct MaxProp<'g> {
         g: &'g Csr,
@@ -1123,6 +1164,40 @@ mod tests {
             front.total_cycles(),
             dense.total_cycles()
         );
+    }
+
+    #[test]
+    fn resume_from_fixed_point_is_cheap_and_exact() {
+        // Resuming at a fixed point with a small dirty set must converge
+        // in one sparse round sweeping only the dirty vertices, at a
+        // fraction of the cold run's simulated cost.
+        let g = GapGraph::Web.generate(8, 4);
+        let p = MaxProp { g: &g };
+        let m = Machine::haswell();
+        let cfg = EngineConfig::new(4, ExecutionMode::Synchronous).with_schedule(SchedulePolicy::Frontier);
+        let cold = run(&g, &p, &cfg, &m);
+        assert!(cold.result.converged);
+
+        let seed = cold.result.resume_from(&[0, 1, 2]);
+        let warm = run(&g, &p, &cfg.clone().with_resume(seed), &m);
+        assert!(warm.result.converged);
+        assert_eq!(warm.result.values, cold.result.values);
+        assert_eq!(warm.result.num_rounds(), 1, "fixed-point resume needs one confirming round");
+        assert_eq!(warm.result.total_active(), 3, "only the dirty vertices are swept");
+        assert!(
+            warm.total_cycles() < cold.total_cycles(),
+            "warm {} vs cold {} cycles",
+            warm.total_cycles(),
+            cold.total_cycles()
+        );
+
+        // Dense resume re-sweeps everything but still confirms in one round.
+        let dense_seed = cold.result.resume_from(&[0]);
+        let dense_cfg = EngineConfig::new(4, ExecutionMode::Synchronous).with_resume(dense_seed);
+        let dw = run(&g, &p, &dense_cfg, &m);
+        assert!(dw.result.converged);
+        assert_eq!(dw.result.values, cold.result.values);
+        assert_eq!(dw.result.num_rounds(), 1);
     }
 
     #[test]

@@ -120,6 +120,26 @@ impl RunResult {
         self.rounds.iter().filter_map(|r| r.delta_trace.get(t).copied()).collect()
     }
 
+    /// Package this run's final values as a warm-start seed for an
+    /// incremental re-run after graph mutations: values are carried
+    /// over verbatim, `dirty` (sorted, deduplicated) becomes the
+    /// round-0 frontier. Single-lane runs only — lane groups interleave
+    /// k queries whose dirty sets would differ.
+    ///
+    /// This is the *generic* constructor; it does not apply any
+    /// algorithm reset rule. SSSP after deletions needs
+    /// [`crate::algorithms::sssp::resume_seed`] (delete-monotonicity
+    /// reset); PageRank wants
+    /// [`crate::algorithms::pagerank::resume_seed`] (out-degree-aware
+    /// dirty expansion).
+    pub fn resume_from(&self, dirty: &[u32]) -> super::ResumeSeed {
+        assert_eq!(self.lanes, 1, "resume_from requires a single-lane run (got {} lanes)", self.lanes);
+        let mut dirty = dirty.to_vec();
+        dirty.sort_unstable();
+        dirty.dedup();
+        super::ResumeSeed { values: self.values.clone(), dirty }
+    }
+
     /// Median δ across threads in the final round — the operating point
     /// the adaptive controller settled on (`None` for non-adaptive runs).
     pub fn final_delta_median(&self) -> Option<usize> {
@@ -198,6 +218,22 @@ mod tests {
         assert_eq!(r.lane_values(1), vec![2f32.to_bits()]);
         assert_eq!(r.lane_delta_trace(0), vec![1.0, 0.0], "lane 0 dropped out after round 0");
         assert_eq!(r.lane_delta_trace(1), vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn resume_from_sorts_and_dedups_dirty() {
+        let r = mk();
+        let seed = r.resume_from(&[1, 0, 1]);
+        assert_eq!(seed.values, r.values);
+        assert_eq!(seed.dirty, vec![0, 1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "single-lane")]
+    fn resume_from_rejects_lane_groups() {
+        let mut r = mk();
+        r.lanes = 2;
+        let _ = r.resume_from(&[0]);
     }
 
     #[test]

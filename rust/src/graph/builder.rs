@@ -25,6 +25,8 @@ pub struct GraphBuilder {
     weighted: bool,
     symmetrize: bool,
     keep_self_loops: bool,
+    dedup_min_weight: bool,
+    reject_self_loops: bool,
 }
 
 impl GraphBuilder {
@@ -32,7 +34,15 @@ impl GraphBuilder {
     /// reported by [`Self::try_build`] (or panics in [`Self::build`]),
     /// so staging edges can never abort a long-lived process.
     pub fn new(n: usize) -> Self {
-        Self { n, triples: Vec::new(), weighted: false, symmetrize: false, keep_self_loops: false }
+        Self {
+            n,
+            triples: Vec::new(),
+            weighted: false,
+            symmetrize: false,
+            keep_self_loops: false,
+            dedup_min_weight: false,
+            reject_self_loops: false,
+        }
     }
 
     /// Add unweighted directed edges.
@@ -72,6 +82,25 @@ impl GraphBuilder {
         self
     }
 
+    /// Resolve parallel edges by keeping the **minimum** weight instead
+    /// of the first staged one. The right policy for shortest-path
+    /// inputs, where a duplicate edge means "there are several roads;
+    /// take the cheapest".
+    pub fn dedup_parallel_edges(mut self) -> Self {
+        self.dedup_min_weight = true;
+        self
+    }
+
+    /// Turn self loops into indexed [`Self::try_build`] errors instead
+    /// of silently dropping them — the same policy
+    /// [`VersionedGraph::apply_batch`](super::VersionedGraph::apply_batch)
+    /// applies to mutation batches, for pipelines that treat a self
+    /// loop as corrupt input rather than noise.
+    pub fn reject_self_loops(mut self) -> Self {
+        self.reject_self_loops = true;
+        self
+    }
+
     /// Current number of staged triples (before dedup).
     pub fn staged_edges(&self) -> usize {
         self.triples.len()
@@ -92,7 +121,8 @@ impl GraphBuilder {
     /// clean `Err` in the `graph/io.rs` style (`edge <index>: …`), so
     /// corrupt in-memory edge lists can't abort a serving process.
     pub fn try_build(self) -> Result<Csr> {
-        let Self { n, mut triples, weighted, symmetrize, keep_self_loops } = self;
+        let Self { n, mut triples, weighted, symmetrize, keep_self_loops, dedup_min_weight, reject_self_loops } =
+            self;
 
         if n > u32::MAX as usize {
             bail!("vertex count {n} exceeds the u32 id space");
@@ -100,6 +130,9 @@ impl GraphBuilder {
         for (i, &(s, d, _)) in triples.iter().enumerate() {
             if (s as usize) >= n || (d as usize) >= n {
                 bail!("edge {i}: ({s},{d}) out of range for n={n}");
+            }
+            if reject_self_loops && s == d {
+                bail!("edge {i}: self loop ({s},{d}) rejected");
             }
         }
         if !keep_self_loops {
@@ -111,8 +144,14 @@ impl GraphBuilder {
         }
 
         // Sort by (dst, src) so each pull row comes out sorted, then dedup
-        // on the (src, dst) pair keeping the first weight.
-        triples.sort_unstable_by_key(|&(s, d, _)| (d, s));
+        // on the (src, dst) pair keeping the first weight — or, with
+        // [`Self::dedup_parallel_edges`], sort weight-last so the dedup
+        // keeps the minimum weight of each parallel-edge bundle.
+        if dedup_min_weight {
+            triples.sort_unstable_by_key(|&(s, d, w)| (d, s, w));
+        } else {
+            triples.sort_unstable_by_key(|&(s, d, _)| (d, s));
+        }
         triples.dedup_by_key(|&mut (s, d, _)| (s, d));
 
         let mut offsets = vec![0u64; n + 1];
@@ -204,6 +243,36 @@ mod tests {
     fn try_build_rejects_oversized_n() {
         let err = GraphBuilder::new(u32::MAX as usize + 1).try_build().unwrap_err();
         assert!(err.to_string().contains("u32 id space"), "{err}");
+    }
+
+    #[test]
+    fn dedup_parallel_edges_keeps_min_weight() {
+        let g = GraphBuilder::new(2)
+            .weighted_edges(&[(0, 1, 9), (0, 1, 3), (0, 1, 5)])
+            .dedup_parallel_edges()
+            .build();
+        let nb: Vec<_> = g.in_neighbors_weighted(1).collect();
+        assert_eq!(nb, vec![(0, 3)]);
+        // Default policy is unchanged: first staged weight wins.
+        let g = GraphBuilder::new(2).weighted_edges(&[(0, 1, 9), (0, 1, 3)]).build();
+        let nb: Vec<_> = g.in_neighbors_weighted(1).collect();
+        assert_eq!(nb, vec![(0, 9)]);
+    }
+
+    #[test]
+    fn reject_self_loops_reports_indexed_error() {
+        // Same policy and error shape as VersionedGraph::apply_batch:
+        // the offending index and endpoints are named.
+        let err = GraphBuilder::new(3)
+            .edges(&[(0, 1), (2, 2), (1, 0)])
+            .reject_self_loops()
+            .try_build()
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("edge 1") && msg.contains("self loop") && msg.contains("(2,2)"), "{msg}");
+        // Without the flag the loop is silently dropped as before.
+        let g = GraphBuilder::new(3).edges(&[(0, 1), (2, 2), (1, 0)]).build();
+        assert_eq!(g.num_edges(), 2);
     }
 
     #[test]

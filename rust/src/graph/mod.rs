@@ -7,15 +7,24 @@
 //! GAP-analog suite used by every experiment; [`properties`] computes the
 //! topology metrics (notably the diagonal-locality score of §IV-C) that
 //! predict whether delaying updates helps.
+//!
+//! Storage itself sits behind the [`GraphStore`] trait: [`Csr`] is the
+//! frozen static impl, and [`VersionedGraph`] ([`overlay`]) layers
+//! versioned insert/delete deltas over a CSR base for streaming
+//! mutation workloads with incremental recomputation.
 
 pub mod builder;
 pub mod gap;
 pub mod generators;
 pub mod io;
+pub mod overlay;
 pub mod properties;
 pub mod weights;
 
 mod csr;
+mod store;
 
 pub use builder::GraphBuilder;
 pub use csr::{Csr, VertexId};
+pub use overlay::{EdgeMutation, GraphVersion, MutationReceipt, VersionedGraph};
+pub use store::GraphStore;

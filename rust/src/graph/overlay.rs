@@ -1,0 +1,710 @@
+//! Mutable edge overlays over a frozen CSR base.
+//!
+//! [`VersionedGraph`] is the second [`GraphStore`] backend: a
+//! [`Csr`] base plus per-vertex insert and delete delta lists, with a
+//! monotonically increasing version bumped by every applied batch. The
+//! read path composes a row on the fly — surviving base entries
+//! (tombstone-filtered) chained with the inserts — so a mutation batch
+//! is O(batch) instead of an O(n + m) rebuild, and once the accumulated
+//! churn passes a configurable fraction of the base edge count the
+//! overlay is compacted back into a fresh CSR.
+//!
+//! Overlay layout (all per-vertex lists kept sorted for binary search):
+//!
+//! * `ins_in[d]`: inserted in-edges of `d` as `(src, weight)`, sorted
+//!   by `src`. Mirrored by `ins_out[s]` (dst ids) for the push side.
+//! * `del_in[d]`: tombstoned *base* in-edges of `d` (src ids).
+//!   Mirrored by `del_out[s]`.
+//!
+//! Re-inserting a tombstoned base edge keeps the tombstone and records
+//! the edge in the insert list — the tombstone shadows the stale base
+//! weight, the insert carries the fresh one. An edge is present iff
+//! `(in base && not tombstoned) || in inserts`.
+//!
+//! Batches are atomic: [`VersionedGraph::apply_batch`] validates every
+//! mutation (against the state the preceding mutations of the same
+//! batch would produce) before touching the overlay, so an `Err` leaves
+//! the graph byte-identical.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::builder::GraphBuilder;
+use super::csr::{Csr, VertexId};
+use super::store::GraphStore;
+use crate::util::rng::SplitMix64;
+
+/// A single edge mutation. Batched into
+/// [`VersionedGraph::apply_batch`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EdgeMutation {
+    /// Add edge `src -> dst` with `weight` (must be `>= 1`; exactly `1`
+    /// on unweighted graphs). Rejected if the edge already exists.
+    Insert {
+        /// Source vertex.
+        src: VertexId,
+        /// Destination vertex.
+        dst: VertexId,
+        /// Edge weight (`>= 1`).
+        weight: u32,
+    },
+    /// Remove edge `src -> dst`. Rejected if the edge does not exist.
+    Delete {
+        /// Source vertex.
+        src: VertexId,
+        /// Destination vertex.
+        dst: VertexId,
+    },
+}
+
+/// Monotonically increasing content version of a [`VersionedGraph`]
+/// (0 = pristine base; +1 per applied batch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct GraphVersion(pub u64);
+
+/// What [`VersionedGraph::apply_batch`] did: the version it produced,
+/// the edges it actually added/removed (with weights — deletes report
+/// the weight the dying edge had), and whether the batch tripped a
+/// compaction.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MutationReceipt {
+    /// Version after the batch.
+    pub version: GraphVersion,
+    /// Edges added, as `(src, dst, weight)`.
+    pub inserted: Vec<(VertexId, VertexId, u32)>,
+    /// Edges removed, as `(src, dst, weight)` with the weight they had.
+    pub deleted: Vec<(VertexId, VertexId, u32)>,
+    /// Whether the overlay was compacted back into a fresh CSR.
+    pub compacted: bool,
+}
+
+impl MutationReceipt {
+    /// Every vertex whose in-edge set changed (the dst of each
+    /// mutation), sorted and deduplicated — the natural dirty seed for
+    /// incremental recomputation.
+    pub fn touched_dsts(&self) -> Vec<VertexId> {
+        let mut out: Vec<VertexId> =
+            self.inserted.iter().chain(self.deleted.iter()).map(|&(_, d, _)| d).collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// Default compaction threshold: compact once accumulated churn
+/// exceeds this fraction of the base edge count.
+pub const DEFAULT_COMPACT_FRAC: f64 = 0.25;
+
+/// [`Csr`] base + per-vertex insert/delete overlays + version counter.
+///
+/// Implements [`GraphStore`], so both executors and every algorithm run
+/// on it unchanged. The base is never mutated in place; compaction
+/// replaces it wholesale.
+#[derive(Debug, Clone)]
+pub struct VersionedGraph {
+    base: Csr,
+    /// Inserted in-edges per dst, sorted by src.
+    ins_in: Vec<Vec<(VertexId, u32)>>,
+    /// Tombstoned base in-edges per dst (src ids), sorted.
+    del_in: Vec<Vec<VertexId>>,
+    /// Inserted out-edges per src (dst ids), sorted.
+    ins_out: Vec<Vec<VertexId>>,
+    /// Tombstoned base out-edges per src (dst ids), sorted.
+    del_out: Vec<Vec<VertexId>>,
+    /// Materialized out-degrees, maintained incrementally.
+    out_degrees: Vec<u32>,
+    /// Current logical edge count.
+    num_edges: usize,
+    /// Content version; bumped once per applied batch.
+    version: u64,
+    /// Compact when `delta_edges > compact_frac * base.num_edges()`.
+    compact_frac: f64,
+    /// Accumulated churn (applied mutations) since the last compaction.
+    delta_edges: usize,
+}
+
+impl VersionedGraph {
+    /// Wrap a frozen CSR as version 0 with the
+    /// [default](DEFAULT_COMPACT_FRAC) compaction threshold.
+    pub fn new(base: Csr) -> Self {
+        let n = base.num_vertices();
+        let out_degrees = base.out_degrees().to_vec();
+        let num_edges = base.num_edges();
+        Self {
+            base,
+            ins_in: vec![Vec::new(); n],
+            del_in: vec![Vec::new(); n],
+            ins_out: vec![Vec::new(); n],
+            del_out: vec![Vec::new(); n],
+            out_degrees,
+            num_edges,
+            version: 0,
+            compact_frac: DEFAULT_COMPACT_FRAC,
+            delta_edges: 0,
+        }
+    }
+
+    /// Override the compaction threshold (fraction of base edges the
+    /// accumulated churn may reach before compaction; `f64::INFINITY`
+    /// disables compaction).
+    pub fn with_compaction_threshold(mut self, frac: f64) -> Self {
+        assert!(frac >= 0.0, "compaction threshold must be non-negative");
+        self.compact_frac = frac;
+        self
+    }
+
+    /// Current content version.
+    pub fn version(&self) -> GraphVersion {
+        GraphVersion(self.version)
+    }
+
+    /// The current CSR base (post-compaction this is the rebuilt CSR).
+    pub fn base(&self) -> &Csr {
+        &self.base
+    }
+
+    /// Accumulated churn since the last compaction (mutations applied).
+    pub fn delta_edges(&self) -> usize {
+        self.delta_edges
+    }
+
+    /// Whether any overlay entries exist (false right after a
+    /// compaction or on a pristine base).
+    pub fn has_deltas(&self) -> bool {
+        self.ins_in.iter().any(|v| !v.is_empty()) || self.del_in.iter().any(|v| !v.is_empty())
+    }
+
+    /// Whether edge `src -> dst` currently exists.
+    pub fn edge_present(&self, src: VertexId, dst: VertexId) -> bool {
+        if self.ins_in[dst as usize].binary_search_by_key(&src, |&(s, _)| s).is_ok() {
+            return true;
+        }
+        self.base_has(src, dst) && self.del_in[dst as usize].binary_search(&src).is_err()
+    }
+
+    fn base_has(&self, src: VertexId, dst: VertexId) -> bool {
+        self.base.in_neighbors(dst).binary_search(&src).is_ok()
+    }
+
+    /// Weight of base edge `src -> dst` (1 on unweighted graphs).
+    /// Caller guarantees the base edge exists.
+    fn base_weight(&self, src: VertexId, dst: VertexId) -> u32 {
+        let row = self.base.in_neighbors(dst);
+        let idx = row.binary_search(&src).expect("base edge must exist");
+        match self.base.weights() {
+            Some(ws) => ws[self.base.offsets()[dst as usize] as usize + idx],
+            None => 1,
+        }
+    }
+
+    /// Weight of the current edge `src -> dst` (insert entry wins over
+    /// base). Caller guarantees the edge is present.
+    fn current_weight(&self, src: VertexId, dst: VertexId) -> u32 {
+        match self.ins_in[dst as usize].binary_search_by_key(&src, |&(s, _)| s) {
+            Ok(i) => self.ins_in[dst as usize][i].1,
+            Err(_) => self.base_weight(src, dst),
+        }
+    }
+
+    /// Apply a batch of mutations atomically: every mutation is
+    /// validated (in batch order, against the state its predecessors
+    /// would produce) before any is applied, so an `Err` leaves the
+    /// graph unchanged. Errors are indexed `mutation <i>: …`, matching
+    /// the `graph/io.rs` / [`GraphBuilder::try_build`] style.
+    ///
+    /// Rejected per mutation: endpoints out of range, self loops,
+    /// inserting a present edge (parallel-edge duplicate), deleting an
+    /// absent edge, zero weights, and non-unit weights on unweighted
+    /// graphs. On success the version is bumped once and, if the
+    /// accumulated churn exceeds the compaction threshold, the overlay
+    /// is folded back into a fresh CSR base.
+    pub fn apply_batch(&mut self, batch: &[EdgeMutation]) -> Result<MutationReceipt> {
+        let n = self.base.num_vertices();
+        // Pass 1: validate against current state + batch-local pending
+        // presence, touching nothing.
+        let mut pending: HashMap<(VertexId, VertexId), bool> = HashMap::new();
+        for (i, m) in batch.iter().enumerate() {
+            let (src, dst) = match *m {
+                EdgeMutation::Insert { src, dst, .. } | EdgeMutation::Delete { src, dst } => (src, dst),
+            };
+            if (src as usize) >= n || (dst as usize) >= n {
+                bail!("mutation {i}: ({src},{dst}) out of range for n={n}");
+            }
+            if src == dst {
+                bail!("mutation {i}: self loop ({src},{dst}) rejected");
+            }
+            let present =
+                pending.get(&(src, dst)).copied().unwrap_or_else(|| self.edge_present(src, dst));
+            match *m {
+                EdgeMutation::Insert { weight, .. } => {
+                    if weight == 0 {
+                        bail!("mutation {i}: zero weight on ({src},{dst}); weights must be >= 1");
+                    }
+                    if !self.base.is_weighted() && weight != 1 {
+                        bail!("mutation {i}: weight {weight} on ({src},{dst}) of an unweighted graph");
+                    }
+                    if present {
+                        bail!("mutation {i}: duplicate edge ({src},{dst}) already present");
+                    }
+                    pending.insert((src, dst), true);
+                }
+                EdgeMutation::Delete { .. } => {
+                    if !present {
+                        bail!("mutation {i}: delete of absent edge ({src},{dst})");
+                    }
+                    pending.insert((src, dst), false);
+                }
+            }
+        }
+
+        // Pass 2: apply (infallible now).
+        let mut inserted = Vec::new();
+        let mut deleted = Vec::new();
+        for m in batch {
+            match *m {
+                EdgeMutation::Insert { src, dst, weight } => {
+                    self.insert_unchecked(src, dst, weight);
+                    inserted.push((src, dst, weight));
+                }
+                EdgeMutation::Delete { src, dst } => {
+                    let w = self.current_weight(src, dst);
+                    self.delete_unchecked(src, dst);
+                    deleted.push((src, dst, w));
+                }
+            }
+        }
+        self.version += 1;
+        self.delta_edges += batch.len();
+
+        let compacted = self.delta_edges as f64 > self.compact_frac * self.base.num_edges() as f64;
+        if compacted {
+            self.compact();
+        }
+        Ok(MutationReceipt { version: GraphVersion(self.version), inserted, deleted, compacted })
+    }
+
+    fn insert_unchecked(&mut self, src: VertexId, dst: VertexId, weight: u32) {
+        let ins = &mut self.ins_in[dst as usize];
+        let pos = ins.binary_search_by_key(&src, |&(s, _)| s).unwrap_err();
+        ins.insert(pos, (src, weight));
+        let out = &mut self.ins_out[src as usize];
+        let pos = out.binary_search(&dst).unwrap_err();
+        out.insert(pos, dst);
+        self.out_degrees[src as usize] += 1;
+        self.num_edges += 1;
+    }
+
+    fn delete_unchecked(&mut self, src: VertexId, dst: VertexId) {
+        let ins = &mut self.ins_in[dst as usize];
+        if let Ok(i) = ins.binary_search_by_key(&src, |&(s, _)| s) {
+            // Deleting an overlay insert: drop the insert entry (any
+            // base tombstone for the pair stays, keeping the base edge
+            // shadowed).
+            ins.remove(i);
+            let out = &mut self.ins_out[src as usize];
+            let j = out.binary_search(&dst).expect("in/out insert lists out of sync");
+            out.remove(j);
+        } else {
+            // Deleting a live base edge: tombstone it on both sides.
+            let del = &mut self.del_in[dst as usize];
+            let pos = del.binary_search(&src).unwrap_err();
+            del.insert(pos, src);
+            let out = &mut self.del_out[src as usize];
+            let pos = out.binary_search(&dst).unwrap_err();
+            out.insert(pos, dst);
+        }
+        self.out_degrees[src as usize] -= 1;
+        self.num_edges -= 1;
+    }
+
+    /// Fold the overlay back into a fresh CSR base. The logical graph
+    /// (and its version) is unchanged; the overlay lists come out
+    /// empty. Called automatically by [`Self::apply_batch`] past the
+    /// compaction threshold; public so callers can force it (e.g.
+    /// before a long read-only serving phase).
+    pub fn compact(&mut self) {
+        let n = self.base.num_vertices();
+        let mut b = GraphBuilder::new(n);
+        if self.base.is_weighted() {
+            b = b.with_weights();
+        }
+        for v in 0..n as VertexId {
+            let del = &self.del_in[v as usize];
+            let row = self.base.in_neighbors(v);
+            for (i, &u) in row.iter().enumerate() {
+                if del.binary_search(&u).is_ok() {
+                    continue;
+                }
+                let w = match self.base.weights() {
+                    Some(ws) => ws[self.base.offsets()[v as usize] as usize + i],
+                    None => 1,
+                };
+                b.push(u, v, w);
+            }
+            for &(u, w) in &self.ins_in[v as usize] {
+                b.push(u, v, w);
+            }
+        }
+        let fresh = b.try_build().expect("compaction rebuilt an invalid edge list");
+        debug_assert_eq!(fresh.num_edges(), self.num_edges);
+        debug_assert_eq!(fresh.out_degrees(), &self.out_degrees[..]);
+        self.base = fresh;
+        for v in 0..n {
+            self.ins_in[v].clear();
+            self.del_in[v].clear();
+            self.ins_out[v].clear();
+            self.del_out[v].clear();
+        }
+        self.delta_edges = 0;
+    }
+
+    /// Materialize the current logical graph as a standalone [`Csr`]
+    /// (for oracle comparisons; the overlay is untouched).
+    pub fn to_csr(&self) -> Csr {
+        let mut snap = self.clone();
+        snap.compact();
+        snap.base
+    }
+
+    /// Generate a seeded random mutation batch touching about
+    /// `frac * num_edges` edges: half deletes of existing edges, half
+    /// inserts of currently absent (non-self-loop) pairs. Weighted
+    /// graphs get insert weights in `1..=64`. Deterministic in `seed`.
+    pub fn random_batch(&self, frac: f64, seed: u64) -> Vec<EdgeMutation> {
+        let n = self.num_vertices();
+        let m = self.num_edges;
+        let k = ((m as f64 * frac).round() as usize).max(1);
+        let n_del = k / 2;
+        let n_ins = k - n_del;
+        let mut rng = SplitMix64::new(seed);
+        let mut out = Vec::with_capacity(k);
+
+        // Deletes: sample distinct positions in the current edge list.
+        let mut edges: Vec<(VertexId, VertexId)> = Vec::with_capacity(m);
+        for v in 0..n as VertexId {
+            for u in GraphStore::in_neighbors(self, v) {
+                edges.push((u, v));
+            }
+        }
+        rng.shuffle(&mut edges);
+        let mut chosen: std::collections::HashSet<(VertexId, VertexId)> = Default::default();
+        for &(s, d) in edges.iter().take(n_del.min(edges.len())) {
+            chosen.insert((s, d));
+            out.push(EdgeMutation::Delete { src: s, dst: d });
+        }
+
+        // Inserts: rejection-sample absent pairs (bounded attempts so a
+        // near-complete graph cannot spin forever).
+        let mut attempts = 0usize;
+        let max_attempts = 64 * k + 64;
+        let mut added = 0usize;
+        while added < n_ins && attempts < max_attempts {
+            attempts += 1;
+            let s = rng.index(n) as VertexId;
+            let d = rng.index(n) as VertexId;
+            if s == d || chosen.contains(&(s, d)) || self.edge_present(s, d) {
+                continue;
+            }
+            chosen.insert((s, d));
+            let weight = if self.is_weighted() { rng.range_u32(1, 64) } else { 1 };
+            out.push(EdgeMutation::Insert { src: s, dst: d, weight });
+            added += 1;
+        }
+        out
+    }
+
+    fn iter_in(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        let del = &self.del_in[v as usize];
+        self.base
+            .in_neighbors(v)
+            .iter()
+            .copied()
+            .filter(move |u| del.binary_search(u).is_err())
+            .chain(self.ins_in[v as usize].iter().map(|&(u, _)| u))
+    }
+}
+
+impl GraphStore for VersionedGraph {
+    fn num_vertices(&self) -> usize {
+        self.base.num_vertices()
+    }
+
+    fn num_edges(&self) -> usize {
+        self.num_edges
+    }
+
+    fn is_weighted(&self) -> bool {
+        self.base.is_weighted()
+    }
+
+    fn is_symmetric(&self) -> bool {
+        // Conservative: mutations are directed, so symmetry only
+        // survives while the overlay is empty.
+        self.base.is_symmetric() && !self.has_deltas()
+    }
+
+    fn in_degree(&self, v: VertexId) -> usize {
+        self.base.in_degree(v) - self.del_in[v as usize].len() + self.ins_in[v as usize].len()
+    }
+
+    fn out_degree(&self, v: VertexId) -> u32 {
+        self.out_degrees[v as usize]
+    }
+
+    fn out_degrees(&self) -> &[u32] {
+        &self.out_degrees
+    }
+
+    fn in_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        self.iter_in(v)
+    }
+
+    fn in_neighbors_weighted(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u32)> + '_ {
+        let del = &self.del_in[v as usize];
+        self.base
+            .in_neighbors_weighted(v)
+            .filter(move |(u, _)| del.binary_search(u).is_err())
+            .chain(self.ins_in[v as usize].iter().copied())
+    }
+
+    fn out_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        let del = &self.del_out[v as usize];
+        self.base
+            .out_neighbors(v)
+            .iter()
+            .copied()
+            .filter(move |d| del.binary_search(d).is_err())
+            .chain(self.ins_out[v as usize].iter().copied())
+    }
+
+    fn in_neighbor_hint(&self, v: VertexId) -> &[VertexId] {
+        // Prefetch hint only: the base row may include tombstoned ids
+        // and misses overlay inserts — harmless for a pure hint.
+        self.base.in_neighbors(v)
+    }
+
+    fn ensure_out_edges(&self) {
+        self.base.ensure_out_edges();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn diamond() -> Csr {
+        // 0 -> {1,2} -> 3, plus 0 -> 3 long edge.
+        GraphBuilder::new(4)
+            .weighted_edges(&[(0, 1, 2), (0, 2, 4), (1, 3, 2), (2, 3, 1), (0, 3, 9)])
+            .build()
+    }
+
+    fn in_row(g: &VersionedGraph, v: VertexId) -> Vec<(VertexId, u32)> {
+        let mut row: Vec<_> = g.in_neighbors_weighted(v).collect();
+        row.sort_unstable();
+        row
+    }
+
+    #[test]
+    fn pristine_overlay_matches_base() {
+        let base = diamond();
+        let g = VersionedGraph::new(base.clone());
+        assert_eq!(g.version(), GraphVersion(0));
+        assert_eq!(GraphStore::num_edges(&g), base.num_edges());
+        for v in 0..4u32 {
+            let trait_row: Vec<VertexId> = GraphStore::in_neighbors(&g, v).collect();
+            assert_eq!(trait_row, base.in_neighbors(v), "v{v}");
+            let out_row: Vec<VertexId> = GraphStore::out_neighbors(&g, v).collect();
+            assert_eq!(out_row, base.out_neighbors(v), "v{v}");
+            assert_eq!(GraphStore::out_degree(&g, v), base.out_degree(v));
+            assert_eq!(GraphStore::in_degree(&g, v), base.in_degree(v));
+        }
+        assert!(!g.has_deltas());
+        assert!(g.to_csr() == base);
+    }
+
+    #[test]
+    fn insert_and_delete_roundtrip() {
+        let mut g = VersionedGraph::new(diamond());
+        let r = g
+            .apply_batch(&[
+                EdgeMutation::Insert { src: 3, dst: 0, weight: 5 },
+                EdgeMutation::Delete { src: 0, dst: 3 },
+            ])
+            .unwrap();
+        assert_eq!(r.version, GraphVersion(1));
+        assert_eq!(r.inserted, vec![(3, 0, 5)]);
+        assert_eq!(r.deleted, vec![(0, 3, 9)]);
+        assert_eq!(r.touched_dsts(), vec![0, 3]);
+        assert_eq!(GraphStore::num_edges(&g), 5);
+        assert_eq!(in_row(&g, 0), vec![(3, 5)]);
+        assert_eq!(in_row(&g, 3), vec![(1, 2), (2, 1)]);
+        assert_eq!(GraphStore::out_degree(&g, 0), 2);
+        assert_eq!(GraphStore::out_degree(&g, 3), 1);
+        let outs: Vec<VertexId> = GraphStore::out_neighbors(&g, 0).collect();
+        assert_eq!(outs, vec![1, 2]);
+        assert!(g.edge_present(3, 0) && !g.edge_present(0, 3));
+    }
+
+    #[test]
+    fn reinsert_after_delete_takes_new_weight() {
+        let mut g = VersionedGraph::new(diamond());
+        g.apply_batch(&[EdgeMutation::Delete { src: 0, dst: 3 }]).unwrap();
+        g.apply_batch(&[EdgeMutation::Insert { src: 0, dst: 3, weight: 1 }]).unwrap();
+        assert_eq!(g.version(), GraphVersion(2));
+        assert_eq!(in_row(&g, 3), vec![(0, 1), (1, 2), (2, 1)]);
+        // Deleting the re-inserted edge removes it again (tombstone
+        // still shadows the base entry).
+        g.apply_batch(&[EdgeMutation::Delete { src: 0, dst: 3 }]).unwrap();
+        assert!(!g.edge_present(0, 3));
+        assert_eq!(in_row(&g, 3), vec![(1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn batch_is_atomic_on_error() {
+        let mut g = VersionedGraph::new(diamond());
+        let before = g.to_csr();
+        let err = g
+            .apply_batch(&[
+                EdgeMutation::Insert { src: 3, dst: 0, weight: 5 },
+                EdgeMutation::Delete { src: 1, dst: 2 }, // absent
+            ])
+            .unwrap_err();
+        assert!(err.to_string().contains("mutation 1") && err.to_string().contains("absent"), "{err}");
+        assert_eq!(g.version(), GraphVersion(0));
+        assert!(g.to_csr() == before);
+    }
+
+    #[test]
+    fn validation_errors_are_indexed() {
+        let mut g = VersionedGraph::new(diamond());
+        let cases: Vec<(Vec<EdgeMutation>, &str)> = vec![
+            (vec![EdgeMutation::Insert { src: 9, dst: 0, weight: 1 }], "mutation 0: (9,0) out of range"),
+            (vec![EdgeMutation::Insert { src: 2, dst: 2, weight: 1 }], "self loop"),
+            (vec![EdgeMutation::Insert { src: 0, dst: 1, weight: 3 }], "duplicate edge (0,1)"),
+            (vec![EdgeMutation::Insert { src: 3, dst: 0, weight: 0 }], "zero weight"),
+            (vec![EdgeMutation::Delete { src: 1, dst: 0 }], "absent edge (1,0)"),
+            (
+                vec![
+                    EdgeMutation::Insert { src: 3, dst: 0, weight: 1 },
+                    EdgeMutation::Insert { src: 3, dst: 0, weight: 2 },
+                ],
+                "mutation 1: duplicate edge (3,0)",
+            ),
+        ];
+        for (batch, needle) in cases {
+            let err = g.apply_batch(&batch).unwrap_err().to_string();
+            assert!(err.contains(needle), "expected {needle:?} in {err:?}");
+        }
+        // Intra-batch delete-then-insert of the same pair is legal.
+        g.apply_batch(&[
+            EdgeMutation::Delete { src: 0, dst: 3 },
+            EdgeMutation::Insert { src: 0, dst: 3, weight: 7 },
+        ])
+        .unwrap();
+        assert_eq!(in_row(&g, 3), vec![(0, 7), (1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn unweighted_base_rejects_nonunit_weight() {
+        let base = GraphBuilder::new(3).edges(&[(0, 1), (1, 2)]).build();
+        let mut g = VersionedGraph::new(base);
+        let err = g
+            .apply_batch(&[EdgeMutation::Insert { src: 2, dst: 0, weight: 3 }])
+            .unwrap_err();
+        assert!(err.to_string().contains("unweighted"), "{err}");
+        g.apply_batch(&[EdgeMutation::Insert { src: 2, dst: 0, weight: 1 }]).unwrap();
+        let row: Vec<VertexId> = GraphStore::in_neighbors(&g, 0).collect();
+        assert_eq!(row, vec![2]);
+    }
+
+    #[test]
+    fn compaction_preserves_logical_graph() {
+        let mut g = VersionedGraph::new(diamond()).with_compaction_threshold(f64::INFINITY);
+        g.apply_batch(&[
+            EdgeMutation::Delete { src: 0, dst: 3 },
+            EdgeMutation::Insert { src: 3, dst: 0, weight: 5 },
+            EdgeMutation::Insert { src: 1, dst: 2, weight: 8 },
+        ])
+        .unwrap();
+        let logical = g.to_csr();
+        assert!(g.has_deltas());
+        g.compact();
+        assert!(!g.has_deltas());
+        assert_eq!(g.delta_edges(), 0);
+        assert!(g.base() == &logical);
+        assert_eq!(g.version(), GraphVersion(1)); // compaction ≠ new content
+        // Rows read identically post-compaction.
+        assert_eq!(in_row(&g, 0), vec![(3, 5)]);
+        assert_eq!(in_row(&g, 2), vec![(0, 4), (1, 8)]);
+    }
+
+    #[test]
+    fn auto_compaction_past_threshold() {
+        let mut g = VersionedGraph::new(diamond()).with_compaction_threshold(0.25);
+        // 5 base edges * 0.25 = 1.25: a 2-mutation batch trips it.
+        let r = g
+            .apply_batch(&[
+                EdgeMutation::Delete { src: 0, dst: 3 },
+                EdgeMutation::Insert { src: 3, dst: 1, weight: 2 },
+            ])
+            .unwrap();
+        assert!(r.compacted);
+        assert!(!g.has_deltas());
+        assert_eq!(g.base().num_edges(), 5);
+        assert_eq!(in_row(&g, 1), vec![(0, 2), (3, 2)]);
+    }
+
+    #[test]
+    fn random_batch_is_valid_and_deterministic() {
+        let base = GraphBuilder::new(64)
+            .weighted_edges(
+                &(0..256u32)
+                    .map(|i| ((i * 7 + 1) % 64, (i * 13 + 3) % 64, 1 + i % 9))
+                    .filter(|&(s, d, _)| s != d)
+                    .collect::<Vec<_>>(),
+            )
+            .build();
+        let g = VersionedGraph::new(base);
+        let b1 = g.random_batch(0.05, 42);
+        let b2 = g.random_batch(0.05, 42);
+        assert_eq!(b1, b2);
+        assert!(!b1.is_empty());
+        let mut g2 = g.clone();
+        let r = g2.apply_batch(&b1).expect("random batch must validate");
+        assert_eq!(r.inserted.len() + r.deleted.len(), b1.len());
+        // Different seed, different batch.
+        assert_ne!(g.random_batch(0.05, 43), b1);
+    }
+
+    #[test]
+    fn overlay_degrees_stay_consistent() {
+        let base = GraphBuilder::new(32)
+            .weighted_edges(
+                &(0..128u32)
+                    .map(|i| ((i * 5 + 2) % 32, (i * 11 + 7) % 32, 1 + i % 5))
+                    .filter(|&(s, d, _)| s != d)
+                    .collect::<Vec<_>>(),
+            )
+            .build();
+        let mut g = VersionedGraph::new(base).with_compaction_threshold(f64::INFINITY);
+        for round in 0..4u64 {
+            let batch = g.random_batch(0.1, 100 + round);
+            g.apply_batch(&batch).unwrap();
+        }
+        let flat = g.to_csr();
+        assert_eq!(GraphStore::num_edges(&g), flat.num_edges());
+        for v in 0..32u32 {
+            assert_eq!(GraphStore::in_degree(&g, v), flat.in_degree(v), "in v{v}");
+            assert_eq!(GraphStore::out_degree(&g, v), flat.out_degree(v), "out v{v}");
+            let mut row: Vec<VertexId> = GraphStore::in_neighbors(&g, v).collect();
+            row.sort_unstable();
+            assert_eq!(row, flat.in_neighbors(v), "row v{v}");
+            let mut outs: Vec<VertexId> = GraphStore::out_neighbors(&g, v).collect();
+            outs.sort_unstable();
+            assert_eq!(outs, flat.out_neighbors(v), "outs v{v}");
+        }
+    }
+}

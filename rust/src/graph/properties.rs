@@ -6,7 +6,7 @@
 //! computes that *diagonal locality score* plus the standard statistics
 //! reported in Table II.
 
-use crate::graph::{Csr, VertexId};
+use crate::graph::{Csr, GraphStore, VertexId};
 use crate::partition::{blocked, PartitionMap};
 use crate::util::rng::SplitMix64;
 
@@ -65,16 +65,21 @@ pub fn stats(g: &Csr) -> GraphStats {
 
 /// Fraction of edges internal to their in-degree-balanced block — the
 /// §IV-C predictor: high values (Web) mean threads consume their own
-/// updates and delaying writes cannot relieve contention.
-pub fn diagonal_locality(g: &Csr, parts: usize) -> f64 {
+/// updates and delaying writes cannot relieve contention. Generic over
+/// [`GraphStore`] (both executors seed adaptive-δ controllers from it),
+/// iterating pull rows vertex by vertex — on a static CSR that visits
+/// exactly the edges `Csr::edges` yields, in the same dst-major order.
+pub fn diagonal_locality<G: GraphStore>(g: &G, parts: usize) -> f64 {
     if g.num_edges() == 0 {
         return 0.0;
     }
     let pm = blocked::partition(g, parts);
     let mut internal = 0usize;
-    for (s, d, _) in g.edges() {
-        if pm.owner(s) == pm.owner(d) {
-            internal += 1;
+    for d in 0..g.num_vertices() as VertexId {
+        for s in g.in_neighbors(d) {
+            if pm.owner(s) == pm.owner(d) {
+                internal += 1;
+            }
         }
     }
     internal as f64 / g.num_edges() as f64

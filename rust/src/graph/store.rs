@@ -1,0 +1,205 @@
+//! The storage abstraction behind every engine read path.
+//!
+//! Both executors, the schedulers, the partitioners, and the algorithm
+//! layer read graphs exclusively through [`GraphStore`], so any storage
+//! backend that can answer neighbor queries plugs into the whole stack:
+//! the frozen [`Csr`](crate::graph::Csr) is the static impl, and
+//! [`VersionedGraph`](crate::graph::VersionedGraph) layers mutable
+//! insert/delete overlays on top of a CSR base (future backends — the
+//! ROADMAP's compressed and mmap stores — slot in the same way).
+//!
+//! Design constraints:
+//!
+//! * **Zero overhead on the static path.** Every consumer is generic
+//!   (`fn run<G: GraphStore>`), never `dyn`: calls monomorphize, and the
+//!   `Csr` impl delegates straight to the inherent slice accessors, so a
+//!   static-CSR run compiles to exactly the pre-trait code. `Csr` keeps
+//!   its inherent slice-returning methods — concrete call sites resolve
+//!   to those (inherent wins), only generic code sees the iterators.
+//! * **Iterator-shaped neighbor access.** Overlaid storage cannot hand
+//!   out one contiguous slice per row (a row is base-minus-tombstones
+//!   plus inserts), so the trait's neighbor methods return iterators.
+//!   [`GraphStore::in_neighbor_hint`] exposes a best-effort contiguous
+//!   slice *only* for software prefetch, where a stale or partial row is
+//!   harmless (hints have no architectural effect).
+//! * **`Sync`.** Both executors share the store across worker threads.
+
+use crate::graph::{Csr, VertexId};
+
+/// Read-only graph access: everything the engines, schedulers, and
+/// algorithms need, and nothing tied to one storage layout.
+///
+/// Implementations must present a consistent snapshot for the duration
+/// of a run: vertex/edge counts, degrees, and neighbor lists may not
+/// change while any engine holds the reference.
+pub trait GraphStore: Sync {
+    /// Number of vertices.
+    fn num_vertices(&self) -> usize;
+
+    /// Number of (directed) edges currently stored.
+    fn num_edges(&self) -> usize;
+
+    /// Whether edges carry weights.
+    fn is_weighted(&self) -> bool;
+
+    /// Whether the graph has undirected semantics (every edge paired
+    /// with its reverse).
+    fn is_symmetric(&self) -> bool;
+
+    /// In-degree of `v`.
+    fn in_degree(&self, v: VertexId) -> usize;
+
+    /// Out-degree of `v`.
+    fn out_degree(&self, v: VertexId) -> u32;
+
+    /// All out-degrees, indexed by vertex (PageRank divides each
+    /// neighbor's score by the *writer's* fan-out, so every backend
+    /// materializes this array).
+    fn out_degrees(&self) -> &[u32];
+
+    /// In-neighbors of `v`. Order is backend-defined; `Csr` yields its
+    /// sorted row, overlays yield surviving base entries then inserts.
+    fn in_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_;
+
+    /// In-neighbors of `v` zipped with edge weights. Panics if the
+    /// graph is unweighted (same contract as
+    /// [`Csr::in_neighbors_weighted`]).
+    fn in_neighbors_weighted(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u32)> + '_;
+
+    /// Out-neighbors of `v`. Call [`Self::ensure_out_edges`] before any
+    /// timed or multi-threaded region that uses this.
+    fn out_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_;
+
+    /// Best-effort contiguous slice of in-neighbor ids, for software
+    /// prefetch look-ahead only. May be shorter or longer than the true
+    /// neighbor iterator and may include ids of deleted edges — a
+    /// prefetch is a pure hint, so none of that affects results
+    /// ([`crate::engine::kernels::prefetch_ahead`] bounds-checks its
+    /// look-ahead).
+    fn in_neighbor_hint(&self, v: VertexId) -> &[VertexId];
+
+    /// Force any lazily built out-edge view to exist (no-op for
+    /// backends that keep it materialized).
+    fn ensure_out_edges(&self);
+
+    /// Mean in-degree.
+    fn avg_degree(&self) -> f64 {
+        let n = self.num_vertices();
+        if n == 0 {
+            0.0
+        } else {
+            self.num_edges() as f64 / n as f64
+        }
+    }
+}
+
+/// The static backend: delegates every method to the inherent `Csr`
+/// accessors, so generic consumers monomorphize to exactly the code
+/// concrete `&Csr` call sites compile to.
+impl GraphStore for Csr {
+    #[inline]
+    fn num_vertices(&self) -> usize {
+        Csr::num_vertices(self)
+    }
+
+    #[inline]
+    fn num_edges(&self) -> usize {
+        Csr::num_edges(self)
+    }
+
+    #[inline]
+    fn is_weighted(&self) -> bool {
+        Csr::is_weighted(self)
+    }
+
+    #[inline]
+    fn is_symmetric(&self) -> bool {
+        Csr::is_symmetric(self)
+    }
+
+    #[inline]
+    fn in_degree(&self, v: VertexId) -> usize {
+        Csr::in_degree(self, v)
+    }
+
+    #[inline]
+    fn out_degree(&self, v: VertexId) -> u32 {
+        Csr::out_degree(self, v)
+    }
+
+    #[inline]
+    fn out_degrees(&self) -> &[u32] {
+        Csr::out_degrees(self)
+    }
+
+    #[inline]
+    fn in_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        Csr::in_neighbors(self, v).iter().copied()
+    }
+
+    #[inline]
+    fn in_neighbors_weighted(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u32)> + '_ {
+        Csr::in_neighbors_weighted(self, v)
+    }
+
+    #[inline]
+    fn out_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        Csr::out_neighbors(self, v).iter().copied()
+    }
+
+    #[inline]
+    fn in_neighbor_hint(&self, v: VertexId) -> &[VertexId] {
+        Csr::in_neighbors(self, v)
+    }
+
+    #[inline]
+    fn ensure_out_edges(&self) {
+        Csr::ensure_out_edges(self)
+    }
+
+    #[inline]
+    fn avg_degree(&self) -> f64 {
+        Csr::avg_degree(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// A generic consumer: total weight of all in-edges of all vertices,
+    /// reading exclusively through the trait.
+    fn total_weight<G: GraphStore>(g: &G) -> u64 {
+        (0..g.num_vertices() as VertexId)
+            .map(|v| g.in_neighbors_weighted(v).map(|(_, w)| w as u64).sum::<u64>())
+            .sum()
+    }
+
+    #[test]
+    fn csr_trait_view_matches_inherent() {
+        let g = GraphBuilder::new(4).weighted_edges(&[(0, 1, 7), (2, 1, 3), (1, 3, 9), (3, 0, 2)]).build();
+        assert_eq!(GraphStore::num_vertices(&g), g.num_vertices());
+        assert_eq!(GraphStore::num_edges(&g), g.num_edges());
+        assert!(GraphStore::is_weighted(&g));
+        for v in 0..4u32 {
+            let inherent: Vec<VertexId> = g.in_neighbors(v).to_vec();
+            let through_trait: Vec<VertexId> = GraphStore::in_neighbors(&g, v).collect();
+            assert_eq!(inherent, through_trait, "v{v}");
+            let out_inherent: Vec<VertexId> = g.out_neighbors(v).to_vec();
+            let out_trait: Vec<VertexId> = GraphStore::out_neighbors(&g, v).collect();
+            assert_eq!(out_inherent, out_trait, "v{v}");
+            assert_eq!(GraphStore::in_neighbor_hint(&g, v), g.in_neighbors(v), "v{v}");
+            assert_eq!(GraphStore::in_degree(&g, v), g.in_degree(v), "v{v}");
+            assert_eq!(GraphStore::out_degree(&g, v), g.out_degree(v), "v{v}");
+        }
+        assert_eq!(total_weight(&g), 7 + 3 + 9 + 2);
+    }
+
+    #[test]
+    fn generic_consumers_accept_csr() {
+        let g = GraphBuilder::new(3).weighted_edges(&[(0, 1, 1), (1, 2, 1)]).build();
+        assert_eq!(total_weight(&g), 2);
+        assert!(GraphStore::avg_degree(&g) > 0.0);
+    }
+}

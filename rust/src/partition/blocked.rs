@@ -7,11 +7,13 @@
 //! measured as `in_degree + 1` so that vertex-value writes count too and
 //! zero-degree stretches don't collapse into one giant block.
 
-use crate::graph::{Csr, VertexId};
+use crate::graph::{Csr, GraphStore, VertexId};
 use crate::partition::PartitionMap;
 
 /// Partition `g` into `parts` contiguous in-degree-balanced blocks.
-pub fn partition(g: &Csr, parts: usize) -> PartitionMap {
+/// Generic over [`GraphStore`], so overlays partition the same way the
+/// static CSR does (by *current* in-degrees, deltas included).
+pub fn partition<G: GraphStore>(g: &G, parts: usize) -> PartitionMap {
     assert!(parts >= 1);
     let n = g.num_vertices();
     let total_work: u64 = g.num_edges() as u64 + n as u64;

@@ -3,11 +3,11 @@
 //! work; comparing it against [`crate::partition::blocked`] quantifies
 //! how much the paper's in-degree balancing matters.
 
-use crate::graph::Csr;
+use crate::graph::GraphStore;
 use crate::partition::PartitionMap;
 
 /// Split `0..n` into `parts` near-equal contiguous ranges.
-pub fn partition(g: &Csr, parts: usize) -> PartitionMap {
+pub fn partition<G: GraphStore>(g: &G, parts: usize) -> PartitionMap {
     partition_n(g.num_vertices(), parts)
 }
 

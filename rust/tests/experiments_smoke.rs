@@ -176,6 +176,29 @@ fn batch_experiment() {
 }
 
 #[test]
+fn mutate_experiment() {
+    let dir = tmpdir("mutate");
+    experiments::run("mutate", &opts(&dir)).unwrap();
+    let csv = std::fs::read_to_string(std::path::Path::new(&dir).join("mutate.csv")).unwrap();
+    // 2 algorithms × 4 modes × 3 schedules + header.
+    assert_eq!(csv.lines().count(), 25, "{csv}");
+    let cell = |l: &str, i: usize| l.split(',').nth(i).unwrap().to_string();
+    for l in csv.lines().skip(1) {
+        assert!(cell(l, 3).parse::<usize>().is_ok(), "full rounds must be numeric: {l}");
+        assert!(cell(l, 5).parse::<usize>().is_ok(), "resumed rounds must be numeric: {l}");
+        let speedup: f64 = l.rsplit(',').next().unwrap().trim_end_matches('x').parse().unwrap();
+        assert!(speedup > 0.0, "{l}");
+    }
+    // The acceptance bar: with a frontier schedule the resumed run only
+    // sweeps mutation-touched vertices, so SSSP must beat full recompute
+    // in every mode.
+    for l in csv.lines().skip(1).filter(|l| cell(l, 0) == "sssp" && cell(l, 2) == "frontier") {
+        let speedup: f64 = l.rsplit(',').next().unwrap().trim_end_matches('x').parse().unwrap();
+        assert!(speedup > 1.0, "resumed sssp must win under frontier scheduling: {l}");
+    }
+}
+
+#[test]
 fn autotune_validation_runs() {
     let dir = tmpdir("autotune");
     experiments::run("autotune", &opts(&dir)).unwrap();
