@@ -457,6 +457,78 @@ fn main() {
     std::fs::write("BENCH_mutate.json", mutate_doc.to_string()).expect("write BENCH_mutate.json");
     println!("wrote BENCH_mutate.json");
 
+    bench::section("serve: always-on query serving, closed + open loop (native wall clock, 4 threads)");
+    // The whole serving path — admission, FIFO lane packing, the
+    // resident engine, version-keyed cache, per-query reply — driven
+    // closed-loop per lane width (throughput = capacity) plus one
+    // open-loop point at ~2x the measured k=8 capacity to exercise
+    // backpressure drops. Results land in BENCH_serve.json so the
+    // serving throughput/latency trajectory is recorded across PRs.
+    {
+        use daig::graph::VersionedGraph;
+        use daig::serve::{loadgen, LoadReport, LoadSpec, QueryServer, ServeConfig};
+        let serve_queries = 32;
+        let serve_ecfg = EngineConfig::new(4, ExecutionMode::Asynchronous);
+        let run_load = |k: usize, spec: &LoadSpec| -> LoadReport {
+            let server = QueryServer::start(
+                VersionedGraph::new(kron_w.clone()),
+                ServeConfig::new(k, serve_ecfg.clone()),
+            );
+            let report = loadgen::run(&server, kron_w.num_vertices(), spec);
+            server.shutdown();
+            report
+        };
+        let mut serve_json: Vec<(String, Json)> = Vec::new();
+        let mut qps_k1 = 0.0f64;
+        let mut qps_k8 = 0.0f64;
+        for k in [1usize, 4, 8] {
+            let report = run_load(k, &LoadSpec::closed(2 * k, serve_queries, 0x5EED));
+            println!(
+                "closed k={k}: {:.1} q/s, p50={:.1}ms p99={:.1}ms ({} cached)",
+                report.qps,
+                report.hist.percentile_secs(0.50) * 1e3,
+                report.hist.percentile_secs(0.99) * 1e3,
+                report.cached
+            );
+            if k == 1 {
+                qps_k1 = report.qps;
+            } else {
+                println!("  -> {:.2}x queries/s vs k=1", report.qps / qps_k1);
+            }
+            if k == 8 {
+                qps_k8 = report.qps;
+            }
+            serve_json.push((format!("closed_k{k}"), report.to_json()));
+        }
+        // Open loop offered at ~2x the k=8 closed-loop capacity: drops
+        // (not queue growth) must absorb the overload.
+        let offered = (qps_k8 * 2.0).max(50.0);
+        let open = run_load(8, &LoadSpec::open(offered, serve_queries, 0x5EED));
+        println!(
+            "open k=8 @{offered:.0} qps offered: served={} dropped={} p99={:.1}ms",
+            open.served,
+            open.rejected,
+            open.hist.percentile_secs(0.99) * 1e3
+        );
+        serve_json.push(("open_k8_2x".into(), open.to_json()));
+        // Serve-while-mutating: closed loop with a mutation batch every
+        // 8 queries (cache invalidation + overlay reads under load).
+        let churn = run_load(8, &LoadSpec::closed(16, serve_queries, 0x5EED).with_mutations(8, 0.01));
+        println!("closed k=8 + mutations: {:.1} q/s, {} batches applied", churn.qps, churn.mutations);
+        serve_json.push(("closed_k8_mutating".into(), churn.to_json()));
+        let serve_doc = Json::obj(vec![
+            ("bench", Json::Str("serve".into())),
+            ("scale", Json::Num(scale as f64)),
+            ("threads", Json::Num(4.0)),
+            ("mode", Json::Str("async".into())),
+            ("graph", Json::Str("kron".into())),
+            ("queries", Json::Num(serve_queries as f64)),
+            ("loads", Json::Obj(serve_json.into_iter().collect())),
+        ]);
+        std::fs::write("BENCH_serve.json", serve_doc.to_string()).expect("write BENCH_serve.json");
+        println!("wrote BENCH_serve.json");
+    }
+
     bench::section("PJRT dense-block step (L1/L2 artifact path)");
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = daig::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();

@@ -14,9 +14,12 @@
 //! | `adaptive` | online δ controller vs exhaustive static sweep (§V online) | [`adaptive`] |
 //! | `batch` | multi-query lanes: queries/sec vs batch size k (serving) | [`batch`] |
 //! | `mutate` | incremental recompute latency after edge mutations (overlays) | [`mutate`] |
+//! | `serve` | always-on serving: queries/sec + p50/p99 vs lane width k | [`serve`] |
 //!
 //! All drivers run on the simulator (DESIGN.md §3: deterministic stand-in
-//! for the paper's 32/112-thread machines).
+//! for the paper's 32/112-thread machines) — except [`serve`], which
+//! drives the real-thread [`crate::serve::QueryServer`] because the
+//! simulator has no always-on server.
 
 use anyhow::{bail, Result};
 
@@ -70,10 +73,11 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "adaptive" => adaptive(opts),
         "batch" => batch(opts),
         "mutate" => mutate(opts),
+        "serve" => serve(opts),
         "all" => {
             let ids = [
                 "table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune", "schedule",
-                "steal", "adaptive", "batch", "mutate",
+                "steal", "adaptive", "batch", "mutate", "serve",
             ];
             for id in ids {
                 run(id, opts)?;
@@ -242,6 +246,48 @@ pub fn mutate(opts: &ExpOptions) -> Result<()> {
         }
     }
     opts.report.emit("mutate", &t)
+}
+
+/// Serving dimension (beyond the paper): the always-on
+/// [`crate::serve::QueryServer`] driven closed-loop at each lane width,
+/// reporting wall-clock queries/sec and the p50/p99 latency columns.
+/// Unlike [`batch`] (one pre-formed batch on the simulator), this
+/// measures the whole serving path — admission, FIFO lane packing,
+/// cache lookups, per-query reply — on real threads. The acceptance
+/// bar (asserted by the experiment smoke): async-mode k=8 must serve
+/// ≥2x the queries/sec of k=1, the end-to-end form of the batch
+/// experiment's lane-amortization bar.
+pub fn serve(opts: &ExpOptions) -> Result<()> {
+    // Native wall clock: threads sized for CI machines, not the
+    // simulated 32-thread Haswell.
+    let threads = 4;
+    let queries = 48;
+    let seed = 0x5E21;
+    let graph = opts.graph(GapGraph::Kron, Algo::Sssp);
+    let mut t = Table::new(
+        "Serve — always-on query serving, queries/sec vs lane width (native, 4 threads, kron)",
+        &["mode", "k", "served", "cached", "rejected", "elapsed", "queries/s", "p50", "p99", "speedup vs k=1"],
+    );
+    for mode in [ExecutionMode::Asynchronous, ExecutionMode::Delayed(64)] {
+        let base = EngineConfig::new(threads, mode);
+        let pts = sweep::serve_throughput(&graph, &base, &[1, 2, 4, 8], queries, seed);
+        let base_qps = pts[0].queries_per_s;
+        for p in &pts {
+            t.row(vec![
+                mode.label(),
+                p.k.to_string(),
+                p.served.to_string(),
+                p.cached.to_string(),
+                p.rejected.to_string(),
+                fmt::secs(p.elapsed_s),
+                format!("{:.1}", p.queries_per_s),
+                fmt::secs(p.p50_s),
+                fmt::secs(p.p99_s),
+                format!("{:.2}x", p.queries_per_s / base_qps),
+            ]);
+        }
+    }
+    opts.report.emit("serve", &t)
 }
 
 /// Schedule dimension (beyond the paper): dense vs frontier vs adaptive

@@ -196,6 +196,57 @@ pub fn batch_throughput<G: GraphStore>(
         .collect()
 }
 
+/// One point of a serving-throughput sweep ([`serve_throughput`]).
+#[derive(Debug, Clone)]
+pub struct ServePoint {
+    /// Lane-group width the server packed toward.
+    pub k: usize,
+    /// Queries answered (engine + cache).
+    pub served: u64,
+    /// Of `served`, answered from the result cache.
+    pub cached: u64,
+    /// Submits rejected by backpressure (closed loop retries them).
+    pub rejected: u64,
+    /// Wall-clock seconds for the whole load run.
+    pub elapsed_s: f64,
+    /// The serving headline: served / elapsed.
+    pub queries_per_s: f64,
+    /// Client-observed median latency, seconds.
+    pub p50_s: f64,
+    /// Client-observed tail latency, seconds.
+    pub p99_s: f64,
+}
+
+/// Serving throughput across lane widths: for each `k` in `ks`, start a
+/// [`QueryServer`](crate::serve::QueryServer) over a fresh overlay of
+/// `g`, drive it closed-loop (`2k` clients, so every group can fill)
+/// with `queries` mixed SSSP/PPR queries deterministic in `seed`, and
+/// report wall-clock queries/sec with the p50/p99 SLO columns. `g` must
+/// be weighted (the mixed stream includes SSSP). This is the native
+/// wall-clock analog of [`batch_throughput`]: the simulator has no
+/// always-on server, so serving numbers are real-thread numbers.
+pub fn serve_throughput(g: &Csr, base: &EngineConfig, ks: &[usize], queries: usize, seed: u64) -> Vec<ServePoint> {
+    use crate::serve::{loadgen, LoadSpec, QueryServer, ServeConfig};
+    assert!(g.is_weighted(), "serve_throughput needs a weighted graph (the query mix includes SSSP)");
+    ks.iter()
+        .map(|&k| {
+            let server = QueryServer::start(VersionedGraph::new(g.clone()), ServeConfig::new(k, base.clone()));
+            let report = loadgen::run(&server, g.num_vertices(), &LoadSpec::closed(2 * k, queries, seed));
+            server.shutdown();
+            ServePoint {
+                k,
+                served: report.served,
+                cached: report.cached,
+                rejected: report.rejected,
+                elapsed_s: report.elapsed_s,
+                queries_per_s: report.qps,
+                p50_s: report.hist.percentile_secs(0.50),
+                p99_s: report.hist.percentile_secs(0.99),
+            }
+        })
+        .collect()
+}
+
 /// One cell of the [`mutation_latency`] grid: update-to-fresh-result
 /// latency of incremental recomputation vs full recomputation after an
 /// edge-mutation batch, at one mode × schedule.
@@ -390,6 +441,19 @@ mod tests {
         let pr = batch_throughput(&g, Algo::PageRank, &Machine::haswell(), &base, &[4]);
         assert_eq!(pr[0].k, 4);
         assert!(pr[0].queries_per_s > 0.0);
+    }
+
+    #[test]
+    fn serve_throughput_reports_per_k_points() {
+        let g = GapGraph::Kron.generate_weighted(8, 8);
+        let base = EngineConfig::new(2, ExecutionMode::Asynchronous);
+        let pts = serve_throughput(&g, &base, &[1, 4], 12, 7);
+        assert_eq!((pts[0].k, pts[1].k), (1, 4));
+        for p in &pts {
+            assert_eq!(p.served, 12, "closed loop serves every query at k={}", p.k);
+            assert!(p.queries_per_s > 0.0 && p.elapsed_s > 0.0);
+            assert!(p.p99_s >= p.p50_s, "percentiles are monotone");
+        }
     }
 
     #[test]

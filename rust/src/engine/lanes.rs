@@ -74,6 +74,78 @@ pub fn for_each_live<F: FnMut(usize)>(mask: u32, mut f: F) {
     }
 }
 
+/// Lane occupancy tracker for serving workloads
+/// ([`crate::serve`]): `k` lane slots, each either free or holding an
+/// opaque query id, with a **FIFO freelist** — lanes are refilled in
+/// the order they were freed, so no query's lane is double-assigned
+/// and a long-running occupant never blocks the rotation of the
+/// others. The serve-path batch former packs admitted queries into
+/// slots handed out by this allocator; the packing invariants (no
+/// double assignment, FIFO refill, legal lane counts only) are
+/// property-tested in `rust/tests/prop_serve.rs`.
+#[derive(Debug, Clone)]
+pub struct LaneSlots {
+    /// Occupant query id per lane (`None` = free).
+    occupant: Vec<Option<u64>>,
+    /// Free lane indices, oldest-freed first.
+    free: std::collections::VecDeque<usize>,
+}
+
+impl LaneSlots {
+    /// Allocator over `k` lanes, all free. Panics unless `k` is a
+    /// legal lane count ([`valid_lane_count`]): slots exist to feed
+    /// the lane engine, so an unservable width is a caller bug.
+    pub fn new(k: usize) -> Self {
+        assert!(valid_lane_count(k), "{k} is not a legal lane count (1, 2, 4, 8, or 16)");
+        Self { occupant: vec![None; k], free: (0..k).collect() }
+    }
+
+    /// Total lanes (free + occupied).
+    pub fn lanes(&self) -> usize {
+        self.occupant.len()
+    }
+
+    /// Currently free lanes.
+    pub fn free_lanes(&self) -> usize {
+        self.free.len()
+    }
+
+    /// Currently occupied lanes.
+    pub fn occupied(&self) -> usize {
+        self.lanes() - self.free_lanes()
+    }
+
+    /// Occupant of `lane`, if any.
+    pub fn occupant(&self, lane: usize) -> Option<u64> {
+        self.occupant[lane]
+    }
+
+    /// Bitmask of occupied lanes (lane l = bit l), the engine's
+    /// live-mask convention ([`full_mask`]).
+    pub fn live_mask(&self) -> u32 {
+        self.occupant.iter().enumerate().fold(0u32, |m, (l, o)| if o.is_some() { m | (1 << l) } else { m })
+    }
+
+    /// Assign the oldest-freed lane to query `id`; `None` when every
+    /// lane is occupied.
+    pub fn assign(&mut self, id: u64) -> Option<usize> {
+        let lane = self.free.pop_front()?;
+        debug_assert!(self.occupant[lane].is_none(), "freelist handed out an occupied lane");
+        self.occupant[lane] = Some(id);
+        Some(lane)
+    }
+
+    /// Free `lane`, returning the query id it held. The lane goes to
+    /// the **back** of the freelist (FIFO refill). Panics if the lane
+    /// was already free — releasing twice is how double assignment
+    /// starts, so it fails loudly.
+    pub fn release(&mut self, lane: usize) -> u64 {
+        let id = self.occupant[lane].take().unwrap_or_else(|| panic!("lane {lane} released while free"));
+        self.free.push_back(lane);
+        id
+    }
+}
+
 /// Read access to whole lane groups — the batched twin of
 /// [`super::program::ValueReader`]. Implementations mirror the
 /// single-lane readers: the shared global array (native), the sync-mode
@@ -145,6 +217,41 @@ mod tests {
         for_each_live(0b1011, |l| seen.push(l));
         assert_eq!(seen, vec![0, 1, 3]);
         for_each_live(0, |_| panic!("empty mask must not visit"));
+    }
+
+    #[test]
+    fn slots_fifo_refill() {
+        let mut s = LaneSlots::new(4);
+        assert_eq!((s.lanes(), s.free_lanes(), s.occupied()), (4, 4, 0));
+        let a = s.assign(10).unwrap();
+        let b = s.assign(11).unwrap();
+        let c = s.assign(12).unwrap();
+        let d = s.assign(13).unwrap();
+        assert_eq!(vec![a, b, c, d], vec![0, 1, 2, 3], "fresh slots hand out lanes in order");
+        assert_eq!(s.assign(14), None, "full");
+        assert_eq!(s.live_mask(), 0b1111);
+        // Free out of order: refill must follow the *free* order.
+        assert_eq!(s.release(2), 12);
+        assert_eq!(s.release(0), 10);
+        assert_eq!(s.live_mask(), 0b1010);
+        assert_eq!(s.assign(20), Some(2), "lane 2 freed first, refilled first");
+        assert_eq!(s.assign(21), Some(0));
+        assert_eq!(s.occupant(2), Some(20));
+    }
+
+    #[test]
+    #[should_panic(expected = "released while free")]
+    fn double_release_rejected() {
+        let mut s = LaneSlots::new(2);
+        let l = s.assign(1).unwrap();
+        s.release(l);
+        s.release(l);
+    }
+
+    #[test]
+    #[should_panic(expected = "not a legal lane count")]
+    fn slots_reject_illegal_width() {
+        let _ = LaneSlots::new(3);
     }
 
     #[test]

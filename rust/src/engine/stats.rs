@@ -114,6 +114,17 @@ impl RunResult {
         self.rounds.iter().filter_map(|r| r.lane_deltas.get(l).copied()).collect()
     }
 
+    /// The round after which lane `l` went quiet — its last round with
+    /// a non-zero residual (0 for a lane that never produced an
+    /// update). This is each query's *settle point*: the serving layer
+    /// reports it per query, and the gap between a lane's settle round
+    /// and [`Self::num_rounds`] is iteration the per-lane drop-out
+    /// saved it from paying.
+    pub fn lane_settle_round(&self, l: usize) -> usize {
+        let trace = self.lane_delta_trace(l);
+        trace.iter().rposition(|&d| d != 0.0).map_or(0, |i| i + 1)
+    }
+
     /// Thread `t`'s per-round δ under the adaptive controller (empty for
     /// non-adaptive runs or out-of-range `t`).
     pub fn delta_trace_of(&self, t: usize) -> Vec<usize> {

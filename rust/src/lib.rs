@@ -24,6 +24,7 @@
 //! | [`engine`] | the three execution modes over a [`engine::VertexProgram`]: a real threaded executor and a deterministic multicore cache simulator |
 //! | [`algorithms`] | PageRank, Bellman-Ford SSSP, connected components, BFS + serial oracles |
 //! | [`runtime`] | PJRT loader for the AOT-compiled JAX/Pallas dense-block kernels |
+//! | [`serve`] | always-on batched query serving: admission, lane packing, version-keyed result cache, latency SLOs, load generation |
 //! | [`coordinator`] | experiment orchestration regenerating every table/figure of the paper |
 //! | [`util`] | in-tree substrates: deterministic RNG, aligned buffers, JSON, CLI, table formatting |
 //! | [`prop`] | in-tree property-based testing mini-framework |
@@ -52,6 +53,7 @@ pub mod graph;
 pub mod partition;
 pub mod prop;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Cache line size (bytes) assumed throughout: both evaluation platforms in

@@ -1,0 +1,226 @@
+//! The batch former: bounded admission + FIFO packing into lane groups.
+//!
+//! Arriving queries enter a bounded FIFO admission queue; when the
+//! queue is full, [`BatchFormer::admit`] rejects with the item handed
+//! back — that rejection *is* the backpressure signal, surfaced to
+//! clients as [`crate::serve::SubmitError::Overloaded`] so a closed
+//! loop retries and an open loop counts a drop instead of queueing
+//! unboundedly.
+//!
+//! [`BatchFormer::form`] packs the next lane group: it takes the
+//! oldest waiting query's [`QueryClass`] (a lane group runs one vertex
+//! program, so SSSP and PPR queries can never share a group), collects
+//! same-class queries in FIFO order, and sizes the group to the
+//! **largest legal lane count** that the free lanes and the same-class
+//! backlog support — lane counts must divide a cache line
+//! ([`lanes::valid_lane_count`]), so 3 waiting queries form a group of
+//! 2 and leave one queued rather than pad a dead lane. Lane indices
+//! come from the engine's [`LaneSlots`] allocator, whose freelist is
+//! FIFO: lanes freed by per-lane convergence drop-out are refilled in
+//! the order they were freed.
+//!
+//! Invariants (property-tested in `rust/tests/prop_serve.rs`):
+//!
+//! * a lane is never assigned to two in-flight queries;
+//! * freed lanes are refilled in FIFO order;
+//! * every formed group's size is a legal lane count (divides a cache
+//!   line);
+//! * admission never exceeds the configured queue bound.
+
+use std::collections::VecDeque;
+
+use super::query::QueryClass;
+use crate::engine::lanes::{self, LaneSlots};
+
+/// Backpressure: the admission queue is full. Carries the rejected
+/// item back to the caller so nothing is silently dropped.
+#[derive(Debug)]
+pub struct QueueFull<T>(pub T);
+
+/// One formed lane group, ready to run as a single engine generation.
+#[derive(Debug)]
+pub struct FormedBatch<T> {
+    /// Algorithm class every member shares.
+    pub class: QueryClass,
+    /// Lane index per member (from [`LaneSlots`]; release after the
+    /// run via [`BatchFormer::release`]).
+    pub lanes: Vec<usize>,
+    /// The members, FIFO order.
+    pub items: Vec<T>,
+}
+
+/// Bounded admission queue + lane packer (see module docs).
+#[derive(Debug)]
+pub struct BatchFormer<T> {
+    /// Admission bound (pending queries, not in-flight lanes).
+    capacity: usize,
+    /// FIFO admission queue: `(sequence, class, payload)`.
+    queue: VecDeque<(u64, QueryClass, T)>,
+    /// Lane occupancy (FIFO freelist).
+    slots: LaneSlots,
+    /// Monotone admission sequence, doubling as the slot occupant id.
+    next_seq: u64,
+}
+
+impl<T> BatchFormer<T> {
+    /// Former over `k` lanes with an admission queue bounded at
+    /// `capacity` queries. Panics unless `k` is a legal lane count and
+    /// `capacity > 0`.
+    pub fn new(k: usize, capacity: usize) -> Self {
+        assert!(capacity > 0, "admission queue needs capacity >= 1");
+        Self { capacity, queue: VecDeque::new(), slots: LaneSlots::new(k), next_seq: 0 }
+    }
+
+    /// Lane-group width this former packs toward.
+    pub fn lanes(&self) -> usize {
+        self.slots.lanes()
+    }
+
+    /// Admission queue bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Queries waiting for a lane.
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Lanes currently running queries (assigned, not yet released).
+    pub fn in_flight(&self) -> usize {
+        self.slots.occupied()
+    }
+
+    /// Whether there is nothing waiting *and* nothing in flight.
+    pub fn is_idle(&self) -> bool {
+        self.queue.is_empty() && self.slots.occupied() == 0
+    }
+
+    /// Enqueue a query, or reject it (handing it back) when the queue
+    /// is at capacity — the backpressure path.
+    pub fn admit(&mut self, class: QueryClass, item: T) -> Result<(), QueueFull<T>> {
+        if self.queue.len() >= self.capacity {
+            return Err(QueueFull(item));
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.queue.push_back((seq, class, item));
+        Ok(())
+    }
+
+    /// Largest legal lane count `<= want`, bounded by the group width
+    /// (`0` when `want == 0`).
+    fn widest_group(&self, want: usize) -> usize {
+        let mut best = 0;
+        for g in lanes::LANE_COUNTS {
+            if g <= want && g <= self.slots.lanes() && g > best {
+                best = g;
+            }
+        }
+        best
+    }
+
+    /// Pack the next lane group, or `None` when nothing can form (no
+    /// pending queries, or no free lanes). Takes the oldest query's
+    /// class, gathers same-class queries FIFO, and sizes the group to
+    /// the largest legal lane count those queries and the free lanes
+    /// allow. Queries of the *other* class stay queued in order for a
+    /// later group.
+    pub fn form(&mut self) -> Option<FormedBatch<T>> {
+        let (_, class, _) = self.queue.front()?;
+        let class = *class;
+        let same: usize = self.queue.iter().filter(|(_, c, _)| *c == class).count();
+        let group = self.widest_group(same.min(self.slots.free_lanes()));
+        if group == 0 {
+            return None;
+        }
+        let mut lanes_out = Vec::with_capacity(group);
+        let mut items = Vec::with_capacity(group);
+        let mut i = 0;
+        while items.len() < group {
+            if self.queue[i].1 == class {
+                let (seq, _, item) = self.queue.remove(i).expect("index in bounds");
+                let lane = self.slots.assign(seq).expect("free lanes were counted above");
+                lanes_out.push(lane);
+                items.push(item);
+            } else {
+                i += 1;
+            }
+        }
+        Some(FormedBatch { class, lanes: lanes_out, items })
+    }
+
+    /// Release a finished group's lanes back to the FIFO freelist
+    /// (call once per formed batch, after its engine run completes).
+    pub fn release(&mut self, lanes: &[usize]) {
+        for &l in lanes {
+            self.slots.release(l);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packs_fifo_and_sizes_legally() {
+        let mut f: BatchFormer<u32> = BatchFormer::new(8, 64);
+        for i in 0..3 {
+            f.admit(QueryClass::Sssp, i).unwrap();
+        }
+        // 3 pending -> group of 2 (largest legal <= 3), FIFO members.
+        let b = f.form().unwrap();
+        assert_eq!(b.class, QueryClass::Sssp);
+        assert_eq!(b.items, vec![0, 1]);
+        assert_eq!(b.lanes.len(), 2);
+        assert!(lanes::valid_lane_count(b.lanes.len()));
+        assert_eq!(f.pending(), 1);
+        assert_eq!(f.in_flight(), 2);
+        // The straggler forms a singleton group on the next call.
+        let b2 = f.form().unwrap();
+        assert_eq!(b2.items, vec![2]);
+        assert!(f.form().is_none(), "nothing left to pack");
+        f.release(&b.lanes);
+        f.release(&b2.lanes);
+        assert!(f.is_idle());
+    }
+
+    #[test]
+    fn classes_never_share_a_group() {
+        let mut f: BatchFormer<&str> = BatchFormer::new(4, 64);
+        f.admit(QueryClass::Sssp, "s0").unwrap();
+        f.admit(QueryClass::Ppr, "p0").unwrap();
+        f.admit(QueryClass::Sssp, "s1").unwrap();
+        f.admit(QueryClass::Ppr, "p1").unwrap();
+        let b = f.form().unwrap();
+        assert_eq!((b.class, b.items.clone()), (QueryClass::Sssp, vec!["s0", "s1"]));
+        let b2 = f.form().unwrap();
+        assert_eq!((b2.class, b2.items.clone()), (QueryClass::Ppr, vec!["p0", "p1"]));
+    }
+
+    #[test]
+    fn admission_is_bounded() {
+        let mut f: BatchFormer<u32> = BatchFormer::new(4, 2);
+        f.admit(QueryClass::Sssp, 0).unwrap();
+        f.admit(QueryClass::Sssp, 1).unwrap();
+        let QueueFull(back) = f.admit(QueryClass::Sssp, 2).unwrap_err();
+        assert_eq!(back, 2, "the rejected item comes back to the caller");
+        // Forming drains the queue, re-opening admission.
+        let b = f.form().unwrap();
+        assert_eq!(b.items.len(), 2);
+        f.admit(QueryClass::Sssp, 3).unwrap();
+    }
+
+    #[test]
+    fn no_free_lanes_means_no_group() {
+        let mut f: BatchFormer<u32> = BatchFormer::new(1, 8);
+        f.admit(QueryClass::Sssp, 0).unwrap();
+        f.admit(QueryClass::Sssp, 1).unwrap();
+        let b = f.form().unwrap();
+        assert_eq!(b.items, vec![0]);
+        assert!(f.form().is_none(), "the single lane is in flight");
+        f.release(&b.lanes);
+        assert_eq!(f.form().unwrap().items, vec![1]);
+    }
+}

@@ -1,0 +1,182 @@
+//! Version-keyed result cache.
+//!
+//! Keys are [`QueryKey`]s — `(algorithm, source/teleport-set,
+//! GraphVersion)` — so a lookup at the *current* graph version can
+//! never return an answer computed against a mutated-away graph:
+//! correctness is in the key, not in invalidation timing. Invalidation
+//! ([`ResultCache::invalidate_older_than`]) is still run after every
+//! [`crate::graph::VersionedGraph::apply_batch`], but for memory, not
+//! correctness — entries at superseded versions can never hit again,
+//! so they are garbage the moment the version bumps (including the
+//! compaction case: a batch that compacts the overlay back into a
+//! fresh CSR purges every pre-compaction entry like any other bump).
+//!
+//! Capacity is bounded with FIFO eviction (oldest insert first): a
+//! serving cache's job is absorbing *repeat* traffic between
+//! mutations, and between invalidation sweeps FIFO ≈ LRU at a fraction
+//! of the bookkeeping.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
+
+use super::query::{QueryKey, QueryOutput};
+use crate::graph::GraphVersion;
+
+/// Hit/miss/eviction counters (monotone since server start).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that fell through to the engine.
+    pub misses: u64,
+    /// Entries dropped by capacity eviction.
+    pub evictions: u64,
+    /// Entries dropped by version invalidation.
+    pub invalidated: u64,
+}
+
+/// Bounded, version-keyed answer cache (see module docs).
+#[derive(Debug)]
+pub struct ResultCache {
+    capacity: usize,
+    map: HashMap<QueryKey, Arc<QueryOutput>>,
+    /// Insertion order for FIFO eviction.
+    order: VecDeque<QueryKey>,
+    stats: CacheStats,
+}
+
+impl ResultCache {
+    /// Cache holding at most `capacity` answers (`0` disables caching:
+    /// every lookup misses, every insert is dropped).
+    pub fn new(capacity: usize) -> Self {
+        Self { capacity, map: HashMap::new(), order: VecDeque::new(), stats: CacheStats::default() }
+    }
+
+    /// Entries currently held.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Whether the cache holds nothing.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Look up an answer, counting the hit or miss.
+    pub fn get(&mut self, key: &QueryKey) -> Option<Arc<QueryOutput>> {
+        match self.map.get(key) {
+            Some(v) => {
+                self.stats.hits += 1;
+                Some(Arc::clone(v))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert an answer, evicting the oldest entries past capacity.
+    /// Re-inserting a present key refreshes the value without growing
+    /// the cache.
+    pub fn insert(&mut self, key: QueryKey, value: Arc<QueryOutput>) {
+        if self.capacity == 0 {
+            return;
+        }
+        if self.map.insert(key.clone(), value).is_none() {
+            self.order.push_back(key);
+        }
+        while self.map.len() > self.capacity {
+            let oldest = self.order.pop_front().expect("order tracks every resident key");
+            if self.map.remove(&oldest).is_some() {
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
+    /// Drop every entry whose version is older than `version`,
+    /// returning how many were dropped. Run after each applied
+    /// mutation batch (compactions included): superseded entries can
+    /// never hit again, so no stale entry survives to occupy capacity.
+    pub fn invalidate_older_than(&mut self, version: GraphVersion) -> usize {
+        let before = self.map.len();
+        self.map.retain(|k, _| k.version >= version);
+        self.order.retain(|k| k.version >= version);
+        let dropped = before - self.map.len();
+        self.stats.invalidated += dropped as u64;
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::query::Query;
+
+    fn key(src: u32, v: u64) -> QueryKey {
+        Query::Sssp { source: src }.key(GraphVersion(v))
+    }
+
+    fn val(d: u32) -> Arc<QueryOutput> {
+        Arc::new(QueryOutput::Distances(vec![d]))
+    }
+
+    #[test]
+    fn hit_on_repeat_miss_after_version_bump() {
+        let mut c = ResultCache::new(8);
+        assert!(c.get(&key(1, 0)).is_none(), "cold cache misses");
+        c.insert(key(1, 0), val(7));
+        let got = c.get(&key(1, 0)).expect("repeat query hits");
+        assert_eq!(*got, QueryOutput::Distances(vec![7]));
+        // Same query at the next version is a different key: miss.
+        assert!(c.get(&key(1, 1)).is_none());
+        assert_eq!(c.stats(), CacheStats { hits: 1, misses: 3, evictions: 0, invalidated: 0 });
+    }
+
+    #[test]
+    fn invalidation_drops_only_older_versions() {
+        let mut c = ResultCache::new(8);
+        c.insert(key(1, 0), val(1));
+        c.insert(key(2, 0), val(2));
+        c.insert(key(3, 1), val(3));
+        assert_eq!(c.invalidate_older_than(GraphVersion(1)), 2);
+        assert_eq!(c.len(), 1);
+        assert!(c.get(&key(3, 1)).is_some());
+        assert!(c.get(&key(1, 0)).is_none(), "no stale entry survives");
+        assert_eq!(c.stats().invalidated, 2);
+    }
+
+    #[test]
+    fn fifo_eviction_respects_capacity() {
+        let mut c = ResultCache::new(2);
+        c.insert(key(1, 0), val(1));
+        c.insert(key(2, 0), val(2));
+        c.insert(key(3, 0), val(3));
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&key(1, 0)).is_none(), "oldest insert evicted first");
+        assert!(c.get(&key(2, 0)).is_some() && c.get(&key(3, 0)).is_some());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_growth() {
+        let mut c = ResultCache::new(2);
+        c.insert(key(1, 0), val(1));
+        c.insert(key(1, 0), val(9));
+        assert_eq!(c.len(), 1);
+        assert_eq!(*c.get(&key(1, 0)).unwrap(), QueryOutput::Distances(vec![9]));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = ResultCache::new(0);
+        c.insert(key(1, 0), val(1));
+        assert!(c.is_empty());
+        assert!(c.get(&key(1, 0)).is_none());
+    }
+}

@@ -1,0 +1,290 @@
+//! Log-bucketed latency histograms with mergeable percentile queries.
+//!
+//! The hdrhistogram-style layout the noria benchmark drivers report
+//! tail latency with (SNIPPETS.md Snippet 3), built in-tree because no
+//! crates are available offline: values are u64 *ticks* (the serve
+//! path records nanoseconds) bucketed as a power-of-two major bucket ×
+//! [`SUB_BUCKETS`] linear sub-buckets, giving ≤ 1/16 (6.25%) relative
+//! error at any magnitude for a few KiB of counts — small enough that
+//! every worker keeps its own histogram and the collector
+//! [`LatencyHistogram::merge`]s them, no locks on the record path.
+//!
+//! Percentile semantics: [`LatencyHistogram::percentile`]`(q)` returns
+//! the smallest bucket upper bound `v` such that at least
+//! `ceil(q · count)` recorded samples are `<= v` — an upper bound, so
+//! "p99 = v" never understates the tail. Values below
+//! [`SUB_BUCKETS`] land in exact singleton buckets, which the
+//! hand-computed fixtures in the tests rely on.
+
+use crate::util::json::Json;
+
+/// Linear sub-buckets per power-of-two major bucket (resolution
+/// 1/SUB_BUCKETS). Values `< SUB_BUCKETS` get exact singleton buckets.
+pub const SUB_BUCKETS: u64 = 16;
+
+/// log2(SUB_BUCKETS).
+const SUB_BITS: u32 = SUB_BUCKETS.trailing_zeros();
+
+/// Bucket count covering all of u64: majors 4..=63 contribute 16 subs
+/// each on top of the 16 exact low buckets.
+const BUCKETS: usize = (SUB_BUCKETS + (64 - SUB_BITS as u64) * SUB_BUCKETS) as usize;
+
+/// Index of the bucket holding `v`.
+fn bucket_of(v: u64) -> usize {
+    if v < SUB_BUCKETS {
+        return v as usize;
+    }
+    let msb = 63 - v.leading_zeros();
+    let shift = msb - SUB_BITS;
+    let sub = (v >> shift) & (SUB_BUCKETS - 1);
+    ((msb - SUB_BITS + 1) as u64 * SUB_BUCKETS + sub) as usize
+}
+
+/// Largest value bucket `i` can hold (the value [`percentile`]
+/// reports for it).
+///
+/// [`percentile`]: LatencyHistogram::percentile
+fn bucket_upper(i: usize) -> u64 {
+    let i = i as u64;
+    if i < SUB_BUCKETS {
+        return i;
+    }
+    let major = i / SUB_BUCKETS - 1 + SUB_BITS as u64;
+    let sub = i % SUB_BUCKETS;
+    let shift = (major - SUB_BITS as u64) as u32;
+    // The topmost bucket's exclusive upper bound is 2^64, which the
+    // shift wraps to 0; wrapping_sub turns that into u64::MAX — the
+    // correct inclusive bound — without a debug-build underflow panic.
+    ((SUB_BUCKETS + sub + 1) << shift).wrapping_sub(1)
+}
+
+/// Mergeable log-bucketed histogram over u64 ticks (see module docs).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    counts: Vec<u64>,
+    total: u64,
+    /// Samples rejected by [`Self::record_secs`] (negative or
+    /// non-finite seconds) — counted, never silently swallowed.
+    dropped: u64,
+    sum: f64,
+    max: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self { counts: vec![0; BUCKETS], total: 0, dropped: 0, sum: 0.0, max: 0 }
+    }
+
+    /// Record one sample (any u64; `u64::MAX` lands in the top bucket,
+    /// no overflow).
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_of(v)] += 1;
+        self.total += 1;
+        self.sum += v as f64;
+        self.max = self.max.max(v);
+    }
+
+    /// Record a latency in seconds as nanosecond ticks. Negative or
+    /// non-finite inputs are counted in [`Self::dropped`] instead of
+    /// poisoning the buckets; absurdly large finite values saturate to
+    /// the top bucket.
+    pub fn record_secs(&mut self, s: f64) {
+        if !s.is_finite() || s < 0.0 {
+            self.dropped += 1;
+            return;
+        }
+        let ns = s * 1e9;
+        self.record(if ns >= u64::MAX as f64 { u64::MAX } else { ns as u64 });
+    }
+
+    /// Samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Samples rejected by [`Self::record_secs`].
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Largest recorded sample (exact, not bucket-rounded; 0 when
+    /// empty).
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Mean of recorded samples (`NaN` when empty — the JSON emitter
+    /// turns that into `null`).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Smallest bucket upper bound covering at least `ceil(q · count)`
+    /// samples (`q` clamped to [0, 1]); `None` when empty.
+    pub fn percentile(&self, q: f64) -> Option<u64> {
+        if self.total == 0 {
+            return None;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return Some(bucket_upper(i));
+            }
+        }
+        unreachable!("cumulative count reaches total")
+    }
+
+    /// [`Self::percentile`] in seconds (ticks are nanoseconds); `NaN`
+    /// when empty, so the JSON emitter writes `null` instead of a
+    /// made-up zero.
+    pub fn percentile_secs(&self, q: f64) -> f64 {
+        self.percentile(q).map_or(f64::NAN, |ns| ns as f64 / 1e9)
+    }
+
+    /// Fold another histogram into this one (per-worker histograms →
+    /// one report).
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.dropped += other.dropped;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    /// Latency summary for BENCH artifacts: count, dropped, mean and
+    /// p50/p90/p99/max in seconds. Non-finite values (empty histogram)
+    /// serialize as `null` — [`Json::Num`]'s contract — so downstream
+    /// parsers see an explicit absence, never a fake 0.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::Num(self.total as f64)),
+            ("dropped", Json::Num(self.dropped as f64)),
+            ("mean_s", Json::Num(self.mean() / 1e9)),
+            ("p50_s", Json::Num(self.percentile_secs(0.50))),
+            ("p90_s", Json::Num(self.percentile_secs(0.90))),
+            ("p99_s", Json::Num(self.percentile_secs(0.99))),
+            ("max_s", Json::Num(self.max as f64 / 1e9)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_exact_below_sixteen_and_bounded_above() {
+        for v in 0..SUB_BUCKETS {
+            assert_eq!(bucket_upper(bucket_of(v)), v, "singleton bucket for {v}");
+        }
+        for v in [16u64, 100, 1000, 1 << 20, u64::MAX / 3, u64::MAX] {
+            let up = bucket_upper(bucket_of(v));
+            assert!(up >= v, "{v}: upper {up}");
+            assert!(up as f64 <= v as f64 * (1.0 + 1.0 / SUB_BUCKETS as f64), "{v}: upper {up} too loose");
+        }
+        // Bucket uppers are strictly increasing (percentile walk is
+        // well-ordered).
+        for i in 1..BUCKETS {
+            assert!(bucket_upper(i) > bucket_upper(i - 1), "bucket {i}");
+        }
+    }
+
+    #[test]
+    fn percentiles_match_hand_computed_fixtures() {
+        // 16 samples, values 0..=15 (all in exact buckets): rank(q) =
+        // ceil(16q), so p50 -> rank 8 -> value 7, p100 -> 15.
+        let mut h = LatencyHistogram::new();
+        for v in 0..16u64 {
+            h.record(v);
+        }
+        assert_eq!(h.percentile(0.0), Some(0));
+        assert_eq!(h.percentile(0.5), Some(7));
+        assert_eq!(h.percentile(0.75), Some(11));
+        assert_eq!(h.percentile(1.0), Some(15));
+        assert_eq!(h.count(), 16);
+        assert_eq!(h.max(), 15);
+        assert!((h.mean() - 7.5).abs() < 1e-12);
+
+        // Tail fixture: [5, 5, 5, 1000]. p50 = 5 exactly; p99 falls in
+        // 1000's bucket [992, 1024) whose upper bound is 1023.
+        let mut t = LatencyHistogram::new();
+        for v in [5u64, 5, 5, 1000] {
+            t.record(v);
+        }
+        assert_eq!(t.percentile(0.5), Some(5));
+        assert_eq!(t.percentile(0.99), Some(1023));
+        assert_eq!(t.max(), 1000, "max is exact, not bucket-rounded");
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let vals: Vec<u64> = (0..500u64).map(|i| i * i % 10_007).collect();
+        let mut whole = LatencyHistogram::new();
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        for (i, &v) in vals.iter().enumerate() {
+            whole.record(v);
+            if i % 2 == 0 {
+                a.record(v)
+            } else {
+                b.record(v)
+            }
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert_eq!(a.max(), whole.max());
+        for q in [0.0, 0.1, 0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(a.percentile(q), whole.percentile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn non_finite_and_negative_seconds_are_dropped_not_recorded() {
+        let mut h = LatencyHistogram::new();
+        h.record_secs(f64::NAN);
+        h.record_secs(f64::INFINITY);
+        h.record_secs(f64::NEG_INFINITY);
+        h.record_secs(-1.0);
+        assert_eq!((h.count(), h.dropped()), (0, 4));
+        h.record_secs(1e-6);
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.percentile(1.0), Some(bucket_upper(bucket_of(1000))));
+        // Overflow: huge finite seconds saturate into the top bucket.
+        h.record_secs(1e300);
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.percentile(1.0), Some(bucket_upper(bucket_of(u64::MAX))));
+    }
+
+    #[test]
+    fn json_emits_null_for_empty_and_numbers_otherwise() {
+        let h = LatencyHistogram::new();
+        let s = h.to_json().to_string();
+        assert!(s.contains("\"p50_s\":null"), "{s}");
+        assert!(s.contains("\"mean_s\":null"), "{s}");
+        assert!(s.contains("\"count\":0"), "{s}");
+
+        let mut h = LatencyHistogram::new();
+        h.record_secs(0.001);
+        h.record_secs(f64::NAN);
+        let s = h.to_json().to_string();
+        assert!(s.contains("\"count\":1") && s.contains("\"dropped\":1"), "{s}");
+        assert!(!s.contains("\"p50_s\":null"), "{s}");
+        assert!(!s.contains("\"p99_s\":null"), "{s}");
+    }
+}

@@ -1,0 +1,371 @@
+//! Load generation against a running [`QueryServer`].
+//!
+//! Two standard driver shapes (the same pair the noria/FASTER serving
+//! papers report with):
+//!
+//! * **Closed loop** ([`LoadMode::Closed`]): `clients` threads each
+//!   submit one query, block on the answer, submit the next. Offered
+//!   load self-limits to the service rate, so throughput *is* capacity
+//!   — this is the mode the `serve` experiment's k-scaling assertion
+//!   uses. Backpressure rejections are retried (after a yield), because
+//!   a closed-loop client has nothing better to do.
+//! * **Open loop** ([`LoadMode::Open`]): one dispatcher fires queries
+//!   on an exponential-interarrival clock at `qps`, regardless of how
+//!   the server keeps up. Backpressure rejections are *counted as
+//!   drops*, not retried — queueing them would just rebuild the closed
+//!   loop — which makes overload visible in the report instead of in
+//!   unbounded latency.
+//!
+//! Every query's class/parameters are drawn deterministically from the
+//! workload seed (per-client [`SplitMix64::fork`]s), so a load run is
+//! reproducible modulo thread interleaving. An optional mutator applies
+//! a [`VersionedGraph::random_batch`]-style delta every
+//! `mutate_every` queries, exercising the serve-while-mutating path
+//! under load.
+//!
+//! [`VersionedGraph::random_batch`]: crate::graph::VersionedGraph::random_batch
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::histogram::LatencyHistogram;
+use super::query::Query;
+use super::server::{QueryServer, SubmitError};
+use crate::graph::VertexId;
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+
+/// How the generator offers load.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LoadMode {
+    /// `clients` synchronous submit-wait loops (throughput = capacity).
+    Closed {
+        /// Concurrent client threads.
+        clients: usize,
+    },
+    /// Exponential-interarrival dispatch at `qps`, drops on overload.
+    Open {
+        /// Target offered queries per second.
+        qps: f64,
+    },
+}
+
+/// Workload description for one load run.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    /// Offered-load shape.
+    pub mode: LoadMode,
+    /// Total queries to issue (admitted + dropped).
+    pub queries: usize,
+    /// Fraction of queries that are PPR (rest are SSSP); PPR teleport
+    /// sets are 1-4 vertices.
+    pub ppr_frac: f64,
+    /// Apply one random mutation batch per this many issued queries
+    /// (`0` = never mutate).
+    pub mutate_every: usize,
+    /// Fraction of edges each mutation batch touches.
+    pub mutate_frac: f64,
+    /// Workload seed (query parameters, interarrivals, mutations).
+    pub seed: u64,
+}
+
+impl LoadSpec {
+    /// Closed-loop spec with no mutations.
+    pub fn closed(clients: usize, queries: usize, seed: u64) -> Self {
+        Self { mode: LoadMode::Closed { clients }, queries, ppr_frac: 0.25, mutate_every: 0, mutate_frac: 0.02, seed }
+    }
+
+    /// Open-loop spec with no mutations.
+    pub fn open(qps: f64, queries: usize, seed: u64) -> Self {
+        Self { mode: LoadMode::Open { qps }, queries, ppr_frac: 0.25, mutate_every: 0, mutate_frac: 0.02, seed }
+    }
+
+    /// Builder-style: mutate every `every` issued queries.
+    pub fn with_mutations(mut self, every: usize, frac: f64) -> Self {
+        self.mutate_every = every;
+        self.mutate_frac = frac;
+        self
+    }
+}
+
+/// What a load run measured.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Queries offered (admitted + dropped).
+    pub issued: u64,
+    /// Queries answered (engine or cache).
+    pub served: u64,
+    /// Open-loop drops / closed-loop retried rejections.
+    pub rejected: u64,
+    /// Of `served`, how many came from the result cache.
+    pub cached: u64,
+    /// Mutation batches applied by the driver.
+    pub mutations: u64,
+    /// Wall-clock duration of the run, seconds.
+    pub elapsed_s: f64,
+    /// Served queries per second.
+    pub qps: f64,
+    /// Client-observed latency (merged across client threads).
+    pub hist: LatencyHistogram,
+}
+
+impl LoadReport {
+    /// JSON object for BENCH artifacts.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("issued", Json::Num(self.issued as f64)),
+            ("served", Json::Num(self.served as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("cached", Json::Num(self.cached as f64)),
+            ("mutations", Json::Num(self.mutations as f64)),
+            ("elapsed_s", Json::Num(self.elapsed_s)),
+            ("qps", Json::Num(self.qps)),
+            ("latency", self.hist.to_json()),
+        ])
+    }
+}
+
+/// Draw the next query from the workload distribution.
+fn next_query(rng: &mut SplitMix64, n: usize, ppr_frac: f64) -> Query {
+    if rng.chance(ppr_frac) {
+        let k = 1 + rng.index(4);
+        let teleports: Vec<VertexId> = (0..k).map(|_| rng.index(n) as VertexId).collect();
+        Query::Ppr { teleports }
+    } else {
+        Query::Sssp { source: rng.index(n) as VertexId }
+    }
+}
+
+/// Run `spec` against `server`, blocking until every issued query is
+/// answered or dropped. The server keeps running afterwards (callers
+/// own shutdown).
+pub fn run(server: &QueryServer, n_vertices: usize, spec: &LoadSpec) -> LoadReport {
+    match spec.mode {
+        LoadMode::Closed { clients } => run_closed(server, n_vertices, spec, clients.max(1)),
+        LoadMode::Open { qps } => run_open(server, n_vertices, spec, qps),
+    }
+}
+
+/// Shared driver state: the issue counter doubles as the mutation
+/// trigger, so "one batch per `mutate_every` issued" holds across
+/// client threads without a coordinator.
+struct DriverCounters {
+    issued: AtomicU64,
+    rejected: AtomicU64,
+    cached: AtomicU64,
+    mutations: AtomicU64,
+    failed: AtomicBool,
+}
+
+impl DriverCounters {
+    fn new() -> Self {
+        Self {
+            issued: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            cached: AtomicU64::new(0),
+            mutations: AtomicU64::new(0),
+            failed: AtomicBool::new(false),
+        }
+    }
+}
+
+/// Apply the driver-side mutation if `issued` crossed a trigger point.
+fn maybe_mutate(
+    server: &QueryServer,
+    spec: &LoadSpec,
+    counters: &DriverCounters,
+    issued: u64,
+    rng: &Mutex<SplitMix64>,
+) {
+    if spec.mutate_every == 0 || issued == 0 || issued % spec.mutate_every as u64 != 0 {
+        return;
+    }
+    let batch = {
+        let mut rng = rng.lock().unwrap();
+        server.random_batch(spec.mutate_frac, rng.next_u64())
+    };
+    if server.apply_mutations(&batch).is_ok() {
+        counters.mutations.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+fn run_closed(server: &QueryServer, n: usize, spec: &LoadSpec, clients: usize) -> LoadReport {
+    let counters = DriverCounters::new();
+    let mutate_rng = Mutex::new(SplitMix64::new(spec.seed ^ 0xDE1A));
+    let hist = Mutex::new(LatencyHistogram::new());
+    let served = AtomicU64::new(0);
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let mut rng = SplitMix64::new(spec.seed).fork(c as u64);
+            let (counters, hist, served, mutate_rng) = (&counters, &hist, &served, &mutate_rng);
+            s.spawn(move || {
+                let mut local = LatencyHistogram::new();
+                loop {
+                    let ticket = counters.issued.fetch_add(1, Ordering::Relaxed);
+                    if ticket >= spec.queries as u64 || counters.failed.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    maybe_mutate(server, spec, counters, ticket, mutate_rng);
+                    let mut query = next_query(&mut rng, n, spec.ppr_frac);
+                    // A closed-loop client retries backpressure — it
+                    // has nothing else to offer until this answer.
+                    loop {
+                        match server.query(query) {
+                            Ok(res) => {
+                                local.record_secs(res.latency_s);
+                                served.fetch_add(1, Ordering::Relaxed);
+                                if res.cached {
+                                    counters.cached.fetch_add(1, Ordering::Relaxed);
+                                }
+                                break;
+                            }
+                            Err(SubmitError::Overloaded(q)) => {
+                                counters.rejected.fetch_add(1, Ordering::Relaxed);
+                                std::thread::yield_now();
+                                query = q;
+                            }
+                            Err(_) => {
+                                // Invalid / shutting down: a workload
+                                // bug, not load — stop the run instead
+                                // of spinning.
+                                counters.failed.store(true, Ordering::Relaxed);
+                                break;
+                            }
+                        }
+                    }
+                }
+                hist.lock().unwrap().merge(&local);
+            });
+        }
+    });
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let served = served.load(Ordering::Relaxed);
+    LoadReport {
+        issued: counters.issued.load(Ordering::Relaxed).min(spec.queries as u64),
+        served,
+        rejected: counters.rejected.load(Ordering::Relaxed),
+        cached: counters.cached.load(Ordering::Relaxed),
+        mutations: counters.mutations.load(Ordering::Relaxed),
+        elapsed_s,
+        qps: if elapsed_s > 0.0 { served as f64 / elapsed_s } else { 0.0 },
+        hist: hist.into_inner().unwrap(),
+    }
+}
+
+fn run_open(server: &QueryServer, n: usize, spec: &LoadSpec, qps: f64) -> LoadReport {
+    assert!(qps > 0.0, "open-loop load needs qps > 0");
+    let counters = DriverCounters::new();
+    let mutate_rng = Mutex::new(SplitMix64::new(spec.seed ^ 0xDE1A));
+    let hist = Mutex::new(LatencyHistogram::new());
+    let served = AtomicU64::new(0);
+    let start = Instant::now();
+    std::thread::scope(|s| {
+        let mut rng = SplitMix64::new(spec.seed);
+        let mut clock = Duration::ZERO;
+        for i in 0..spec.queries {
+            // Exponential interarrival: -ln(U)/λ (U nudged off 0).
+            let u = rng.next_f64().max(1e-12);
+            clock += Duration::from_secs_f64(-u.ln() / qps);
+            if let Some(sleep) = clock.checked_sub(start.elapsed()) {
+                std::thread::sleep(sleep);
+            }
+            counters.issued.fetch_add(1, Ordering::Relaxed);
+            maybe_mutate(server, spec, &counters, i as u64, &mutate_rng);
+            let query = next_query(&mut rng, n, spec.ppr_frac);
+            match server.submit(query) {
+                Ok(ticket) => {
+                    let (counters, hist, served) = (&counters, &hist, &served);
+                    s.spawn(move || {
+                        let res = ticket.wait();
+                        hist.lock().unwrap().record_secs(res.latency_s);
+                        served.fetch_add(1, Ordering::Relaxed);
+                        if res.cached {
+                            counters.cached.fetch_add(1, Ordering::Relaxed);
+                        }
+                    });
+                }
+                // Open loop: an overloaded submit is a drop, by design.
+                Err(SubmitError::Overloaded(_)) => {
+                    counters.rejected.fetch_add(1, Ordering::Relaxed);
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    let elapsed_s = start.elapsed().as_secs_f64();
+    let served = served.load(Ordering::Relaxed);
+    LoadReport {
+        issued: counters.issued.load(Ordering::Relaxed),
+        served,
+        rejected: counters.rejected.load(Ordering::Relaxed),
+        cached: counters.cached.load(Ordering::Relaxed),
+        mutations: counters.mutations.load(Ordering::Relaxed),
+        elapsed_s,
+        qps: if elapsed_s > 0.0 { served as f64 / elapsed_s } else { 0.0 },
+        hist: hist.into_inner().unwrap(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{EngineConfig, ExecutionMode};
+    use crate::graph::VersionedGraph;
+    use crate::serve::server::ServeConfig;
+
+    fn server(lanes: usize, queue: usize) -> (QueryServer, usize) {
+        let csr = crate::graph::generators::uniform::generate(7, 4, 5);
+        let weighted = crate::graph::weights::assign_uniform(&csr, 5);
+        let n = weighted.num_vertices();
+        let ecfg = EngineConfig::new(2, ExecutionMode::Asynchronous);
+        let mut cfg = ServeConfig::new(lanes, ecfg);
+        cfg.queue_capacity = queue;
+        (QueryServer::start(VersionedGraph::new(weighted), cfg), n)
+    }
+
+    #[test]
+    fn closed_loop_serves_every_query() {
+        let (server, n) = server(4, 16);
+        let report = run(&server, n, &LoadSpec::closed(4, 24, 9));
+        assert_eq!(report.issued, 24);
+        assert_eq!(report.served, 24, "closed loop retries until served");
+        assert_eq!(report.hist.count(), 24);
+        assert!(report.qps > 0.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn closed_loop_with_mutations_applies_batches() {
+        let (server, n) = server(2, 16);
+        let spec = LoadSpec::closed(2, 16, 3).with_mutations(4, 0.02);
+        let report = run(&server, n, &spec);
+        assert_eq!(report.served, 16);
+        assert!(report.mutations >= 2, "mutator fired: {}", report.mutations);
+        let stats = server.shutdown();
+        assert!(stats.version.0 >= report.mutations, "each batch bumped the version");
+    }
+
+    #[test]
+    fn open_loop_counts_drops_instead_of_retrying() {
+        // 1-lane server with a tiny queue under a fast open loop: some
+        // submits must drop, and issued = served + rejected.
+        let (server, n) = server(1, 1);
+        let report = run(&server, n, &LoadSpec::open(2000.0, 40, 11));
+        assert_eq!(report.issued, 40);
+        assert_eq!(report.served + report.rejected, 40);
+        assert_eq!(report.hist.count(), report.served);
+        server.shutdown();
+    }
+
+    #[test]
+    fn report_json_is_well_formed() {
+        let (server, n) = server(2, 8);
+        let report = run(&server, n, &LoadSpec::closed(2, 8, 1));
+        let s = report.to_json().to_string();
+        assert!(s.contains("\"served\":8"), "{s}");
+        assert!(s.contains("\"latency\":{"), "{s}");
+        server.shutdown();
+    }
+}

@@ -1,0 +1,36 @@
+//! Always-on batched query serving over the lane engine (DESIGN.md
+//! §11).
+//!
+//! The batch path (PR 5) answers a *fixed* set of queries per
+//! invocation; this module keeps the engine resident and feeds it a
+//! continuous stream: queries are admitted into a bounded FIFO queue
+//! ([`BatchFormer`], backpressure on overflow), packed into k-lane
+//! groups that run as single engine generations, answered through a
+//! result cache keyed by `(algorithm, parameters, GraphVersion)`
+//! ([`ResultCache`]), and measured by mergeable latency histograms
+//! ([`LatencyHistogram`]) for p50/p99 SLO reporting. [`loadgen`]
+//! drives a running server closed- or open-loop for the
+//! `BENCH_serve.json` artifact and the `serve` experiment.
+//!
+//! Module map — submit flows left to right:
+//!
+//! * [`query`]: [`Query`] / [`QueryKey`] / [`ServedResult`] types.
+//! * [`batcher`]: bounded admission + FIFO lane packing.
+//! * [`server`]: the worker loop, cache discipline, shutdown.
+//! * [`cache`]: version-keyed bounded answer cache.
+//! * [`histogram`]: log-bucketed mergeable latency histograms.
+//! * [`loadgen`]: closed-/open-loop drivers + [`LoadReport`].
+
+pub mod batcher;
+pub mod cache;
+pub mod histogram;
+pub mod loadgen;
+pub mod query;
+pub mod server;
+
+pub use batcher::{BatchFormer, FormedBatch, QueueFull};
+pub use cache::{CacheStats, ResultCache};
+pub use histogram::LatencyHistogram;
+pub use loadgen::{LoadMode, LoadReport, LoadSpec};
+pub use query::{Query, QueryClass, QueryKey, QueryOutput, ServedResult};
+pub use server::{QueryServer, QueryTicket, ServeConfig, ServeStats, SubmitError};

@@ -1,0 +1,198 @@
+//! Query and result types for the serving front end.
+//!
+//! A [`Query`] names one of the two lane-batched algorithms plus its
+//! parameters; a [`QueryKey`] adds the [`GraphVersion`] it was (or
+//! would be) answered against, which makes it the result-cache key —
+//! two textually identical queries separated by a mutation batch are
+//! *different* keys, so a cache hit is always version-correct by
+//! construction.
+
+use std::sync::Arc;
+
+use crate::graph::{GraphStore, GraphVersion, VertexId};
+
+/// Which lane-batched algorithm a query runs. CC/BFS have no batched
+/// variant, so the server does not admit them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum QueryClass {
+    /// Multi-source Bellman-Ford ([`crate::algorithms::sssp::MultiSssp`]).
+    Sssp,
+    /// Personalized PageRank
+    /// ([`crate::algorithms::pagerank::MultiPageRank`]).
+    Ppr,
+}
+
+impl QueryClass {
+    /// Short label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            QueryClass::Sssp => "sssp",
+            QueryClass::Ppr => "ppr",
+        }
+    }
+}
+
+/// One serving query: an SSSP source or a personalized-PageRank
+/// teleport set.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Query {
+    /// Distances from `source` (requires a weighted graph).
+    Sssp {
+        /// Source vertex.
+        source: VertexId,
+    },
+    /// Personalized PageRank over a non-empty teleport set.
+    Ppr {
+        /// Teleport vertices (uniform restart distribution).
+        teleports: Vec<VertexId>,
+    },
+}
+
+impl Query {
+    /// The algorithm class this query runs under.
+    pub fn class(&self) -> QueryClass {
+        match self {
+            Query::Sssp { .. } => QueryClass::Sssp,
+            Query::Ppr { .. } => QueryClass::Ppr,
+        }
+    }
+
+    /// The query's parameter vector (source / teleport set) — what,
+    /// together with the class and graph version, keys the result
+    /// cache.
+    pub fn params(&self) -> &[VertexId] {
+        match self {
+            Query::Sssp { source } => std::slice::from_ref(source),
+            Query::Ppr { teleports } => teleports,
+        }
+    }
+
+    /// Cache key for answering this query at graph `version`.
+    pub fn key(&self, version: GraphVersion) -> QueryKey {
+        QueryKey { class: self.class(), params: self.params().to_vec(), version }
+    }
+
+    /// Validate against a graph: endpoints in range, SSSP only on
+    /// weighted graphs, PPR teleport sets non-empty. Errors name the
+    /// offending input so a rejected submit is self-explanatory.
+    pub fn validate<G: GraphStore>(&self, g: &G) -> Result<(), String> {
+        let n = g.num_vertices() as VertexId;
+        match self {
+            Query::Sssp { source } => {
+                if !g.is_weighted() {
+                    return Err("sssp query on an unweighted graph".into());
+                }
+                if *source >= n {
+                    return Err(format!("sssp source {source} out of range for n={n}"));
+                }
+            }
+            Query::Ppr { teleports } => {
+                if teleports.is_empty() {
+                    return Err("ppr query with an empty teleport set".into());
+                }
+                if let Some(&v) = teleports.iter().find(|&&v| v >= n) {
+                    return Err(format!("ppr teleport {v} out of range for n={n}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Result-cache key: `(algorithm, source/teleport-set, GraphVersion)`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct QueryKey {
+    /// Algorithm class.
+    pub class: QueryClass,
+    /// Source (SSSP) or teleport set (PPR).
+    pub params: Vec<VertexId>,
+    /// Graph version the answer is valid for.
+    pub version: GraphVersion,
+}
+
+/// A decoded per-query answer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum QueryOutput {
+    /// SSSP distances per vertex ([`crate::algorithms::sssp::INF`] =
+    /// unreachable).
+    Distances(Vec<u32>),
+    /// Personalized PageRank scores per vertex (mass-normalized like
+    /// [`crate::algorithms::pagerank::MultiPrResult`]).
+    Scores(Vec<f32>),
+}
+
+impl QueryOutput {
+    /// SSSP distances, or `None` for a PPR answer.
+    pub fn distances(&self) -> Option<&[u32]> {
+        match self {
+            QueryOutput::Distances(d) => Some(d),
+            QueryOutput::Scores(_) => None,
+        }
+    }
+
+    /// PPR scores, or `None` for an SSSP answer.
+    pub fn scores(&self) -> Option<&[f32]> {
+        match self {
+            QueryOutput::Scores(s) => Some(s),
+            QueryOutput::Distances(_) => None,
+        }
+    }
+}
+
+/// What the server hands back for one admitted query.
+#[derive(Debug, Clone)]
+pub struct ServedResult {
+    /// The query this answers.
+    pub query: Query,
+    /// Graph version the answer was computed against — the contract
+    /// the serve-while-mutating differential suite checks results by.
+    pub version: GraphVersion,
+    /// The answer (shared with the result cache).
+    pub output: Arc<QueryOutput>,
+    /// Submit-to-response latency, seconds, as measured by the server.
+    pub latency_s: f64,
+    /// Whether the answer came out of the result cache.
+    pub cached: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    #[test]
+    fn keys_distinguish_class_params_and_version() {
+        let q = Query::Sssp { source: 3 };
+        let p = Query::Ppr { teleports: vec![3] };
+        let v0 = GraphVersion(0);
+        let v1 = GraphVersion(1);
+        assert_ne!(q.key(v0), p.key(v0), "same params, different class");
+        assert_ne!(q.key(v0), q.key(v1), "same query, different version");
+        assert_eq!(q.key(v0), Query::Sssp { source: 3 }.key(v0));
+        assert_eq!(q.params(), &[3]);
+        assert_eq!(q.class().label(), "sssp");
+        assert_eq!(p.class().label(), "ppr");
+    }
+
+    #[test]
+    fn validation_names_the_problem() {
+        let unweighted = GraphBuilder::new(4).edges(&[(0, 1), (1, 2)]).build();
+        let weighted = GraphBuilder::new(4).weighted_edges(&[(0, 1, 2), (1, 2, 3)]).build();
+        assert!(Query::Sssp { source: 0 }.validate(&unweighted).unwrap_err().contains("unweighted"));
+        assert!(Query::Sssp { source: 9 }.validate(&weighted).unwrap_err().contains("out of range"));
+        assert!(Query::Sssp { source: 0 }.validate(&weighted).is_ok());
+        assert!(Query::Ppr { teleports: vec![] }.validate(&unweighted).unwrap_err().contains("empty"));
+        assert!(Query::Ppr { teleports: vec![0, 9] }.validate(&unweighted).unwrap_err().contains("out of range"));
+        assert!(Query::Ppr { teleports: vec![0, 2] }.validate(&unweighted).is_ok());
+    }
+
+    #[test]
+    fn outputs_decode_by_kind() {
+        let d = QueryOutput::Distances(vec![0, 5]);
+        let s = QueryOutput::Scores(vec![0.5, 0.5]);
+        assert_eq!(d.distances(), Some(&[0u32, 5][..]));
+        assert!(d.scores().is_none());
+        assert_eq!(s.scores(), Some(&[0.5f32, 0.5][..]));
+        assert!(s.distances().is_none());
+    }
+}

@@ -1,0 +1,476 @@
+//! The always-on query server: submit → batch → lane-group run → reply.
+//!
+//! [`QueryServer::start`] spawns one worker thread that loops forever:
+//! wait until the [`BatchFormer`] can pack a lane group, run the group
+//! as a single batched engine generation
+//! ([`sssp::run_native_batch`] / [`pagerank::run_native_batch`]), decode
+//! the per-lane answers, cache and reply, release the lanes, repeat.
+//! Per-lane convergence drop-out means short queries inside a group
+//! stop paying rounds the moment they settle; the lanes they occupied
+//! return to the FIFO freelist when the group's generation ends and are
+//! refilled by the next [`BatchFormer::form`].
+//!
+//! Concurrency layout — three shared pieces, strict lock order
+//! **graph → cache → (histogram)**, with the former/state mutex never
+//! held across either:
+//!
+//! * `graph: RwLock<VersionedGraph>` — queries run under a read lock
+//!   (many batches could run concurrently in principle; today one
+//!   worker), mutations under the write lock.
+//! * `cache: Mutex<ResultCache>` — looked up at submit under the graph
+//!   read lock; **inserted under the same read lock the batch ran
+//!   under**. That ordering is what makes invalidation race-free: a
+//!   concurrent [`QueryServer::apply_mutations`] needs the write lock
+//!   to bump the version, so it cannot interleave between "computed at
+//!   version v" and "cached at version v" and leave a stale entry
+//!   behind. (Hits are version-correct by the key alone; this protects
+//!   the *no stale entry survives* memory invariant.)
+//! * `state: Mutex<ServerState>` + condvar — admission queue, lane
+//!   occupancy, counters. Submitters signal the worker after admitting;
+//!   [`QueryServer::shutdown`] sets the flag, wakes the worker, and
+//!   joins it after the queue drains.
+//!
+//! Replies travel over per-query [`mpsc`] channels
+//! ([`QueryTicket::wait`]), so a slow client blocks nobody.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, RwLock};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::batcher::{BatchFormer, QueueFull};
+use super::cache::{CacheStats, ResultCache};
+use super::histogram::LatencyHistogram;
+use super::query::{Query, QueryOutput, ServedResult};
+use crate::algorithms::pagerank::{self, PrConfig};
+use crate::algorithms::sssp;
+use crate::engine::EngineConfig;
+use crate::graph::{Csr, EdgeMutation, GraphVersion, MutationReceipt, VersionedGraph, VertexId};
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Lane-group width `k` the batch former packs toward (must be a
+    /// legal lane count: 1, 2, 4, 8, or 16).
+    pub lanes: usize,
+    /// Admission-queue bound — beyond this, submits are rejected with
+    /// [`SubmitError::Overloaded`] (the backpressure signal).
+    pub queue_capacity: usize,
+    /// Result-cache bound in answers (0 disables caching).
+    pub cache_capacity: usize,
+    /// Engine configuration for every served batch.
+    pub engine: EngineConfig,
+    /// PageRank hyper-parameters for PPR queries.
+    pub pr: PrConfig,
+}
+
+impl ServeConfig {
+    /// Defaults: `k` lanes, a 4·k admission queue, a 64-answer cache.
+    pub fn new(lanes: usize, engine: EngineConfig) -> Self {
+        Self { lanes, queue_capacity: 4 * lanes.max(1), cache_capacity: 64, engine, pr: PrConfig::default() }
+    }
+}
+
+/// Why a submit was refused.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// Backpressure: the admission queue is full. The query comes back
+    /// so a closed-loop client can retry and an open-loop one can count
+    /// the drop.
+    Overloaded(Query),
+    /// The query fails validation against the current graph
+    /// ([`Query::validate`]); the message names the problem.
+    Invalid(String),
+    /// The server is shutting down and admits nothing new.
+    ShuttingDown(Query),
+}
+
+/// Handle for one admitted (or cache-answered) query.
+#[derive(Debug)]
+pub struct QueryTicket {
+    rx: mpsc::Receiver<ServedResult>,
+}
+
+impl QueryTicket {
+    /// Block until the answer arrives.
+    pub fn wait(self) -> ServedResult {
+        self.rx.recv().expect("the server answers every admitted query before dropping its sender")
+    }
+}
+
+/// One admitted query waiting for (or occupying) a lane.
+struct PendingQuery {
+    query: Query,
+    reply: mpsc::Sender<ServedResult>,
+    submitted: Instant,
+}
+
+/// Everything behind the state mutex.
+struct ServerState {
+    former: BatchFormer<PendingQuery>,
+    shutting_down: bool,
+    /// Queries answered by an engine run.
+    served_engine: u64,
+    /// Queries answered from the result cache at submit.
+    served_cached: u64,
+    /// Submits rejected by backpressure.
+    rejected: u64,
+}
+
+/// State shared between the front end and the worker thread.
+struct Shared {
+    graph: RwLock<VersionedGraph>,
+    cache: Mutex<ResultCache>,
+    state: Mutex<ServerState>,
+    /// Signalled on admit and on shutdown.
+    work_ready: Condvar,
+    hist: Mutex<LatencyHistogram>,
+    /// Set once the worker exits (normally at shutdown; also on
+    /// panic, so submitters fail fast instead of queueing forever).
+    worker_gone: AtomicBool,
+}
+
+/// Counter snapshot from [`QueryServer::stats`].
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    /// Queries answered by engine runs.
+    pub served_engine: u64,
+    /// Queries answered from the result cache.
+    pub served_cached: u64,
+    /// Submits rejected by backpressure.
+    pub rejected: u64,
+    /// Current graph version.
+    pub version: GraphVersion,
+    /// Result-cache counters.
+    pub cache: CacheStats,
+    /// Submit-to-reply latency histogram (cache hits included).
+    pub hist: LatencyHistogram,
+}
+
+/// The always-on serving front end over the lane engine (see module
+/// docs).
+pub struct QueryServer {
+    shared: Arc<Shared>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl QueryServer {
+    /// Take ownership of `graph` and start serving with one worker
+    /// thread. Panics if `cfg.lanes` is not a legal lane count.
+    pub fn start(graph: VersionedGraph, cfg: ServeConfig) -> Self {
+        let shared = Arc::new(Shared {
+            graph: RwLock::new(graph),
+            cache: Mutex::new(ResultCache::new(cfg.cache_capacity)),
+            state: Mutex::new(ServerState {
+                former: BatchFormer::new(cfg.lanes, cfg.queue_capacity),
+                shutting_down: false,
+                served_engine: 0,
+                served_cached: 0,
+                rejected: 0,
+            }),
+            work_ready: Condvar::new(),
+            hist: Mutex::new(LatencyHistogram::new()),
+            worker_gone: AtomicBool::new(false),
+        });
+        let worker = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("daig-serve".into())
+                .spawn(move || worker_loop(&shared, &cfg.engine, &cfg.pr))
+                .expect("spawn serve worker")
+        };
+        Self { shared, worker: Some(worker) }
+    }
+
+    /// Submit a query. Returns a ticket immediately: pre-answered on a
+    /// cache hit, otherwise fulfilled by the worker after the query's
+    /// lane group runs. Errors are immediate (validation, backpressure,
+    /// shutdown) — a submit never blocks on the engine.
+    pub fn submit(&self, query: Query) -> Result<QueryTicket, SubmitError> {
+        if self.shared.worker_gone.load(Ordering::Acquire) {
+            return Err(SubmitError::ShuttingDown(query));
+        }
+        let submitted = Instant::now();
+        // Cache lookup under the graph read lock: the version read and
+        // the cache probe see the same graph (lock order graph → cache).
+        {
+            let g = self.shared.graph.read().unwrap();
+            query.validate(&*g).map_err(SubmitError::Invalid)?;
+            let key = query.key(g.version());
+            let mut cache = self.shared.cache.lock().unwrap();
+            if let Some(output) = cache.get(&key) {
+                let version = key.version;
+                drop(cache);
+                drop(g);
+                let latency_s = submitted.elapsed().as_secs_f64();
+                self.shared.hist.lock().unwrap().record_secs(latency_s);
+                self.shared.state.lock().unwrap().served_cached += 1;
+                let (tx, rx) = mpsc::channel();
+                tx.send(ServedResult { query, version, output, latency_s, cached: true })
+                    .expect("receiver held locally");
+                return Ok(QueryTicket { rx });
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutting_down {
+            return Err(SubmitError::ShuttingDown(query));
+        }
+        let class = query.class();
+        let pending = PendingQuery { query, reply: tx, submitted };
+        match st.former.admit(class, pending) {
+            Ok(()) => {
+                self.shared.work_ready.notify_one();
+                Ok(QueryTicket { rx })
+            }
+            Err(QueueFull(p)) => {
+                st.rejected += 1;
+                Err(SubmitError::Overloaded(p.query))
+            }
+        }
+    }
+
+    /// Submit and block for the answer — the closed-loop client path.
+    pub fn query(&self, query: Query) -> Result<ServedResult, SubmitError> {
+        self.submit(query).map(QueryTicket::wait)
+    }
+
+    /// Apply a mutation batch under the graph write lock, then drop
+    /// result-cache entries stranded at superseded versions. In-flight
+    /// batches finish against the pre-mutation graph (they hold the
+    /// read lock) and their answers carry the version they ran at.
+    pub fn apply_mutations(&self, batch: &[EdgeMutation]) -> anyhow::Result<MutationReceipt> {
+        let mut g = self.shared.graph.write().unwrap();
+        let receipt = g.apply_batch(batch)?;
+        // Still under the write lock: no batch can cache a stale entry
+        // between the version bump and this sweep.
+        self.shared.cache.lock().unwrap().invalidate_older_than(receipt.version);
+        Ok(receipt)
+    }
+
+    /// Current graph version.
+    pub fn version(&self) -> GraphVersion {
+        self.shared.graph.read().unwrap().version()
+    }
+
+    /// Consistent `(version, CSR snapshot)` pair — what the
+    /// serve-while-mutating differential suite replays oracles against.
+    pub fn snapshot_csr(&self) -> (GraphVersion, Csr) {
+        let g = self.shared.graph.read().unwrap();
+        (g.version(), g.to_csr())
+    }
+
+    /// A deterministic mutation batch against the current graph
+    /// (delegates to [`VersionedGraph::random_batch`]).
+    pub fn random_batch(&self, frac: f64, seed: u64) -> Vec<EdgeMutation> {
+        self.shared.graph.read().unwrap().random_batch(frac, seed)
+    }
+
+    /// Counter snapshot (histogram cloned, not drained).
+    pub fn stats(&self) -> ServeStats {
+        let version = self.shared.graph.read().unwrap().version();
+        let cache = self.shared.cache.lock().unwrap().stats();
+        let hist = self.shared.hist.lock().unwrap().clone();
+        let st = self.shared.state.lock().unwrap();
+        ServeStats {
+            served_engine: st.served_engine,
+            served_cached: st.served_cached,
+            rejected: st.rejected,
+            version,
+            cache,
+            hist,
+        }
+    }
+
+    /// Stop admitting, drain every already-admitted query, join the
+    /// worker, and return the final counters.
+    pub fn shutdown(mut self) -> ServeStats {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutting_down = true;
+            self.shared.work_ready.notify_all();
+        }
+        if let Some(w) = self.worker.take() {
+            w.join().expect("serve worker panicked");
+        }
+        self.stats()
+    }
+}
+
+impl Drop for QueryServer {
+    fn drop(&mut self) {
+        if let Some(w) = self.worker.take() {
+            {
+                let mut st = self.shared.state.lock().unwrap();
+                st.shutting_down = true;
+                self.shared.work_ready.notify_all();
+            }
+            // Drop during an unwind must not double-panic.
+            let _ = w.join();
+        }
+    }
+}
+
+/// The worker: form → run → reply → release, until shutdown drains the
+/// queue.
+fn worker_loop(shared: &Shared, ecfg: &EngineConfig, pr: &PrConfig) {
+    // Guard: mark the worker gone even if a batch run panics, so
+    // submitters get `ShuttingDown` instead of tickets nobody answers.
+    struct Gone<'a>(&'a AtomicBool);
+    impl Drop for Gone<'_> {
+        fn drop(&mut self) {
+            self.0.store(true, Ordering::Release);
+        }
+    }
+    let _gone = Gone(&shared.worker_gone);
+
+    loop {
+        let batch = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(b) = st.former.form() {
+                    break Some(b);
+                }
+                if st.shutting_down && st.former.is_idle() {
+                    break None;
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        let Some(batch) = batch else { return };
+
+        // Run the group under the graph read lock; keep holding it
+        // while caching so no mutation can interleave (module docs).
+        let (version, outputs) = {
+            let g = shared.graph.read().unwrap();
+            let version = g.version();
+            let outputs: Vec<Arc<QueryOutput>> = match batch.class {
+                super::query::QueryClass::Sssp => {
+                    let sources: Vec<VertexId> = batch
+                        .items
+                        .iter()
+                        .map(|p| match &p.query {
+                            Query::Sssp { source } => *source,
+                            Query::Ppr { .. } => unreachable!("former never mixes classes"),
+                        })
+                        .collect();
+                    let res = sssp::run_native_batch(&*g, &sources, ecfg);
+                    res.dist.into_iter().map(|d| Arc::new(QueryOutput::Distances(d))).collect()
+                }
+                super::query::QueryClass::Ppr => {
+                    let teleports: Vec<Vec<VertexId>> = batch
+                        .items
+                        .iter()
+                        .map(|p| match &p.query {
+                            Query::Ppr { teleports } => teleports.clone(),
+                            Query::Sssp { .. } => unreachable!("former never mixes classes"),
+                        })
+                        .collect();
+                    let res = pagerank::run_native_batch(&*g, &teleports, ecfg, pr);
+                    res.values.into_iter().map(|v| Arc::new(QueryOutput::Scores(v))).collect()
+                }
+            };
+            let mut cache = shared.cache.lock().unwrap();
+            for (p, out) in batch.items.iter().zip(&outputs) {
+                cache.insert(p.query.key(version), Arc::clone(out));
+            }
+            (version, outputs)
+        };
+
+        // Reply (receiver may have hung up — that only loses the
+        // answer, not the lane) and record latency.
+        {
+            let mut hist = shared.hist.lock().unwrap();
+            for (p, output) in batch.items.into_iter().zip(outputs) {
+                let latency_s = p.submitted.elapsed().as_secs_f64();
+                hist.record_secs(latency_s);
+                let _ = p.reply.send(ServedResult {
+                    query: p.query,
+                    version,
+                    output,
+                    latency_s,
+                    cached: false,
+                });
+            }
+        }
+
+        let served = batch.lanes.len() as u64;
+        let mut st = shared.state.lock().unwrap();
+        st.former.release(&batch.lanes);
+        st.served_engine += served;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ExecutionMode;
+
+    fn small_server(lanes: usize) -> QueryServer {
+        let csr = crate::graph::generators::uniform::generate(6, 4, 7);
+        let vg = VersionedGraph::new(crate::graph::weights::assign_uniform(&csr, 7));
+        let ecfg = EngineConfig::new(2, ExecutionMode::Asynchronous);
+        QueryServer::start(vg, ServeConfig::new(lanes, ecfg))
+    }
+
+    #[test]
+    fn serves_sssp_and_ppr_end_to_end() {
+        let server = small_server(4);
+        let (v0, csr) = server.snapshot_csr();
+        let d = server.query(Query::Sssp { source: 0 }).expect("admitted");
+        assert_eq!(d.version, v0);
+        assert!(!d.cached);
+        assert_eq!(d.output.distances().unwrap(), &crate::algorithms::oracle::dijkstra(&csr, 0)[..]);
+        let p = server.query(Query::Ppr { teleports: vec![1, 2] }).expect("admitted");
+        assert_eq!(p.output.scores().unwrap().len(), csr.num_vertices());
+        let stats = server.shutdown();
+        assert_eq!(stats.served_engine, 2);
+        assert_eq!(stats.hist.count(), 2);
+    }
+
+    #[test]
+    fn repeat_query_is_served_from_cache_until_mutation() {
+        let server = small_server(2);
+        let first = server.query(Query::Sssp { source: 3 }).unwrap();
+        assert!(!first.cached);
+        let again = server.query(Query::Sssp { source: 3 }).unwrap();
+        assert!(again.cached, "repeat at the same version hits the cache");
+        assert_eq!(again.output, first.output);
+        let batch = server.random_batch(0.05, 11);
+        let receipt = server.apply_mutations(&batch).expect("batch applies");
+        let after = server.query(Query::Sssp { source: 3 }).unwrap();
+        assert!(!after.cached, "version bump forces recompute");
+        assert_eq!(after.version, receipt.version);
+        let stats = server.shutdown();
+        assert_eq!(stats.served_cached, 1);
+        assert_eq!(stats.cache.hits, 1);
+    }
+
+    #[test]
+    fn invalid_queries_are_rejected_at_submit() {
+        let server = small_server(1);
+        match server.submit(Query::Sssp { source: 1 << 20 }) {
+            Err(SubmitError::Invalid(msg)) => assert!(msg.contains("out of range"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        match server.submit(Query::Ppr { teleports: vec![] }) {
+            Err(SubmitError::Invalid(msg)) => assert!(msg.contains("empty"), "{msg}"),
+            other => panic!("expected Invalid, got {other:?}"),
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.served_engine + stats.served_cached, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_admitted_queries() {
+        let server = small_server(8);
+        let tickets: Vec<QueryTicket> =
+            (0..8).map(|s| server.submit(Query::Sssp { source: s }).expect("admitted")).collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.served_engine, 8, "every admitted query is answered before exit");
+        for t in tickets {
+            let r = t.wait();
+            assert!(r.output.distances().is_some());
+        }
+    }
+}

@@ -199,6 +199,41 @@ fn mutate_experiment() {
 }
 
 #[test]
+fn serve_experiment() {
+    let dir = tmpdir("serve");
+    experiments::run("serve", &opts(&dir)).unwrap();
+    let csv = std::fs::read_to_string(std::path::Path::new(&dir).join("serve.csv")).unwrap();
+    // 2 modes × 4 lane widths + header.
+    assert_eq!(csv.lines().count(), 9, "{csv}");
+    let cell = |l: &str, i: usize| l.split(',').nth(i).unwrap().to_string();
+    for l in csv.lines().skip(1) {
+        assert!(cell(l, 1).parse::<usize>().is_ok(), "k column must be numeric: {l}");
+        // Closed-loop clients retry backpressure, so every query of the
+        // workload is served at every lane width.
+        assert_eq!(cell(l, 2), "48", "served column: {l}");
+        assert!(cell(l, 6).parse::<f64>().unwrap() > 0.0, "queries/s column: {l}");
+    }
+    // The acceptance bar, end-to-end: async-mode k=8 closed-loop must
+    // serve ≥2x the queries/sec of k=1 through the whole serving path
+    // (admission, lane packing, engine, reply) — the wall-clock form of
+    // the batch experiment's lane-amortization bar.
+    let speedup = |want_k: &str| -> f64 {
+        csv.lines()
+            .skip(1)
+            .find(|l| cell(l, 0) == "async" && cell(l, 1) == want_k)
+            .unwrap_or_else(|| panic!("missing async k={want_k} row:\n{csv}"))
+            .rsplit(',')
+            .next()
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap()
+    };
+    assert!((speedup("1") - 1.0).abs() < 1e-9, "k=1 is its own baseline");
+    assert!(speedup("8") >= 2.0, "k=8 must serve ≥2x the queries/sec of k=1: {}x", speedup("8"));
+}
+
+#[test]
 fn autotune_validation_runs() {
     let dir = tmpdir("autotune");
     experiments::run("autotune", &opts(&dir)).unwrap();

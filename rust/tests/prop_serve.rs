@@ -1,0 +1,310 @@
+//! Property-based tests on the serving front end's two pure cores: the
+//! batch former (lane packing + bounded admission) and the latency
+//! histogram (in-tree `daig::prop` framework; replay failures with
+//! DAIG_PROP_SEED=<master-seed>).
+//!
+//! The invariants checked here are the ones `daig serve` leans on for
+//! correctness under load:
+//!
+//! * a lane is never assigned to two in-flight queries;
+//! * freed lanes are refilled in FIFO order;
+//! * every formed group's width is a legal lane count (divides a cache
+//!   line) and is the widest the backlog and free lanes allow;
+//! * admission never exceeds the configured bound, and a rejected
+//!   query is handed back intact (the backpressure signal);
+//! * same-class queries are served in admission order;
+//! * histogram percentiles are upper bounds within 1/16 (6.25%)
+//!   relative error of the exact order statistic, and per-worker
+//!   merge is indistinguishable from recording into one histogram.
+
+use std::collections::HashSet;
+
+use daig::engine::lanes;
+use daig::prop::{forall_res, Gen};
+use daig::serve::{BatchFormer, LatencyHistogram, QueryClass, QueueFull};
+
+fn random_class(g: &mut Gen) -> QueryClass {
+    if g.chance(0.5) {
+        QueryClass::Sssp
+    } else {
+        QueryClass::Ppr
+    }
+}
+
+/// In-place Fisher-Yates using the property generator.
+fn shuffle<T>(g: &mut Gen, xs: &mut [T]) {
+    for i in (1..xs.len()).rev() {
+        xs.swap(i, g.usize(0..i + 1));
+    }
+}
+
+#[test]
+fn prop_former_never_double_assigns_a_lane() {
+    forall_res(96, |g| {
+        let k = *g.choose(&lanes::LANE_COUNTS);
+        let cap = g.usize(1..16);
+        let mut f: BatchFormer<u64> = BatchFormer::new(k, cap);
+        let mut next_id = 0u64;
+        let mut outstanding: Vec<Vec<usize>> = Vec::new();
+        let mut occupied: HashSet<usize> = HashSet::new();
+        for _ in 0..g.usize(1..120) {
+            match g.usize(0..3) {
+                0 => {
+                    let _ = f.admit(random_class(g), next_id);
+                    next_id += 1;
+                }
+                1 => {
+                    if let Some(b) = f.form() {
+                        if b.lanes.len() != b.items.len() {
+                            return Err(format!("{} lanes for {} items", b.lanes.len(), b.items.len()));
+                        }
+                        if !lanes::valid_lane_count(b.lanes.len()) {
+                            return Err(format!("illegal group width {}", b.lanes.len()));
+                        }
+                        for &l in &b.lanes {
+                            if l >= k {
+                                return Err(format!("lane {l} out of range for k={k}"));
+                            }
+                            if !occupied.insert(l) {
+                                return Err(format!("lane {l} assigned while already in flight"));
+                            }
+                        }
+                        outstanding.push(b.lanes);
+                    }
+                }
+                _ => {
+                    if !outstanding.is_empty() {
+                        let i = g.usize(0..outstanding.len());
+                        let lanes_done = outstanding.swap_remove(i);
+                        for l in &lanes_done {
+                            occupied.remove(l);
+                        }
+                        f.release(&lanes_done);
+                    }
+                }
+            }
+            if f.pending() > cap {
+                return Err(format!("pending {} exceeds capacity {cap}", f.pending()));
+            }
+            if f.in_flight() != occupied.len() {
+                return Err(format!("in_flight {} != model {}", f.in_flight(), occupied.len()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_freed_lanes_are_refilled_fifo() {
+    forall_res(64, |g| {
+        let k = *g.choose(&[2usize, 4, 8, 16]);
+        let mut f: BatchFormer<u64> = BatchFormer::new(k, 2 * k + 4);
+        for i in 0..k as u64 {
+            f.admit(QueryClass::Sssp, i).map_err(|_| "seed admit rejected")?;
+        }
+        let b = f.form().ok_or("full-width group should form")?;
+        if b.lanes.len() != k {
+            return Err(format!("expected a group of {k}, got {}", b.lanes.len()));
+        }
+        // Free the k lanes one at a time in a random order; singleton
+        // groups must then be assigned exactly that order.
+        let mut order = b.lanes.clone();
+        shuffle(g, &mut order);
+        for &l in &order {
+            f.release(&[l]);
+        }
+        for (i, &expect) in order.iter().enumerate() {
+            f.admit(QueryClass::Ppr, 1000 + i as u64).map_err(|_| "refill admit rejected")?;
+            let s = f.form().ok_or("singleton group should form")?;
+            if s.lanes != [expect] {
+                return Err(format!("refill {i}: got lanes {:?}, want [{expect}]", s.lanes));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_group_width_is_the_widest_legal_fit() {
+    forall_res(96, |g| {
+        let k = *g.choose(&lanes::LANE_COUNTS);
+        let mut f: BatchFormer<u64> = BatchFormer::new(k, 64);
+        let n = g.usize(1..40);
+        let mut head_class = None;
+        let mut sssp = 0usize;
+        let mut ppr = 0usize;
+        for i in 0..n {
+            let c = random_class(g);
+            if f.admit(c, i as u64).is_ok() {
+                head_class.get_or_insert(c);
+                match c {
+                    QueryClass::Sssp => sssp += 1,
+                    QueryClass::Ppr => ppr += 1,
+                }
+            }
+        }
+        let head = head_class.expect("at least one admit");
+        let same = if head == QueryClass::Sssp { sssp } else { ppr };
+        // All k lanes are free, so the expected width is the largest
+        // legal count <= min(same-class backlog, k).
+        let want = same.min(k);
+        let expect = lanes::LANE_COUNTS.iter().copied().filter(|&c| c <= want).max().unwrap_or(0);
+        let b = f.form().ok_or("a group should form")?;
+        if b.class != head {
+            return Err(format!("group class {:?} != head class {head:?}", b.class));
+        }
+        if b.items.len() != expect {
+            return Err(format!("group width {} != widest legal {expect} (backlog {same}, k={k})", b.items.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_admission_is_bounded_and_hands_rejects_back() {
+    forall_res(64, |g| {
+        let k = *g.choose(&lanes::LANE_COUNTS);
+        let cap = g.usize(1..12);
+        let mut f: BatchFormer<u64> = BatchFormer::new(k, cap);
+        for i in 0..cap as u64 {
+            f.admit(random_class(g), i).map_err(|_| format!("admit {i} rejected below capacity {cap}"))?;
+        }
+        match f.admit(random_class(g), 999) {
+            Err(QueueFull(item)) if item == 999 => {}
+            Err(QueueFull(item)) => return Err(format!("rejected item came back mangled: {item}")),
+            Ok(()) => return Err(format!("admit beyond capacity {cap} accepted")),
+        }
+        if f.pending() != cap {
+            return Err(format!("pending {} != capacity {cap}", f.pending()));
+        }
+        // Forming drains the queue and re-opens admission.
+        let b = f.form().ok_or("a group should form")?;
+        if f.admit(QueryClass::Sssp, 1000).is_err() {
+            return Err("admission still closed after forming".into());
+        }
+        f.release(&b.lanes);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_same_class_queries_are_served_in_admission_order() {
+    forall_res(64, |g| {
+        let k = *g.choose(&lanes::LANE_COUNTS);
+        let n = g.usize(1..48);
+        let mut f: BatchFormer<u64> = BatchFormer::new(k, n);
+        let mut admitted_sssp = Vec::new();
+        let mut admitted_ppr = Vec::new();
+        for i in 0..n as u64 {
+            let c = random_class(g);
+            f.admit(c, i).map_err(|_| "admit rejected below capacity")?;
+            match c {
+                QueryClass::Sssp => admitted_sssp.push(i),
+                QueryClass::Ppr => admitted_ppr.push(i),
+            }
+        }
+        // Releasing each group immediately keeps lanes available, so
+        // the whole backlog drains.
+        let mut served_sssp = Vec::new();
+        let mut served_ppr = Vec::new();
+        while let Some(b) = f.form() {
+            match b.class {
+                QueryClass::Sssp => served_sssp.extend(&b.items),
+                QueryClass::Ppr => served_ppr.extend(&b.items),
+            }
+            f.release(&b.lanes);
+        }
+        if !f.is_idle() {
+            return Err(format!("{} queries stranded after draining", f.pending()));
+        }
+        if served_sssp != admitted_sssp {
+            return Err(format!("sssp order {served_sssp:?} != admitted {admitted_sssp:?}"));
+        }
+        if served_ppr != admitted_ppr {
+            return Err(format!("ppr order {served_ppr:?} != admitted {admitted_ppr:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_percentiles_bound_the_exact_order_statistic() {
+    forall_res(96, |g| {
+        let mut h = LatencyHistogram::new();
+        let n = g.usize(1..200);
+        let mut vals: Vec<u64> = (0..n)
+            .map(|_| {
+                // Span the full dynamic range: right-shifting by a
+                // random amount mixes tiny exact-bucket values with
+                // huge tail values.
+                let shift = g.usize(0..60) as u32;
+                g.u64() >> shift
+            })
+            .collect();
+        for &v in &vals {
+            h.record(v);
+        }
+        vals.sort_unstable();
+        if h.max() != vals[n - 1] {
+            return Err(format!("max {} != exact {}", h.max(), vals[n - 1]));
+        }
+        let mut prev = 0u64;
+        for &q in &[0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let rank = ((q * n as f64).ceil() as usize).max(1);
+            let exact = vals[rank - 1];
+            let got = h.percentile(q).ok_or("non-empty histogram returned None")?;
+            if got < exact {
+                return Err(format!("p{q}: reported {got} understates exact {exact}"));
+            }
+            // Values below SUB_BUCKETS sit in exact singleton buckets;
+            // above, the sub-bucket width is <= exact/16.
+            if got - exact > exact / 16 {
+                return Err(format!("p{q}: reported {got} overshoots exact {exact} by more than 6.25%"));
+            }
+            if got < prev {
+                return Err(format!("p{q}: {got} below a lower percentile {prev}"));
+            }
+            prev = got;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_histogram_merge_is_recording_order_independent() {
+    forall_res(64, |g| {
+        let n = g.usize(1..150);
+        let vals: Vec<u64> = (0..n).map(|_| g.u64() >> g.usize(0..60)).collect();
+        let mut whole = LatencyHistogram::new();
+        let parts = g.usize(1..5);
+        let mut shards = vec![LatencyHistogram::new(); parts];
+        for (i, &v) in vals.iter().enumerate() {
+            whole.record(v);
+            shards[i % parts].record(v);
+        }
+        let mut merged = LatencyHistogram::new();
+        // Merge in a random order — the fold must commute.
+        shuffle(g, &mut shards);
+        for s in &shards {
+            merged.merge(s);
+        }
+        if merged.count() != whole.count() || merged.max() != whole.max() {
+            return Err(format!(
+                "merged (count {}, max {}) != whole (count {}, max {})",
+                merged.count(),
+                merged.max(),
+                whole.count(),
+                whole.max()
+            ));
+        }
+        if (merged.mean() - whole.mean()).abs() > whole.mean().abs() * 1e-9 {
+            return Err(format!("merged mean {} != whole mean {}", merged.mean(), whole.mean()));
+        }
+        for &q in &[0.0, 0.5, 0.9, 0.99, 1.0] {
+            if merged.percentile(q) != whole.percentile(q) {
+                return Err(format!("q={q}: merged {:?} != whole {:?}", merged.percentile(q), whole.percentile(q)));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,279 @@
+//! Serve-while-mutating differential suite: live queries against a
+//! running [`QueryServer`] while mutation batches land concurrently,
+//! with every answer replayed against a from-scratch serial oracle on
+//! a CSR snapshot of the exact [`GraphVersion`] it was served at —
+//! across the full mode × schedule × stealing matrix.
+//!
+//! The contract under test is the one `daig serve` makes to clients:
+//! an answer is always internally consistent with *some* complete
+//! graph version (the one in [`ServedResult::version`]), never a
+//! half-mutated hybrid. The driver snapshots the CSR after every
+//! applied batch, so each served version has an oracle-ready graph to
+//! replay against: SSSP answers must bit-match Dijkstra (unique,
+//! integral fixed point, so interleavings are invisible), PPR answers
+//! are ε-bounded against the serial personalized-PageRank oracle.
+//!
+//! The cache suite at the bottom covers the server-level result-cache
+//! contract: repeat hits at a stable version, miss + recompute after a
+//! version bump, and no stale entry surviving a mutation batch even
+//! when it triggers an overlay compaction.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use daig::algorithms::oracle;
+use daig::algorithms::pagerank::PrConfig;
+use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
+use daig::graph::{Csr, GraphBuilder, VersionedGraph};
+use daig::serve::{Query, QueryServer, ServeConfig, ServedResult, SubmitError};
+use daig::util::rng::SplitMix64;
+
+const MODES: [ExecutionMode; 4] = [
+    ExecutionMode::Synchronous,
+    ExecutionMode::Asynchronous,
+    ExecutionMode::Delayed(32),
+    ExecutionMode::Adaptive,
+];
+
+/// Every (mode, schedule, stealing) cell.
+fn matrix() -> Vec<(ExecutionMode, SchedulePolicy, bool)> {
+    let mut cells = Vec::new();
+    for mode in MODES {
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                cells.push((mode, sched, steal));
+            }
+        }
+    }
+    cells
+}
+
+fn cfg(mode: ExecutionMode, sched: SchedulePolicy, steal: bool) -> EngineConfig {
+    let c = EngineConfig::new(2, mode).with_schedule(sched);
+    if steal {
+        c.with_stealing()
+    } else {
+        c
+    }
+}
+
+/// Seeded weighted uniform digraph at serving-test scale.
+fn serving_graph(seed: u64) -> Csr {
+    let mut rng = SplitMix64::new(seed);
+    let n = 160;
+    let mut b = GraphBuilder::new(n).with_weights();
+    for _ in 0..800 {
+        let (s, d) = (rng.index(n) as u32, rng.index(n) as u32);
+        let w = rng.range_u32(1, 64);
+        b.push(s, d, w);
+    }
+    b.build()
+}
+
+/// Closed-loop query: retry on backpressure, fail the test on anything
+/// else.
+fn query_retrying(server: &QueryServer, query: Query) -> ServedResult {
+    let mut query = query;
+    loop {
+        match server.query(query) {
+            Ok(r) => return r,
+            Err(SubmitError::Overloaded(back)) => {
+                query = back;
+                std::thread::yield_now();
+            }
+            Err(other) => panic!("query failed: {other:?}"),
+        }
+    }
+}
+
+/// Drive `clients` closed-loop client threads (`per_client` queries
+/// each, drawn by `make_query`) while the calling thread applies
+/// `batches` mutation batches, paced by served-query counts so the
+/// mutations land mid-workload. Returns every answer plus a CSR
+/// snapshot of every graph version that existed during the run.
+fn drive(
+    server: &QueryServer,
+    clients: usize,
+    per_client: usize,
+    batches: usize,
+    seed: u64,
+    make_query: impl Fn(&mut SplitMix64) -> Query + Sync,
+) -> (Vec<ServedResult>, HashMap<u64, Csr>) {
+    let mut snapshots = HashMap::new();
+    let (v0, csr0) = server.snapshot_csr();
+    snapshots.insert(v0.0, csr0);
+    let done = AtomicUsize::new(0);
+    let total = clients * per_client;
+    let results = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                let done = &done;
+                let make_query = &make_query;
+                s.spawn(move || {
+                    let mut rng = SplitMix64::new(seed).fork(c as u64);
+                    let mut out = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        out.push(query_retrying(server, make_query(&mut rng)));
+                        done.fetch_add(1, Ordering::Relaxed);
+                    }
+                    out
+                })
+            })
+            .collect();
+        // Batch b lands once roughly (b+1)/(batches+1) of the workload
+        // has been served — mutations interleave with live queries.
+        for b in 0..batches {
+            let threshold = (b + 1) * total / (batches + 1);
+            while done.load(Ordering::Relaxed) < threshold {
+                std::thread::yield_now();
+            }
+            let batch = server.random_batch(0.03, seed ^ (b as u64 + 1));
+            let receipt = server.apply_mutations(&batch).expect("mutation batch applies");
+            let (v, csr) = server.snapshot_csr();
+            assert_eq!(v, receipt.version, "only this thread mutates");
+            snapshots.insert(v.0, csr);
+        }
+        handles.into_iter().flat_map(|h| h.join().expect("client thread panicked")).collect::<Vec<_>>()
+    });
+    (results, snapshots)
+}
+
+#[test]
+fn serve_while_mutating_sssp_bit_matches_snapshot_oracle_every_cell() {
+    let g = serving_graph(0x5E21_0001);
+    let n = g.num_vertices();
+    for (mode, sched, steal) in matrix() {
+        let server =
+            QueryServer::start(VersionedGraph::new(g.clone()), ServeConfig::new(4, cfg(mode, sched, steal)));
+        let (results, snapshots) =
+            drive(&server, 3, 8, 3, 0x5E21_1000, |rng| Query::Sssp { source: rng.index(n) as u32 });
+        let stats = server.shutdown();
+        assert_eq!(results.len(), 24, "{mode:?}/{sched:?} steal={steal}");
+        assert!(stats.version.0 >= 3, "{mode:?}/{sched:?} steal={steal}: mutations must have landed");
+        // Replaying Dijkstra per (version, source) pair; answers must
+        // bit-match the snapshot of the version they were served at.
+        let mut oracle_cache: HashMap<(u64, u32), Vec<u32>> = HashMap::new();
+        for r in &results {
+            let source = match &r.query {
+                Query::Sssp { source } => *source,
+                Query::Ppr { .. } => panic!("sssp-only workload"),
+            };
+            let snap = snapshots
+                .get(&r.version.0)
+                .unwrap_or_else(|| panic!("answer at unknown version {}", r.version.0));
+            let want = oracle_cache
+                .entry((r.version.0, source))
+                .or_insert_with(|| oracle::dijkstra(snap, source));
+            assert_eq!(
+                r.output.distances().expect("sssp answer"),
+                &want[..],
+                "{mode:?}/{sched:?} steal={steal} src={source} at v{}",
+                r.version.0
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_while_mutating_mixed_classes_match_their_oracles() {
+    // Mixed SSSP + PPR traffic under mutation churn: the former must
+    // keep the classes in separate lane groups, and each class is held
+    // to its own oracle — bit-exact distances, ε-bounded scores. The
+    // ε chain matches the lane-parity suite: the engine at ε=1e-6
+    // tracks the sync baseline to 1e-3 under async interleavings and
+    // the baseline sits within 1e-4 of the serial oracle, so 2e-3
+    // covers the composition.
+    let g = serving_graph(0x5E21_0002);
+    let n = g.num_vertices();
+    let pr = PrConfig { damping: 0.85, epsilon: 1e-6 };
+    for (mode, sched, steal) in matrix() {
+        let mut sc = ServeConfig::new(4, cfg(mode, sched, steal));
+        sc.pr = PrConfig { damping: 0.85, epsilon: 1e-6 };
+        let server = QueryServer::start(VersionedGraph::new(g.clone()), sc);
+        let (results, snapshots) = drive(&server, 3, 6, 2, 0x5E21_2000, |rng| {
+            if rng.chance(0.5) {
+                Query::Sssp { source: rng.index(n) as u32 }
+            } else {
+                // Distinct consecutive teleports, so the multiset
+                // semantics of duplicated entries never come into play.
+                let t = 1 + rng.index(3);
+                let t0 = rng.index(n - t) as u32;
+                Query::Ppr { teleports: (0..t as u32).map(|i| t0 + i).collect() }
+            }
+        });
+        server.shutdown();
+        assert_eq!(results.len(), 18, "{mode:?}/{sched:?} steal={steal}");
+        for r in &results {
+            let snap = snapshots
+                .get(&r.version.0)
+                .unwrap_or_else(|| panic!("answer at unknown version {}", r.version.0));
+            match &r.query {
+                Query::Sssp { source } => {
+                    let want = oracle::dijkstra(snap, *source);
+                    assert_eq!(
+                        r.output.distances().expect("sssp answer"),
+                        &want[..],
+                        "{mode:?}/{sched:?} steal={steal} src={source} at v{}",
+                        r.version.0
+                    );
+                }
+                Query::Ppr { teleports } => {
+                    let (want, _) = oracle::personalized_pagerank(snap, pr.damping, pr.epsilon, teleports, 10_000);
+                    let got = r.output.scores().expect("ppr answer");
+                    assert_eq!(got.len(), want.len());
+                    for (v, (a, b)) in got.iter().zip(&want).enumerate() {
+                        assert!(
+                            (a - b).abs() < 2e-3,
+                            "{mode:?}/{sched:?} steal={steal} ppr {teleports:?} at v{} vertex {v}: {a} vs {b}",
+                            r.version.0
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn no_stale_cache_entry_survives_mutation_or_compaction() {
+    let g = serving_graph(0x5E21_0003);
+    let n = g.num_vertices();
+    // Compaction threshold 0: every mutation batch folds the overlay
+    // back into a fresh CSR — the harshest invalidation path, since
+    // the post-batch graph shares no storage with the one the cached
+    // answers were computed on.
+    let vg = VersionedGraph::new(g).with_compaction_threshold(0.0);
+    let ecfg = EngineConfig::new(2, ExecutionMode::Asynchronous);
+    let server = QueryServer::start(vg, ServeConfig::new(2, ecfg));
+    let sources: Vec<u32> = (0..6u32).map(|i| (i * 7) % n as u32).collect();
+    // Warm the cache: the second ask of each source must hit.
+    for &s in &sources {
+        let first = server.query(Query::Sssp { source: s }).expect("admitted");
+        assert!(!first.cached);
+        let again = server.query(Query::Sssp { source: s }).expect("admitted");
+        assert!(again.cached, "repeat at a stable version must hit the cache");
+        assert_eq!(again.output, first.output);
+        assert_eq!(again.version, first.version);
+    }
+    assert_eq!(server.stats().cache.hits, 6);
+    let batch = server.random_batch(0.05, 0x5E21_3000);
+    let receipt = server.apply_mutations(&batch).expect("batch applies");
+    assert_eq!(
+        server.stats().cache.invalidated,
+        6,
+        "every pre-mutation entry is purged by the post-batch sweep"
+    );
+    // Repeats now recompute and must match the post-compaction
+    // snapshot's oracle — a stale hit would return the old distances.
+    let (v, snap) = server.snapshot_csr();
+    assert_eq!(v, receipt.version);
+    for &s in &sources {
+        let r = server.query(Query::Sssp { source: s }).expect("admitted");
+        assert!(!r.cached, "version bump must force a recompute");
+        assert_eq!(r.version, receipt.version);
+        assert_eq!(r.output.distances().expect("sssp answer"), &oracle::dijkstra(&snap, s)[..]);
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.served_engine, 12);
+    assert_eq!(stats.served_cached, 6);
+}
