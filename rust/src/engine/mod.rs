@@ -160,6 +160,16 @@ pub struct EngineConfig {
     /// disables hinting. Results are distance-invariant — a prefetch is
     /// a hint — which the differential suite asserts.
     pub prefetch: usize,
+    /// NUMA-aware placement (DESIGN.md §12): partition bounds are
+    /// rounded to whole value lines, the native executor pins each
+    /// worker to the CPUs of the socket that owns its partition and
+    /// first-touches the partition's value lines and delay buffers from
+    /// that worker, and the sim charges remote-socket DRAM fills
+    /// through [`sim::cache::LineTable`] line homes. Graceful no-op
+    /// when the host exposes no topology (pinning fails silently, and a
+    /// single-node machine leaves placement unchanged). Default off —
+    /// byte-identical behavior to before this field existed.
+    pub numa: bool,
     /// Safety valve: abort after this many rounds.
     pub max_rounds: usize,
     /// Warm-start seed: initialize values (and, under sparse schedules,
@@ -183,6 +193,7 @@ impl EngineConfig {
             stealing: false,
             no_atomics: false,
             prefetch: 0,
+            numa: false,
             max_rounds: 10_000,
             resume: None,
         }
@@ -232,13 +243,31 @@ impl EngineConfig {
         self
     }
 
+    /// Builder-style: enable NUMA-aware placement (socket-pinned
+    /// first-touch in the native executor, remote-socket line costs in
+    /// the sim).
+    pub fn with_numa(mut self) -> Self {
+        self.numa = true;
+        self
+    }
+
     /// Resolve the partition map for a graph (any
     /// [`crate::graph::GraphStore`] backend — overlays are partitioned
-    /// by their current degrees).
+    /// by their current degrees). Under [`Self::numa`] interior bounds
+    /// are rounded to whole value lines so no cache line of the value
+    /// array spans two partitions — the precondition for per-partition
+    /// first-touch page placement (and it holds for every lane count,
+    /// since a group boundary at a line-multiple vertex is itself
+    /// line-aligned).
     pub fn partition_map<G: crate::graph::GraphStore>(&self, g: &G) -> PartitionMap {
-        match self.partition {
+        let pm = match self.partition {
             PartitionStrategy::BlockedByDegree => crate::partition::blocked::partition(g, self.threads),
             PartitionStrategy::EqualVertex => crate::partition::equal_vertex::partition(g, self.threads),
+        };
+        if self.numa {
+            crate::partition::numa::line_align(pm, g.num_vertices())
+        } else {
+            pm
         }
     }
 

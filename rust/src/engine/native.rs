@@ -219,9 +219,25 @@ pub fn run<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, cfg: &EngineConfig)
         }
     };
 
-    let global = SharedValues::from_bits_lanes(init.iter().copied(), lane_count);
-    // Double buffer for sync mode only (async/delayed read+write `global`).
-    let back = SharedValues::from_bits_lanes(init.iter().copied(), lane_count);
+    // NUMA placement: with `--numa` both value arrays come from untouched
+    // demand-paged zero pages, and each pinned worker writes its own
+    // partition's initial values in its preamble (extra barrier there) —
+    // so every page faults in from the owning socket and its DRAM lands
+    // there. Without the flag the caller thread touches everything here,
+    // exactly as before.
+    let (global, back) = if cfg.numa {
+        (
+            SharedValues::zeroed_lanes_first_touch(init.len(), lane_count),
+            SharedValues::zeroed_lanes_first_touch(init.len(), lane_count),
+        )
+    } else {
+        (
+            SharedValues::from_bits_lanes(init.iter().copied(), lane_count),
+            // Double buffer for sync mode only (async/delayed read+write
+            // `global`).
+            SharedValues::from_bits_lanes(init.iter().copied(), lane_count),
+        )
+    };
 
     let frontier_on = cfg.schedule != SchedulePolicy::Dense;
     if frontier_on {
@@ -278,6 +294,7 @@ pub fn run<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, cfg: &EngineConfig)
     std::thread::scope(|scope| {
         for t in 0..t_count {
             let range = pm.range(t);
+            let init = init.as_slice();
             let ctrl = &ctrl;
             let global = &global;
             let back = &back;
@@ -287,8 +304,8 @@ pub fn run<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, cfg: &EngineConfig)
             let converged_out = &converged_out;
             let handle = move || {
                 worker(
-                    t, range, g, prog, cfg, locality, start_sparse, ctrl, global, back, frontiers, grid,
-                    rounds_out, converged_out,
+                    t, range, g, prog, cfg, locality, start_sparse, init, ctrl, global, back, frontiers,
+                    grid, rounds_out, converged_out,
                 );
             };
             if t == t_count - 1 {
@@ -335,6 +352,7 @@ fn worker<G: GraphStore, P: VertexProgram>(
     cfg: &EngineConfig,
     locality: Option<f64>,
     start_sparse: bool,
+    init: &[u32],
     ctrl: &Ctrl,
     global: &SharedValues,
     back: &SharedValues,
@@ -343,6 +361,22 @@ fn worker<G: GraphStore, P: VertexProgram>(
     rounds_out: &Mutex<Vec<RoundStats>>,
     converged_out: &AtomicBool,
 ) {
+    if cfg.numa {
+        // Pin to the owning node before any page is faulted, then
+        // first-touch this partition's element range in *both* value
+        // arrays by writing the initial values: each page binds to this
+        // socket's DRAM (`run` allocated the arrays untouched). The
+        // barrier keeps round 0 from reading a neighbor's still-zero
+        // pages; it is gated on `cfg.numa` alone — never on whether
+        // pinning succeeded — so the gang stays barrier-symmetric even
+        // when some workers' `sched_setaffinity` is denied.
+        crate::partition::numa::pin_worker(t, ctrl.deltas.len());
+        let k = prog.lanes();
+        let (lo, hi) = (range.start as usize * k, range.end as usize * k);
+        global.store_run(lo as VertexId, &init[lo..hi]);
+        back.store_run(lo as VertexId, &init[lo..hi]);
+        ctrl.barrier.wait();
+    }
     let n = g.num_vertices();
     let sync_mode = matches!(cfg.mode, ExecutionMode::Synchronous);
     let adaptive = matches!(cfg.mode, ExecutionMode::Adaptive);
@@ -983,6 +1017,44 @@ mod tests {
             assert!(r.converged, "{mode:?}");
             assert_eq!(r.values, oracle, "{mode:?}");
         }
+    }
+
+    #[test]
+    fn numa_flag_never_changes_results() {
+        // NUMA placement is pure page placement: sync runs stay
+        // bit-identical to serial, async/delayed still reach the fixed
+        // point, and everything holds whether or not this host actually
+        // has multiple nodes (pinning no-ops gracefully).
+        let g = GapGraph::Kron.generate(9, 8);
+        let oracle = fixed_point_serial(&g);
+        for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(32)] {
+            let cfg = EngineConfig::new(4, mode).with_numa();
+            let r = run(&g, &MaxProp { g: &g }, &cfg);
+            assert!(r.converged, "{mode:?}");
+            assert_eq!(r.values, oracle, "{mode:?}");
+        }
+        // Stealing + frontier ride along unchanged (stolen chunks write
+        // through the delay buffer into remote-owned, already-touched
+        // pages — correctness never depended on placement).
+        let cfg = EngineConfig::new(4, ExecutionMode::Delayed(16))
+            .with_numa()
+            .with_schedule(SchedulePolicy::Frontier)
+            .with_stealing();
+        let r = run(&g, &MaxProp { g: &g }, &cfg);
+        assert!(r.converged);
+        assert_eq!(r.values, oracle);
+    }
+
+    #[test]
+    fn numa_partitions_are_line_aligned() {
+        let g = GapGraph::Web.generate(9, 4);
+        let cfg = EngineConfig::new(5, ExecutionMode::Asynchronous).with_numa();
+        let pm = cfg.partition_map(&g);
+        let b = pm.bounds();
+        for &x in &b[1..b.len() - 1] {
+            assert_eq!(x as usize % crate::VALUES_PER_LINE, 0, "interior bound {x}");
+        }
+        assert_eq!(pm.num_vertices(), g.num_vertices());
     }
 
     #[test]

@@ -10,6 +10,8 @@
 
 use std::sync::atomic::{AtomicU32, Ordering};
 
+use memmap2::MmapMut;
+
 use crate::graph::VertexId;
 use crate::VALUES_PER_LINE;
 
@@ -37,8 +39,40 @@ pub struct ValueLine([AtomicU32; VALUES_PER_LINE]);
 /// stages and flushes; [`Self::load_group`]/[`Self::store_group`]
 /// address whole per-vertex groups. `lanes == 1` is the classic
 /// single-query array where element index = vertex id.
+/// Backing storage for the line array.
+///
+/// `Owned` is a regular heap allocation: the constructing thread writes
+/// every line, so Linux places all its pages on that thread's NUMA node.
+/// `Anon` is a demand-paged anonymous mapping whose pages are zero and
+/// **untouched** at construction — each page lands on the node of
+/// whichever worker writes it first, which is what `--numa` wants: the
+/// executor has every pinned worker initialize its own partition's
+/// element range, so each partition's lines live in that socket's DRAM.
+enum Lines {
+    Owned(Vec<ValueLine>),
+    /// Mapping plus line count (the map is sized in whole lines).
+    Anon(MmapMut, usize),
+}
+
+impl Lines {
+    #[inline]
+    fn as_slice(&self) -> &[ValueLine] {
+        match self {
+            Lines::Owned(v) => v,
+            // SAFETY: the map holds `nlines * 64` zero-initialized bytes
+            // at a 64-byte-aligned base (checked at construction; mmap
+            // returns page-aligned memory). Any bit pattern is a valid
+            // `[AtomicU32; 16]`, the map is never remapped while
+            // borrowed, and all mutation goes through the atomics.
+            Lines::Anon(m, nlines) => unsafe {
+                std::slice::from_raw_parts(m.as_ptr() as *const ValueLine, *nlines)
+            },
+        }
+    }
+}
+
 pub struct SharedValues {
-    lines: Vec<ValueLine>,
+    lines: Lines,
     len: usize,
     lanes: usize,
 }
@@ -58,20 +92,45 @@ impl SharedValues {
         let bits: Vec<u32> = bits.into_iter().collect();
         assert_eq!(bits.len() % lanes, 0, "value count must be a multiple of the lane count");
         let len = bits.len();
-        let lines = (0..len.div_ceil(VALUES_PER_LINE))
+        let lines: Vec<ValueLine> = (0..len.div_ceil(VALUES_PER_LINE))
             .map(|li| {
                 let base = li * VALUES_PER_LINE;
                 ValueLine(std::array::from_fn(|i| AtomicU32::new(bits.get(base + i).copied().unwrap_or(0))))
             })
             .collect();
-        Self { lines, len, lanes }
+        Self { lines: Lines::Owned(lines), len, lanes }
+    }
+
+    /// Zero-initialized array whose pages are **not yet faulted in**:
+    /// backed by an anonymous demand-paged mapping, so the first thread
+    /// to *write* each 4 KiB page determines which NUMA node its DRAM
+    /// comes from. The `--numa` executor allocates both value arrays
+    /// this way and has each pinned worker [`Self::store`] its own
+    /// partition's initial values before the first round.
+    ///
+    /// Falls back to the owned (constructing-thread-touched) layout when
+    /// the mapping fails or — on the non-Unix vendored fallback — is not
+    /// 64-byte aligned; semantics are identical either way, only page
+    /// placement differs.
+    pub fn zeroed_lanes_first_touch(len: usize, lanes: usize) -> Self {
+        assert!(crate::engine::lanes::valid_lane_count(lanes), "bad lane count {lanes}");
+        assert_eq!(len % lanes, 0, "value count must be a multiple of the lane count");
+        let nlines = len.div_ceil(VALUES_PER_LINE);
+        if nlines > 0 {
+            if let Ok(m) = MmapMut::map_anon(nlines * crate::CACHE_LINE_BYTES) {
+                if m.as_ptr() as usize % crate::CACHE_LINE_BYTES == 0 {
+                    return Self { lines: Lines::Anon(m, nlines), len, lanes };
+                }
+            }
+        }
+        Self::from_bits_lanes(std::iter::repeat(0).take(len), lanes)
     }
 
     /// The slot holding element `idx`.
     #[inline]
     fn slot(&self, idx: usize) -> &AtomicU32 {
         debug_assert!(idx < self.len, "element {idx} out of range for len {}", self.len);
-        &self.lines[idx / VALUES_PER_LINE].0[idx % VALUES_PER_LINE]
+        &self.lines.as_slice()[idx / VALUES_PER_LINE].0[idx % VALUES_PER_LINE]
     }
 
     /// Lanes per vertex group.
@@ -134,7 +193,7 @@ impl SharedValues {
         let base = v as usize * self.lanes;
         // A group never straddles a line, so one line lookup serves all
         // `lanes` slots.
-        let line = &self.lines[base / VALUES_PER_LINE].0;
+        let line = &self.lines.as_slice()[base / VALUES_PER_LINE].0;
         let off = base % VALUES_PER_LINE;
         for (l, o) in out.iter_mut().enumerate() {
             *o = line[off + l].load(Ordering::Relaxed);
@@ -146,7 +205,7 @@ impl SharedValues {
     pub fn store_group(&self, v: VertexId, vals: &[u32]) {
         debug_assert_eq!(vals.len(), self.lanes);
         let base = v as usize * self.lanes;
-        let line = &self.lines[base / VALUES_PER_LINE].0;
+        let line = &self.lines.as_slice()[base / VALUES_PER_LINE].0;
         let off = base % VALUES_PER_LINE;
         for (l, &x) in vals.iter().enumerate() {
             line[off + l].store(x, Ordering::Relaxed);
@@ -293,6 +352,43 @@ mod tests {
         s.prefetch(0);
         s.prefetch(2);
         assert_eq!(s.to_vec(), vec![7, 8, 9], "prefetch must not move bits");
+    }
+
+    #[test]
+    fn first_touch_array_is_zero_and_fully_functional() {
+        // 97 vertices × 4 lanes: partial tail line, lane addressing, and
+        // the same alignment guarantees as the owned backing.
+        let n = 97usize;
+        let s = SharedValues::zeroed_lanes_first_touch(n * 4, 4);
+        assert_eq!(s.len(), n * 4);
+        assert_eq!(s.lanes(), 4);
+        assert_eq!(s.addr_of(0) % crate::CACHE_LINE_BYTES, 0, "base must open a line");
+        assert!(s.to_vec().iter().all(|&x| x == 0), "anon pages read as zero");
+        s.store(5, 42);
+        s.store_run(16, &[1, 2, 3]);
+        s.store_group(90, &[7, 8, 9, 10]);
+        assert_eq!(s.load(5), 42);
+        let mut g = [0u32; 4];
+        s.load_group(90, &mut g);
+        assert_eq!(g, [7, 8, 9, 10]);
+        let v = s.to_vec();
+        assert_eq!(&v[16..19], &[1, 2, 3]);
+        // Empty array: valid, no mapping needed.
+        let e = SharedValues::zeroed_lanes_first_touch(0, 1);
+        assert!(e.is_empty());
+    }
+
+    #[test]
+    fn first_touch_matches_owned_zero_array() {
+        // The two backings must be observationally identical — the numa
+        // flag can never change results, only page placement.
+        let a = SharedValues::zeroed_lanes_first_touch(64, 2);
+        let b = SharedValues::from_bits_lanes(vec![0u32; 64], 2);
+        for i in 0..64u32 {
+            a.store(i, i * 3);
+            b.store(i, i * 3);
+        }
+        assert_eq!(a.to_vec(), b.to_vec());
     }
 
     #[test]

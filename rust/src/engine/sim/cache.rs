@@ -69,12 +69,36 @@ pub struct Access {
 /// Coherence state for one shared array.
 pub struct LineTable {
     lines: Vec<Line>,
+    /// NUMA home socket per line (first-touch placement), mirroring the
+    /// native `--numa` path: a cold DRAM fill from a non-home socket is
+    /// charged [`super::cost::CostModel::remote_dram`] instead of
+    /// `dram`. `None` (the default) models interleaved/unknown placement
+    /// and charges plain `dram` everywhere — bit-identical to the
+    /// pre-NUMA simulator.
+    homes: Option<Vec<u8>>,
 }
 
 impl LineTable {
     /// Table covering `n_values` 32-bit elements.
     pub fn new(n_values: usize) -> Self {
-        Self { lines: vec![Line::default(); n_values.div_ceil(VALUES_PER_LINE)] }
+        Self { lines: vec![Line::default(); n_values.div_ceil(VALUES_PER_LINE)], homes: None }
+    }
+
+    /// Install per-line home sockets (one entry per line). Placement
+    /// survives [`Self::clear`]: pages keep their node across runs.
+    pub fn set_homes(&mut self, homes: Vec<u8>) {
+        assert_eq!(homes.len(), self.lines.len(), "one home socket per line");
+        self.homes = Some(homes);
+    }
+
+    /// Cold-fill latency for line `li` as seen by thread `t`: local or
+    /// remote DRAM depending on the line's home socket.
+    #[inline]
+    fn dram_cost(&self, li: usize, t: usize, m: &Machine, active: usize) -> u64 {
+        match &self.homes {
+            Some(h) if h[li] as usize != m.socket_of(t, active) => m.cost.remote_dram,
+            _ => m.cost.dram,
+        }
     }
 
     /// Line index of element `idx`.
@@ -91,7 +115,9 @@ impl LineTable {
     /// Simulate thread `t` reading element `idx`.
     #[inline]
     pub fn read(&mut self, t: usize, idx: usize, m: &Machine, active: usize) -> Access {
-        let line = &mut self.lines[Self::line_of(idx)];
+        let li = Self::line_of(idx);
+        let dram = self.dram_cost(li, t, m, active);
+        let line = &mut self.lines[li];
         if line.has(t) {
             // Valid copy (Shared or our own Modified): L1 hit.
             return Access { cycles: m.cost.l1, invalidated: 0, remote_dirty: false, cold: false, hit: true };
@@ -108,16 +134,18 @@ impl LineTable {
             line.add(t);
             return Access { cycles: m.cost.llc, invalidated: 0, remote_dirty: false, cold: false, hit: false };
         }
-        // Cold: DRAM.
+        // Cold: DRAM (local or the home node's, under NUMA placement).
         line.touched = true;
         line.add(t);
-        Access { cycles: m.cost.dram, invalidated: 0, remote_dirty: false, cold: true, hit: false }
+        Access { cycles: dram, invalidated: 0, remote_dirty: false, cold: true, hit: false }
     }
 
     /// Simulate thread `t` writing element `idx` (request-for-ownership).
     #[inline]
     pub fn write(&mut self, t: usize, idx: usize, m: &Machine, active: usize) -> Access {
-        let line = &mut self.lines[Self::line_of(idx)];
+        let li = Self::line_of(idx);
+        let dram = self.dram_cost(li, t, m, active);
+        let line = &mut self.lines[li];
         if line.modified == Some(t as u16) {
             // Already exclusive-dirty here: store hits L1.
             return Access { cycles: m.cost.l1, invalidated: 0, remote_dirty: false, cold: false, hit: true };
@@ -135,7 +163,7 @@ impl LineTable {
             // Silent S→M upgrade of our own copy.
             m.cost.l1
         } else if cold {
-            m.cost.dram
+            dram
         } else {
             m.cost.llc
         };
@@ -228,6 +256,47 @@ mod tests {
         let w = lt.write(4, 0, &m, 32);
         assert_eq!(w.cycles, m.cost.l1);
         assert_eq!(w.invalidated, 0);
+    }
+
+    #[test]
+    fn numa_homes_charge_remote_cold_fills() {
+        let m = machine();
+        let mut lt = LineTable::new(64); // 4 lines
+        lt.set_homes(vec![0, 0, 1, 1]);
+        // Thread 0 (socket 0) cold-reads a home-0 line: local DRAM.
+        let a = lt.read(0, 0, &m, 32);
+        assert!(a.cold);
+        assert_eq!(a.cycles, m.cost.dram);
+        // Same thread cold-reads a home-1 line: remote DRAM.
+        let b = lt.read(0, 32, &m, 32);
+        assert!(b.cold);
+        assert_eq!(b.cycles, m.cost.remote_dram);
+        // Cold *write* from socket 1 (thread 31) into a home-0 line.
+        let w = lt.write(31, 16, &m, 32);
+        assert!(w.cold);
+        assert_eq!(w.cycles, m.cost.remote_dram);
+        // Once a line is warm, homes are out of the picture: coherence
+        // costs take over (same values as the no-homes table).
+        let w2 = lt.write(31, 33, &m, 32); // line 2, warm: RFO, not a fill
+        assert!(!w2.cold);
+        assert_eq!(w2.cycles, m.cost.llc);
+        let r = lt.read(0, 34, &m, 32); // dirty on socket 1 now
+        assert!(r.remote_dirty);
+        assert_eq!(r.cycles, m.cost.remote_socket, "dirty forward, not a DRAM fill");
+        // clear() resets coherence but keeps placement.
+        lt.clear();
+        let c = lt.read(0, 32, &m, 32);
+        assert_eq!(c.cycles, m.cost.remote_dram);
+    }
+
+    #[test]
+    fn no_homes_is_legacy_behavior() {
+        // Default table: every cold fill is plain DRAM regardless of
+        // accessor socket — the pre-NUMA simulator, bit for bit.
+        let m = machine();
+        let mut lt = LineTable::new(64);
+        assert_eq!(lt.read(31, 0, &m, 32).cycles, m.cost.dram);
+        assert_eq!(lt.write(0, 16, &m, 32).cycles, m.cost.dram);
     }
 
     #[test]

@@ -20,8 +20,13 @@ pub struct CostModel {
     pub remote_core: u64,
     /// Dirty line forwarded across the socket interconnect.
     pub remote_socket: u64,
-    /// Cold miss to DRAM.
+    /// Cold miss to DRAM attached to the accessor's own socket.
     pub dram: u64,
+    /// Cold miss served by the *other* socket's DRAM (the line's home
+    /// node under first-touch placement is not the accessor's): the
+    /// fill crosses the interconnect on top of the DRAM access. This is
+    /// what `--numa` placement avoids for owner-partition traffic.
+    pub remote_dram: u64,
     /// Fixed work per vertex update (loop overhead, convergence math).
     pub vertex_base: u64,
     /// ALU work per in-edge (multiply-add / min-plus).
@@ -48,6 +53,7 @@ impl Default for CostModel {
             remote_core: 70,
             remote_socket: 130,
             dram: 160,
+            remote_dram: 240,
             vertex_base: 8,
             edge_compute: 2,
             buffer_push: 1,
@@ -128,6 +134,10 @@ mod tests {
         let c = CostModel::default();
         assert!(c.l1 < c.llc && c.llc < c.remote_core);
         assert!(c.remote_core < c.remote_socket && c.remote_socket < c.dram);
+        // A cross-socket DRAM fill stacks interconnect on top of the
+        // memory access: strictly worse than local DRAM, and worse than
+        // a cache-to-cache forward.
+        assert!(c.dram < c.remote_dram && c.remote_socket < c.remote_dram);
         assert!(c.buffer_push <= c.l1);
         // Stealing pays a contended CAS: pricier than local work, cheaper
         // than a cross-socket forward.

@@ -154,6 +154,13 @@ impl GraphBuilder {
         }
         triples.dedup_by_key(|&mut (s, d, _)| (s, d));
 
+        // Edge *counts* are u64 (offsets), but per-vertex degrees and the
+        // compressed store's per-row element counts are u32 — a graph
+        // with more than u32::MAX edges would silently truncate them.
+        if triples.len() > u32::MAX as usize {
+            bail!("edge count {} exceeds the u32 edge index space", triples.len());
+        }
+
         let mut offsets = vec![0u64; n + 1];
         for &(_, d, _) in &triples {
             offsets[d as usize + 1] += 1;

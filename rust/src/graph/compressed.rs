@@ -1,0 +1,1254 @@
+//! Block-compressed CSR: delta/varint neighbor lists in cache-line
+//! blocks, one byte image shared by the in-RAM and mmap-backed paths.
+//!
+//! Neighbor rows are encoded per vertex: the first in-neighbor id is
+//! absolute, every following id is the gap to its predecessor (rows are
+//! strictly ascending after builder dedup, so gaps are ≥ 1 and small on
+//! locality-friendly graphs — LEB128 varints make the common gap one
+//! byte instead of four). The stream is carved into 64-byte blocks with
+//! one hard rule, applied identically by encoder and decoder:
+//!
+//! > **Pad rule.** A varint never starts within the last
+//! > `MAX_VARINT_BYTES - 1` bytes of a block. If fewer than
+//! > [`MAX_VARINT_BYTES`] bytes remain, both sides skip to the next
+//! > block boundary (the encoder writes zero bytes, the decoder steps
+//! > over them).
+//!
+//! A u32 varint is at most 5 bytes, so under the pad rule **no varint
+//! ever straddles a block boundary**: decoding one block's worth of
+//! neighbors touches exactly one cache line of graph data. Weighted
+//! graphs interleave a weight varint after each id varint under the same
+//! rule.
+//!
+//! Per-vertex metadata lives beside the stream: `starts` (byte offset of
+//! each row, rows contiguous), `in_degrees` (varint streams do not
+//! encode their own element count), `out_degrees` (PageRank divides by
+//! the writer's fan-out), and `block_firsts` — the first absolute
+//! neighbor id whose varint starts in each block. `block_firsts` is what
+//! [`GraphStore::in_neighbor_hint`] returns a window of: the engine's
+//! `--prefetch` look-ahead walks block starts, warming the value lines a
+//! sweep is about to gather from, without decoding ahead.
+//!
+//! The whole thing — header, metadata sections, block data — is a single
+//! little-endian byte image ([format diagram](CompressedCsr#on-disk-format)
+//! in DESIGN.md §12). [`CompressedCsr::from_csr`] builds the image in
+//! RAM; `daig convert` writes it to disk; [`CompressedCsr::open_mmap`]
+//! maps it read-only via the vendored `memmap2`, validating the header
+//! against the file length io.rs-style *before* touching anything else,
+//! so graphs larger than RAM stream from disk through the page cache.
+
+use std::fs::File;
+use std::io::{BufWriter, Read as _, Write as _};
+use std::path::Path;
+use std::sync::OnceLock;
+
+use anyhow::{bail, Context, Result};
+use memmap2::Mmap;
+
+use crate::graph::{Csr, GraphStore, VertexId};
+use crate::CACHE_LINE_BYTES;
+
+/// Magic bytes of the compressed block format.
+const MAGIC: &[u8; 4] = b"DAGC";
+/// Compressed format version.
+const VERSION: u32 = 1;
+/// Maximum encoded size of a u32 LEB128 varint.
+pub const MAX_VARINT_BYTES: usize = 5;
+/// Fixed bytes before the `starts` section: magic + version + flags +
+/// reserved + n + m + data_len + nblocks.
+const HEADER_BYTES: usize = 4 + 4 + 4 + 4 + 8 + 8 + 8 + 8;
+
+// -------------------------------------------------------------- codec --
+
+/// Append `x` as a LEB128 varint (1–5 bytes).
+#[inline]
+fn write_varint(out: &mut Vec<u8>, mut x: u32) {
+    loop {
+        let b = (x & 0x7f) as u8;
+        x >>= 7;
+        if x == 0 {
+            out.push(b);
+            break;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+/// Whether a varint may start at byte offset `pos` (pad rule: not within
+/// the last `MAX_VARINT_BYTES - 1` bytes of a 64-byte block).
+#[inline]
+fn needs_pad(pos: usize) -> bool {
+    CACHE_LINE_BYTES - (pos % CACHE_LINE_BYTES) < MAX_VARINT_BYTES
+}
+
+/// Skip to the next block boundary if the pad rule forbids starting a
+/// varint at `*pos` — the decoder half of the rule.
+#[inline]
+fn skip_pad(pos: &mut usize) {
+    if needs_pad(*pos) {
+        *pos = (*pos | (CACHE_LINE_BYTES - 1)) + 1;
+    }
+}
+
+/// Delta-map a row element: the first id is stored absolute, later ids
+/// as the gap to their (strictly smaller) predecessor.
+#[inline]
+fn delta_of(v: VertexId, i: usize, prev: VertexId, id: VertexId) -> u32 {
+    if i == 0 {
+        id
+    } else {
+        assert!(id > prev, "row {v} is not strictly ascending at position {i}");
+        id - prev
+    }
+}
+
+/// Decode one varint at `*pos` (applying the pad rule first). The loop
+/// is bounded at 5 bytes and the 5th byte contributes only its low 4
+/// bits, so hostile streams cannot shift out of range.
+#[inline]
+fn read_varint(data: &[u8], pos: &mut usize) -> u32 {
+    skip_pad(pos);
+    let mut x = 0u32;
+    let mut shift = 0u32;
+    loop {
+        let b = data[*pos];
+        *pos += 1;
+        if shift == 28 {
+            // 5th byte: top nibble only; a set continuation bit here is
+            // impossible in encoder output and ignored defensively.
+            x |= ((b & 0x0f) as u32) << 28;
+            return x;
+        }
+        x |= ((b & 0x7f) as u32) << shift;
+        if b & 0x80 == 0 {
+            return x;
+        }
+        shift += 7;
+    }
+}
+
+/// Streaming encoder for the block data section, tracking per-block
+/// first-id metadata as it goes.
+struct BlockEncoder {
+    data: Vec<u8>,
+    /// First absolute id whose varint starts in each completed-or-open
+    /// block (extended lazily; blocks with no id start carry the last
+    /// id written before them).
+    block_firsts: Vec<VertexId>,
+    last_id: VertexId,
+}
+
+impl BlockEncoder {
+    fn new() -> Self {
+        Self { data: Vec::new(), block_firsts: Vec::new(), last_id: 0 }
+    }
+
+    #[inline]
+    fn pad(&mut self) {
+        if needs_pad(self.data.len()) {
+            let target = (self.data.len() | (CACHE_LINE_BYTES - 1)) + 1;
+            self.data.resize(target, 0);
+        }
+    }
+
+    /// Encode a neighbor id (already delta-mapped to `enc`); `id` is the
+    /// absolute value, recorded for the hint table.
+    #[inline]
+    fn put_id(&mut self, id: VertexId, enc: u32) {
+        self.pad();
+        let block = self.data.len() / CACHE_LINE_BYTES;
+        while self.block_firsts.len() < block {
+            // Blocks opened by weights or padding alone: carry the
+            // previous id (hints are best-effort neighbors-of-the-area).
+            let carry = self.last_id;
+            self.block_firsts.push(carry);
+        }
+        if self.block_firsts.len() == block {
+            self.block_firsts.push(id);
+        }
+        self.last_id = id;
+        write_varint(&mut self.data, enc);
+    }
+
+    /// Encode a weight (absolute, never delta'd).
+    #[inline]
+    fn put_weight(&mut self, w: u32) {
+        self.pad();
+        write_varint(&mut self.data, w);
+    }
+
+    /// Pad the stream to a whole number of blocks and square up the
+    /// hint table.
+    fn finish(mut self) -> (Vec<u8>, Vec<VertexId>) {
+        let blocks = self.data.len().div_ceil(CACHE_LINE_BYTES);
+        self.data.resize(blocks * CACHE_LINE_BYTES, 0);
+        while self.block_firsts.len() < blocks {
+            let carry = self.last_id;
+            self.block_firsts.push(carry);
+        }
+        debug_assert_eq!(self.block_firsts.len(), blocks);
+        (self.data, self.block_firsts)
+    }
+}
+
+// ------------------------------------------------------------ backing --
+
+/// Where the byte image lives. Both variants guarantee ≥ 8-byte base
+/// alignment (Vec<u64> by type, mmap by page granularity), which the
+/// section casts below require.
+enum Backing {
+    Owned(Vec<u64>, usize),
+    Mapped(Mmap),
+}
+
+impl Backing {
+    #[inline]
+    fn bytes(&self) -> &[u8] {
+        match self {
+            // SAFETY: the Vec owns `len` initialized bytes viewed as u64s.
+            Backing::Owned(buf, len) => unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len) },
+            Backing::Mapped(m) => m,
+        }
+    }
+}
+
+/// View `count` `T`s at byte offset `off` of `bytes`. Panics (cleanly,
+/// after header validation has already bounded everything) on
+/// out-of-range or misaligned sections.
+#[inline]
+fn section<T>(bytes: &[u8], off: usize, count: usize) -> &[T] {
+    let size = std::mem::size_of::<T>();
+    assert!(off.checked_add(count * size).is_some_and(|end| end <= bytes.len()), "section out of range");
+    let p = bytes[off..].as_ptr();
+    assert_eq!(p as usize % std::mem::align_of::<T>(), 0, "section misaligned");
+    // SAFETY: bounds and alignment checked above; T is u32/u64 (any bit
+    // pattern valid); the backing is immutable for the store's lifetime.
+    unsafe { std::slice::from_raw_parts(p as *const T, count) }
+}
+
+/// Byte offsets of each section within the image (derived from the
+/// header once at open/build time).
+#[derive(Debug, Clone, Copy)]
+struct Sections {
+    starts: usize,
+    in_deg: usize,
+    out_deg: usize,
+    block_firsts: usize,
+    nblocks: usize,
+    data: usize,
+    data_len: usize,
+}
+
+impl Sections {
+    /// Compute the layout for given counts. Also the single source of
+    /// truth for the expected image length.
+    fn layout(n: usize, nblocks: usize, data_len: usize) -> (Sections, usize) {
+        let starts = HEADER_BYTES;
+        let in_deg = starts + (n + 1) * 8;
+        let out_deg = in_deg + n * 4;
+        let block_firsts = out_deg + n * 4;
+        let data = (block_firsts + nblocks * 4).next_multiple_of(CACHE_LINE_BYTES);
+        let total = data + data_len;
+        (Sections { starts, in_deg, out_deg, block_firsts, nblocks, data, data_len }, total)
+    }
+}
+
+/// Lazily built transpose (push orientation), same shape as `Csr`'s.
+#[derive(Debug)]
+struct OutEdges {
+    offsets: Vec<u64>,
+    targets: Vec<VertexId>,
+}
+
+// ----------------------------------------------------------- the store --
+
+/// The second [`GraphStore`] backend: block-compressed CSR, in RAM or
+/// mmap-backed, decoded on the fly inside the pull sweep.
+///
+/// ## On-disk format
+///
+/// One little-endian image, identical in RAM and on disk (`.dagc`):
+///
+/// ```text
+/// offset  size           field
+/// 0       4              magic "DAGC"
+/// 4       4              version (1)
+/// 8       4              flags: bit0 weighted, bit1 symmetric
+/// 12      4              reserved (0)
+/// 16      8              n (vertices)
+/// 24      8              m (edges)
+/// 32      8              data_len (block data bytes, multiple of 64)
+/// 40      8              nblocks (= data_len / 64)
+/// 48      8(n+1)         starts: row byte offsets into data
+/// ·       4n             in_degrees
+/// ·       4n             out_degrees
+/// ·       4·nblocks      block_firsts (prefetch hint table)
+/// ·       pad to 64      —
+/// ·       data_len       delta/varint block data
+/// ```
+///
+/// Sections are naturally aligned (the data section to a cache line),
+/// so a page-aligned mmap of the file *is* the working representation —
+/// opening a graph allocates O(1) and faults pages in as the sweep
+/// touches them.
+pub struct CompressedCsr {
+    backing: Backing,
+    sections: Sections,
+    n: usize,
+    m: usize,
+    weighted: bool,
+    symmetric: bool,
+    /// Transpose view, decoded on first use (directed graphs only).
+    out_view: OnceLock<OutEdges>,
+}
+
+impl std::fmt::Debug for CompressedCsr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompressedCsr")
+            .field("n", &self.n)
+            .field("m", &self.m)
+            .field("weighted", &self.weighted)
+            .field("symmetric", &self.symmetric)
+            .field("blocks", &self.sections.nblocks)
+            .field("image_bytes", &self.image().len())
+            .field("mmap", &matches!(self.backing, Backing::Mapped(_)))
+            .finish()
+    }
+}
+
+impl PartialEq for CompressedCsr {
+    fn eq(&self, other: &Self) -> bool {
+        self.image() == other.image()
+    }
+}
+
+impl CompressedCsr {
+    // ------------------------------------------------------ accessors --
+
+    /// The raw byte image (what `write` puts on disk).
+    #[inline]
+    pub fn image(&self) -> &[u8] {
+        self.backing.bytes()
+    }
+
+    /// Whether this store reads from a memory-mapped file.
+    pub fn is_mmap(&self) -> bool {
+        matches!(self.backing, Backing::Mapped(_))
+    }
+
+    #[inline]
+    fn starts(&self) -> &[u64] {
+        section(self.image(), self.sections.starts, self.n + 1)
+    }
+
+    #[inline]
+    fn in_degrees(&self) -> &[u32] {
+        section(self.image(), self.sections.in_deg, self.n)
+    }
+
+    /// All out-degrees (indexed by vertex).
+    #[inline]
+    pub fn out_degrees(&self) -> &[u32] {
+        section(self.image(), self.sections.out_deg, self.n)
+    }
+
+    #[inline]
+    fn block_firsts(&self) -> &[VertexId] {
+        section(self.image(), self.sections.block_firsts, self.sections.nblocks)
+    }
+
+    #[inline]
+    fn data(&self) -> &[u8] {
+        &self.image()[self.sections.data..self.sections.data + self.sections.data_len]
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Number of (directed) edges stored.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.m
+    }
+
+    /// Whether edges carry weights.
+    #[inline]
+    pub fn is_weighted(&self) -> bool {
+        self.weighted
+    }
+
+    /// Whether the graph was symmetrized at build time.
+    #[inline]
+    pub fn is_symmetric(&self) -> bool {
+        self.symmetric
+    }
+
+    /// In-degree of `v` (from the explicit table — a varint row does not
+    /// encode its own element count).
+    #[inline]
+    pub fn in_degree(&self, v: VertexId) -> usize {
+        self.in_degrees()[v as usize] as usize
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn out_degree(&self, v: VertexId) -> u32 {
+        self.out_degrees()[v as usize]
+    }
+
+    /// Compressed data bytes per edge (the compression headline; the
+    /// uncompressed CSR spends 4, plus 4 more when weighted).
+    pub fn bytes_per_edge(&self) -> f64 {
+        if self.m == 0 {
+            0.0
+        } else {
+            self.sections.data_len as f64 / self.m as f64
+        }
+    }
+
+    // ------------------------------------------------------- iterators --
+
+    /// Decoding iterator over the in-neighbors of `v`.
+    #[inline]
+    pub fn in_neighbors(&self, v: VertexId) -> InIter<'_> {
+        let s = self.starts();
+        InIter {
+            data: self.data(),
+            pos: s[v as usize] as usize,
+            remaining: self.in_degrees()[v as usize],
+            prev: 0,
+            first: true,
+            skip_weights: self.weighted,
+        }
+    }
+
+    /// Decoding iterator over `(in-neighbor, weight)` pairs. Panics if
+    /// the graph is unweighted (same contract as
+    /// [`Csr::in_neighbors_weighted`]).
+    #[inline]
+    pub fn in_neighbors_weighted(&self, v: VertexId) -> InWeightedIter<'_> {
+        assert!(self.weighted, "graph is unweighted");
+        let s = self.starts();
+        InWeightedIter {
+            data: self.data(),
+            pos: s[v as usize] as usize,
+            remaining: self.in_degrees()[v as usize],
+            prev: 0,
+            first: true,
+        }
+    }
+
+    /// Out-neighbors of `v`: the in-row on symmetric graphs, the decoded
+    /// transpose otherwise (call [`Self::ensure_out_edges`] up front to
+    /// keep the build out of timed or multi-threaded regions).
+    #[inline]
+    pub fn out_neighbors(&self, v: VertexId) -> OutIter<'_> {
+        if self.symmetric {
+            return OutIter::Sym(self.in_neighbors(v));
+        }
+        let oe = self.out_view.get_or_init(|| self.build_out_edges());
+        let lo = oe.offsets[v as usize] as usize;
+        let hi = oe.offsets[v as usize + 1] as usize;
+        OutIter::Directed(oe.targets[lo..hi].iter().copied())
+    }
+
+    /// Force the transpose view to exist (no-op on symmetric graphs).
+    pub fn ensure_out_edges(&self) {
+        if !self.symmetric {
+            let _ = self.out_view.get_or_init(|| self.build_out_edges());
+        }
+    }
+
+    /// One-shot counting-sort transpose over a full decode pass.
+    fn build_out_edges(&self) -> OutEdges {
+        let n = self.n;
+        let degs = self.out_degrees();
+        let mut offsets = vec![0u64; n + 1];
+        for (u, &d) in degs.iter().enumerate() {
+            offsets[u + 1] = offsets[u] + d as u64;
+        }
+        let mut next: Vec<u64> = offsets[..n].to_vec();
+        let mut targets = vec![0 as VertexId; self.m];
+        for v in 0..n as VertexId {
+            for u in self.in_neighbors(v) {
+                targets[next[u as usize] as usize] = v;
+                next[u as usize] += 1;
+            }
+        }
+        OutEdges { offsets, targets }
+    }
+
+    /// The block-start hint window for row `v`: the first absolute
+    /// neighbor id of every 64-byte block the row touches. Best-effort
+    /// by design — shorter than the row (one entry per block, not per
+    /// neighbor) and possibly stale at block seams — which is exactly
+    /// what the prefetch contract allows.
+    #[inline]
+    pub fn in_neighbor_hint(&self, v: VertexId) -> &[VertexId] {
+        let s = self.starts();
+        let lo = s[v as usize] as usize;
+        let hi = s[v as usize + 1] as usize;
+        if lo == hi {
+            return &[];
+        }
+        &self.block_firsts()[lo / CACHE_LINE_BYTES..hi.div_ceil(CACHE_LINE_BYTES)]
+    }
+
+    /// Mean in-degree.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m as f64 / self.n as f64
+        }
+    }
+
+    // ---------------------------------------------------- construction --
+
+    /// Compress a CSR into the block format (in RAM).
+    pub fn from_csr(g: &Csr) -> Self {
+        let n = g.num_vertices();
+        let m = g.num_edges();
+        let weighted = g.is_weighted();
+        let mut enc = BlockEncoder::new();
+        let mut starts = Vec::with_capacity(n + 1);
+        for v in 0..n as VertexId {
+            starts.push(enc.data.len() as u64);
+            let mut prev = 0u32;
+            if weighted {
+                for (i, (id, w)) in g.in_neighbors_weighted(v).enumerate() {
+                    enc.put_id(id, delta_of(v, i, prev, id));
+                    enc.put_weight(w);
+                    prev = id;
+                }
+            } else {
+                for (i, &id) in g.in_neighbors(v).iter().enumerate() {
+                    enc.put_id(id, delta_of(v, i, prev, id));
+                    prev = id;
+                }
+            }
+        }
+        starts.push(enc.data.len() as u64);
+        let (data, block_firsts) = enc.finish();
+
+        let in_degrees: Vec<u32> = (0..n as VertexId).map(|v| g.in_degree(v) as u32).collect();
+        Self::assemble(
+            n,
+            m,
+            weighted,
+            g.is_symmetric(),
+            &starts,
+            &in_degrees,
+            g.out_degrees(),
+            &block_firsts,
+            &data,
+        )
+    }
+
+    /// Build the canonical byte image from its parts.
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        n: usize,
+        m: usize,
+        weighted: bool,
+        symmetric: bool,
+        starts: &[u64],
+        in_degrees: &[u32],
+        out_degrees: &[u32],
+        block_firsts: &[VertexId],
+        data: &[u8],
+    ) -> Self {
+        debug_assert_eq!(starts.len(), n + 1);
+        debug_assert_eq!(data.len() % CACHE_LINE_BYTES, 0);
+        let nblocks = data.len() / CACHE_LINE_BYTES;
+        debug_assert_eq!(block_firsts.len(), nblocks);
+        let (sections, total) = Sections::layout(n, nblocks, data.len());
+
+        let mut buf = vec![0u64; total.div_ceil(8)];
+        // SAFETY: plain byte view of the owned, zeroed u64 buffer.
+        let bytes = unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, total) };
+        bytes[0..4].copy_from_slice(MAGIC);
+        bytes[4..8].copy_from_slice(&VERSION.to_le_bytes());
+        let flags = (weighted as u32) | ((symmetric as u32) << 1);
+        bytes[8..12].copy_from_slice(&flags.to_le_bytes());
+        bytes[16..24].copy_from_slice(&(n as u64).to_le_bytes());
+        bytes[24..32].copy_from_slice(&(m as u64).to_le_bytes());
+        bytes[32..40].copy_from_slice(&(data.len() as u64).to_le_bytes());
+        bytes[40..48].copy_from_slice(&(nblocks as u64).to_le_bytes());
+        for (i, &x) in starts.iter().enumerate() {
+            bytes[sections.starts + i * 8..sections.starts + i * 8 + 8].copy_from_slice(&x.to_le_bytes());
+        }
+        for (i, &x) in in_degrees.iter().enumerate() {
+            bytes[sections.in_deg + i * 4..sections.in_deg + i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        for (i, &x) in out_degrees.iter().enumerate() {
+            bytes[sections.out_deg + i * 4..sections.out_deg + i * 4 + 4].copy_from_slice(&x.to_le_bytes());
+        }
+        for (i, &x) in block_firsts.iter().enumerate() {
+            bytes[sections.block_firsts + i * 4..sections.block_firsts + i * 4 + 4]
+                .copy_from_slice(&x.to_le_bytes());
+        }
+        bytes[sections.data..sections.data + data.len()].copy_from_slice(data);
+
+        Self {
+            backing: Backing::Owned(buf, total),
+            sections,
+            n,
+            m,
+            weighted,
+            symmetric,
+            out_view: OnceLock::new(),
+        }
+    }
+
+    // -------------------------------------------------------------- io --
+
+    /// Write the image to `path` (the `.dagc` file `daig convert`
+    /// produces).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path).with_context(|| format!("create {path:?}"))?);
+        w.write_all(self.image())?;
+        Ok(())
+    }
+
+    /// Open a `.dagc` file read-only through an mmap. Header counts are
+    /// validated against the file length *before* the map is touched
+    /// (io.rs style: truncated or hostile files return `Err`, never a
+    /// huge allocation or a wild section cast), then the metadata
+    /// sections get the same structural checks `read_binary` applies.
+    pub fn open_mmap(path: &Path) -> Result<Self> {
+        let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        let mut header = [0u8; HEADER_BYTES];
+        if file_len < HEADER_BYTES as u64 {
+            bail!("{path:?}: not a .dagc file ({file_len} bytes is shorter than the header)");
+        }
+        file.read_exact(&mut header).with_context(|| format!("read {path:?}"))?;
+        // SAFETY: read-only open; the file is treated as immutable for
+        // the lifetime of the store (standard mmap-loader contract).
+        let map = unsafe { Mmap::map(&file) }.with_context(|| format!("mmap {path:?}"))?;
+        Self::from_image(Backing::Mapped(map), &header, file_len, path)
+    }
+
+    /// Read a `.dagc` file fully into RAM (same validation as
+    /// [`Self::open_mmap`]; for hosts where mapping is undesirable).
+    pub fn open_in_ram(path: &Path) -> Result<Self> {
+        let mut file = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let file_len = file.metadata().with_context(|| format!("stat {path:?}"))?.len();
+        let mut header = [0u8; HEADER_BYTES];
+        if file_len < HEADER_BYTES as u64 {
+            bail!("{path:?}: not a .dagc file ({file_len} bytes is shorter than the header)");
+        }
+        file.read_exact(&mut header).with_context(|| format!("read {path:?}"))?;
+        // Header-before-allocation: only reserve the buffer once the
+        // declared counts reproduce the stat'd length.
+        Self::validate_header(&header, file_len, path)?;
+        let mut buf = vec![0u64; (file_len as usize).div_ceil(8)];
+        // SAFETY: byte view of the owned buffer for read_exact.
+        let bytes = unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, file_len as usize) };
+        bytes[..HEADER_BYTES].copy_from_slice(&header);
+        file.read_exact(&mut bytes[HEADER_BYTES..]).with_context(|| format!("read {path:?}"))?;
+        Self::from_image(Backing::Owned(buf, file_len as usize), &header, file_len, path)
+    }
+
+    /// Parse + validate the fixed header; returns (n, m, weighted,
+    /// symmetric, data_len, nblocks) and checks the implied total length
+    /// against `file_len`.
+    fn validate_header(
+        header: &[u8; HEADER_BYTES],
+        file_len: u64,
+        path: &Path,
+    ) -> Result<(usize, usize, bool, bool, usize, usize)> {
+        let u32_at = |o: usize| u32::from_le_bytes(header[o..o + 4].try_into().unwrap());
+        let u64_at = |o: usize| u64::from_le_bytes(header[o..o + 8].try_into().unwrap());
+        if &header[0..4] != MAGIC {
+            bail!("{path:?}: not a .dagc file");
+        }
+        let version = u32_at(4);
+        if version != VERSION {
+            bail!("{path:?}: unsupported version {version}");
+        }
+        let flags = u32_at(8);
+        if flags & !3 != 0 {
+            bail!("{path:?}: corrupt header: unknown flag bits {flags:#x}");
+        }
+        let n64 = u64_at(16);
+        let m64 = u64_at(24);
+        let data_len = u64_at(32);
+        let nblocks = u64_at(40);
+        if n64 > u32::MAX as u64 {
+            bail!("{path:?}: corrupt header: {n64} vertices exceeds the u32 id space");
+        }
+        if data_len % CACHE_LINE_BYTES as u64 != 0 {
+            bail!("{path:?}: corrupt header: data length {data_len} is not a whole number of 64-byte blocks");
+        }
+        if nblocks != data_len / CACHE_LINE_BYTES as u64 {
+            bail!("{path:?}: corrupt header: {nblocks} blocks does not match data length {data_len}");
+        }
+        // Every edge costs at least one data byte, so m is bounded by
+        // the data section — rejects absurd counts before any O(n) work.
+        if m64 > data_len {
+            bail!("{path:?}: corrupt header: {m64} edges cannot fit in {data_len} data bytes");
+        }
+        let (_, expected) = Sections::layout(n64 as usize, nblocks as usize, data_len as usize);
+        if expected as u64 != file_len {
+            bail!(
+                "{path:?}: corrupt header: n={n64}, m={m64}, {nblocks} blocks implies a {expected}-byte file, found {file_len} bytes"
+            );
+        }
+        Ok((n64 as usize, m64 as usize, flags & 1 != 0, flags & 2 != 0, data_len as usize, nblocks as usize))
+    }
+
+    /// Finish opening from a validated backing image.
+    fn from_image(backing: Backing, header: &[u8; HEADER_BYTES], file_len: u64, path: &Path) -> Result<Self> {
+        let (n, m, weighted, symmetric, data_len, nblocks) = Self::validate_header(header, file_len, path)?;
+        let (sections, _) = Sections::layout(n, nblocks, data_len);
+        let g = Self { backing, sections, n, m, weighted, symmetric, out_view: OnceLock::new() };
+        // Structural metadata checks (O(n), same spirit as read_binary's
+        // monotone-offsets / degree-sum validation).
+        let starts = g.starts();
+        if starts[0] != 0 || starts.windows(2).any(|w| w[0] > w[1]) {
+            bail!("{path:?}: corrupt row starts (not a monotone prefix)");
+        }
+        if *starts.last().unwrap() as usize > data_len {
+            bail!("{path:?}: corrupt row starts (end {} beyond data length {data_len})", starts.last().unwrap());
+        }
+        if g.in_degrees().iter().map(|&d| d as u64).sum::<u64>() != m as u64 {
+            bail!("{path:?}: corrupt in-degrees (sum ≠ edge count {m})");
+        }
+        if g.out_degrees().iter().map(|&d| d as u64).sum::<u64>() != m as u64 {
+            bail!("{path:?}: corrupt out-degrees (sum ≠ edge count {m})");
+        }
+        Ok(g)
+    }
+
+    /// Full O(m) decode validation: every row decodes within its byte
+    /// span to strictly ascending in-range ids. Metadata-only validation
+    /// happens at open; this pass is for `daig convert --check` and
+    /// tests, where the cost of faulting the whole file in is intended.
+    pub fn verify_decode(&self) -> Result<()> {
+        let starts = self.starts();
+        for v in 0..self.n as VertexId {
+            let mut prev: Option<VertexId> = None;
+            for u in self.in_neighbors(v) {
+                if (u as usize) >= self.n {
+                    bail!("row {v}: decoded neighbor {u} out of range for n={}", self.n);
+                }
+                if let Some(p) = prev {
+                    if u <= p {
+                        bail!("row {v}: decoded neighbors not strictly ascending ({p} then {u})");
+                    }
+                }
+                prev = Some(u);
+            }
+            let _ = starts;
+        }
+        Ok(())
+    }
+
+    /// Decompress back into a plain [`Csr`] (tests and tooling; the
+    /// engine never needs this).
+    pub fn to_csr(&self) -> Csr {
+        let mut b = crate::graph::GraphBuilder::new(self.n).keep_self_loops();
+        if self.weighted {
+            b = b.with_weights();
+            for v in 0..self.n as VertexId {
+                for (u, w) in self.in_neighbors_weighted(v) {
+                    b.push(u, v, w);
+                }
+            }
+        } else {
+            for v in 0..self.n as VertexId {
+                for u in self.in_neighbors(v) {
+                    b.push(u, v, 1);
+                }
+            }
+        }
+        // The builder recomputes out-degrees from the edges; symmetric
+        // graphs round-trip because the paired reverse edges are all
+        // present in the rows already.
+        let mut g = b.build();
+        if self.symmetric {
+            g = Csr::from_parts(
+                g.offsets().to_vec(),
+                g.sources().to_vec(),
+                g.weights().map(|w| w.to_vec()),
+                g.out_degrees().to_vec(),
+                true,
+            );
+        }
+        g
+    }
+}
+
+// ---------------------------------------------------------- iterators --
+
+/// Decoding iterator over one row's neighbor ids (skipping interleaved
+/// weights on weighted graphs).
+pub struct InIter<'a> {
+    data: &'a [u8],
+    pos: usize,
+    remaining: u32,
+    prev: VertexId,
+    first: bool,
+    skip_weights: bool,
+}
+
+impl Iterator for InIter<'_> {
+    type Item = VertexId;
+
+    #[inline]
+    fn next(&mut self) -> Option<VertexId> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let x = read_varint(self.data, &mut self.pos);
+        let id = if self.first {
+            self.first = false;
+            x
+        } else {
+            self.prev.wrapping_add(x)
+        };
+        self.prev = id;
+        if self.skip_weights {
+            let _ = read_varint(self.data, &mut self.pos);
+        }
+        Some(id)
+    }
+
+    #[inline]
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining as usize, Some(self.remaining as usize))
+    }
+}
+
+impl ExactSizeIterator for InIter<'_> {}
+
+/// Decoding iterator over one row's `(neighbor, weight)` pairs.
+pub struct InWeightedIter<'a> {
+    data: &'a [u8],
+    pos: usize,
+    remaining: u32,
+    prev: VertexId,
+    first: bool,
+}
+
+impl Iterator for InWeightedIter<'_> {
+    type Item = (VertexId, u32);
+
+    #[inline]
+    fn next(&mut self) -> Option<(VertexId, u32)> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let x = read_varint(self.data, &mut self.pos);
+        let id = if self.first {
+            self.first = false;
+            x
+        } else {
+            self.prev.wrapping_add(x)
+        };
+        self.prev = id;
+        let w = read_varint(self.data, &mut self.pos);
+        Some((id, w))
+    }
+
+    #[inline]
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        (self.remaining as usize, Some(self.remaining as usize))
+    }
+}
+
+impl ExactSizeIterator for InWeightedIter<'_> {}
+
+/// Out-neighbor iterator: the in-row on symmetric graphs, a transpose
+/// slice otherwise.
+pub enum OutIter<'a> {
+    Sym(InIter<'a>),
+    Directed(std::iter::Copied<std::slice::Iter<'a, VertexId>>),
+}
+
+impl Iterator for OutIter<'_> {
+    type Item = VertexId;
+
+    #[inline]
+    fn next(&mut self) -> Option<VertexId> {
+        match self {
+            OutIter::Sym(it) => it.next(),
+            OutIter::Directed(it) => it.next(),
+        }
+    }
+}
+
+// -------------------------------------------------------- GraphStore --
+
+/// The compressed backend behind the same trait every engine path
+/// consumes: generic call sites monomorphize the varint decode straight
+/// into the pull sweep — no dispatch, no row materialization.
+impl GraphStore for CompressedCsr {
+    #[inline]
+    fn num_vertices(&self) -> usize {
+        CompressedCsr::num_vertices(self)
+    }
+
+    #[inline]
+    fn num_edges(&self) -> usize {
+        CompressedCsr::num_edges(self)
+    }
+
+    #[inline]
+    fn is_weighted(&self) -> bool {
+        CompressedCsr::is_weighted(self)
+    }
+
+    #[inline]
+    fn is_symmetric(&self) -> bool {
+        CompressedCsr::is_symmetric(self)
+    }
+
+    #[inline]
+    fn in_degree(&self, v: VertexId) -> usize {
+        CompressedCsr::in_degree(self, v)
+    }
+
+    #[inline]
+    fn out_degree(&self, v: VertexId) -> u32 {
+        CompressedCsr::out_degree(self, v)
+    }
+
+    #[inline]
+    fn out_degrees(&self) -> &[u32] {
+        CompressedCsr::out_degrees(self)
+    }
+
+    #[inline]
+    fn in_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        CompressedCsr::in_neighbors(self, v)
+    }
+
+    #[inline]
+    fn in_neighbors_weighted(&self, v: VertexId) -> impl Iterator<Item = (VertexId, u32)> + '_ {
+        CompressedCsr::in_neighbors_weighted(self, v)
+    }
+
+    #[inline]
+    fn out_neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        CompressedCsr::out_neighbors(self, v)
+    }
+
+    #[inline]
+    fn in_neighbor_hint(&self, v: VertexId) -> &[VertexId] {
+        CompressedCsr::in_neighbor_hint(self, v)
+    }
+
+    #[inline]
+    fn ensure_out_edges(&self) {
+        CompressedCsr::ensure_out_edges(self)
+    }
+
+    #[inline]
+    fn avg_degree(&self) -> f64 {
+        CompressedCsr::avg_degree(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gap::GapGraph;
+    use crate::graph::GraphBuilder;
+    use crate::prop::{forall, Gen};
+
+    /// Encode one synthetic sorted row (optionally weighted) through the
+    /// real encoder, returning (data, block_firsts, degree).
+    fn encode_row(ids: &[u32], weights: Option<&[u32]>) -> (Vec<u8>, Vec<u32>) {
+        let mut enc = BlockEncoder::new();
+        let mut prev = 0u32;
+        for (i, &id) in ids.iter().enumerate() {
+            let delta = if i == 0 { id } else { id - prev };
+            enc.put_id(id, delta);
+            if let Some(ws) = weights {
+                enc.put_weight(ws[i]);
+            }
+            prev = id;
+        }
+        enc.finish()
+    }
+
+    fn decode_row(data: &[u8], degree: u32, weighted: bool) -> Vec<u32> {
+        InIter { data, pos: 0, remaining: degree, prev: 0, first: true, skip_weights: weighted }.collect()
+    }
+
+    fn sorted_unique(mut xs: Vec<u32>) -> Vec<u32> {
+        xs.sort_unstable();
+        xs.dedup();
+        xs
+    }
+
+    #[test]
+    fn varint_roundtrip_edges() {
+        for x in [0u32, 1, 127, 128, 16_383, 16_384, (1 << 28) - 1, 1 << 28, u32::MAX - 1, u32::MAX] {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, x);
+            assert!(buf.len() <= MAX_VARINT_BYTES);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos), x, "{x}");
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn pad_rule_is_symmetric() {
+        // Offsets 60..63 of any block forbid a varint start.
+        for pos in 0..256usize {
+            let forbidden = pos % 64 >= 64 - (MAX_VARINT_BYTES - 1);
+            assert_eq!(needs_pad(pos), forbidden, "pos={pos}");
+        }
+    }
+
+    #[test]
+    fn codec_roundtrip_property() {
+        forall(128, |g: &mut Gen| {
+            let weighted = g.chance(0.5);
+            let hi = 1u32 << g.usize(4..31);
+            let ids = sorted_unique(g.vec_u32(0..hi, 0, 300));
+            let ws: Vec<u32> = (0..ids.len()).map(|_| g.u32(1..1 << 20)).collect();
+            let (data, _) = encode_row(&ids, weighted.then_some(ws.as_slice()));
+            let got = decode_row(&data, ids.len() as u32, weighted);
+            if got != ids {
+                return false;
+            }
+            if weighted {
+                let it = InWeightedIter { data: &data, pos: 0, remaining: ids.len() as u32, prev: 0, first: true };
+                let pairs: Vec<(u32, u32)> = it.collect();
+                return pairs == ids.iter().copied().zip(ws.iter().copied()).collect::<Vec<_>>();
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn degree_zero_row_is_empty_and_free() {
+        let (data, firsts) = encode_row(&[], None);
+        assert!(data.is_empty());
+        assert!(firsts.is_empty());
+        assert_eq!(decode_row(&data, 0, false), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn max_gap_u32_deltas_roundtrip() {
+        // First id absolute at the bottom of the range, then a gap that
+        // spans (almost) the whole u32 space — the 5-byte varint tail.
+        for row in [vec![0, u32::MAX - 1], vec![1, u32::MAX - 1], vec![0, 1, u32::MAX - 1]] {
+            let (data, _) = encode_row(&row, None);
+            assert_eq!(decode_row(&data, row.len() as u32, false), row, "{row:?}");
+        }
+        // Weighted variant with maximal weights.
+        let row = vec![0, u32::MAX - 1];
+        let ws = vec![u32::MAX, u32::MAX];
+        let (data, _) = encode_row(&row, Some(&ws));
+        let pairs: Vec<(u32, u32)> =
+            InWeightedIter { data: &data, pos: 0, remaining: 2, prev: 0, first: true }.collect();
+        assert_eq!(pairs, vec![(0, u32::MAX), (u32::MAX - 1, u32::MAX)]);
+    }
+
+    #[test]
+    fn no_varint_straddles_a_block_boundary() {
+        // Wide ids force 5-byte varints, maximizing pad events; the
+        // property is that re-decoding stays in lockstep anyway, and
+        // that every varint start obeys the pad rule.
+        forall(64, |g: &mut Gen| {
+            let base = 1u32 << 28; // every delta ≥ 2^28 ⇒ 5-byte varints
+            let n = g.usize(1..100);
+            let mut ids = Vec::with_capacity(n);
+            let mut cur = g.u32(0..base);
+            for _ in 0..n {
+                ids.push(cur);
+                let room = (u32::MAX - 2).saturating_sub(cur);
+                if room <= base {
+                    break;
+                }
+                cur += base + g.u32(0..(room - base).min(1 << 20) + 1);
+            }
+            let (data, _) = encode_row(&ids, None);
+            // Walk the stream the decoder's way, asserting each varint
+            // start position is legal.
+            let mut pos = 0usize;
+            for _ in 0..ids.len() {
+                skip_pad(&mut pos);
+                assert!(!needs_pad(pos));
+                let start_block = pos / CACHE_LINE_BYTES;
+                let _ = read_varint(&data, &mut pos);
+                assert_eq!((pos - 1) / CACHE_LINE_BYTES, start_block, "varint straddled a block");
+            }
+            decode_row(&data, ids.len() as u32, false) == ids
+        });
+    }
+
+    #[test]
+    fn block_firsts_cover_every_block() {
+        let g = GapGraph::Kron.generate(10, 8);
+        let c = CompressedCsr::from_csr(&g);
+        assert_eq!(c.block_firsts().len(), c.sections.nblocks);
+        // Hint windows are consistent: each row's window holds ids from
+        // the graph's id space (best-effort, but never garbage).
+        for v in 0..g.num_vertices() as VertexId {
+            for &h in c.in_neighbor_hint(v) {
+                assert!((h as usize) < c.num_vertices(), "hint {h} out of range");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_matches_csr_rows_gap_suite() {
+        for gg in crate::graph::gap::ALL {
+            for weighted in [false, true] {
+                let g = if weighted { gg.generate_weighted(9, 4) } else { gg.generate(9, 4) };
+                let c = CompressedCsr::from_csr(&g);
+                assert_eq!(c.num_vertices(), g.num_vertices());
+                assert_eq!(c.num_edges(), g.num_edges());
+                assert_eq!(c.is_weighted(), g.is_weighted());
+                assert_eq!(c.is_symmetric(), g.is_symmetric());
+                assert_eq!(c.out_degrees(), g.out_degrees());
+                for v in 0..g.num_vertices() as VertexId {
+                    let want: Vec<VertexId> = g.in_neighbors(v).to_vec();
+                    let got: Vec<VertexId> = c.in_neighbors(v).collect();
+                    assert_eq!(got, want, "{} v{v}", gg.name());
+                    assert_eq!(c.in_degree(v), g.in_degree(v));
+                    if weighted {
+                        let want: Vec<(VertexId, u32)> = g.in_neighbors_weighted(v).collect();
+                        let got: Vec<(VertexId, u32)> = c.in_neighbors_weighted(v).collect();
+                        assert_eq!(got, want, "{} v{v} weighted", gg.name());
+                    }
+                    let want_out: Vec<VertexId> = g.out_neighbors(v).to_vec();
+                    let got_out: Vec<VertexId> = c.out_neighbors(v).collect();
+                    assert_eq!(got_out, want_out, "{} v{v} out", gg.name());
+                }
+                c.verify_decode().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn random_graph_roundtrips_through_builder() {
+        forall(24, |g: &mut Gen| {
+            let n = g.usize(1..200);
+            let m = g.usize(0..400);
+            let edges = g.edges(n, m);
+            let base = GraphBuilder::new(n).edges(&edges).build();
+            let c = CompressedCsr::from_csr(&base);
+            (0..n as VertexId).all(|v| c.in_neighbors(v).collect::<Vec<_>>() == base.in_neighbors(v))
+        });
+    }
+
+    #[test]
+    fn compression_actually_compresses() {
+        // Kron rows are locality-friendly; delta+varint must beat the
+        // flat 4 bytes/edge by a wide margin.
+        let g = GapGraph::Kron.generate(12, 8);
+        let c = CompressedCsr::from_csr(&g);
+        assert!(c.bytes_per_edge() < 3.0, "bytes/edge = {}", c.bytes_per_edge());
+        // And the whole image undercuts the uncompressed arrays.
+        let csr_bytes = g.offsets().len() * 8 + g.sources().len() * 4 + g.out_degrees().len() * 4;
+        assert!(c.image().len() < csr_bytes, "{} vs {}", c.image().len(), csr_bytes);
+    }
+
+    #[test]
+    fn write_open_roundtrip_mmap_and_ram() {
+        let dir = std::env::temp_dir().join("daig-compressed-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, weighted) in [("rt.dagc", false), ("rtw.dagc", true)] {
+            let g = if weighted {
+                GapGraph::Web.generate_weighted(9, 4)
+            } else {
+                GapGraph::Web.generate(9, 4)
+            };
+            let c = CompressedCsr::from_csr(&g);
+            let p = dir.join(name);
+            c.write(&p).unwrap();
+            let mm = CompressedCsr::open_mmap(&p).unwrap();
+            assert!(mm.is_mmap());
+            assert_eq!(mm, c, "mmap image differs");
+            let ram = CompressedCsr::open_in_ram(&p).unwrap();
+            assert!(!ram.is_mmap());
+            assert_eq!(ram, c, "in-RAM image differs");
+            for v in [0u32, 1, (g.num_vertices() / 2) as u32, (g.num_vertices() - 1) as u32] {
+                assert_eq!(mm.in_neighbors(v).collect::<Vec<_>>(), g.in_neighbors(v));
+            }
+            let rt = mm.to_csr();
+            assert_eq!(rt.offsets(), g.offsets(), "decompressed offsets differ");
+            assert_eq!(rt.sources(), g.sources(), "decompressed sources differ");
+            assert_eq!(rt.weights(), g.weights(), "decompressed weights differ");
+            assert_eq!(rt.out_degrees(), g.out_degrees(), "decompressed out-degrees differ");
+            assert_eq!(rt.is_symmetric(), g.is_symmetric());
+        }
+    }
+
+    #[test]
+    fn open_rejects_corrupt_files() {
+        let dir = std::env::temp_dir().join("daig-compressed-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("garbage.dagc");
+        std::fs::write(&p, b"NOPE").unwrap();
+        assert!(CompressedCsr::open_mmap(&p).is_err());
+        std::fs::write(&p, b"NOPEnopeNOPEnopeNOPEnopeNOPEnopeNOPEnopeNOPEnope").unwrap();
+        assert!(CompressedCsr::open_mmap(&p).unwrap_err().to_string().contains("not a .dagc"));
+
+        // Truncation: valid image cut short must fail the length check.
+        let g = GapGraph::Kron.generate(8, 4);
+        let c = CompressedCsr::from_csr(&g);
+        let full = c.image().to_vec();
+        let p = dir.join("trunc.dagc");
+        std::fs::write(&p, &full[..full.len() - 17]).unwrap();
+        let err = CompressedCsr::open_mmap(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt header"), "{err}");
+
+        // Bit-flipped degree table: sum check must catch it.
+        let mut bad = full.clone();
+        let (s, _) = Sections::layout(g.num_vertices(), c.sections.nblocks, c.sections.data_len);
+        bad[s.in_deg] ^= 0x01;
+        let p = dir.join("deg.dagc");
+        std::fs::write(&p, &bad).unwrap();
+        let err = CompressedCsr::open_mmap(&p).unwrap_err().to_string();
+        assert!(err.contains("in-degrees"), "{err}");
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = GraphBuilder::new(0).edges(&[]).build();
+        let c = CompressedCsr::from_csr(&g);
+        assert_eq!(c.num_vertices(), 0);
+        assert_eq!(c.num_edges(), 0);
+        assert_eq!(c.avg_degree(), 0.0);
+    }
+
+    #[test]
+    fn isolated_vertices_have_empty_rows_and_hints() {
+        let g = GraphBuilder::new(5).edges(&[(0, 4)]).build();
+        let c = CompressedCsr::from_csr(&g);
+        for v in 1..4u32 {
+            assert_eq!(c.in_degree(v), 0);
+            assert_eq!(c.in_neighbors(v).count(), 0);
+            assert_eq!(c.in_neighbor_hint(v), &[] as &[u32]);
+        }
+        assert_eq!(c.in_neighbors(4).collect::<Vec<_>>(), vec![0]);
+    }
+
+    #[test]
+    fn trait_view_matches_inherent() {
+        let g = GraphBuilder::new(4).weighted_edges(&[(0, 1, 7), (2, 1, 3), (1, 3, 9), (3, 0, 2)]).build();
+        let c = CompressedCsr::from_csr(&g);
+        assert_eq!(GraphStore::num_edges(&c), 4);
+        assert!(GraphStore::is_weighted(&c));
+        for v in 0..4u32 {
+            let through_trait: Vec<VertexId> = GraphStore::in_neighbors(&c, v).collect();
+            assert_eq!(through_trait, g.in_neighbors(v), "v{v}");
+            assert_eq!(GraphStore::in_degree(&c, v), g.in_degree(v));
+        }
+    }
+}

@@ -70,11 +70,39 @@ impl GapGraph {
         }
     }
 
+    /// Upper bound on the directed edges generation stages for this
+    /// family at `(scale, edge_factor)` — before dedup, after
+    /// symmetrization. Used to reject overflowing requests *before* any
+    /// allocation happens.
+    fn staged_edge_bound(self, scale: u32, edge_factor: usize) -> u128 {
+        let n = 1u128 << scale.min(64);
+        match self {
+            // Symmetric families stage every edge twice.
+            GapGraph::Kron | GapGraph::Urand => 2 * n * edge_factor as u128,
+            GapGraph::Twitter | GapGraph::Web => n * edge_factor as u128,
+            // Lattice: ≤ 2 forward neighbors per vertex, symmetrized.
+            GapGraph::Road => 4 * n,
+        }
+    }
+
     /// Generate the unweighted graph at `2^scale` vertices (road rounds to
     /// the nearest square grid). `edge_factor == 0` selects the per-graph
     /// default.
+    ///
+    /// Panics (before allocating anything) if the requested size would
+    /// push the edge count past the u32 edge index space — per-vertex
+    /// degrees and the compressed store's row counts are 32-bit, so such
+    /// a graph would otherwise truncate silently. `try_build` carries the
+    /// same check as a `Result` backstop for hand-staged edge lists.
     pub fn generate(self, scale: u32, edge_factor: usize) -> Csr {
         let edge_factor = if edge_factor == 0 { self.default_edge_factor() } else { edge_factor };
+        let staged = self.staged_edge_bound(scale, edge_factor);
+        assert!(
+            scale < 32 && staged <= u32::MAX as u128,
+            "{} at scale {scale} with edge factor {edge_factor} would stage {staged} edges, \
+             beyond the u32 edge index space",
+            self.name(),
+        );
         match self {
             GapGraph::Kron => rmat::generate(scale, edge_factor, self.seed()),
             GapGraph::Urand => uniform::generate(scale, edge_factor, self.seed()),
@@ -119,6 +147,20 @@ mod tests {
         assert!(GapGraph::Road.generate(8, 4).is_symmetric());
         assert!(!GapGraph::Twitter.generate(7, 4).is_symmetric());
         assert!(!GapGraph::Web.generate(7, 4).is_symmetric());
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond the u32 edge index space")]
+    fn oversized_scale_rejected_before_allocation() {
+        // 2·2^28·16 = 2^33 staged edges: must die on the arithmetic
+        // check, not OOM in the generator.
+        GapGraph::Kron.generate(28, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond the u32 edge index space")]
+    fn oversized_directed_scale_rejected() {
+        GapGraph::Web.generate(31, 4);
     }
 
     #[test]

@@ -149,6 +149,12 @@ pub fn read_binary(path: &Path) -> Result<Csr> {
     let mut r = BufReader::new(file);
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
+    if &magic == b"DAGC" {
+        bail!(
+            "{path:?}: this is a block-compressed .dagc file — load it with --store compressed / --mmap \
+             (CompressedCsr::open_mmap), not the .daig reader"
+        );
+    }
     if &magic != MAGIC {
         bail!("{path:?}: not a .daig file");
     }
@@ -341,6 +347,18 @@ mod tests {
         let p = tmp("garbage.daig");
         std::fs::write(&p, b"NOPE....").unwrap();
         assert!(read_binary(&p).is_err());
+    }
+
+    #[test]
+    fn binary_reader_redirects_compressed_files() {
+        // A .dagc image handed to the .daig reader names the right tool
+        // instead of reporting generic corruption.
+        let g = GapGraph::Kron.generate(7, 4);
+        let c = crate::graph::CompressedCsr::from_csr(&g);
+        let p = tmp("misfiled.daig");
+        c.write(&p).unwrap();
+        let err = read_binary(&p).unwrap_err().to_string();
+        assert!(err.contains("--store compressed"), "{err}");
     }
 
     #[test]

@@ -9,11 +9,14 @@
 //! predict whether delaying updates helps.
 //!
 //! Storage itself sits behind the [`GraphStore`] trait: [`Csr`] is the
-//! frozen static impl, and [`VersionedGraph`] ([`overlay`]) layers
-//! versioned insert/delete deltas over a CSR base for streaming
-//! mutation workloads with incremental recomputation.
+//! frozen static impl, [`VersionedGraph`] ([`overlay`]) layers versioned
+//! insert/delete deltas over a CSR base for streaming mutation workloads
+//! with incremental recomputation, and [`CompressedCsr`] ([`compressed`])
+//! is the big-graph tier — delta/varint block-compressed rows, in RAM or
+//! memory-mapped from a `.dagc` file written by `daig convert`.
 
 pub mod builder;
+pub mod compressed;
 pub mod gap;
 pub mod generators;
 pub mod io;
@@ -25,6 +28,7 @@ mod csr;
 mod store;
 
 pub use builder::GraphBuilder;
+pub use compressed::CompressedCsr;
 pub use csr::{Csr, VertexId};
 pub use overlay::{EdgeMutation, GraphVersion, MutationReceipt, VersionedGraph};
 pub use store::GraphStore;

@@ -9,6 +9,7 @@
 //! daig serve      --graph kron --scale 12 --lanes 8 --queries 64 [--clients c | --qps x] [--mutate-every n]
 //! daig stats      --graph web --scale 14 | --file graph.daig
 //! daig gengraph   --graph kron --scale 14 --out kron.daig [--weighted]
+//! daig convert    <in.el|in.mtx|in.daig> <out.dagc> [--symmetrize] [--n N] [--check]
 //! daig pjrt-demo  [--graph kron] [--scale 8] [--artifacts artifacts]
 //! ```
 
@@ -18,7 +19,7 @@ use daig::coordinator::experiments::{self, ExpOptions};
 use daig::coordinator::{machine_from_name, run_native, run_sim, sweep, Algo, Workload};
 use daig::engine::{EngineConfig, ExecutionMode, RunResult, SchedulePolicy};
 use daig::graph::gap::GapGraph;
-use daig::graph::{io, properties, Csr};
+use daig::graph::{io, properties, CompressedCsr, Csr, GraphStore};
 use daig::util::cli::Args;
 use daig::util::{fmt, table::Table};
 
@@ -45,6 +46,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("serve") => cmd_serve(args),
         Some("stats") => cmd_stats(args),
         Some("gengraph") => cmd_gengraph(args),
+        Some("convert") => cmd_convert(args),
         Some("autotune") => cmd_autotune(args),
         Some("pjrt-demo") => cmd_pjrt_demo(args),
         Some("help") | None => {
@@ -75,6 +77,10 @@ commands:
               --seed N workload RNG)
   stats       graph statistics (Table II columns)
   gengraph    generate a GAP-analog graph to a .daig file
+  convert     pack an edge list (.el/.txt), MatrixMarket (.mtx), or .daig
+              file into the block-compressed .dagc format (--symmetrize,
+              --n N explicit vertex count for edge lists, --check full
+              decode verification after writing)
   autotune    recommend an execution mode/δ from topology (§V future work)
   pjrt-demo   run PageRank + SSSP through the AOT/PJRT dense-block backend
   help        this text
@@ -97,6 +103,21 @@ common options:
                                          neighbors ahead in the gather loop;
                                          0 = off. A pure hint: results are
                                          identical at every distance)
+  --store csr|compressed                (run: graph storage tier. compressed =
+                                         delta/varint block-compressed rows,
+                                         decoded on the fly in the pull sweep;
+                                         results identical, memory ~3-4x less)
+  --mmap FILE.dagc                      (run: map a converted graph read-only
+                                         from disk instead of generating one;
+                                         implies the compressed store)
+  --numa                                (run: line-align partitions, pin
+                                         workers to their socket, and
+                                         first-touch each partition's value
+                                         pages from its owner. A placement
+                                         hint: results are unchanged; no-op
+                                         on single-socket hosts. In the sim
+                                         engine, charges remote-DRAM cost for
+                                         cross-socket cold fills instead)
 
 Build with `--features simd` (nightly toolchain) to run the lane-group
 kernels on std::simd vectors; the default scalar build is bit-identical.
@@ -170,6 +191,59 @@ fn fmt_deltas(r: &RunResult) -> String {
     fmt_series(&t0)
 }
 
+/// The storage tiers `daig run` can execute on. Every engine entry point
+/// is generic over [`GraphStore`], so the two arms run the identical
+/// round machinery — this enum only exists to pick the monomorphization
+/// at the CLI boundary.
+enum AnyStore {
+    Csr(Csr),
+    Compressed(CompressedCsr),
+}
+
+impl AnyStore {
+    fn num_vertices(&self) -> usize {
+        match self {
+            AnyStore::Csr(g) => g.num_vertices(),
+            AnyStore::Compressed(c) => c.num_vertices(),
+        }
+    }
+
+    fn num_edges(&self) -> usize {
+        match self {
+            AnyStore::Csr(g) => g.num_edges(),
+            AnyStore::Compressed(c) => c.num_edges(),
+        }
+    }
+}
+
+/// Resolve `--store csr|compressed` / `--mmap FILE.dagc` on top of the
+/// usual workload options. `--mmap` skips generation entirely and maps
+/// the converted file read-only; `--store compressed` packs the
+/// generated (or `--file`-loaded) graph in RAM. The returned string
+/// describes the source for the run headline.
+fn parse_store(args: &Args) -> Result<(Workload, AnyStore, String)> {
+    if let Some(file) = args.options.get("mmap") {
+        let algo = Algo::from_name(&args.opt_str("algo", "pagerank")).context("bad --algo")?;
+        let g = CompressedCsr::open_mmap(std::path::Path::new(file))?;
+        if algo.weighted() && !g.is_weighted() {
+            bail!("--algo {} needs edge weights but {file} is unweighted (convert a weighted graph)", algo.name());
+        }
+        let w = Workload { algo, graph: GapGraph::Kron, scale: 0, edge_factor: 0 };
+        return Ok((w, AnyStore::Compressed(g), format!("{file} (mmap)")));
+    }
+    let (w, g) = parse_workload(args)?;
+    let name = args.opt_str("graph", "kron");
+    match args.opt_str("store", "csr").as_str() {
+        "csr" => Ok((w, AnyStore::Csr(g), name)),
+        "compressed" => {
+            let c = CompressedCsr::from_csr(&g);
+            let desc = format!("{name} (compressed, {:.2} B/edge)", c.bytes_per_edge());
+            Ok((w, AnyStore::Compressed(c), desc))
+        }
+        other => bail!("unknown --store '{other}' (csr | compressed)"),
+    }
+}
+
 fn parse_workload(args: &Args) -> Result<(Workload, Csr)> {
     let algo = Algo::from_name(&args.opt_str("algo", "pagerank")).context("bad --algo")?;
     if let Some(file) = args.options.get("file") {
@@ -183,7 +257,7 @@ fn parse_workload(args: &Args) -> Result<(Workload, Csr)> {
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
-    let (w, g) = parse_workload(args)?;
+    let (w, store, desc) = parse_store(args)?;
     let mode = parse_mode(args, "d256")?;
     let threads: usize = args.opt("threads", 32)?;
     let schedule = parse_schedule(args)?;
@@ -193,6 +267,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if args.flag("steal") {
         ecfg = ecfg.with_stealing();
+    }
+    if args.flag("numa") {
+        ecfg = ecfg.with_numa();
     }
     if args.flag("no-atomics") {
         if mode != ExecutionMode::Asynchronous {
@@ -210,14 +287,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     // with a clear error instead of silently running one query.
     let batch: usize = args.opt("batch", 1)?;
     if batch != 1 {
-        return cmd_run_batched(args, &w, &g, &ecfg, batch);
+        return match &store {
+            AnyStore::Csr(g) => cmd_run_batched(args, &w, g, &desc, &ecfg, batch),
+            AnyStore::Compressed(c) => cmd_run_batched(args, &w, c, &desc, &ecfg, batch),
+        };
     }
     println!(
         "{} on {} (n={}, m={}), mode={}, schedule={}, threads={}{}{}",
         w.algo.name(),
-        args.opt_str("graph", "kron"),
-        g.num_vertices(),
-        g.num_edges(),
+        desc,
+        store.num_vertices(),
+        store.num_edges(),
         mode.label(),
         schedule.label(),
         threads,
@@ -226,7 +306,10 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     match args.opt_str("engine", "sim").as_str() {
         "native" => {
-            let r = run_native(&g, w.algo, &ecfg);
+            let r = match &store {
+                AnyStore::Csr(g) => run_native(g, w.algo, &ecfg),
+                AnyStore::Compressed(c) => run_native(c, w.algo, &ecfg),
+            };
             println!(
                 "rounds={} total={} avg/round={} updates={} steals={} converged={}",
                 r.num_rounds(),
@@ -249,7 +332,10 @@ fn cmd_run(args: &Args) -> Result<()> {
         }
         "sim" => {
             let machine = machine_from_name(&args.opt_str("machine", "haswell"))?;
-            let s = run_sim(&g, w.algo, &ecfg, &machine);
+            let s = match &store {
+                AnyStore::Csr(g) => run_sim(g, w.algo, &ecfg, &machine),
+                AnyStore::Compressed(c) => run_sim(c, w.algo, &ecfg, &machine),
+            };
             println!(
                 "rounds={} total={} avg/round={} cycles={} invalidations={} flushes={} updates={} steals={} converged={}",
                 s.result.num_rounds(),
@@ -282,7 +368,14 @@ fn cmd_run(args: &Args) -> Result<()> {
 /// lane-batched engine run (SSSP: the k top-degree sources; PageRank: k
 /// singleton teleport sets on the same hubs). Reports the serving
 /// headline — queries/sec — plus when each query's lane settled.
-fn cmd_run_batched(args: &Args, w: &Workload, g: &Csr, ecfg: &EngineConfig, k: usize) -> Result<()> {
+fn cmd_run_batched<G: GraphStore>(
+    args: &Args,
+    w: &Workload,
+    g: &G,
+    desc: &str,
+    ecfg: &EngineConfig,
+    k: usize,
+) -> Result<()> {
     use daig::algorithms::{pagerank, sssp};
     use daig::engine::lanes;
     if !lanes::valid_lane_count(k) {
@@ -294,7 +387,7 @@ fn cmd_run_batched(args: &Args, w: &Workload, g: &Csr, ecfg: &EngineConfig, k: u
     println!(
         "{} x{k} batched on {} (n={}, m={}), mode={}, schedule={}, threads={}{}{}",
         w.algo.name(),
-        args.opt_str("graph", "kron"),
+        desc,
         g.num_vertices(),
         g.num_edges(),
         ecfg.mode.label(),
@@ -632,6 +725,54 @@ fn cmd_gengraph(args: &Args) -> Result<()> {
     let out = args.opt_str("out", &format!("{}_{}.daig", graph.name(), scale));
     io::write_binary(&g, std::path::Path::new(&out))?;
     println!("wrote {} (n={}, m={})", out, g.num_vertices(), g.num_edges());
+    Ok(())
+}
+
+/// `daig convert`: pack an edge-list / MatrixMarket / `.daig` graph into
+/// the block-compressed on-disk `.dagc` format that `--mmap` maps and
+/// `--store compressed` holds in RAM. Input format is picked by
+/// extension (`.mtx` → MatrixMarket, `.daig` → binary CSR, anything
+/// else → whitespace edge list).
+fn cmd_convert(args: &Args) -> Result<()> {
+    let (input, output) = match (args.positional.first(), args.positional.get(1)) {
+        (Some(i), Some(o)) => (i.clone(), o.clone()),
+        _ => bail!("usage: daig convert <in.el|in.mtx|in.daig> <out.dagc> [--symmetrize] [--n N] [--check]"),
+    };
+    let inp = std::path::Path::new(&input);
+    let n = match args.options.get("n") {
+        Some(s) => Some(s.parse::<usize>().map_err(|_| anyhow::anyhow!("--n: cannot parse '{s}'"))?),
+        None => None,
+    };
+    let g = match inp.extension().and_then(|e| e.to_str()) {
+        Some("mtx") => io::read_matrix_market(inp)?,
+        Some("daig") => io::read_binary(inp)?,
+        _ => io::read_edge_list(inp, n, args.flag("symmetrize"))?,
+    };
+    let c = CompressedCsr::from_csr(&g);
+    c.write(std::path::Path::new(&output))?;
+    if args.flag("check") {
+        // Re-open what we just wrote and decode every row: catches both
+        // encode bugs and a bad disk write before anyone maps the file.
+        let back = CompressedCsr::open_in_ram(std::path::Path::new(&output))?;
+        back.verify_decode()?;
+        if back.to_csr() != g {
+            bail!("post-write verification failed: decoded graph differs from the input");
+        }
+        println!("verified: full decode matches the input graph");
+    }
+    // Raw CSR footprint for the same graph: u64 offsets, u32 sources
+    // (+ u32 weights), u32 out-degrees.
+    let raw = 8 * (g.num_vertices() + 1)
+        + 4 * g.num_edges() * if g.is_weighted() { 2 } else { 1 }
+        + 4 * g.num_vertices();
+    println!(
+        "wrote {output}: n={}, m={}, {} bytes ({:.2} B/edge; raw csr arrays {} bytes)",
+        c.num_vertices(),
+        c.num_edges(),
+        c.image().len(),
+        c.bytes_per_edge(),
+        raw,
+    );
     Ok(())
 }
 

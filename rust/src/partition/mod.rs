@@ -11,6 +11,7 @@
 
 pub mod blocked;
 pub mod equal_vertex;
+pub mod numa;
 pub mod stripe;
 
 use crate::graph::VertexId;

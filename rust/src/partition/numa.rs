@@ -1,0 +1,275 @@
+//! NUMA-aware placement: socket topology detection, worker pinning, and
+//! line-aligned partition bounds.
+//!
+//! The engine's memory traffic is dominated by the shared value array,
+//! and the paper's contiguous blocked partitions give it a natural
+//! placement: thread `t` writes (almost) only its own partition's value
+//! lines, so those lines should live in DRAM attached to the socket
+//! running `t`. Linux places an anonymous page on the node of the CPU
+//! that **first touches** it, so placement needs no allocation API at
+//! all — just three ingredients, all here:
+//!
+//! 1. [`line_align`] — round partition bounds to whole value lines so no
+//!    cache line (hence no page) of the value array spans two partitions;
+//! 2. [`Topology::detect`] + [`pin_worker`] — pin each worker to the
+//!    CPUs of the node that owns its partition (contiguous split, the
+//!    same shape as the sim's `Machine::socket_of`);
+//! 3. the native executor then writes each partition's initial values
+//!    *from its own pinned worker* (and each worker's delay buffer is
+//!    already thread-local, so it first-touches correctly for free).
+//!
+//! Everything degrades gracefully: no `/sys` topology, a single node, or
+//! a denied `sched_setaffinity` all turn pinning into a no-op, leaving
+//! results and round structure unchanged (placement is a pure
+//! performance hint — the differential suite asserts exactly that).
+//! There is no libnuma dependency; sysfs + `sched_setaffinity(2)` are
+//! all Linux needs, and other platforms compile the no-op path.
+
+use std::path::Path;
+
+use super::PartitionMap;
+use crate::graph::VertexId;
+
+/// Upper bound on CPU ids we can pin to (a 1024-bit `cpu_set_t`).
+const MAX_CPUS: usize = 1024;
+
+/// CPU lists per NUMA node, indexed by node id (memory-only nodes keep
+/// an empty list).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: Vec<Vec<usize>>,
+}
+
+impl Topology {
+    /// Read the host topology from `/sys/devices/system/node`. `None`
+    /// when the hierarchy is absent (non-Linux, containers with a masked
+    /// sysfs) or unparsable — callers treat that as "no placement".
+    pub fn detect() -> Option<Topology> {
+        Self::from_sysfs(Path::new("/sys/devices/system/node"))
+    }
+
+    /// Parse a sysfs-shaped directory (`node<K>/cpulist` files). Split
+    /// out for tests, which synthesize the hierarchy in a temp dir.
+    pub fn from_sysfs(root: &Path) -> Option<Topology> {
+        let mut found: Vec<(usize, Vec<usize>)> = Vec::new();
+        for entry in std::fs::read_dir(root).ok()? {
+            let Ok(entry) = entry else { continue };
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+                continue;
+            };
+            let Ok(list) = std::fs::read_to_string(entry.path().join("cpulist")) else { continue };
+            let Some(cpus) = parse_cpulist(list.trim()) else { continue };
+            found.push((idx, cpus));
+        }
+        if found.is_empty() {
+            return None;
+        }
+        found.sort_by_key(|&(i, _)| i);
+        Some(Topology { nodes: found.into_iter().map(|(_, c)| c).collect() })
+    }
+
+    /// Nodes that actually have CPUs (placement targets).
+    pub fn cpu_nodes(&self) -> Vec<&[usize]> {
+        self.nodes.iter().filter(|c| !c.is_empty()).map(|c| c.as_slice()).collect()
+    }
+}
+
+/// Parse a sysfs cpulist (`"0-15,32-47"`, `"3"`, `""`). `None` on
+/// malformed input; an empty string is a valid empty list (memory-only
+/// nodes have one).
+pub fn parse_cpulist(s: &str) -> Option<Vec<usize>> {
+    let mut cpus = Vec::new();
+    for part in s.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('-') {
+            Some((a, b)) => {
+                let a: usize = a.trim().parse().ok()?;
+                let b: usize = b.trim().parse().ok()?;
+                if b < a || b >= MAX_CPUS {
+                    return None;
+                }
+                cpus.extend(a..=b);
+            }
+            None => {
+                let c: usize = part.parse().ok()?;
+                if c >= MAX_CPUS {
+                    return None;
+                }
+                cpus.push(c);
+            }
+        }
+    }
+    Some(cpus)
+}
+
+/// Node owning partition `t` of `parts`: contiguous even split, the same
+/// shape as the sim's `Machine::socket_of` (threads 0..parts/nodes on
+/// node 0, and so on).
+pub fn node_of_part(t: usize, parts: usize, nodes: usize) -> usize {
+    debug_assert!(t < parts && nodes > 0);
+    (t * nodes / parts.max(1)).min(nodes - 1)
+}
+
+/// Pin the calling thread to `cpus`. Returns whether the kernel accepted
+/// the mask; `false` (no CPUs in range, syscall denied, non-Linux) means
+/// the thread keeps its previous affinity — placement silently off.
+#[cfg(target_os = "linux")]
+pub fn pin_to_cpus(cpus: &[usize]) -> bool {
+    const SET_WORDS: usize = MAX_CPUS / 64;
+    let mut mask = [0u64; SET_WORDS];
+    let mut any = false;
+    for &c in cpus {
+        if c < MAX_CPUS {
+            mask[c / 64] |= 1u64 << (c % 64);
+            any = true;
+        }
+    }
+    if !any {
+        return false;
+    }
+    extern "C" {
+        // glibc/musl: pid 0 = the calling thread. std already links libc.
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: mask points at SET_WORDS initialized words and the length
+    // matches; the call only reads it.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Non-Linux: affinity control unavailable; placement is a no-op.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_to_cpus(_cpus: &[usize]) -> bool {
+    false
+}
+
+/// Pin worker `t` of `parts` to the CPUs of the node owning its
+/// partition. `false` = nothing pinned (no topology, a single node — on
+/// which first-touch is trivially correct already — or a denied
+/// syscall); the caller proceeds identically either way.
+pub fn pin_worker(t: usize, parts: usize) -> bool {
+    let Some(topo) = Topology::detect() else { return false };
+    let nodes = topo.cpu_nodes();
+    if nodes.len() < 2 {
+        return false;
+    }
+    pin_to_cpus(nodes[node_of_part(t, parts, nodes.len())])
+}
+
+/// Round interior partition bounds to whole value lines
+/// ([`crate::VALUES_PER_LINE`] vertices), so no cache line of the value
+/// array spans two partitions for *any* lane count k: a lane group
+/// boundary at element `v·k` with `v ≡ 0 (mod 16)` is a multiple of
+/// `16k`, itself a line multiple for every k dividing 16. This is the
+/// precondition that makes per-partition first-touch meaningful —
+/// otherwise a page-straddling line would be written by two sockets no
+/// matter where its page lives. Nearest-multiple rounding keeps the
+/// in-degree balance within half a line per boundary.
+pub fn line_align(pm: PartitionMap, n: usize) -> PartitionMap {
+    let vpl = crate::VALUES_PER_LINE as VertexId;
+    let mut bounds = pm.bounds().to_vec();
+    let last = bounds.len() - 1;
+    let mut prev: VertexId = 0;
+    for b in &mut bounds[1..last] {
+        let rounded = (*b + vpl / 2) / vpl * vpl;
+        let clamped = rounded.clamp(prev, n as VertexId);
+        *b = clamped;
+        prev = clamped;
+    }
+    PartitionMap::from_bounds(bounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::VALUES_PER_LINE;
+
+    #[test]
+    fn cpulist_parsing() {
+        assert_eq!(parse_cpulist("0-3"), Some(vec![0, 1, 2, 3]));
+        assert_eq!(parse_cpulist("0-1,4-5"), Some(vec![0, 1, 4, 5]));
+        assert_eq!(parse_cpulist("7"), Some(vec![7]));
+        assert_eq!(parse_cpulist("0-15,32-47").map(|v| v.len()), Some(32));
+        assert_eq!(parse_cpulist(""), Some(vec![]), "memory-only nodes have empty cpulists");
+        assert_eq!(parse_cpulist(" 2 , 4 "), Some(vec![2, 4]), "whitespace-tolerant");
+        assert_eq!(parse_cpulist("a-b"), None);
+        assert_eq!(parse_cpulist("5-2"), None, "descending range");
+        assert_eq!(parse_cpulist("0-99999"), None, "beyond the cpu_set_t");
+    }
+
+    #[test]
+    fn topology_from_synthetic_sysfs() {
+        let root = std::env::temp_dir().join("daig-numa-tests").join("two-node");
+        for (node, list) in [("node0", "0-3\n"), ("node1", "4-7\n")] {
+            let d = root.join(node);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), list).unwrap();
+        }
+        // Distractor entries a real sysfs has.
+        std::fs::create_dir_all(root.join("power")).unwrap();
+        let topo = Topology::from_sysfs(&root).unwrap();
+        assert_eq!(topo.nodes, vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]]);
+        assert_eq!(topo.cpu_nodes().len(), 2);
+    }
+
+    #[test]
+    fn missing_sysfs_is_none() {
+        let root = std::env::temp_dir().join("daig-numa-tests").join("definitely-absent");
+        assert_eq!(Topology::from_sysfs(&root), None);
+    }
+
+    #[test]
+    fn node_split_is_contiguous_and_even() {
+        // 8 workers over 2 nodes: 0..4 → node 0, 4..8 → node 1.
+        let assigned: Vec<usize> = (0..8).map(|t| node_of_part(t, 8, 2)).collect();
+        assert_eq!(assigned, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        // Fewer workers than nodes still lands in range.
+        for t in 0..2 {
+            assert!(node_of_part(t, 2, 4) < 4);
+        }
+        // One node: everything on it.
+        assert!((0..5).all(|t| node_of_part(t, 5, 1) == 0));
+    }
+
+    #[test]
+    fn detect_and_pin_never_panic() {
+        // Whatever this host looks like, detection and pinning must be
+        // infallible-as-in-no-panic; the return values are advisory.
+        let _ = Topology::detect();
+        let _ = pin_worker(0, 4);
+    }
+
+    #[test]
+    fn line_align_rounds_interior_bounds() {
+        let n = 1000usize;
+        let pm = PartitionMap::from_bounds(vec![0, 237, 481, 733, n as VertexId]);
+        let aligned = line_align(pm, n);
+        let b = aligned.bounds();
+        assert_eq!(b[0], 0);
+        assert_eq!(*b.last().unwrap() as usize, n, "coverage preserved even when n is off-line");
+        for &x in &b[1..b.len() - 1] {
+            assert_eq!(x as usize % VALUES_PER_LINE, 0, "interior bound {x} not line-aligned");
+        }
+        assert!(b.windows(2).all(|w| w[0] <= w[1]), "monotone");
+        // 237 → 240, 481 → 480, 733 → 736 (nearest line multiples).
+        assert_eq!(&b[1..4], &[240, 480, 736]);
+    }
+
+    #[test]
+    fn line_align_is_idempotent_and_handles_tiny_graphs() {
+        let pm = PartitionMap::from_bounds(vec![0, 240, 480, 1000]);
+        let once = line_align(pm.clone(), 1000);
+        assert_eq!(once, pm, "already-aligned bounds unchanged");
+        // More parts than lines: bounds collapse monotonically, never cross.
+        let tiny = PartitionMap::from_bounds(vec![0, 2, 4, 6, 9]);
+        let a = line_align(tiny, 9);
+        assert!(a.bounds().windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*a.bounds().last().unwrap(), 9);
+        let covered: usize = (0..a.num_parts()).map(|t| a.len(t)).sum();
+        assert_eq!(covered, 9);
+    }
+}

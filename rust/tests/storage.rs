@@ -1,0 +1,312 @@
+//! Storage-tier differential suite: [`CompressedCsr`] vs [`Csr`] across
+//! the execution matrix, the `daig convert` round trip, and hostile
+//! `.dagc` inputs.
+//!
+//! The block-compressed store must be *observationally identical* to the
+//! uncompressed CSR: both hand the engine the same neighbor sequences, so
+//! every algorithm whose fixed point is unique (SSSP, CC, BFS) must land
+//! bit-exactly on the same answer on every mode × schedule × stealing
+//! cell, and PageRank must match bit-exactly wherever execution is
+//! deterministic (sync; the simulator in every mode) and to ε under
+//! native async interleavings. The simulator goes further: it charges by
+//! the *sequence of value-array accesses*, which decoding does not
+//! change, so compressed runs must reproduce the CSR runs cycle for
+//! cycle.
+//!
+//! The round-trip section is the `daig convert` acceptance test: an edge
+//! list read by `read_edge_list`, compressed, written to `.dagc`, and
+//! reopened (both in-RAM and mmapped) must decompress back to the exact
+//! same graph. The corruption section mirrors `io_corrupt.rs` for the
+//! `.dagc` header: truncations and garbage fields come back as `Err`
+//! from both openers — never a panic, never a giant allocation from a
+//! trusted header.
+
+use daig::algorithms::{bfs, cc, oracle, pagerank, sssp};
+use daig::engine::sim::cost::Machine;
+use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
+use daig::graph::gap::GapGraph;
+use daig::graph::{io, CompressedCsr, Csr, GraphBuilder};
+use daig::util::rng::SplitMix64;
+
+const MODES: [ExecutionMode; 4] = [
+    ExecutionMode::Synchronous,
+    ExecutionMode::Asynchronous,
+    ExecutionMode::Delayed(32),
+    ExecutionMode::Adaptive,
+];
+const THREADS: usize = 4;
+
+fn cfg(mode: ExecutionMode, sched: SchedulePolicy, steal: bool) -> EngineConfig {
+    let c = EngineConfig::new(THREADS, mode).with_schedule(sched);
+    if steal {
+        c.with_stealing()
+    } else {
+        c
+    }
+}
+
+fn matrix() -> Vec<(ExecutionMode, SchedulePolicy, bool)> {
+    let mut cells = Vec::new();
+    for mode in MODES {
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                cells.push((mode, sched, steal));
+            }
+        }
+    }
+    cells
+}
+
+/// Seeded GAP-style graphs at harness scale: Kron's hub-heavy skew plus
+/// Web's diagonal locality, so block rows span the degenerate (empty /
+/// one-entry) and the multi-block-hub cases alike.
+fn graphs(weighted: bool) -> Vec<(&'static str, Csr)> {
+    if weighted {
+        vec![
+            ("kron-w", GapGraph::Kron.generate_weighted(8, 8)),
+            ("web-w", GapGraph::Web.generate_weighted(8, 8)),
+        ]
+    } else {
+        vec![("kron", GapGraph::Kron.generate(8, 8)), ("web", GapGraph::Web.generate(8, 8))]
+    }
+}
+
+// ------------------------------------------------------- differential --
+
+#[test]
+fn compressed_sssp_bit_identical_full_matrix() {
+    // Unique fixed point: every cell must agree bit for bit between the
+    // two stores, and both with the Dijkstra oracle.
+    for (gname, g) in graphs(true) {
+        let c = CompressedCsr::from_csr(&g);
+        let src = sssp::default_source(&g);
+        let want = oracle::dijkstra(&g, src);
+        for (mode, sched, steal) in matrix() {
+            let a = sssp::run_native(&g, src, &cfg(mode, sched, steal));
+            let b = sssp::run_native(&c, src, &cfg(mode, sched, steal));
+            assert!(b.run.converged, "sssp {gname} {mode:?}/{sched:?} steal={steal}");
+            assert_eq!(a.dist, want, "csr {gname} {mode:?}/{sched:?} steal={steal}");
+            assert_eq!(b.dist, want, "compressed {gname} {mode:?}/{sched:?} steal={steal}");
+        }
+    }
+}
+
+#[test]
+fn compressed_cc_and_bfs_bit_identical() {
+    for (gname, g) in graphs(false) {
+        let c = CompressedCsr::from_csr(&g);
+        let comp = oracle::components(&g);
+        let src = sssp::default_source(&g);
+        let lvl = oracle::bfs_levels(&g, src);
+        for (mode, sched, steal) in matrix() {
+            let ec = cfg(mode, sched, steal);
+            assert_eq!(cc::run_native(&c, &ec).labels, comp, "cc {gname} {mode:?}/{sched:?} steal={steal}");
+            assert_eq!(bfs::run_native(&c, src, &ec).levels, lvl, "bfs {gname} {mode:?}/{sched:?} steal={steal}");
+        }
+    }
+}
+
+#[test]
+fn compressed_pagerank_sync_bit_identical_async_epsilon() {
+    let prcfg = pagerank::PrConfig::default();
+    for (gname, g) in graphs(false) {
+        let c = CompressedCsr::from_csr(&g);
+        let sync = EngineConfig::new(THREADS, ExecutionMode::Synchronous);
+        let base = pagerank::run_native(&g, &sync, &prcfg);
+        for (mode, sched, steal) in matrix() {
+            let r = pagerank::run_native(&c, &cfg(mode, sched, steal), &prcfg);
+            assert!(r.run.converged, "pagerank {gname} {mode:?}/{sched:?} steal={steal}");
+            if mode == ExecutionMode::Synchronous {
+                // Deterministic Jacobi: identical iterates, bit for bit,
+                // store notwithstanding.
+                assert_eq!(
+                    r.run.values, base.run.values,
+                    "pagerank {gname} sync/{sched:?} steal={steal} must be bit-exact across stores"
+                );
+            } else {
+                for v in 0..g.num_vertices() {
+                    assert!(
+                        (r.values[v] - base.values[v]).abs() < 1e-3,
+                        "pagerank {gname} {mode:?}/{sched:?} steal={steal} v{v}: {} vs {}",
+                        r.values[v],
+                        base.values[v]
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sim_is_cycle_identical_across_stores() {
+    // The simulator charges by the access sequence on the value arrays;
+    // decode work is native-side only. Same neighbors in the same order
+    // ⇒ the same coherence events ⇒ identical cycle counts, per round.
+    let m = Machine::haswell();
+    for (gname, g) in graphs(true) {
+        let c = CompressedCsr::from_csr(&g);
+        let src = sssp::default_source(&g);
+        for (mode, sched, steal) in matrix() {
+            let ec = cfg(mode, sched, steal);
+            let (ra, sa) = sssp::run_sim(&g, src, &ec, &m);
+            let (rb, sb) = sssp::run_sim(&c, src, &ec, &m);
+            assert_eq!(ra.dist, rb.dist, "sim dist {gname} {mode:?}/{sched:?} steal={steal}");
+            assert_eq!(
+                sa.metrics.round_cycles, sb.metrics.round_cycles,
+                "sim cycles {gname} {mode:?}/{sched:?} steal={steal}"
+            );
+        }
+    }
+}
+
+#[test]
+fn numa_flag_on_compressed_store_changes_nothing() {
+    // --numa is placement-only; on the compressed store too. Sync is
+    // bit-identical to the non-numa run (line-aligned partitions cannot
+    // perturb deterministic Jacobi / label propagation).
+    let g = GapGraph::Kron.generate(8, 8);
+    let c = CompressedCsr::from_csr(&g);
+    let want = oracle::components(&g);
+    let plain = EngineConfig::new(THREADS, ExecutionMode::Synchronous);
+    let numa = plain.clone().with_numa();
+    assert_eq!(cc::run_native(&c, &plain).labels, want);
+    assert_eq!(cc::run_native(&c, &numa).labels, want);
+    // Async under --numa still reaches the unique fixed point.
+    let anuma = EngineConfig::new(THREADS, ExecutionMode::Asynchronous).with_numa().with_stealing();
+    assert_eq!(cc::run_native(&c, &anuma).labels, want);
+}
+
+// -------------------------------------------------------- round trip --
+
+fn dir() -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("daig-storage-tests");
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn convert_round_trip_matches_read_edge_list() {
+    // The `daig convert` pipeline, end to end: an edge list on disk →
+    // read_edge_list → from_csr → write .dagc → reopen (RAM and mmap)
+    // → decompress → the exact graph we started from.
+    let mut rng = SplitMix64::new(0x5704_AB1E);
+    let n = 300usize;
+    let mut text = String::new();
+    let mut b = GraphBuilder::new(n);
+    for _ in 0..1500 {
+        let (s, d) = (rng.index(n) as u32, rng.index(n) as u32);
+        text.push_str(&format!("{s} {d}\n"));
+        b.push(s, d, 1);
+    }
+    let el = dir().join("roundtrip.el");
+    std::fs::write(&el, &text).unwrap();
+
+    let g = io::read_edge_list(&el, Some(n), false).unwrap();
+    assert_eq!(g, b.build(), "read_edge_list must parse what we wrote");
+
+    let packed = CompressedCsr::from_csr(&g);
+    let dagc = dir().join("roundtrip.dagc");
+    packed.write(&dagc).unwrap();
+
+    let ram = CompressedCsr::open_in_ram(&dagc).unwrap();
+    assert!(!ram.is_mmap());
+    ram.verify_decode().unwrap();
+    assert_eq!(ram.to_csr(), g, "in-RAM reopen must round-trip");
+
+    let mapped = CompressedCsr::open_mmap(&dagc).unwrap();
+    assert!(mapped.is_mmap());
+    mapped.verify_decode().unwrap();
+    assert_eq!(mapped.to_csr(), g, "mmap reopen must round-trip");
+    assert_eq!(mapped.image(), packed.image(), "on-disk image must be byte-stable");
+}
+
+#[test]
+fn weighted_round_trip_preserves_weights() {
+    let g = GapGraph::Urand.generate_weighted(8, 8);
+    let dagc = dir().join("weighted.dagc");
+    CompressedCsr::from_csr(&g).write(&dagc).unwrap();
+    let back = CompressedCsr::open_mmap(&dagc).unwrap();
+    assert!(back.is_weighted());
+    assert_eq!(back.to_csr(), g);
+    // And the engine agrees: SSSP over the mmapped store matches the
+    // oracle on the original.
+    let src = sssp::default_source(&g);
+    let want = oracle::dijkstra(&g, src);
+    let r = sssp::run_native(&back, src, &EngineConfig::new(THREADS, ExecutionMode::Delayed(32)));
+    assert_eq!(r.dist, want);
+}
+
+// -------------------------------------------------------- corruption --
+
+fn valid_dagc_bytes(tag: &str) -> Vec<u8> {
+    let g = GapGraph::Kron.generate_weighted(7, 4);
+    let p = dir().join(format!("valid_{tag}.dagc"));
+    CompressedCsr::from_csr(&g).write(&p).unwrap();
+    std::fs::read(&p).unwrap()
+}
+
+fn both_openers_reject(name: &str, bytes: &[u8]) {
+    let p = dir().join(name);
+    std::fs::write(&p, bytes).unwrap();
+    assert!(CompressedCsr::open_mmap(&p).is_err(), "{name}: open_mmap must reject");
+    assert!(CompressedCsr::open_in_ram(&p).is_err(), "{name}: open_in_ram must reject");
+}
+
+#[test]
+fn dagc_truncated_at_every_section_errs() {
+    let full = valid_dagc_bytes("trunc");
+    // Inside the magic, header, starts, degrees, and data sections.
+    for cut in [0, 3, 20, 47, 60, full.len() / 2, full.len() - 1] {
+        both_openers_reject(&format!("trunc_{cut}.dagc"), &full[..cut]);
+    }
+}
+
+#[test]
+fn dagc_garbage_header_fields_err() {
+    let full = valid_dagc_bytes("hdr");
+    // Bad magic.
+    let mut magic = full.clone();
+    magic[0] ^= 0xFF;
+    both_openers_reject("magic.dagc", &magic);
+    // Unsupported version.
+    let mut ver = full.clone();
+    ver[4] = 99;
+    both_openers_reject("ver.dagc", &ver);
+    // Unknown flag bits.
+    let mut flags = full.clone();
+    flags[8] |= 0xF0;
+    both_openers_reject("flags.dagc", &flags);
+    // Trailing garbage breaks the length equation.
+    let mut long = full.clone();
+    long.extend_from_slice(&[0u8; 32]);
+    both_openers_reject("long.dagc", &long);
+}
+
+#[test]
+fn dagc_huge_counts_rejected_before_allocation() {
+    // A header claiming u64::MAX vertices must be rejected against the
+    // file length before any section is sized — not fed to an allocator.
+    let full = valid_dagc_bytes("huge");
+    let mut n = full.clone();
+    n[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+    both_openers_reject("huge_n.dagc", &n);
+    let mut m = full.clone();
+    m[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+    both_openers_reject("huge_m.dagc", &m);
+    let mut dl = full.clone();
+    dl[32..40].copy_from_slice(&u64::MAX.to_le_bytes());
+    both_openers_reject("huge_datalen.dagc", &dl);
+    let mut nb = full;
+    nb[40..48].copy_from_slice(&u64::MAX.to_le_bytes());
+    both_openers_reject("huge_nblocks.dagc", &nb);
+}
+
+#[test]
+fn dagc_corrupt_starts_err_at_open() {
+    // The row-start table gets the same structural treatment as
+    // read_binary's offsets: a scribbled first entry (no longer 0, no
+    // longer monotone) is rejected at open, before any decode.
+    let mut full = valid_dagc_bytes("starts");
+    full[48..56].copy_from_slice(&u64::MAX.to_le_bytes());
+    both_openers_reject("starts.dagc", &full);
+}

@@ -1,0 +1,292 @@
+//! In-tree offline stand-in for the `memmap2` crate.
+//!
+//! The build environment has no network access, so this vendors the
+//! small subset of memmap2's API the graph storage tier uses:
+//!
+//! * [`Mmap::map`] — read-only, privately mapped view of a whole file
+//!   (the mmap-backed compressed graph loader).
+//! * [`MmapMut::map_anon`] — anonymous, zero-initialized, demand-paged
+//!   memory (the NUMA first-touch value-array allocation: pages are not
+//!   faulted in until first written, so the writing thread's node owns
+//!   them).
+//!
+//! On Unix these call `mmap(2)`/`munmap(2)` directly through `extern
+//! "C"` declarations — `std` already links libc on those targets, so no
+//! libc *crate* is needed. Elsewhere both fall back to owned,
+//! 8-byte-aligned heap buffers (correct, just not demand-paged), keeping
+//! every caller portable. Swap this crate for the crates.io `memmap2`
+//! when networked; the call sites compile unchanged.
+
+use std::fs::File;
+use std::io;
+use std::ops::{Deref, DerefMut};
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+    use std::os::raw::c_int;
+
+    pub const PROT_READ: c_int = 1;
+    pub const PROT_WRITE: c_int = 2;
+    pub const MAP_PRIVATE: c_int = 2;
+    #[cfg(target_os = "linux")]
+    pub const MAP_ANONYMOUS: c_int = 0x20;
+    #[cfg(not(target_os = "linux"))]
+    pub const MAP_ANONYMOUS: c_int = 0x1000; // BSD/macOS MAP_ANON
+
+    extern "C" {
+        pub fn mmap(addr: *mut c_void, len: usize, prot: c_int, flags: c_int, fd: c_int, offset: i64)
+            -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> c_int;
+    }
+
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+}
+
+/// Backing storage: a real mapping on Unix, an owned buffer elsewhere
+/// (and for zero-length maps, which `mmap(2)` rejects).
+enum Inner {
+    #[cfg(unix)]
+    Map {
+        ptr: *mut u8,
+        len: usize,
+    },
+    /// `u64` elements guarantee 8-byte base alignment, which the
+    /// compressed-graph section casts rely on.
+    Owned(Vec<u64>, usize),
+}
+
+impl Inner {
+    fn as_slice(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            // SAFETY: ptr/len describe a live mapping owned by self.
+            Inner::Map { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            Inner::Owned(buf, len) => unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len) },
+        }
+    }
+
+    fn as_mut_slice(&mut self) -> &mut [u8] {
+        match self {
+            #[cfg(unix)]
+            // SAFETY: mutable mappings are created PROT_READ|PROT_WRITE.
+            Inner::Map { ptr, len } => unsafe { std::slice::from_raw_parts_mut(*ptr, *len) },
+            Inner::Owned(buf, len) => unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, *len) },
+        }
+    }
+
+    /// Raw base pointer (page-aligned for real maps, 8-byte-aligned for
+    /// owned fallbacks).
+    fn as_ptr(&self) -> *const u8 {
+        match self {
+            #[cfg(unix)]
+            Inner::Map { ptr, .. } => *ptr,
+            Inner::Owned(buf, _) => buf.as_ptr() as *const u8,
+        }
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let Inner::Map { ptr, len } = self {
+            if *len > 0 {
+                // SAFETY: this mapping was created by mmap with this length.
+                unsafe { sys::munmap(*ptr as *mut std::ffi::c_void, *len) };
+            }
+        }
+    }
+}
+
+// SAFETY: the mapping is plain memory; no thread affinity.
+unsafe impl Send for Inner {}
+unsafe impl Sync for Inner {}
+
+/// An immutable memory-mapped view of a file.
+pub struct Mmap {
+    inner: Inner,
+}
+
+impl Mmap {
+    /// Map `file` read-only in its entirety.
+    ///
+    /// # Safety
+    ///
+    /// As with the real memmap2: the caller must ensure the underlying
+    /// file is not truncated or mutated while the map is alive (the map
+    /// would observe the change, or fault). Read-only open + treating
+    /// the file as immutable is the expected usage.
+    pub unsafe fn map(file: &File) -> io::Result<Mmap> {
+        let len = file.metadata()?.len();
+        if len > usize::MAX as u64 {
+            return Err(io::Error::new(io::ErrorKind::InvalidInput, "file too large to map"));
+        }
+        let len = len as usize;
+        if len == 0 {
+            return Ok(Mmap { inner: Inner::Owned(Vec::new(), 0) });
+        }
+        #[cfg(unix)]
+        {
+            use std::os::unix::io::AsRawFd;
+            let ptr = sys::mmap(std::ptr::null_mut(), len, sys::PROT_READ, sys::MAP_PRIVATE, file.as_raw_fd(), 0);
+            if ptr == sys::MAP_FAILED {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Mmap { inner: Inner::Map { ptr: ptr as *mut u8, len } })
+        }
+        #[cfg(not(unix))]
+        {
+            use std::io::Read;
+            let mut buf = vec![0u64; len.div_ceil(8)];
+            let bytes = unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+            let mut f = file.try_clone()?;
+            f.read_exact(bytes)?;
+            Ok(Mmap { inner: Inner::Owned(buf, len) })
+        }
+    }
+
+    /// Base pointer of the mapping.
+    pub fn as_ptr(&self) -> *const u8 {
+        self.inner.as_ptr()
+    }
+
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        self.deref().len()
+    }
+
+    /// True if zero bytes are mapped.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Deref for Mmap {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.inner.as_slice()
+    }
+}
+
+/// A mutable anonymous mapping (or file-less buffer on non-Unix).
+pub struct MmapMut {
+    inner: Inner,
+}
+
+impl MmapMut {
+    /// Allocate `len` bytes of zero-initialized, demand-paged anonymous
+    /// memory. Pages are faulted in on first write — the property NUMA
+    /// first-touch placement relies on.
+    pub fn map_anon(len: usize) -> io::Result<MmapMut> {
+        if len == 0 {
+            return Ok(MmapMut { inner: Inner::Owned(Vec::new(), 0) });
+        }
+        #[cfg(unix)]
+        {
+            // SAFETY: anonymous private mapping; no aliasing concerns.
+            let ptr = unsafe {
+                sys::mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    sys::PROT_READ | sys::PROT_WRITE,
+                    sys::MAP_PRIVATE | sys::MAP_ANONYMOUS,
+                    -1,
+                    0,
+                )
+            };
+            if ptr == sys::MAP_FAILED {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(MmapMut { inner: Inner::Map { ptr: ptr as *mut u8, len } })
+        }
+        #[cfg(not(unix))]
+        {
+            Ok(MmapMut { inner: Inner::Owned(vec![0u64; len.div_ceil(8)], len) })
+        }
+    }
+
+    /// Base pointer of the mapping.
+    pub fn as_ptr(&self) -> *const u8 {
+        self.inner.as_ptr()
+    }
+
+    /// Mutable base pointer of the mapping.
+    pub fn as_mut_ptr(&mut self) -> *mut u8 {
+        self.inner.as_mut_slice().as_mut_ptr()
+    }
+
+    /// Length in bytes.
+    pub fn len(&self) -> usize {
+        self.deref().len()
+    }
+
+    /// True if zero bytes are mapped.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Deref for MmapMut {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.inner.as_slice()
+    }
+}
+
+impl DerefMut for MmapMut {
+    fn deref_mut(&mut self) -> &mut [u8] {
+        self.inner.as_mut_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn map_file_roundtrip() {
+        let dir = std::env::temp_dir().join("memmap2-vendor-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("roundtrip.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::File::create(&p).unwrap().write_all(&payload).unwrap();
+        let f = File::open(&p).unwrap();
+        let m = unsafe { Mmap::map(&f).unwrap() };
+        assert_eq!(&m[..], &payload[..]);
+        assert_eq!(m.len(), payload.len());
+        // Page alignment (real maps) or 8-byte alignment (fallback): the
+        // compressed-graph section casts need at least 8.
+        assert_eq!(m.as_ptr() as usize % 8, 0);
+    }
+
+    #[test]
+    fn map_empty_file() {
+        let dir = std::env::temp_dir().join("memmap2-vendor-tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("empty.bin");
+        std::fs::File::create(&p).unwrap();
+        let m = unsafe { Mmap::map(&File::open(&p).unwrap()).unwrap() };
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn anon_map_zeroed_and_writable() {
+        let mut m = MmapMut::map_anon(4096 * 3).unwrap();
+        assert_eq!(m.len(), 4096 * 3);
+        assert!(m.iter().all(|&b| b == 0));
+        m[4096] = 7;
+        m[m.len() - 1] = 9;
+        assert_eq!(m[4096], 7);
+        assert_eq!(m[4096 * 3 - 1], 9);
+        assert_eq!(m.as_ptr() as usize % 8, 0);
+    }
+
+    #[test]
+    fn anon_map_empty() {
+        let m = MmapMut::map_anon(0).unwrap();
+        assert!(m.is_empty());
+    }
+}
