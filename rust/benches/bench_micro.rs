@@ -602,6 +602,57 @@ fn main() {
         println!("wrote BENCH_serve.json");
     }
 
+    bench::section("shard: sharded serving over loopback (native wall clock, 2 threads/shard)");
+    // The δ delay-buffer discipline at the message layer: for each
+    // shard count × δ policy, run the same mixed SSSP/PPR job stream
+    // through the full wire protocol over in-process loopback links and
+    // record job throughput plus halo-message amortization (async δ=0
+    // ships 1 entry/msg, sync a whole round/msg, delayed δ in between).
+    // Results land in BENCH_shard.json so the scatter/halo trajectory
+    // is recorded across PRs.
+    {
+        use daig::coordinator::sweep;
+        let base = EngineConfig::new(2, ExecutionMode::Asynchronous);
+        let modes =
+            [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(64)];
+        let pts = sweep::shard_scaling(&kron_w, &base, &[1, 2, 4], &modes, 16, 0x54A2D);
+        let mut shard_json: Vec<(String, Json)> = Vec::new();
+        for p in &pts {
+            println!(
+                "shards={} mode={:>6}: {:.1} jobs/s, halo {} msgs / {} entries ({:.1} entries/msg)",
+                p.shards,
+                p.mode.label(),
+                p.jobs_per_s,
+                p.halo_msgs,
+                p.halo_entries,
+                p.entries_per_msg
+            );
+            shard_json.push((
+                format!("s{}_{}", p.shards, p.mode.label()),
+                Json::obj(vec![
+                    ("shards", Json::Num(p.shards as f64)),
+                    ("mode", Json::Str(p.mode.label())),
+                    ("jobs", Json::Num(p.jobs as f64)),
+                    ("rounds", Json::Num(p.rounds as f64)),
+                    ("elapsed_s", Json::Num(p.elapsed_s)),
+                    ("jobs_per_s", Json::Num(p.jobs_per_s)),
+                    ("halo_msgs", Json::Num(p.halo_msgs as f64)),
+                    ("halo_entries", Json::Num(p.halo_entries as f64)),
+                    ("entries_per_msg", Json::Num(p.entries_per_msg)),
+                ]),
+            ));
+        }
+        let shard_doc = Json::obj(vec![
+            ("bench", Json::Str("shard".into())),
+            ("scale", Json::Num(scale as f64)),
+            ("threads_per_shard", Json::Num(2.0)),
+            ("graph", Json::Str("kron".into())),
+            ("points", Json::Obj(shard_json.into_iter().collect())),
+        ]);
+        std::fs::write("BENCH_shard.json", shard_doc.to_string()).expect("write BENCH_shard.json");
+        println!("wrote BENCH_shard.json");
+    }
+
     bench::section("PJRT dense-block step (L1/L2 artifact path)");
     if std::path::Path::new("artifacts/manifest.json").exists() {
         let rt = daig::runtime::Runtime::load(std::path::Path::new("artifacts")).unwrap();

@@ -74,10 +74,11 @@ pub fn run(id: &str, opts: &ExpOptions) -> Result<()> {
         "batch" => batch(opts),
         "mutate" => mutate(opts),
         "serve" => serve(opts),
+        "shard" => shard(opts),
         "all" => {
             let ids = [
                 "table2", "table1", "fig2", "fig3", "fig4", "fig5", "fig6", "ablations", "autotune", "schedule",
-                "steal", "adaptive", "batch", "mutate", "serve",
+                "steal", "adaptive", "batch", "mutate", "serve", "shard",
             ];
             for id in ids {
                 run(id, opts)?;
@@ -288,6 +289,43 @@ pub fn serve(opts: &ExpOptions) -> Result<()> {
         }
     }
     opts.report.emit("serve", &t)
+}
+
+/// Sharded serving (DESIGN.md §13): job throughput and halo traffic
+/// across cluster shapes × δ policies, over the deterministic loopback
+/// cluster — the full wire protocol without processes or sockets. The
+/// `entries/msg` column is the delay-buffer amortization story lifted
+/// to messages: async δ=0 ships one boundary update per message, sync
+/// batches a whole round, delayed δ lands in between at a fraction of
+/// sync's staleness. One shard is the sanity row — no remote owners, so
+/// zero halo traffic and single-box behavior.
+pub fn shard(opts: &ExpOptions) -> Result<()> {
+    // Native wall clock over loopback threads: sized for CI machines.
+    let threads = 2;
+    let queries = 24;
+    let seed = 0x54A2D;
+    let graph = opts.graph(GapGraph::Kron, Algo::Sssp);
+    let mut t = Table::new(
+        "Shard — sharded serving over loopback: jobs/sec and halo amortization vs shard count × δ policy (native, 2 threads/shard, kron)",
+        &["shards", "mode", "jobs", "rounds", "elapsed", "jobs/s", "halo msgs", "halo entries", "entries/msg"],
+    );
+    let base = EngineConfig::new(threads, ExecutionMode::Asynchronous);
+    let modes =
+        [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(64)];
+    for p in sweep::shard_scaling(&graph, &base, &[1, 2, 4], &modes, queries, seed) {
+        t.row(vec![
+            p.shards.to_string(),
+            p.mode.label(),
+            p.jobs.to_string(),
+            p.rounds.to_string(),
+            fmt::secs(p.elapsed_s),
+            format!("{:.1}", p.jobs_per_s),
+            p.halo_msgs.to_string(),
+            p.halo_entries.to_string(),
+            format!("{:.1}", p.entries_per_msg),
+        ]);
+    }
+    opts.report.emit("shard", &t)
 }
 
 /// Schedule dimension (beyond the paper): dense vs frontier vs adaptive

@@ -247,6 +247,97 @@ pub fn serve_throughput(g: &Csr, base: &EngineConfig, ks: &[usize], queries: usi
         .collect()
 }
 
+/// One point of the sharded-serving sweep ([`shard_scaling`]): one
+/// shard count × one execution mode over a loopback cluster.
+#[derive(Debug, Clone)]
+pub struct ShardPoint {
+    /// Worker shards in the cluster.
+    pub shards: usize,
+    /// Execution mode — which also sets the halo message δ
+    /// ([`crate::shard::halo_delta`]).
+    pub mode: ExecutionMode,
+    /// Jobs run to convergence.
+    pub jobs: usize,
+    /// Global rounds summed over the jobs.
+    pub rounds: u64,
+    /// Wall-clock seconds over the whole job stream.
+    pub elapsed_s: f64,
+    /// The sharded-serving headline: jobs / elapsed.
+    pub jobs_per_s: f64,
+    /// Halo messages shipped by all shards over all jobs.
+    pub halo_msgs: u64,
+    /// Halo entries (vertex lane groups) those messages carried.
+    pub halo_entries: u64,
+    /// Entries per message — the δ-amortization evidence: async (δ=0)
+    /// pins this at 1, sync batches a whole round per message, delayed
+    /// δ lands in between.
+    pub entries_per_msg: f64,
+}
+
+/// Sharded serving over the deterministic loopback cluster
+/// ([`crate::shard::with_cluster`]): for every shard count × mode, run
+/// the same mixed SSSP/PPR single-query job stream (deterministic in
+/// `seed`, drawn by [`crate::serve::loadgen::next_query`]) and report
+/// wall-clock job throughput plus halo-traffic totals. The interesting
+/// column is `entries_per_msg` — the paper's delay-buffer amortization
+/// lifted to the message layer (`BENCH_shard.json` plots it). `g` must
+/// be weighted (the stream includes SSSP). Like [`serve_throughput`],
+/// this is native wall clock, not the simulator.
+pub fn shard_scaling(
+    g: &Csr,
+    base: &EngineConfig,
+    shard_counts: &[usize],
+    modes: &[ExecutionMode],
+    queries: usize,
+    seed: u64,
+) -> Vec<ShardPoint> {
+    use crate::serve::{loadgen, Query};
+    use crate::shard::{with_cluster, JobClass};
+    use crate::util::rng::SplitMix64;
+    assert!(g.is_weighted(), "shard_scaling needs a weighted graph (the job mix includes SSSP)");
+    let mut out = Vec::new();
+    for &shards in shard_counts {
+        for &mode in modes {
+            let mut ecfg = base.clone();
+            ecfg.mode = mode;
+            // Same query stream at every point: the comparison is
+            // cluster shape and δ policy, never workload.
+            let mut rng = SplitMix64::new(seed);
+            let classes: Vec<JobClass> = (0..queries)
+                .map(|_| match loadgen::next_query(&mut rng, g.num_vertices(), 0.25) {
+                    Query::Sssp { source } => JobClass::Sssp { sources: vec![source] },
+                    Query::Ppr { teleports } => {
+                        JobClass::Ppr { teleports: vec![teleports], damping: 0.85, epsilon: 1e-3 }
+                    }
+                })
+                .collect();
+            let (rounds, msgs, entries, elapsed_s) = with_cluster(g, shards, &ecfg, |router| {
+                let t0 = std::time::Instant::now();
+                let (mut rounds, mut msgs, mut entries) = (0u64, 0u64, 0u64);
+                for class in &classes {
+                    let res = router.run_job(class).expect("loopback cluster job cannot fail");
+                    rounds += u64::from(res.rounds);
+                    msgs += res.halo_msgs;
+                    entries += res.halo_entries;
+                }
+                (rounds, msgs, entries, t0.elapsed().as_secs_f64())
+            });
+            out.push(ShardPoint {
+                shards,
+                mode,
+                jobs: queries,
+                rounds,
+                elapsed_s,
+                jobs_per_s: queries as f64 / elapsed_s.max(1e-9),
+                halo_msgs: msgs,
+                halo_entries: entries,
+                entries_per_msg: entries as f64 / (msgs as f64).max(1.0),
+            });
+        }
+    }
+    out
+}
+
 /// One cell of the [`mutation_latency`] grid: update-to-fresh-result
 /// latency of incremental recomputation vs full recomputation after an
 /// edge-mutation batch, at one mode × schedule.

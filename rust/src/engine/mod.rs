@@ -111,8 +111,9 @@ impl ExecutionMode {
 /// point on the mutated graph.
 #[derive(Debug, Clone)]
 pub struct ResumeSeed {
-    /// Previous per-vertex values (raw bits, `n` elements; single-lane
-    /// runs only).
+    /// Previous per-vertex values (raw bits): `n` elements for
+    /// single-lane programs, `n × lanes` vertex-major lane groups for
+    /// batched ones.
     pub values: Vec<u32>,
     /// Vertices whose inputs may have changed — the round-0 frontier.
     /// Sorted and deduplicated.
@@ -175,9 +176,21 @@ pub struct EngineConfig {
     /// Warm-start seed: initialize values (and, under sparse schedules,
     /// the round-0 frontier) from a previous run instead of
     /// `VertexProgram::init`. `None` (default) is a cold run —
-    /// byte-identical behavior to before this field existed. Requires
-    /// single-lane programs; both executors assert that.
+    /// byte-identical behavior to before this field existed. For
+    /// multi-lane programs the seed must carry `n × lanes` elements in
+    /// the vertex-major lane-group layout (the sharded round driver
+    /// uses this to mirror remote shards' lane groups between rounds).
     pub resume: Option<std::sync::Arc<ResumeSeed>>,
+    /// Sweep only this vertex range (`None` = the whole graph,
+    /// byte-identical behavior to before this field existed). The value
+    /// arrays stay full-length — vertices outside the range keep their
+    /// initial (or resumed) values and are readable as neighbors — but
+    /// partitioning, sweeping, and stealing all happen inside the
+    /// range. This is how a shard executes one global round over its
+    /// owned partition while treating the rest of the value array as a
+    /// mirror of remote shards (see [`crate::shard`]). Native executor
+    /// only; the sim asserts it off.
+    pub restrict: Option<std::ops::Range<crate::graph::VertexId>>,
 }
 
 impl EngineConfig {
@@ -196,6 +209,7 @@ impl EngineConfig {
             numa: false,
             max_rounds: 10_000,
             resume: None,
+            restrict: None,
         }
     }
 
@@ -243,6 +257,13 @@ impl EngineConfig {
         self
     }
 
+    /// Builder-style: sweep only `range` (sharded execution; see the
+    /// [`Self::restrict`] field docs).
+    pub fn with_restrict(mut self, range: std::ops::Range<crate::graph::VertexId>) -> Self {
+        self.restrict = Some(range);
+        self
+    }
+
     /// Builder-style: enable NUMA-aware placement (socket-pinned
     /// first-touch in the native executor, remote-socket line costs in
     /// the sim).
@@ -260,6 +281,17 @@ impl EngineConfig {
     /// since a group boundary at a line-multiple vertex is itself
     /// line-aligned).
     pub fn partition_map<G: crate::graph::GraphStore>(&self, g: &G) -> PartitionMap {
+        if let Some(r) = &self.restrict {
+            assert!(r.end as usize <= g.num_vertices(), "restrict range {r:?} exceeds {} vertices", g.num_vertices());
+            // Restricted runs partition only the swept window. Interior
+            // bounds are not line-rounded here even under `numa`: the
+            // cross-shard cut (the window itself) is what must be
+            // line-exact, and `crate::shard::shard_partition` aligns it.
+            return match self.partition {
+                PartitionStrategy::BlockedByDegree => crate::partition::blocked::partition_range(g, r.clone(), self.threads),
+                PartitionStrategy::EqualVertex => crate::partition::equal_vertex::partition_range(r.clone(), self.threads),
+            };
+        }
         let pm = match self.partition {
             PartitionStrategy::BlockedByDegree => crate::partition::blocked::partition(g, self.threads),
             PartitionStrategy::EqualVertex => crate::partition::equal_vertex::partition(g, self.threads),

@@ -200,8 +200,15 @@ pub fn run<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, cfg: &EngineConfig)
         // Warm start: carry the previous run's values instead of the
         // program's cold init (incremental recomputation, DESIGN.md §10).
         Some(seed) => {
-            assert_eq!(lane_count, 1, "resume seeds are single-lane; lane groups interleave k queries");
-            assert_eq!(seed.values.len(), n, "resume seed has {} values for {n} vertices", seed.values.len());
+            // Multi-lane seeds carry whole lane groups (n × lanes,
+            // vertex-major) — the sharded round driver resumes batched
+            // jobs this way; `dirty` stays vertex-granular either way.
+            assert_eq!(
+                seed.values.len(),
+                n * lane_count,
+                "resume seed has {} values for {n} vertices x {lane_count} lanes",
+                seed.values.len()
+            );
             assert!(
                 seed.dirty.iter().all(|&v| (v as usize) < n),
                 "resume dirty set contains out-of-range vertices"
@@ -225,7 +232,10 @@ pub fn run<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, cfg: &EngineConfig)
     // so every page faults in from the owning socket and its DRAM lands
     // there. Without the flag the caller thread touches everything here,
     // exactly as before.
-    let (global, back) = if cfg.numa {
+    // Restricted runs skip the per-partition first-touch path: the
+    // worker gang covers only the restricted window, so nobody would
+    // write the out-of-window initial values into demand-paged arrays.
+    let (global, back) = if cfg.numa && cfg.restrict.is_none() {
         (
             SharedValues::zeroed_lanes_first_touch(init.len(), lane_count),
             SharedValues::zeroed_lanes_first_touch(init.len(), lane_count),

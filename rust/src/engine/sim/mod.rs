@@ -336,6 +336,10 @@ impl lanes::LaneReader for SimLaneReader<'_> {
 /// composed rows.
 pub fn run<G: GraphStore, P: VertexProgram>(g: &G, prog: &P, cfg: &EngineConfig, machine: &Machine) -> SimRun {
     let n = g.num_vertices();
+    assert!(
+        cfg.restrict.is_none(),
+        "the simulator models whole-graph runs; restricted (sharded) sweeps are native-executor only"
+    );
     let pm = cfg.partition_map(g);
     let t_count = pm.num_parts();
     assert!(t_count <= cache::MAX_THREADS, "simulator supports ≤{} threads", cache::MAX_THREADS);

@@ -25,6 +25,7 @@
 //! | [`algorithms`] | PageRank, Bellman-Ford SSSP, connected components, BFS + serial oracles |
 //! | [`runtime`] | PJRT loader for the AOT-compiled JAX/Pallas dense-block kernels |
 //! | [`serve`] | always-on batched query serving: admission, lane packing, version-keyed result cache, latency SLOs, load generation |
+//! | [`shard`] | multi-process serving: router + N shard workers, delay-buffer halo exchange over sockets or a deterministic loopback |
 //! | [`coordinator`] | experiment orchestration regenerating every table/figure of the paper |
 //! | [`util`] | in-tree substrates: deterministic RNG, aligned buffers, JSON, CLI, table formatting |
 //! | [`prop`] | in-tree property-based testing mini-framework |
@@ -54,6 +55,7 @@ pub mod partition;
 pub mod prop;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod util;
 
 /// Cache line size (bytes) assumed throughout: both evaluation platforms in

@@ -4,9 +4,11 @@
 //! ```text
 //! daig run        --algo pagerank --graph kron --scale 14 --mode d256 --threads 32 [--engine sim|native] [--schedule dense|frontier|adaptive] [--machine haswell|cascadelake] [--batch k]
 //! daig sweep      --algo pagerank --graph kron --scale 14 --threads 32 [--schedule dense] [--machine haswell]
-//! daig experiment <table1|table2|fig2|fig3|fig4|fig5|fig6|ablations|schedule|batch|mutate|serve|all> [--out results] [--scale 14]
+//! daig experiment <table1|table2|fig2|fig3|fig4|fig5|fig6|ablations|schedule|batch|mutate|serve|shard|all> [--out results] [--scale 14]
 //! daig mutate     --algo sssp --graph kron --scale 12 --frac 0.01 [--resume] [--engine native|sim] [--mode d256] [--schedule frontier]
 //! daig serve      --graph kron --scale 12 --lanes 8 --queries 64 [--clients c | --qps x] [--mutate-every n]
+//! daig shard      --connect 127.0.0.1:7700 --id 0 --shards 2 --graph kron --scale 12 [--mode async] [--threads 4] [--halo-delta n]
+//! daig route      --listen 127.0.0.1:7700 --shards 2 --graph kron --scale 12 --queries 64 [--lanes 8] [--drill-kill S@Q]
 //! daig stats      --graph web --scale 14 | --file graph.daig
 //! daig gengraph   --graph kron --scale 14 --out kron.daig [--weighted]
 //! daig convert    <in.el|in.mtx|in.daig> <out.dagc> [--symmetrize] [--n N] [--check]
@@ -44,6 +46,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("experiment") => cmd_experiment(args),
         Some("mutate") => cmd_mutate(args),
         Some("serve") => cmd_serve(args),
+        Some("shard") => cmd_shard(args),
+        Some("route") => cmd_route(args),
         Some("stats") => cmd_stats(args),
         Some("gengraph") => cmd_gengraph(args),
         Some("convert") => cmd_convert(args),
@@ -62,7 +66,7 @@ const HELP: &str = "daig — delayed asynchronous iterative graph algorithms
 commands:
   run         run one algorithm/graph/mode configuration
   sweep       sync/async/δ-grid sweep at a fixed thread count
-  experiment  regenerate a paper table/figure (table1 table2 fig2..fig6 ablations schedule steal adaptive batch mutate serve all)
+  experiment  regenerate a paper table/figure (table1 table2 fig2..fig6 ablations schedule steal adaptive batch mutate serve shard all)
   mutate      apply a random edge-mutation batch through the versioned
               overlay and recompute — with --resume also incrementally
               from the previous values + dirty frontier (sssp | pagerank;
@@ -75,6 +79,20 @@ commands:
               --qps x open loop, --queue N admission bound, --cache N,
               --ppr-frac F, --mutate-every N --frac F serve-while-mutating,
               --seed N workload RNG)
+  shard       one worker process of a sharded cluster: owns a contiguous
+              line-aligned vertex range, connects to the router with
+              bounded-backoff retry (--connect ADDR, --retries N), runs
+              one engine round per Continue, and ships boundary updates
+              through per-remote-shard halo delay buffers (--id S
+              --shards N; --halo-delta N overrides the mode-derived
+              message δ; graph options must match the router's exactly)
+  route       router process of a sharded cluster: binds --listen ADDR,
+              accepts --shards N workers, draws the serve workload
+              (--queries N, --ppr-frac F, --seed N), packs it into lane
+              groups (--lanes k, --queue N) and runs each group as one
+              scattered job across the shards; --timeout-ms N dead-shard
+              detection, --drill-kill S@Q kills shard S after Q served
+              queries (the degradation drill — see docs/OPERATIONS.md)
   stats       graph statistics (Table II columns)
   gengraph    generate a GAP-analog graph to a .daig file
   convert     pack an edge list (.el/.txt), MatrixMarket (.mtx), or .daig
@@ -707,6 +725,195 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // One machine-greppable line for the CI smoke: the job asserts a
     // query was served and the process exited cleanly.
     println!("serve ok: {} served, clean shutdown", report.served);
+    Ok(())
+}
+
+fn cmd_shard(args: &Args) -> Result<()> {
+    use daig::shard::{serve_loop, SocketTransport, WorkerCfg};
+
+    let addr = args.opt_str("connect", "127.0.0.1:7700");
+    let id: u32 = args.opt("id", 0)?;
+    let shards: usize = args.opt("shards", 2)?;
+    if (id as usize) >= shards {
+        bail!("--id {id} out of range for --shards {shards}");
+    }
+    let graph = GapGraph::from_name(&args.opt_str("graph", "kron")).context("bad --graph")?;
+    let scale: u32 = args.opt("scale", 12)?;
+    let ef: usize = args.opt("ef", 0)?;
+    let g = graph.generate_weighted(scale, ef);
+
+    let mode = parse_mode(args, "async")?;
+    let threads: usize = args.opt("threads", 4)?;
+    let schedule = parse_schedule(args)?;
+    let mut ecfg = EngineConfig::new(threads, mode).with_schedule(schedule);
+    if args.flag("steal") {
+        ecfg = ecfg.with_stealing();
+    }
+    // None defers to the mode-derived δ (shard::halo_delta) per job.
+    let halo_delta = args
+        .options
+        .get("halo-delta")
+        .map(|v| v.parse::<usize>().map_err(|_| anyhow::anyhow!("--halo-delta: cannot parse '{v}'")))
+        .transpose()?;
+    let retries: u32 = args.opt("retries", 30)?;
+
+    println!(
+        "shard {id}/{shards} on {} (n={}, m={}), mode={}, schedule={}, threads={threads}, connecting to {addr}",
+        args.opt_str("graph", "kron"),
+        g.num_vertices(),
+        g.num_edges(),
+        mode.label(),
+        schedule.label(),
+    );
+    let mut t = SocketTransport::connect_retry(&addr, retries, std::time::Duration::from_millis(100))?;
+    let cfg = WorkerCfg { shard: id, shards, ecfg, halo_delta };
+    let served = serve_loop(&mut t, &g, &cfg)?;
+    // One machine-greppable line per worker for the CI socket smoke.
+    println!("shard {id} ok: {served} jobs served, clean shutdown");
+    Ok(())
+}
+
+fn cmd_route(args: &Args) -> Result<()> {
+    use daig::serve::{loadgen, BatchFormer, LatencyHistogram, Query, QueryClass, QueueFull};
+    use daig::shard::{JobClass, Router, ShardError, SocketListener};
+    use daig::util::rng::SplitMix64;
+    use std::time::{Duration, Instant};
+
+    let addr = args.opt_str("listen", "127.0.0.1:7700");
+    let shards: usize = args.opt("shards", 2)?;
+    let graph = GapGraph::from_name(&args.opt_str("graph", "kron")).context("bad --graph")?;
+    let scale: u32 = args.opt("scale", 12)?;
+    let ef: usize = args.opt("ef", 0)?;
+    let g = graph.generate_weighted(scale, ef);
+    let n = g.num_vertices();
+
+    let lanes: usize = args.opt("lanes", 8)?;
+    if !daig::engine::lanes::valid_lane_count(lanes) {
+        bail!("bad --lanes {lanes} (expected 1, 2, 4, 8, or 16: lane groups must divide a cache line)");
+    }
+    let queries: usize = args.opt("queries", 64)?;
+    let queue: usize = args.opt("queue", 256)?;
+    let ppr_frac: f64 = args.opt("ppr-frac", 0.25)?;
+    let seed: u64 = args.opt("seed", 42)?;
+    let timeout_ms: u64 = args.opt("timeout-ms", 30_000)?;
+    // --drill-kill S@Q: kill shard S once Q queries have been served.
+    let drill: Option<(u32, usize)> = match args.options.get("drill-kill") {
+        None => None,
+        Some(v) => {
+            let parsed = v
+                .split_once('@')
+                .and_then(|(s, q)| Some((s.parse::<u32>().ok()?, q.parse::<usize>().ok()?)));
+            Some(parsed.ok_or_else(|| anyhow::anyhow!("--drill-kill: expected S@Q, got '{v}'"))?)
+        }
+    };
+
+    let listener = SocketListener::bind(&addr)?;
+    println!(
+        "route on {} (n={n}, m={}): listening on {addr}, waiting for {shards} shards",
+        args.opt_str("graph", "kron"),
+        g.num_edges(),
+    );
+    let mut transports = Vec::with_capacity(shards);
+    for _ in 0..shards {
+        transports.push(listener.accept()?);
+    }
+    let mut router = Router::new(&g, transports);
+    router.timeout = Duration::from_millis(timeout_ms);
+    router.handshake()?;
+    println!("route: {shards} shards connected, serving {queries} queries, lanes={lanes}");
+
+    let mut rng = SplitMix64::new(seed);
+    let mut former: BatchFormer<Query> = BatchFormer::new(lanes, queue);
+    let mut hist = LatencyHistogram::new();
+    let (mut issued, mut served, mut failed, mut degraded) = (0usize, 0usize, 0usize, 0usize);
+    let (mut jobs, mut halo_msgs, mut halo_entries) = (0u64, 0u64, 0u64);
+    let mut killed = false;
+    while served + failed < queries {
+        while issued < queries {
+            let q = loadgen::next_query(&mut rng, n, ppr_frac);
+            match former.admit(q.class(), q) {
+                Ok(()) => issued += 1,
+                Err(QueueFull(_)) => break,
+            }
+        }
+        let Some(batch) = former.form() else {
+            bail!("route: no batch formable with {} pending queries", former.pending());
+        };
+        let class = match batch.class {
+            QueryClass::Sssp => JobClass::Sssp {
+                sources: batch
+                    .items
+                    .iter()
+                    .map(|q| match q {
+                        Query::Sssp { source } => *source,
+                        Query::Ppr { .. } => unreachable!("batch class is Sssp"),
+                    })
+                    .collect(),
+            },
+            QueryClass::Ppr => JobClass::Ppr {
+                teleports: batch
+                    .items
+                    .iter()
+                    .map(|q| match q {
+                        Query::Ppr { teleports } => teleports.clone(),
+                        Query::Sssp { .. } => unreachable!("batch class is Ppr"),
+                    })
+                    .collect(),
+                damping: 0.85,
+                epsilon: 1e-3,
+            },
+        };
+        let t0 = Instant::now();
+        match router.run_job(&class) {
+            Ok(res) => {
+                let dt = t0.elapsed().as_secs_f64();
+                for _ in 0..batch.items.len() {
+                    hist.record_secs(dt);
+                }
+                served += batch.items.len();
+                if res.degraded {
+                    degraded += batch.items.len();
+                }
+                jobs += 1;
+                halo_msgs += res.halo_msgs;
+                halo_entries += res.halo_entries;
+            }
+            Err(ShardError::NoLiveShards) => bail!("route: every shard is dead, aborting"),
+            Err(e) => {
+                // Typed degradation: the query's parameters land on a
+                // dead shard (or one died mid-job). The job fails; the
+                // cluster keeps serving everything else.
+                failed += batch.items.len();
+                eprintln!("route: job failed ({} queries): {e}", batch.items.len());
+            }
+        }
+        former.release(&batch.lanes);
+        if let Some((s, after)) = drill {
+            if !killed && served >= after {
+                router.drill_kill(s);
+                killed = true;
+                println!("route: drill-killed shard {s} after {served} served");
+            }
+        }
+    }
+    let live = router.live();
+    router.shutdown();
+
+    println!(
+        "served={served} failed={failed} degraded={degraded} jobs={jobs} live-shards={live}/{shards} \
+         halo: {halo_msgs} msgs / {halo_entries} entries",
+    );
+    println!(
+        "latency    : p50={} p90={} p99={} max={} (n={}, dropped={})",
+        fmt::secs(hist.percentile_secs(0.50)),
+        fmt::secs(hist.percentile_secs(0.90)),
+        fmt::secs(hist.percentile_secs(0.99)),
+        fmt::secs(hist.max() as f64 / 1e9),
+        hist.count(),
+        hist.dropped()
+    );
+    // One machine-greppable line for the CI smoke and degradation drill.
+    println!("route ok: {served} served, {failed} failed, clean shutdown");
     Ok(())
 }
 

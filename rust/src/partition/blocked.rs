@@ -14,27 +14,37 @@ use crate::partition::PartitionMap;
 /// Generic over [`GraphStore`], so overlays partition the same way the
 /// static CSR does (by *current* in-degrees, deltas included).
 pub fn partition<G: GraphStore>(g: &G, parts: usize) -> PartitionMap {
+    partition_range(g, 0..g.num_vertices() as VertexId, parts)
+}
+
+/// Partition the sub-range `range` of `g` into `parts` contiguous
+/// in-degree-balanced blocks — the same greedy sweep as [`partition`]
+/// restricted to a window. Sharded execution uses this to split one
+/// shard's owned range across its worker threads
+/// ([`crate::engine::EngineConfig`] `restrict`); `partition` is the
+/// `range = 0..n` special case.
+pub fn partition_range<G: GraphStore>(g: &G, range: std::ops::Range<VertexId>, parts: usize) -> PartitionMap {
     assert!(parts >= 1);
-    let n = g.num_vertices();
-    let total_work: u64 = g.num_edges() as u64 + n as u64;
+    assert!(range.start <= range.end, "partition range must be ascending");
+    let total_work: u64 = range.clone().map(|v| g.in_degree(v) as u64 + 1).sum();
     let mut bounds = Vec::with_capacity(parts + 1);
-    bounds.push(0u32);
+    bounds.push(range.start);
     let mut acc = 0u64;
     let mut next_cut = 1u64;
-    for v in 0..n as VertexId {
+    for v in range.clone() {
         acc += g.in_degree(v) as u64 + 1;
         // Cut when we pass the k-th ideal share; may emit several cuts at
-        // one vertex only if parts > n (guarded below).
+        // one vertex only if parts > range length (guarded below).
         while bounds.len() < parts && acc * parts as u64 >= next_cut * total_work {
             bounds.push(v + 1);
             next_cut += 1;
         }
     }
     while bounds.len() < parts {
-        bounds.push(n as VertexId); // more parts than vertices: empty tail parts
+        bounds.push(range.end); // more parts than vertices: empty tail parts
     }
-    bounds.push(n as VertexId);
-    PartitionMap::from_bounds(bounds)
+    bounds.push(range.end);
+    PartitionMap::from_offset_bounds(bounds)
 }
 
 /// Maximum over parts of (work share / ideal share) − 1; 0 is perfect.

@@ -21,6 +21,20 @@ pub fn partition_n(n: usize, parts: usize) -> PartitionMap {
     PartitionMap::from_bounds(bounds)
 }
 
+/// Split a sub-range into `parts` near-equal contiguous blocks (the
+/// restricted-run twin of [`partition_n`], used when the engine sweeps
+/// only one shard's owned range).
+pub fn partition_range(range: std::ops::Range<u32>, parts: usize) -> PartitionMap {
+    assert!(parts >= 1);
+    assert!(range.start <= range.end, "partition range must be ascending");
+    let len = (range.end - range.start) as u64;
+    let mut bounds = Vec::with_capacity(parts + 1);
+    for t in 0..=parts {
+        bounds.push(range.start + ((len * t as u64) / parts as u64) as u32);
+    }
+    PartitionMap::from_offset_bounds(bounds)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

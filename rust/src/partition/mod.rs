@@ -35,6 +35,18 @@ impl PartitionMap {
         Self { bounds }
     }
 
+    /// Build from bounds that may start anywhere — a partition of the
+    /// sub-range `bounds[0]..bounds[last]` rather than of `0..n`. Used
+    /// by restricted engine runs ([`crate::engine::EngineConfig`]
+    /// `restrict`), where one shard's worker gang sweeps only the
+    /// vertex range that shard owns. [`Self::owner`] stays valid for
+    /// vertices inside the covered range only.
+    pub fn from_offset_bounds(bounds: Vec<VertexId>) -> Self {
+        assert!(bounds.len() >= 2, "need at least one part");
+        assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "bounds must be sorted");
+        Self { bounds }
+    }
+
     /// Number of parts.
     #[inline]
     pub fn num_parts(&self) -> usize {

@@ -126,8 +126,11 @@ impl LoadReport {
     }
 }
 
-/// Draw the next query from the workload distribution.
-fn next_query(rng: &mut SplitMix64, n: usize, ppr_frac: f64) -> Query {
+/// Draw the next query from the workload distribution: PPR with
+/// probability `ppr_frac` (1–4 uniform teleports), SSSP otherwise,
+/// parameters uniform over the vertex space. Public because the sharded
+/// router (`daig route`) replays the same workload against a cluster.
+pub fn next_query(rng: &mut SplitMix64, n: usize, ppr_frac: f64) -> Query {
     if rng.chance(ppr_frac) {
         let k = 1 + rng.index(4);
         let teleports: Vec<VertexId> = (0..k).map(|_| rng.index(n) as VertexId).collect();

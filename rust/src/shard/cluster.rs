@@ -1,0 +1,125 @@
+//! In-process loopback cluster: the differential harness's way to run
+//! the full sharded protocol — wire encoding included — without
+//! processes or sockets.
+//!
+//! [`with_cluster`] spawns one thread per shard running the real
+//! [`worker::serve_loop`] over [`LoopbackTransport`] channel pairs,
+//! hands the caller a connected, handshaken [`Router`], and joins the
+//! shard threads on the way out. Delivery per link is FIFO exactly like
+//! a socket stream, and the router's round barrier makes cross-link
+//! interleaving invisible — so results here are the results a socket
+//! deployment produces, which is what lets the test suite bit-compare
+//! sharded runs against single-box runs.
+
+use super::router::{JobResult, Router};
+use super::transport::LoopbackTransport;
+use super::wire::JobClass;
+use super::{ShardError, WorkerCfg};
+use crate::engine::EngineConfig;
+use crate::graph::GraphStore;
+
+/// Run `f` against a live loopback cluster of `shards` workers, each
+/// executing owned sweeps under `ecfg`. The router is already
+/// handshaken; shard threads are shut down and joined before this
+/// returns. A panicking shard thread propagates its panic here.
+pub fn with_cluster<G, R>(
+    g: &G,
+    shards: usize,
+    ecfg: &EngineConfig,
+    f: impl FnOnce(&mut Router<'_, G, LoopbackTransport>) -> R,
+) -> R
+where
+    G: GraphStore + Sync,
+{
+    std::thread::scope(|scope| {
+        let mut router_ends = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for shard in 0..shards as u32 {
+            let (router_end, worker_end) = LoopbackTransport::pair();
+            router_ends.push(router_end);
+            let wcfg = WorkerCfg { shard, shards, ecfg: ecfg.clone(), halo_delta: None };
+            handles.push(scope.spawn(move || {
+                let mut t = worker_end;
+                super::worker::serve_loop(&mut t, g, &wcfg)
+            }));
+        }
+        let mut router = Router::new(g, router_ends);
+        router.handshake().expect("loopback handshake cannot fail");
+        let out = f(&mut router);
+        router.shutdown();
+        drop(router); // hang up so workers waiting on a dead link exit too
+        for h in handles {
+            // A worker whose link the router abandoned mid-job exits
+            // with a link error; that is not a harness failure.
+            let _ = h.join().expect("shard thread panicked");
+        }
+        out
+    })
+}
+
+/// One sharded job over a loopback cluster — the single-call form the
+/// differential suite and sweeps use.
+pub fn run_job_loopback<G: GraphStore + Sync>(
+    g: &G,
+    shards: usize,
+    ecfg: &EngineConfig,
+    class: &JobClass,
+) -> Result<JobResult, ShardError> {
+    with_cluster(g, shards, ecfg, |r| r.run_job(class))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::sssp;
+    use crate::engine::ExecutionMode;
+    use crate::graph::gap::GapGraph;
+
+    #[test]
+    fn loopback_sssp_matches_single_box() {
+        let g = GapGraph::Kron.generate_weighted(8, 8);
+        let ecfg = EngineConfig::new(2, ExecutionMode::Synchronous);
+        let source = sssp::default_source(&g);
+        let sharded = run_job_loopback(&g, 3, &ecfg, &JobClass::Sssp { sources: vec![source] }).unwrap();
+        let single = sssp::run_native(&g, source, &ecfg);
+        assert_eq!(sharded.values, single.dist, "sharded sync SSSP must be bit-exact");
+        assert!(sharded.converged);
+        assert!(!sharded.degraded);
+    }
+
+    #[test]
+    fn cluster_serves_multiple_jobs_and_heartbeats() {
+        let g = GapGraph::Kron.generate_weighted(8, 8);
+        let ecfg = EngineConfig::new(2, ExecutionMode::Delayed(64));
+        with_cluster(&g, 2, &ecfg, |r| {
+            assert_eq!(r.heartbeat(), 2);
+            let a = r.run_job(&JobClass::Cc).unwrap();
+            let b = r.run_job(&JobClass::Cc).unwrap();
+            assert_eq!(a.values, b.values, "same job twice is deterministic");
+            assert_eq!(r.heartbeat(), 2, "cluster still alive after jobs");
+        });
+    }
+
+    #[test]
+    fn bad_queries_are_typed_and_non_fatal() {
+        let g = GapGraph::Kron.generate(8, 8); // unweighted
+        let ecfg = EngineConfig::new(1, ExecutionMode::Asynchronous);
+        with_cluster(&g, 2, &ecfg, |r| {
+            assert!(matches!(
+                r.run_job(&JobClass::Sssp { sources: vec![0] }),
+                Err(ShardError::BadQuery(_))
+            ));
+            assert!(matches!(
+                r.run_job(&JobClass::Bfs { source: u32::MAX - 1 }),
+                Err(ShardError::BadQuery(_))
+            ));
+            assert!(matches!(
+                r.run_job(&JobClass::Sssp { sources: vec![0, 1, 2] }),
+                Err(ShardError::BadQuery(_)) // 3 is not a lane count
+            ));
+            // The cluster shrugged all of that off.
+            let ok = r.run_job(&JobClass::Bfs { source: 0 }).unwrap();
+            assert!(ok.converged);
+        });
+    }
+}

@@ -1,0 +1,233 @@
+//! Halo exchange: per-remote-shard delay buffers for boundary lane
+//! groups.
+//!
+//! A vertex is a **boundary vertex** of shard S for remote shard R when
+//! it is owned by S and has at least one out-neighbor owned by R — its
+//! value feeds R's next sweep. [`BoundaryMap`] classifies every owned
+//! vertex once per (graph, partition) into a bitmask of interested
+//! remote shards (one bit per shard, hence [`super::MAX_SHARDS`] = 32).
+//!
+//! [`HaloBuffer`] is the delay buffer of the paper lifted from cache
+//! lines to messages: updates destined for one remote shard accumulate
+//! locally and ship as a single [`Msg::Halo`] frame when δ elements
+//! fill ([`super::halo_delta`]) or the round ends (`flush`). δ = 0
+//! degenerates to one message per boundary update (the asynchronous
+//! extreme), δ ≥ owned range to one message per round (the synchronous
+//! extreme) — the same two poles the in-memory `DelayBuffer` spans,
+//! with message count standing in for coherence traffic.
+
+use super::wire::Msg;
+use super::{ShardError, Transport};
+use crate::engine::delay_buffer::round_delta;
+use crate::graph::{GraphStore, VertexId};
+use crate::partition::PartitionMap;
+
+/// Which remote shards each owned vertex feeds, as one bitmask per
+/// owned vertex (bit R set ⇔ some out-neighbor is owned by shard R).
+pub struct BoundaryMap {
+    start: VertexId,
+    masks: Vec<u32>,
+}
+
+impl BoundaryMap {
+    /// Classify shard `shard`'s owned range under `pm`. One pass over
+    /// the owned vertices' out-edges; out-edges must already be
+    /// materialized (`ensure_out_edges`).
+    pub fn build<G: GraphStore>(g: &G, pm: &PartitionMap, shard: u32) -> Self {
+        let range = pm.range(shard as usize);
+        let mut masks = vec![0u32; range.len()];
+        for v in range.clone() {
+            let mut m = 0u32;
+            for u in g.out_neighbors(v) {
+                let o = pm.owner(u);
+                if o != shard {
+                    m |= 1 << o;
+                }
+            }
+            masks[(v - range.start) as usize] = m;
+        }
+        Self { start: range.start, masks }
+    }
+
+    /// Remote-shard bitmask of owned vertex `v` (0 for interior
+    /// vertices).
+    #[inline]
+    pub fn mask(&self, v: VertexId) -> u32 {
+        self.masks[(v - self.start) as usize]
+    }
+
+    /// How many owned vertices feed at least one remote shard.
+    pub fn boundary_count(&self) -> usize {
+        self.masks.iter().filter(|&&m| m != 0).count()
+    }
+}
+
+/// Outgoing halo updates for one (src shard → dest shard) direction of
+/// one job: buffered locally, shipped as one `Msg::Halo` per δ-full or
+/// flush.
+pub struct HaloBuffer {
+    job: u64,
+    src: u32,
+    dest: u32,
+    lanes: u32,
+    /// Ship threshold in 32-bit elements; 0 ships on every push.
+    cap_elems: usize,
+    verts: Vec<VertexId>,
+    values: Vec<u32>,
+    msgs: u64,
+    entries: u64,
+}
+
+impl HaloBuffer {
+    /// Buffer for `src`→`dest` with shipping threshold δ =
+    /// [`round_delta`]`(delta)` elements (line-rounded exactly like the
+    /// in-memory delay buffer; 0 stays 0).
+    pub fn new(job: u64, src: u32, dest: u32, lanes: usize, delta: usize) -> Self {
+        Self {
+            job,
+            src,
+            dest,
+            lanes: lanes as u32,
+            cap_elems: round_delta(delta),
+            verts: Vec::new(),
+            values: Vec::new(),
+            msgs: 0,
+            entries: 0,
+        }
+    }
+
+    /// Buffer vertex `v`'s lane group; ship a message if δ elements are
+    /// now pending (or immediately when δ = 0).
+    pub fn push<T: Transport>(
+        &mut self,
+        t: &mut T,
+        round: u32,
+        v: VertexId,
+        group: &[u32],
+    ) -> Result<(), ShardError> {
+        debug_assert_eq!(group.len(), self.lanes as usize);
+        self.verts.push(v);
+        self.values.extend_from_slice(group);
+        if self.values.len() >= self.cap_elems.max(1) {
+            self.ship(t, round)?;
+        }
+        Ok(())
+    }
+
+    /// Ship whatever is pending (the end-of-round flush).
+    pub fn flush<T: Transport>(&mut self, t: &mut T, round: u32) -> Result<(), ShardError> {
+        if !self.verts.is_empty() {
+            self.ship(t, round)?;
+        }
+        Ok(())
+    }
+
+    fn ship<T: Transport>(&mut self, t: &mut T, round: u32) -> Result<(), ShardError> {
+        self.msgs += 1;
+        self.entries += self.verts.len() as u64;
+        let msg = Msg::Halo {
+            job: self.job,
+            dest: self.dest,
+            src: self.src,
+            round,
+            lanes: self.lanes,
+            verts: std::mem::take(&mut self.verts),
+            values: std::mem::take(&mut self.values),
+        };
+        t.send(&msg)
+    }
+
+    /// Halo messages shipped so far.
+    pub fn msgs(&self) -> u64 {
+        self.msgs
+    }
+
+    /// Halo entries (vertex lane groups) shipped so far.
+    pub fn entries(&self) -> u64 {
+        self.entries
+    }
+
+    /// Entries currently buffered, not yet shipped.
+    pub fn pending(&self) -> usize {
+        self.verts.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Csr, GraphBuilder};
+    use crate::partition::PartitionMap;
+    use crate::shard::transport::LoopbackTransport;
+
+    /// 0→1→2→3→4→5 path; cut between 2|3 makes vertex 2 the only
+    /// boundary vertex of shard 0, feeding shard 1.
+    fn path6() -> Csr {
+        GraphBuilder::new(6).edges(&[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]).build()
+    }
+
+    #[test]
+    fn boundary_classification() {
+        let g = path6();
+        g.ensure_out_edges();
+        let pm = PartitionMap::from_bounds(vec![0, 3, 6]);
+        let b0 = BoundaryMap::build(&g, &pm, 0);
+        assert_eq!(b0.mask(0), 0);
+        assert_eq!(b0.mask(1), 0);
+        assert_eq!(b0.mask(2), 1 << 1, "vertex 2 feeds shard 1");
+        assert_eq!(b0.boundary_count(), 1);
+        let b1 = BoundaryMap::build(&g, &pm, 1);
+        assert_eq!(b1.boundary_count(), 0, "shard 1's range has no out-edges leaving it");
+    }
+
+    #[test]
+    fn delta_zero_ships_every_push() {
+        let (mut tx, mut rx) = LoopbackTransport::pair();
+        let mut h = HaloBuffer::new(1, 0, 1, 2, 0);
+        h.push(&mut tx, 0, 5, &[10, 11]).unwrap();
+        h.push(&mut tx, 0, 6, &[12, 13]).unwrap();
+        assert_eq!(h.msgs(), 2);
+        assert_eq!(h.entries(), 2);
+        for (v, vals) in [(5u32, vec![10u32, 11]), (6, vec![12, 13])] {
+            match rx.recv(None).unwrap() {
+                Msg::Halo { dest, src, lanes, verts, values, .. } => {
+                    assert_eq!((dest, src, lanes), (1, 0, 2));
+                    assert_eq!(verts, vec![v]);
+                    assert_eq!(values, vals);
+                }
+                m => panic!("unexpected {m:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn delta_buffers_until_full_then_flushes_rest() {
+        let (mut tx, mut rx) = LoopbackTransport::pair();
+        // δ = 16 elements (one line) at 8 lanes ⇒ ships every 2 groups.
+        let mut h = HaloBuffer::new(1, 0, 1, 8, 16);
+        let group = [7u32; 8];
+        h.push(&mut tx, 3, 0, &group).unwrap();
+        assert_eq!(h.msgs(), 0, "below δ: buffered, not shipped");
+        assert_eq!(h.pending(), 1);
+        h.push(&mut tx, 3, 1, &group).unwrap();
+        assert_eq!(h.msgs(), 1, "δ filled: shipped");
+        h.push(&mut tx, 3, 2, &group).unwrap();
+        h.flush(&mut tx, 3).unwrap();
+        assert_eq!((h.msgs(), h.entries(), h.pending()), (2, 3, 0));
+        match rx.recv(None).unwrap() {
+            Msg::Halo { verts, values, round, .. } => {
+                assert_eq!(verts, vec![0, 1]);
+                assert_eq!(values.len(), 16);
+                assert_eq!(round, 3);
+            }
+            m => panic!("unexpected {m:?}"),
+        }
+        match rx.recv(None).unwrap() {
+            Msg::Halo { verts, .. } => assert_eq!(verts, vec![2]),
+            m => panic!("unexpected {m:?}"),
+        }
+        // Empty flush ships nothing.
+        h.flush(&mut tx, 4).unwrap();
+        assert_eq!(h.msgs(), 2);
+    }
+}

@@ -1,0 +1,179 @@
+//! Sharded multi-process serving: the delay-buffer discipline applied
+//! to cross-shard messages (DESIGN.md §13).
+//!
+//! One **router** process owns query admission and batching (reusing
+//! [`crate::serve::BatchFormer`]) and scatters each formed lane group
+//! to N **shard** processes as a [`JobClass`]. Every shard owns a
+//! contiguous vertex range of the same line-aligned, ownership-exact
+//! partition map ([`shard_partition`]) and executes each *global*
+//! round over its owned range only, through the engine's restricted
+//! sweep ([`crate::engine::EngineConfig`] `restrict`), keeping the rest
+//! of the value array as a mirror of the remote shards.
+//!
+//! Cross-shard value propagation goes through [`halo::HaloBuffer`] — a
+//! per-remote-shard delay-buffer variant that accumulates boundary
+//! lane groups locally and ships them as length-prefixed binary
+//! messages ([`wire`]) when δ lines fill or the round ends. The
+//! paper's contention argument (commit whole lines, rarely) becomes a
+//! message-amortization argument (commit whole messages, rarely):
+//! δ = 0 is one message per boundary update, δ ≥ range is one message
+//! per round.
+//!
+//! Two transports implement one [`transport::Transport`] trait: real
+//! TCP/Unix-domain sockets for `daig shard` / `daig route`, and a
+//! deterministic in-process loopback ([`cluster`]) the differential
+//! harness uses to bit-compare sharded SSSP/CC/BFS against single-box
+//! runs across the mode × schedule × stealing matrix.
+//!
+//! Failure model: the router heartbeats shards, marks one dead on a
+//! timeout or socket error, fails queries whose parameters live on a
+//! dead shard with the typed [`ShardError::DeadShard`], and keeps
+//! serving the rest with the dead range frozen at the program's
+//! initial values ([`router::JobResult::degraded`]). A restarted shard
+//! reconnects with bounded exponential backoff
+//! ([`transport::SocketTransport::connect_retry`]) and re-enters the
+//! cluster at its next `Hello` — jobs are stateless across queries, so
+//! rejoin needs no state transfer.
+
+pub mod cluster;
+pub mod halo;
+pub mod router;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use cluster::{run_job_loopback, with_cluster};
+pub use halo::{BoundaryMap, HaloBuffer};
+pub use router::{JobResult, Router};
+pub use transport::{LoopbackTransport, SocketListener, SocketTransport, Transport};
+pub use wire::{JobClass, Msg};
+pub use worker::{serve_loop, WorkerCfg};
+
+use crate::graph::{GraphStore, VertexId};
+use crate::partition::PartitionMap;
+
+/// Most shards a cluster supports: boundary-vertex classification keeps
+/// one bit per remote shard in a `u32` ([`BoundaryMap`]).
+pub const MAX_SHARDS: usize = 32;
+
+/// Typed sharding failures. Query-level errors (`DeadShard`,
+/// `BadQuery`, `NoLiveShards`) fail one query while the cluster keeps
+/// serving; link-level errors (`Timeout`, `Disconnected`, `Io`,
+/// `Protocol`) additionally mark the offending shard dead.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ShardError {
+    /// The query touches vertices owned by a shard that is marked dead.
+    DeadShard {
+        /// The dead owner.
+        shard: u32,
+    },
+    /// Every shard is dead — nothing can be served.
+    NoLiveShards,
+    /// A peer did not answer within the configured timeout.
+    Timeout,
+    /// The peer's connection closed (process exit, kill, network drop).
+    Disconnected,
+    /// A frame arrived that does not decode to a valid message.
+    Protocol(String),
+    /// Socket-level failure (bind, connect, read, write).
+    Io(String),
+    /// The query itself is invalid for this graph (out-of-range vertex,
+    /// weighted algorithm on an unweighted graph, too many lanes).
+    BadQuery(String),
+}
+
+impl std::fmt::Display for ShardError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShardError::DeadShard { shard } => write!(f, "shard {shard} is dead"),
+            ShardError::NoLiveShards => write!(f, "no live shards"),
+            ShardError::Timeout => write!(f, "peer timed out"),
+            ShardError::Disconnected => write!(f, "peer disconnected"),
+            ShardError::Protocol(s) => write!(f, "protocol error: {s}"),
+            ShardError::Io(s) => write!(f, "io error: {s}"),
+            ShardError::BadQuery(s) => write!(f, "bad query: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for ShardError {}
+
+/// The cluster's vertex→shard ownership map: the paper's contiguous
+/// in-degree-balanced blocks with interior bounds rounded to whole
+/// value lines — so no cache line of the value array spans two shards
+/// for any lane count, and every halo entry's lane group has exactly
+/// one owner. Router and shards compute this independently from the
+/// same deterministically generated graph and must agree; `Hello`
+/// carries the vertex count as a cheap cross-check.
+pub fn shard_partition<G: GraphStore>(g: &G, shards: usize) -> PartitionMap {
+    assert!(
+        (1..=MAX_SHARDS).contains(&shards),
+        "shard count {shards} out of range (1..={MAX_SHARDS}: boundary masks are one bit per shard)"
+    );
+    crate::partition::numa::line_align(crate::partition::blocked::partition(g, shards), g.num_vertices())
+}
+
+/// Halo-shipping δ for a shard, in 32-bit elements, derived from the
+/// execution mode exactly like the engine's
+/// [`crate::engine::EngineConfig::effective_delta`]: synchronous (and
+/// adaptive) ship only at round end, asynchronous ships every boundary
+/// group immediately, `Delayed(δ)` ships every δ buffered elements.
+pub fn halo_delta(mode: crate::engine::ExecutionMode, owned_elems: usize) -> usize {
+    use crate::engine::ExecutionMode;
+    match mode {
+        ExecutionMode::Synchronous | ExecutionMode::Adaptive => owned_elems,
+        ExecutionMode::Asynchronous => 0,
+        ExecutionMode::Delayed(d) => d.min(owned_elems),
+    }
+}
+
+/// Owned element range of `shard` under `pm` for `lanes`-wide jobs
+/// (start/end scaled into the vertex-major lane-group layout).
+pub fn owned_elems(pm: &PartitionMap, shard: u32, lanes: usize) -> std::ops::Range<usize> {
+    let r = pm.range(shard as usize);
+    r.start as usize * lanes..r.end as usize * lanes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::gap::GapGraph;
+    use crate::VALUES_PER_LINE;
+
+    #[test]
+    fn shard_partition_is_line_aligned_and_exact() {
+        let g = GapGraph::Kron.generate(10, 8);
+        for shards in [1, 2, 3, 8] {
+            let pm = shard_partition(&g, shards);
+            assert_eq!(pm.num_parts(), shards);
+            assert_eq!(pm.num_vertices(), g.num_vertices());
+            let b = pm.bounds();
+            assert_eq!(b[0], 0);
+            for &cut in &b[1..shards] {
+                assert_eq!(cut as usize % VALUES_PER_LINE, 0, "interior cut {cut} not line-aligned");
+            }
+            // Ownership-exact: every vertex has exactly one owner.
+            for v in [0u32, 1, (g.num_vertices() / 2) as u32, g.num_vertices() as u32 - 1] {
+                let o = pm.owner(v) as usize;
+                assert!(pm.range(o).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn shard_count_cap() {
+        let g = GapGraph::Kron.generate(8, 4);
+        shard_partition(&g, MAX_SHARDS + 1);
+    }
+
+    #[test]
+    fn halo_delta_mirrors_effective_delta() {
+        use crate::engine::ExecutionMode as M;
+        assert_eq!(halo_delta(M::Synchronous, 500), 500);
+        assert_eq!(halo_delta(M::Adaptive, 500), 500);
+        assert_eq!(halo_delta(M::Asynchronous, 500), 0);
+        assert_eq!(halo_delta(M::Delayed(64), 500), 64);
+        assert_eq!(halo_delta(M::Delayed(9999), 500), 500);
+    }
+}

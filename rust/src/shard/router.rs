@@ -1,0 +1,431 @@
+//! The router process: query admission, the per-round barrier, halo
+//! relay, and graceful degradation.
+//!
+//! The cluster is a star — every shard connects only to the router, so
+//! a halo from shard A to shard B is one relayed frame and there are no
+//! inter-shard wait cycles to deadlock. A job runs as a sequence of
+//! global rounds: the router collects one [`Msg::RoundDone`] per live
+//! shard (relaying [`Msg::Halo`] frames to their `dest` as they
+//! appear), sums the residuals, and either declares convergence
+//! ([`wire::JobClass::job_converged`]) or broadcasts [`Msg::Continue`].
+//! Because each shard link is FIFO and every halo of round r is relayed
+//! before any `Continue`, shards observe a consistent round boundary —
+//! on sockets and on the loopback alike.
+//!
+//! Failure handling: any link-level error (timeout, disconnect, bad
+//! frame) marks that shard **dead**. A job in flight when a shard dies
+//! is aborted (survivors get [`Msg::Finish`], the caller gets
+//! [`ShardError::DeadShard`]); subsequent queries are admitted only if
+//! their parameter vertices are owned by live shards, and their results
+//! are **degraded**: dead ranges hold the program's initial values,
+//! live ranges keep serving ([`JobResult::degraded`]).
+
+use std::time::Duration;
+
+use super::wire::{JobClass, Msg, WIRE_VERSION};
+use super::{ShardError, Transport};
+use crate::algorithms::{bfs, cc, pagerank, sssp};
+use crate::engine::lanes;
+use crate::engine::program::VertexProgram;
+use crate::graph::{GraphStore, VertexId};
+use crate::partition::PartitionMap;
+
+/// One completed sharded job, stitched from per-shard `Values` frames.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Final values, `n × lanes` vertex-major (same layout as
+    /// [`crate::engine::RunResult::values`]). Ranges owned by dead
+    /// shards hold the program's initial values.
+    pub values: Vec<u32>,
+    /// Value lanes per vertex.
+    pub lanes: usize,
+    /// Global rounds executed.
+    pub rounds: u32,
+    /// Whether the job met its convergence criterion.
+    pub converged: bool,
+    /// True when at least one shard was dead while the job ran — the
+    /// values in dead ranges are init values, not answers.
+    pub degraded: bool,
+    /// The dead shards at serve time.
+    pub dead: Vec<u32>,
+    /// Total halo messages shipped by live shards over the job.
+    pub halo_msgs: u64,
+    /// Total halo entries (vertex lane groups) shipped.
+    pub halo_entries: u64,
+}
+
+impl JobResult {
+    /// De-interleave lane `l` (mirrors
+    /// [`crate::engine::RunResult::lane_values`]).
+    pub fn lane_values(&self, l: usize) -> Vec<u32> {
+        assert!(l < self.lanes);
+        self.values.iter().skip(l).step_by(self.lanes).copied().collect()
+    }
+}
+
+struct ShardLink<T> {
+    t: T,
+    alive: bool,
+}
+
+/// Router over `N` shard links (socket or loopback).
+pub struct Router<'g, G, T> {
+    g: &'g G,
+    pm: PartitionMap,
+    links: Vec<ShardLink<T>>,
+    /// Per-receive timeout; a shard that stays silent longer is dead.
+    pub timeout: Duration,
+    /// Safety valve on global rounds per job.
+    pub max_rounds: usize,
+    next_job: u64,
+    nonce: u64,
+}
+
+impl<'g, G: GraphStore, T: Transport> Router<'g, G, T> {
+    /// Router over `transports` (one per shard, any order — the
+    /// handshake sorts them by the shard id each `Hello` declares).
+    pub fn new(g: &'g G, transports: Vec<T>) -> Self {
+        let shards = transports.len();
+        let pm = super::shard_partition(g, shards);
+        Self {
+            g,
+            pm,
+            links: transports.into_iter().map(|t| ShardLink { t, alive: true }).collect(),
+            timeout: Duration::from_secs(30),
+            max_rounds: 10_000,
+            next_job: 0,
+            nonce: 0,
+        }
+    }
+
+    /// Collect every shard's `Hello`, verify protocol version and graph
+    /// size, and order the links by shard id. Must be called once,
+    /// before the first job.
+    pub fn handshake(&mut self) -> Result<(), ShardError> {
+        let shards = self.links.len();
+        let mut by_id: Vec<Option<ShardLink<T>>> = (0..shards).map(|_| None).collect();
+        for mut link in self.links.drain(..) {
+            let msg = link.t.recv(Some(self.timeout))?;
+            let Msg::Hello { shard, n, version } = msg else {
+                return Err(ShardError::Protocol(format!("expected Hello, got {msg:?}")));
+            };
+            if version != WIRE_VERSION {
+                return Err(ShardError::Protocol(format!("wire version {version} != {WIRE_VERSION}")));
+            }
+            if n as usize != self.g.num_vertices() {
+                return Err(ShardError::Protocol(format!(
+                    "shard {shard} built a {n}-vertex graph, router has {} — generation parameters differ",
+                    self.g.num_vertices()
+                )));
+            }
+            let slot = by_id
+                .get_mut(shard as usize)
+                .ok_or_else(|| ShardError::Protocol(format!("shard id {shard} out of range 0..{shards}")))?;
+            if slot.replace(link).is_some() {
+                return Err(ShardError::Protocol(format!("duplicate shard id {shard}")));
+            }
+        }
+        self.links = by_id.into_iter().map(Option::unwrap).collect();
+        Ok(())
+    }
+
+    /// Live shard count.
+    pub fn live(&self) -> usize {
+        self.links.iter().filter(|l| l.alive).count()
+    }
+
+    /// Dead shard ids, ascending.
+    pub fn dead(&self) -> Vec<u32> {
+        (0..self.links.len() as u32).filter(|&s| !self.links[s as usize].alive).collect()
+    }
+
+    /// Whether shard `s` is currently considered alive.
+    pub fn is_alive(&self, s: u32) -> bool {
+        self.links.get(s as usize).is_some_and(|l| l.alive)
+    }
+
+    /// Ping every live shard and mark the silent ones dead. Returns the
+    /// live count afterwards. Call between jobs (the links are quiet).
+    pub fn heartbeat(&mut self) -> usize {
+        self.nonce += 1;
+        let nonce = self.nonce;
+        for i in 0..self.links.len() {
+            if !self.links[i].alive {
+                continue;
+            }
+            let ok = self.links[i].t.send(&Msg::Ping(nonce)).is_ok()
+                && matches!(self.links[i].t.recv(Some(self.timeout)), Ok(Msg::Pong(x)) if x == nonce);
+            if !ok {
+                self.links[i].alive = false;
+            }
+        }
+        self.live()
+    }
+
+    /// Failure drill: order shard `s` to exit and mark it dead, so the
+    /// degradation path can be exercised deterministically (CI does
+    /// this instead of racing a `kill` against the round loop).
+    pub fn drill_kill(&mut self, s: u32) {
+        if self.is_alive(s) {
+            let _ = self.links[s as usize].t.send(&Msg::Shutdown);
+            self.links[s as usize].alive = false;
+        }
+    }
+
+    /// Order every live shard to exit cleanly.
+    pub fn shutdown(&mut self) {
+        for link in self.links.iter_mut().filter(|l| l.alive) {
+            let _ = link.t.send(&Msg::Shutdown);
+        }
+    }
+
+    /// Run one job to convergence (or `max_rounds`) across the live
+    /// shards. Query-level failures ([`ShardError::BadQuery`],
+    /// [`ShardError::DeadShard`], [`ShardError::NoLiveShards`]) leave
+    /// the cluster serving; a shard dying mid-job aborts the job with
+    /// [`ShardError::DeadShard`] and the survivors move on.
+    pub fn run_job(&mut self, class: &JobClass) -> Result<JobResult, ShardError> {
+        self.validate(class)?;
+        if self.live() == 0 {
+            return Err(ShardError::NoLiveShards);
+        }
+        // Admission: every parameter vertex must have a live owner.
+        for v in class.param_vertices() {
+            let owner = self.pm.owner(v);
+            if !self.is_alive(owner) {
+                return Err(ShardError::DeadShard { shard: owner });
+            }
+        }
+
+        let job = self.next_job;
+        self.next_job += 1;
+        let lanes = class.lanes();
+
+        for i in 0..self.links.len() {
+            if self.links[i].alive && self.links[i].t.send(&Msg::Start { job, class: class.clone() }).is_err() {
+                self.links[i].alive = false;
+                // The dead shard never saw the job; only its ownership
+                // matters, and that was checked above — re-check.
+                for v in class.param_vertices() {
+                    if self.pm.owner(v) == i as u32 {
+                        return Err(ShardError::DeadShard { shard: i as u32 });
+                    }
+                }
+            }
+        }
+        if self.live() == 0 {
+            return Err(ShardError::NoLiveShards);
+        }
+
+        // Round barrier: one RoundDone per live shard, halos relayed as
+        // they appear, then converge-or-Continue.
+        let mut rounds = 0u32;
+        let mut converged = false;
+        let (mut halo_msgs, mut halo_entries) = (0u64, 0u64);
+        for round in 0..self.max_rounds as u32 {
+            let mut total = 0.0f64;
+            let mut lane_sums = vec![0.0f64; lanes];
+            halo_msgs = 0;
+            halo_entries = 0;
+            for i in 0..self.links.len() {
+                if !self.links[i].alive {
+                    continue;
+                }
+                match self.collect_round_done(i, job, round) {
+                    Ok((delta, lane_deltas, msgs, entries)) => {
+                        total += delta;
+                        if lane_deltas.len() == lanes {
+                            for (s, d) in lane_sums.iter_mut().zip(&lane_deltas) {
+                                *s += d;
+                            }
+                        } else {
+                            // Single-lane shards report no lane split.
+                            lane_sums[0] += delta;
+                        }
+                        halo_msgs += msgs;
+                        halo_entries += entries;
+                    }
+                    Err(e) => {
+                        self.links[i].alive = false;
+                        self.abort_job(job);
+                        return Err(match e {
+                            ShardError::Timeout | ShardError::Disconnected | ShardError::Io(_) | ShardError::Protocol(_) => {
+                                ShardError::DeadShard { shard: i as u32 }
+                            }
+                            other => other,
+                        });
+                    }
+                }
+            }
+            rounds = round + 1;
+            if class.job_converged(total, &lane_sums) {
+                converged = true;
+                break;
+            }
+            if rounds as usize >= self.max_rounds {
+                break;
+            }
+            for i in 0..self.links.len() {
+                if self.links[i].alive && self.links[i].t.send(&Msg::Continue { job, round: round + 1 }).is_err() {
+                    self.links[i].alive = false;
+                    self.abort_job(job);
+                    return Err(ShardError::DeadShard { shard: i as u32 });
+                }
+            }
+        }
+
+        // Collect the final values; dead ranges stay at init.
+        let mut values = init_values(self.g, class);
+        for i in 0..self.links.len() {
+            if !self.links[i].alive {
+                continue;
+            }
+            if self.links[i].t.send(&Msg::Finish { job, converged, rounds }).is_err() {
+                self.links[i].alive = false;
+                continue;
+            }
+            match self.collect_values(i, job) {
+                Ok((start, vals)) => {
+                    let base = start as usize * lanes;
+                    values[base..base + vals.len()].copy_from_slice(&vals);
+                }
+                Err(_) => self.links[i].alive = false,
+            }
+        }
+        if self.live() == 0 {
+            return Err(ShardError::NoLiveShards);
+        }
+
+        let dead = self.dead();
+        Ok(JobResult {
+            values,
+            lanes,
+            rounds,
+            converged,
+            degraded: !dead.is_empty(),
+            dead,
+            halo_msgs,
+            halo_entries,
+        })
+    }
+
+    /// Receive from link `i` until its `RoundDone`, relaying halos.
+    #[allow(clippy::type_complexity)]
+    fn collect_round_done(
+        &mut self,
+        i: usize,
+        job: u64,
+        round: u32,
+    ) -> Result<(f64, Vec<f64>, u64, u64), ShardError> {
+        loop {
+            match self.links[i].t.recv(Some(self.timeout))? {
+                msg @ Msg::Halo { .. } => {
+                    let dest = match &msg {
+                        Msg::Halo { dest, .. } => *dest as usize,
+                        _ => unreachable!(),
+                    };
+                    // Updates for a dead shard fall on the floor; its
+                    // range is frozen anyway.
+                    if self.links[dest].alive && self.links[dest].t.send(&msg).is_err() {
+                        self.links[dest].alive = false;
+                    }
+                }
+                Msg::RoundDone { job: j, round: r, delta, lane_deltas, halo_msgs, halo_entries, .. } => {
+                    if j != job || r != round {
+                        return Err(ShardError::Protocol(format!(
+                            "RoundDone for job {j} round {r}, expected job {job} round {round}"
+                        )));
+                    }
+                    return Ok((delta, lane_deltas, halo_msgs, halo_entries));
+                }
+                Msg::Pong(_) => {}
+                m => return Err(ShardError::Protocol(format!("unexpected {m:?} awaiting RoundDone"))),
+            }
+        }
+    }
+
+    /// Receive from link `i` until its `Values` frame.
+    fn collect_values(&mut self, i: usize, job: u64) -> Result<(VertexId, Vec<u32>), ShardError> {
+        loop {
+            match self.links[i].t.recv(Some(self.timeout))? {
+                Msg::Values { job: j, start, values, .. } if j == job => return Ok((start, values)),
+                // Stragglers from the final round are harmless here:
+                // the job is over, their effect is already in `values`.
+                Msg::Halo { .. } | Msg::RoundDone { .. } | Msg::Pong(_) => {}
+                m => return Err(ShardError::Protocol(format!("unexpected {m:?} awaiting Values"))),
+            }
+        }
+    }
+
+    /// A shard died mid-job: wind the survivors down (they get
+    /// `Finish`, answer `Values`, and return to their serve loop ready
+    /// for the next job).
+    fn abort_job(&mut self, job: u64) {
+        for i in 0..self.links.len() {
+            if !self.links[i].alive {
+                continue;
+            }
+            if self.links[i].t.send(&Msg::Finish { job, converged: false, rounds: 0 }).is_err() {
+                self.links[i].alive = false;
+                continue;
+            }
+            if self.collect_values(i, job).is_err() {
+                self.links[i].alive = false;
+            }
+        }
+    }
+
+    /// Query-level validation, before anything is sent.
+    fn validate(&self, class: &JobClass) -> Result<(), ShardError> {
+        let n = self.g.num_vertices();
+        let bad = |s: String| Err(ShardError::BadQuery(s));
+        if !lanes::valid_lane_count(class.lanes()) {
+            return bad(format!("{} lanes is not a legal lane count", class.lanes()));
+        }
+        if class.weighted() && !self.g.is_weighted() {
+            return bad("SSSP requires a weighted graph".into());
+        }
+        if let JobClass::Ppr { teleports, .. } = class {
+            if teleports.iter().any(|t| t.is_empty()) {
+                return bad("empty PPR teleport set".into());
+            }
+        }
+        for v in class.param_vertices() {
+            if v as usize >= n {
+                return bad(format!("vertex {v} out of range for {n} vertices"));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The program's initial values for every vertex and lane — what a dead
+/// shard's range reports in a degraded result. Must construct the same
+/// programs the worker dispatches to, so frozen ranges are bitwise the
+/// worker's round-0 state.
+fn init_values<G: GraphStore>(g: &G, class: &JobClass) -> Vec<u32> {
+    fn fill<G: GraphStore, P: VertexProgram>(g: &G, p: &P) -> Vec<u32> {
+        let (n, k) = (g.num_vertices(), p.lanes());
+        let mut out = Vec::with_capacity(n * k);
+        for v in 0..n as VertexId {
+            for l in 0..k {
+                out.push(p.init_lane(v, l));
+            }
+        }
+        out
+    }
+    match class {
+        JobClass::Sssp { sources } if sources.len() == 1 => fill(g, &sssp::Sssp::new(g, sources[0])),
+        JobClass::Sssp { sources } => fill(g, &sssp::MultiSssp::new(g, sources)),
+        JobClass::Ppr { teleports, damping, epsilon } => {
+            let pc = pagerank::PrConfig { damping: *damping, epsilon: *epsilon };
+            fill(g, &pagerank::MultiPageRank::new(g, &pc, teleports))
+        }
+        JobClass::PageRank { damping, epsilon } => {
+            let pc = pagerank::PrConfig { damping: *damping, epsilon: *epsilon };
+            fill(g, &pagerank::PageRank::new(g, &pc))
+        }
+        JobClass::Cc => fill(g, &cc::Components::new(g)),
+        JobClass::Bfs { source } => fill(g, &bfs::Bfs::new(g, *source)),
+    }
+}

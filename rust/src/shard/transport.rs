@@ -1,0 +1,325 @@
+//! Message transports: real sockets and a deterministic in-process
+//! loopback behind one trait.
+//!
+//! Both implementations move the *same* [`wire`] frames — the loopback
+//! encodes and decodes through the real wire format rather than
+//! passing `Msg` values around, so the differential harness exercises
+//! every byte of the protocol the sockets do. That is the loopback
+//! determinism argument of DESIGN.md §13: channel delivery is FIFO per
+//! link exactly like a socket stream, and the router's round barrier
+//! (collect every `RoundDone` before any `Continue`) makes cross-link
+//! interleaving invisible to the computation.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::time::Duration;
+
+use super::wire::{self, Msg};
+use super::ShardError;
+
+/// One end of a bidirectional, FIFO, framed message link.
+pub trait Transport: Send {
+    /// Ship one message. Failure means the link is unusable.
+    fn send(&mut self, msg: &Msg) -> Result<(), ShardError>;
+
+    /// Receive the next message. `None` blocks until a message or a
+    /// link failure; `Some(d)` additionally returns
+    /// [`ShardError::Timeout`] if nothing arrives within `d`.
+    fn recv(&mut self, timeout: Option<Duration>) -> Result<Msg, ShardError>;
+}
+
+// ---- loopback ----
+
+/// In-process transport over byte channels; [`LoopbackTransport::pair`]
+/// yields the two connected ends.
+pub struct LoopbackTransport {
+    tx: Sender<Vec<u8>>,
+    rx: Receiver<Vec<u8>>,
+}
+
+impl LoopbackTransport {
+    /// Two connected ends: what one sends, the other receives, in order.
+    pub fn pair() -> (Self, Self) {
+        let (atx, brx) = mpsc::channel();
+        let (btx, arx) = mpsc::channel();
+        (Self { tx: atx, rx: arx }, Self { tx: btx, rx: brx })
+    }
+}
+
+impl Transport for LoopbackTransport {
+    fn send(&mut self, msg: &Msg) -> Result<(), ShardError> {
+        // Encode through the real wire format so loopback runs cover
+        // the same serialization path as socket runs.
+        self.tx.send(wire::encode(msg)).map_err(|_| ShardError::Disconnected)
+    }
+
+    fn recv(&mut self, timeout: Option<Duration>) -> Result<Msg, ShardError> {
+        let payload = match timeout {
+            None => self.rx.recv().map_err(|_| ShardError::Disconnected)?,
+            Some(d) => self.rx.recv_timeout(d).map_err(|e| match e {
+                RecvTimeoutError::Timeout => ShardError::Timeout,
+                RecvTimeoutError::Disconnected => ShardError::Disconnected,
+            })?,
+        };
+        wire::decode(&payload)
+    }
+}
+
+// ---- sockets ----
+
+enum Sock {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Sock {
+    fn set_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.set_read_timeout(d),
+            #[cfg(unix)]
+            Sock::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+}
+
+impl std::io::Read for Sock {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Sock::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Sock::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl std::io::Write for Sock {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Sock::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Sock::Unix(s) => s.write(buf),
+        }
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Sock::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Sock::Unix(s) => s.flush(),
+        }
+    }
+}
+
+/// An address containing `:` is `host:port` TCP; anything else is a
+/// Unix-domain socket path.
+fn is_tcp(addr: &str) -> bool {
+    addr.contains(':')
+}
+
+/// Framed message link over TCP or (on Unix) a Unix-domain socket.
+pub struct SocketTransport {
+    sock: Sock,
+    timeout: Option<Duration>,
+}
+
+impl SocketTransport {
+    /// Connect once to `addr` (`host:port` → TCP, otherwise a
+    /// Unix-domain path).
+    pub fn connect(addr: &str) -> Result<Self, ShardError> {
+        let io = |e: std::io::Error| ShardError::Io(format!("connect {addr}: {e}"));
+        let sock = if is_tcp(addr) {
+            Sock::Tcp(TcpStream::connect(addr).map_err(io)?)
+        } else {
+            #[cfg(unix)]
+            {
+                Sock::Unix(UnixStream::connect(addr).map_err(io)?)
+            }
+            #[cfg(not(unix))]
+            {
+                return Err(ShardError::Io(format!("unix-domain path {addr} unsupported on this platform")));
+            }
+        };
+        if let Sock::Tcp(s) = &sock {
+            let _ = s.set_nodelay(true); // frames are small; don't batch them
+        }
+        Ok(Self { sock, timeout: None })
+    }
+
+    /// Connect with bounded exponential backoff: `attempts` tries,
+    /// sleeping `base`, 2·`base`, 4·`base`, … (capped at 2 s) between
+    /// them. This is both the shard's initial connect (the router may
+    /// not be up yet) and its rejoin path after a restart.
+    pub fn connect_retry(addr: &str, attempts: u32, base: Duration) -> Result<Self, ShardError> {
+        assert!(attempts >= 1);
+        let mut wait = base;
+        let mut last = ShardError::Io("unreachable".into());
+        for attempt in 0..attempts {
+            match Self::connect(addr) {
+                Ok(t) => return Ok(t),
+                Err(e) => last = e,
+            }
+            if attempt + 1 < attempts {
+                std::thread::sleep(wait);
+                wait = (wait * 2).min(Duration::from_secs(2));
+            }
+        }
+        Err(last)
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, msg: &Msg) -> Result<(), ShardError> {
+        wire::write_msg(&mut self.sock, msg)
+    }
+
+    fn recv(&mut self, timeout: Option<Duration>) -> Result<Msg, ShardError> {
+        if self.timeout != timeout {
+            self.sock
+                .set_read_timeout(timeout)
+                .map_err(|e| ShardError::Io(e.to_string()))?;
+            self.timeout = timeout;
+        }
+        wire::read_msg(&mut self.sock)
+    }
+}
+
+/// Accepts shard connections for the router side of `daig route`.
+pub enum SocketListener {
+    /// TCP listener (`host:port` addresses).
+    Tcp(TcpListener),
+    /// Unix-domain listener (path addresses).
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl SocketListener {
+    /// Bind `addr` (`host:port` → TCP, otherwise a Unix-domain path; a
+    /// stale path from a previous run is removed first).
+    pub fn bind(addr: &str) -> Result<Self, ShardError> {
+        let io = |e: std::io::Error| ShardError::Io(format!("bind {addr}: {e}"));
+        if is_tcp(addr) {
+            Ok(SocketListener::Tcp(TcpListener::bind(addr).map_err(io)?))
+        } else {
+            #[cfg(unix)]
+            {
+                if std::path::Path::new(addr).exists() {
+                    let _ = std::fs::remove_file(addr);
+                }
+                Ok(SocketListener::Unix(UnixListener::bind(addr).map_err(io)?))
+            }
+            #[cfg(not(unix))]
+            {
+                Err(ShardError::Io(format!("unix-domain path {addr} unsupported on this platform")))
+            }
+        }
+    }
+
+    /// Block until the next shard connects.
+    pub fn accept(&self) -> Result<SocketTransport, ShardError> {
+        let io = |e: std::io::Error| ShardError::Io(format!("accept: {e}"));
+        let sock = match self {
+            SocketListener::Tcp(l) => {
+                let (s, _) = l.accept().map_err(io)?;
+                let _ = s.set_nodelay(true);
+                Sock::Tcp(s)
+            }
+            #[cfg(unix)]
+            SocketListener::Unix(l) => {
+                let (s, _) = l.accept().map_err(io)?;
+                Sock::Unix(s)
+            }
+        };
+        Ok(SocketTransport { sock, timeout: None })
+    }
+}
+
+/// Drain any messages already queued on a loopback link without
+/// blocking — the router uses this to scavenge straggler messages after
+/// marking a shard dead.
+pub fn drain_pending(t: &mut LoopbackTransport) -> usize {
+    let mut n = 0;
+    loop {
+        match t.rx.try_recv() {
+            Ok(_) => n += 1,
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => return n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_is_fifo_and_typed() {
+        let (mut a, mut b) = LoopbackTransport::pair();
+        a.send(&Msg::Ping(1)).unwrap();
+        a.send(&Msg::Ping(2)).unwrap();
+        assert_eq!(b.recv(None).unwrap(), Msg::Ping(1));
+        assert_eq!(b.recv(None).unwrap(), Msg::Ping(2));
+        b.send(&Msg::Pong(2)).unwrap();
+        assert_eq!(a.recv(Some(Duration::from_secs(1))).unwrap(), Msg::Pong(2));
+    }
+
+    #[test]
+    fn loopback_timeout_and_disconnect() {
+        let (mut a, b) = LoopbackTransport::pair();
+        assert_eq!(a.recv(Some(Duration::from_millis(10))), Err(ShardError::Timeout));
+        drop(b);
+        assert_eq!(a.recv(Some(Duration::from_millis(10))), Err(ShardError::Disconnected));
+        assert_eq!(a.send(&Msg::Shutdown), Err(ShardError::Disconnected));
+    }
+
+    #[test]
+    fn tcp_roundtrip_and_peer_death() {
+        let listener = SocketListener::bind("127.0.0.1:0").unwrap();
+        let addr = match &listener {
+            SocketListener::Tcp(l) => l.local_addr().unwrap().to_string(),
+            #[cfg(unix)]
+            _ => unreachable!(),
+        };
+        let client = std::thread::spawn(move || {
+            let mut t = SocketTransport::connect_retry(&addr, 5, Duration::from_millis(10)).unwrap();
+            t.send(&Msg::Hello { shard: 0, n: 64, version: wire::WIRE_VERSION }).unwrap();
+            assert_eq!(t.recv(Some(Duration::from_secs(5))).unwrap(), Msg::Shutdown);
+            // Drop: the server sees Disconnected.
+        });
+        let mut srv = listener.accept().unwrap();
+        assert_eq!(
+            srv.recv(Some(Duration::from_secs(5))).unwrap(),
+            Msg::Hello { shard: 0, n: 64, version: wire::WIRE_VERSION }
+        );
+        srv.send(&Msg::Shutdown).unwrap();
+        client.join().unwrap();
+        assert_eq!(srv.recv(Some(Duration::from_secs(5))), Err(ShardError::Disconnected));
+    }
+
+    #[test]
+    fn connect_retry_gives_up_with_last_error() {
+        // A port that refuses connections immediately.
+        let err = SocketTransport::connect_retry("127.0.0.1:1", 2, Duration::from_millis(1));
+        assert!(matches!(err, Err(ShardError::Io(_))));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn unix_domain_roundtrip() {
+        let path = std::env::temp_dir().join(format!("daig-transport-test-{}.sock", std::process::id()));
+        let path = path.to_str().unwrap().to_string();
+        let listener = SocketListener::bind(&path).unwrap();
+        let addr = path.clone();
+        let client = std::thread::spawn(move || {
+            let mut t = SocketTransport::connect_retry(&addr, 5, Duration::from_millis(10)).unwrap();
+            t.send(&Msg::Ping(7)).unwrap();
+            assert_eq!(t.recv(Some(Duration::from_secs(5))).unwrap(), Msg::Pong(7));
+        });
+        let mut srv = listener.accept().unwrap();
+        assert_eq!(srv.recv(Some(Duration::from_secs(5))).unwrap(), Msg::Ping(7));
+        srv.send(&Msg::Pong(7)).unwrap();
+        client.join().unwrap();
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,649 @@
+//! Length-prefixed binary wire format for router↔shard links.
+//!
+//! Framing (std-only, little-endian throughout):
+//!
+//! ```text
+//! ┌──────────────┬──────────────────────────────────────────────┐
+//! │ len: u32 LE  │ payload (len bytes)                          │
+//! └──────────────┴──────────────────────────────────────────────┘
+//! payload = tag: u8, then the variant's fields in declaration order;
+//! Vec<T> = count: u32 LE, then count elements.
+//! ```
+//!
+//! Decoding follows the same discipline as `graph::io`: every length
+//! that will size an allocation is validated against the bytes
+//! actually present *before* allocating, a frame longer than
+//! [`MAX_FRAME`] is rejected at the header, and trailing bytes after a
+//! complete message are a hard [`ShardError::Protocol`] error — a
+//! truncated or hostile peer produces a typed error, never a panic or
+//! an over-allocation.
+
+use std::io::{Read, Write};
+
+use super::ShardError;
+use crate::graph::VertexId;
+
+/// Protocol revision carried in `Hello`; bump on any incompatible
+/// change to this file.
+pub const WIRE_VERSION: u32 = 1;
+
+/// Largest accepted frame payload (64 MiB): comfortably above any
+/// `Values` message at supported scales, far below an allocation bomb.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// What one lane group computes — the sharded twin of
+/// [`crate::serve::Query`], extended with the single-lane algorithms
+/// the differential harness compares (CC, BFS, global PageRank).
+#[derive(Debug, Clone, PartialEq)]
+pub enum JobClass {
+    /// k-lane batched SSSP, one source per lane (weighted graphs only).
+    Sssp {
+        /// Lane l runs from `sources[l]`.
+        sources: Vec<VertexId>,
+    },
+    /// k-lane personalized PageRank, one teleport set per lane.
+    Ppr {
+        /// Lane l teleports uniformly into `teleports[l]`.
+        teleports: Vec<Vec<VertexId>>,
+        /// Damping factor d.
+        damping: f32,
+        /// Per-lane round-sum |Δ| convergence threshold.
+        epsilon: f64,
+    },
+    /// Global (single-lane) PageRank.
+    PageRank {
+        /// Damping factor d.
+        damping: f32,
+        /// Round-sum |Δ| convergence threshold.
+        epsilon: f64,
+    },
+    /// Connected components by min-label propagation.
+    Cc,
+    /// Level-relaxation BFS.
+    Bfs {
+        /// Root vertex.
+        source: VertexId,
+    },
+}
+
+impl JobClass {
+    /// Value lanes per vertex this job runs with.
+    pub fn lanes(&self) -> usize {
+        match self {
+            JobClass::Sssp { sources } => sources.len(),
+            JobClass::Ppr { teleports, .. } => teleports.len(),
+            JobClass::PageRank { .. } | JobClass::Cc | JobClass::Bfs { .. } => 1,
+        }
+    }
+
+    /// Short label for logs and reports.
+    pub fn label(&self) -> &'static str {
+        match self {
+            JobClass::Sssp { .. } => "sssp",
+            JobClass::Ppr { .. } => "ppr",
+            JobClass::PageRank { .. } => "pagerank",
+            JobClass::Cc => "cc",
+            JobClass::Bfs { .. } => "bfs",
+        }
+    }
+
+    /// Every vertex the job's parameters name — the set whose owners
+    /// must be alive for the query to be admissible.
+    pub fn param_vertices(&self) -> Vec<VertexId> {
+        match self {
+            JobClass::Sssp { sources } => sources.clone(),
+            JobClass::Ppr { teleports, .. } => teleports.iter().flatten().copied().collect(),
+            JobClass::Bfs { source } => vec![*source],
+            JobClass::PageRank { .. } | JobClass::Cc => Vec::new(),
+        }
+    }
+
+    /// Whether the job needs edge weights.
+    pub fn weighted(&self) -> bool {
+        matches!(self, JobClass::Sssp { .. })
+    }
+
+    /// Did the summed per-shard round residuals converge? Exact
+    /// (min-propagation) classes stop at a zero round; PageRank classes
+    /// stop when every lane's round sum is under ε.
+    pub fn job_converged(&self, total: f64, lane_sums: &[f64]) -> bool {
+        match self {
+            JobClass::Sssp { .. } | JobClass::Cc | JobClass::Bfs { .. } => total == 0.0,
+            JobClass::PageRank { epsilon, .. } => total < *epsilon,
+            JobClass::Ppr { epsilon, .. } => {
+                if lane_sums.is_empty() {
+                    total < *epsilon
+                } else {
+                    lane_sums.iter().all(|&s| s < *epsilon)
+                }
+            }
+        }
+    }
+}
+
+/// Every message the router↔shard protocol exchanges. See the module
+/// docs of [`crate::shard`] for who sends what when.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Msg {
+    /// Shard → router, once per connection: identity + graph cross-check.
+    Hello {
+        /// Sender's shard id.
+        shard: u32,
+        /// Sender's vertex count (must match the router's graph).
+        n: u64,
+        /// Sender's [`WIRE_VERSION`].
+        version: u32,
+    },
+    /// Router → shards: begin a job.
+    Start {
+        /// Job id (monotone per router).
+        job: u64,
+        /// What to compute.
+        class: JobClass,
+    },
+    /// Shard → router → shard: boundary lane groups. The router relays
+    /// by `dest`; `values` is `verts.len() × lanes` elements,
+    /// vertex-major.
+    Halo {
+        /// Job id.
+        job: u64,
+        /// Shard that should apply these groups.
+        dest: u32,
+        /// Shard that owns (computed) them.
+        src: u32,
+        /// Global round the values were produced in.
+        round: u32,
+        /// Lane width of each entry.
+        lanes: u32,
+        /// Boundary vertices, in shipping order.
+        verts: Vec<VertexId>,
+        /// Their lane groups, concatenated.
+        values: Vec<u32>,
+    },
+    /// Shard → router: my part of the round is swept and my halos are
+    /// shipped.
+    RoundDone {
+        /// Job id.
+        job: u64,
+        /// Sender.
+        shard: u32,
+        /// Global round just finished.
+        round: u32,
+        /// Summed convergence metric over the sender's swept vertices.
+        delta: f64,
+        /// Per-lane residual split of `delta` (empty when lanes = 1).
+        lane_deltas: Vec<f64>,
+        /// Vertices the sender swept this round.
+        active: u64,
+        /// Halo messages the sender has shipped so far this job
+        /// (cumulative — the final round's value is the job total).
+        halo_msgs: u64,
+        /// Halo entries (lane groups) shipped so far this job.
+        halo_entries: u64,
+    },
+    /// Router → shards: all halos of the round are relayed; run the
+    /// next one.
+    Continue {
+        /// Job id.
+        job: u64,
+        /// The round to run next.
+        round: u32,
+    },
+    /// Router → shards: the job is over; reply with `Values`.
+    Finish {
+        /// Job id.
+        job: u64,
+        /// Whether the job met its convergence criterion.
+        converged: bool,
+        /// Global rounds executed.
+        rounds: u32,
+    },
+    /// Shard → router: final owned values (`values` =
+    /// owned-range-length × lanes elements starting at vertex `start`).
+    Values {
+        /// Job id.
+        job: u64,
+        /// Sender.
+        shard: u32,
+        /// First owned vertex.
+        start: VertexId,
+        /// Lane width.
+        lanes: u32,
+        /// The owned lane groups.
+        values: Vec<u32>,
+    },
+    /// Router → shard: liveness probe (the heartbeat).
+    Ping(u64),
+    /// Shard → router: heartbeat answer, echoing the nonce.
+    Pong(u64),
+    /// Router → shard: exit cleanly.
+    Shutdown,
+    /// Either direction: a typed failure the peer should surface.
+    Err {
+        /// Coarse machine-readable code.
+        code: u32,
+        /// Human-readable description.
+        text: String,
+    },
+}
+
+// ---- encoding ----
+
+struct Enc(Vec<u8>);
+
+impl Enc {
+    fn u8(&mut self, x: u8) {
+        self.0.push(x);
+    }
+    fn u32(&mut self, x: u32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn u64(&mut self, x: u64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f32(&mut self, x: f32) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn f64(&mut self, x: f64) {
+        self.0.extend_from_slice(&x.to_le_bytes());
+    }
+    fn vec_u32(&mut self, xs: &[u32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+    fn vec_f64(&mut self, xs: &[f64]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.0.extend_from_slice(s.as_bytes());
+    }
+}
+
+fn encode_class(e: &mut Enc, c: &JobClass) {
+    match c {
+        JobClass::Sssp { sources } => {
+            e.u8(0);
+            e.vec_u32(sources);
+        }
+        JobClass::Ppr { teleports, damping, epsilon } => {
+            e.u8(1);
+            e.u32(teleports.len() as u32);
+            for t in teleports {
+                e.vec_u32(t);
+            }
+            e.f32(*damping);
+            e.f64(*epsilon);
+        }
+        JobClass::PageRank { damping, epsilon } => {
+            e.u8(2);
+            e.f32(*damping);
+            e.f64(*epsilon);
+        }
+        JobClass::Cc => e.u8(3),
+        JobClass::Bfs { source } => {
+            e.u8(4);
+            e.u32(*source);
+        }
+    }
+}
+
+/// Serialize `msg` to a payload (no frame header).
+pub fn encode(msg: &Msg) -> Vec<u8> {
+    let mut e = Enc(Vec::new());
+    match msg {
+        Msg::Hello { shard, n, version } => {
+            e.u8(1);
+            e.u32(*shard);
+            e.u64(*n);
+            e.u32(*version);
+        }
+        Msg::Start { job, class } => {
+            e.u8(2);
+            e.u64(*job);
+            encode_class(&mut e, class);
+        }
+        Msg::Halo { job, dest, src, round, lanes, verts, values } => {
+            e.u8(3);
+            e.u64(*job);
+            e.u32(*dest);
+            e.u32(*src);
+            e.u32(*round);
+            e.u32(*lanes);
+            e.vec_u32(verts);
+            e.vec_u32(values);
+        }
+        Msg::RoundDone { job, shard, round, delta, lane_deltas, active, halo_msgs, halo_entries } => {
+            e.u8(4);
+            e.u64(*job);
+            e.u32(*shard);
+            e.u32(*round);
+            e.f64(*delta);
+            e.vec_f64(lane_deltas);
+            e.u64(*active);
+            e.u64(*halo_msgs);
+            e.u64(*halo_entries);
+        }
+        Msg::Continue { job, round } => {
+            e.u8(5);
+            e.u64(*job);
+            e.u32(*round);
+        }
+        Msg::Finish { job, converged, rounds } => {
+            e.u8(6);
+            e.u64(*job);
+            e.u8(*converged as u8);
+            e.u32(*rounds);
+        }
+        Msg::Values { job, shard, start, lanes, values } => {
+            e.u8(7);
+            e.u64(*job);
+            e.u32(*shard);
+            e.u32(*start);
+            e.u32(*lanes);
+            e.vec_u32(values);
+        }
+        Msg::Ping(x) => {
+            e.u8(8);
+            e.u64(*x);
+        }
+        Msg::Pong(x) => {
+            e.u8(9);
+            e.u64(*x);
+        }
+        Msg::Shutdown => e.u8(10),
+        Msg::Err { code, text } => {
+            e.u8(11);
+            e.u32(*code);
+            e.str(text);
+        }
+    }
+    e.0
+}
+
+// ---- decoding ----
+
+struct Dec<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+type DResult<T> = Result<T, ShardError>;
+
+fn perr<T>(what: &str) -> DResult<T> {
+    Err(ShardError::Protocol(what.to_string()))
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> DResult<&'a [u8]> {
+        if self.b.len() - self.pos < n {
+            return perr("frame truncated");
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> DResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u32(&mut self) -> DResult<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> DResult<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f32(&mut self) -> DResult<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> DResult<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    /// Read a count and validate it against the bytes actually present
+    /// (`elem_bytes` per element) *before* any allocation.
+    fn count(&mut self, elem_bytes: usize) -> DResult<usize> {
+        let c = self.u32()? as usize;
+        let fits = c.checked_mul(elem_bytes).is_some_and(|bytes| bytes <= self.b.len() - self.pos);
+        if !fits {
+            return perr("count exceeds frame");
+        }
+        Ok(c)
+    }
+    fn vec_u32(&mut self) -> DResult<Vec<u32>> {
+        let c = self.count(4)?;
+        (0..c).map(|_| self.u32()).collect()
+    }
+    fn vec_f64(&mut self) -> DResult<Vec<f64>> {
+        let c = self.count(8)?;
+        (0..c).map(|_| self.f64()).collect()
+    }
+    fn str(&mut self) -> DResult<String> {
+        let c = self.count(1)?;
+        match std::str::from_utf8(self.take(c)?) {
+            Ok(s) => Ok(s.to_string()),
+            Err(_) => perr("string is not utf-8"),
+        }
+    }
+}
+
+fn decode_class(d: &mut Dec) -> DResult<JobClass> {
+    Ok(match d.u8()? {
+        0 => JobClass::Sssp { sources: d.vec_u32()? },
+        1 => {
+            let k = d.count(4)?; // each set costs at least its count field
+            let teleports = (0..k).map(|_| d.vec_u32()).collect::<DResult<Vec<_>>>()?;
+            JobClass::Ppr { teleports, damping: d.f32()?, epsilon: d.f64()? }
+        }
+        2 => JobClass::PageRank { damping: d.f32()?, epsilon: d.f64()? },
+        3 => JobClass::Cc,
+        4 => JobClass::Bfs { source: d.u32()? },
+        t => return perr(&format!("unknown job class tag {t}")),
+    })
+}
+
+/// Deserialize one payload produced by [`encode`]. Trailing bytes are
+/// an error: a frame carries exactly one message.
+pub fn decode(payload: &[u8]) -> Result<Msg, ShardError> {
+    let mut d = Dec { b: payload, pos: 0 };
+    let msg = match d.u8()? {
+        1 => Msg::Hello { shard: d.u32()?, n: d.u64()?, version: d.u32()? },
+        2 => Msg::Start { job: d.u64()?, class: decode_class(&mut d)? },
+        3 => Msg::Halo {
+            job: d.u64()?,
+            dest: d.u32()?,
+            src: d.u32()?,
+            round: d.u32()?,
+            lanes: d.u32()?,
+            verts: d.vec_u32()?,
+            values: d.vec_u32()?,
+        },
+        4 => Msg::RoundDone {
+            job: d.u64()?,
+            shard: d.u32()?,
+            round: d.u32()?,
+            delta: d.f64()?,
+            lane_deltas: d.vec_f64()?,
+            active: d.u64()?,
+            halo_msgs: d.u64()?,
+            halo_entries: d.u64()?,
+        },
+        5 => Msg::Continue { job: d.u64()?, round: d.u32()? },
+        6 => Msg::Finish { job: d.u64()?, converged: d.u8()? != 0, rounds: d.u32()? },
+        7 => Msg::Values { job: d.u64()?, shard: d.u32()?, start: d.u32()?, lanes: d.u32()?, values: d.vec_u32()? },
+        8 => Msg::Ping(d.u64()?),
+        9 => Msg::Pong(d.u64()?),
+        10 => Msg::Shutdown,
+        11 => Msg::Err { code: d.u32()?, text: d.str()? },
+        t => return perr(&format!("unknown message tag {t}")),
+    };
+    if d.pos != payload.len() {
+        return perr("trailing bytes after message");
+    }
+    Ok(msg)
+}
+
+/// Write one framed message (`len` header + payload) and flush.
+pub fn write_msg<W: Write>(w: &mut W, msg: &Msg) -> Result<(), ShardError> {
+    let payload = encode(msg);
+    assert!(payload.len() <= MAX_FRAME, "outgoing frame of {} bytes exceeds MAX_FRAME", payload.len());
+    let io = |e: std::io::Error| ShardError::Io(e.to_string());
+    w.write_all(&(payload.len() as u32).to_le_bytes()).map_err(io)?;
+    w.write_all(&payload).map_err(io)?;
+    w.flush().map_err(io)
+}
+
+/// Read one framed message. EOF at a frame boundary is
+/// [`ShardError::Disconnected`]; EOF inside a frame is a protocol
+/// error; a header longer than [`MAX_FRAME`] is rejected before any
+/// allocation.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Msg, ShardError> {
+    let mut hdr = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) if got == 0 => return Err(ShardError::Disconnected),
+            Ok(0) => return perr("eof inside frame header"),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) =>
+            {
+                return Err(ShardError::Timeout)
+            }
+            Err(e) => return Err(ShardError::Io(e.to_string())),
+        }
+    }
+    let len = u32::from_le_bytes(hdr) as usize;
+    if len > MAX_FRAME {
+        return perr(&format!("frame of {len} bytes exceeds MAX_FRAME"));
+    }
+    let mut payload = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => return perr("eof inside frame payload"),
+            Ok(k) => got += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e)
+                if matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut) =>
+            {
+                // A read timeout mid-frame still counts as a peer
+                // timeout; the caller marks the link dead either way.
+                return Err(ShardError::Timeout);
+            }
+            Err(e) => return Err(ShardError::Io(e.to_string())),
+        }
+    }
+    decode(&payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Msg) {
+        let bytes = encode(&m);
+        assert_eq!(decode(&bytes).unwrap(), m, "roundtrip of {m:?}");
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Msg::Hello { shard: 3, n: 1 << 20, version: WIRE_VERSION });
+        roundtrip(Msg::Start { job: 7, class: JobClass::Sssp { sources: vec![1, 2, 3] } });
+        roundtrip(Msg::Start {
+            job: 8,
+            class: JobClass::Ppr { teleports: vec![vec![5], vec![6, 7]], damping: 0.85, epsilon: 1e-3 },
+        });
+        roundtrip(Msg::Start { job: 9, class: JobClass::PageRank { damping: 0.85, epsilon: 1e-4 } });
+        roundtrip(Msg::Start { job: 10, class: JobClass::Cc });
+        roundtrip(Msg::Start { job: 11, class: JobClass::Bfs { source: 42 } });
+        roundtrip(Msg::Halo {
+            job: 7,
+            dest: 1,
+            src: 0,
+            round: 4,
+            lanes: 2,
+            verts: vec![10, 20],
+            values: vec![1, 2, 3, 4],
+        });
+        roundtrip(Msg::RoundDone {
+            job: 7,
+            shard: 0,
+            round: 4,
+            delta: 12.5,
+            lane_deltas: vec![6.25, 6.25],
+            active: 99,
+            halo_msgs: 2,
+            halo_entries: 17,
+        });
+        roundtrip(Msg::Continue { job: 7, round: 5 });
+        roundtrip(Msg::Finish { job: 7, converged: true, rounds: 9 });
+        roundtrip(Msg::Values { job: 7, shard: 1, start: 512, lanes: 2, values: vec![0, 1, 2, 3] });
+        roundtrip(Msg::Ping(1234));
+        roundtrip(Msg::Pong(1234));
+        roundtrip(Msg::Shutdown);
+        roundtrip(Msg::Err { code: 2, text: "shard 1 is dead".into() });
+    }
+
+    #[test]
+    fn framed_stream_roundtrip() {
+        let msgs =
+            vec![Msg::Ping(1), Msg::Start { job: 1, class: JobClass::Cc }, Msg::Shutdown];
+        let mut buf = Vec::new();
+        for m in &msgs {
+            write_msg(&mut buf, m).unwrap();
+        }
+        let mut r = &buf[..];
+        for m in &msgs {
+            assert_eq!(&read_msg(&mut r).unwrap(), m);
+        }
+        assert!(matches!(read_msg(&mut r), Err(ShardError::Disconnected)), "clean eof at frame boundary");
+    }
+
+    #[test]
+    fn corrupt_frames_are_typed_errors() {
+        // Truncated payload.
+        assert!(matches!(decode(&[1, 0, 0]), Err(ShardError::Protocol(_))));
+        // Unknown tag.
+        assert!(matches!(decode(&[200]), Err(ShardError::Protocol(_))));
+        // Count pointing past the frame: must error before allocating.
+        let mut bomb = vec![7u8]; // Values
+        bomb.extend_from_slice(&0u64.to_le_bytes());
+        bomb.extend_from_slice(&0u32.to_le_bytes());
+        bomb.extend_from_slice(&0u32.to_le_bytes());
+        bomb.extend_from_slice(&1u32.to_le_bytes());
+        bomb.extend_from_slice(&u32::MAX.to_le_bytes()); // count = 4 billion
+        assert!(matches!(decode(&bomb), Err(ShardError::Protocol(_))));
+        // Trailing garbage after a complete message.
+        let mut trailing = encode(&Msg::Shutdown);
+        trailing.push(0);
+        assert!(matches!(decode(&trailing), Err(ShardError::Protocol(_))));
+        // Oversized frame header rejected before allocation.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        assert!(matches!(read_msg(&mut &huge[..]), Err(ShardError::Protocol(_))));
+        // Eof inside the header.
+        assert!(matches!(read_msg(&mut &[1u8, 0][..]), Err(ShardError::Protocol(_))));
+    }
+
+    #[test]
+    fn job_class_helpers() {
+        let s = JobClass::Sssp { sources: vec![4, 9] };
+        assert_eq!(s.lanes(), 2);
+        assert!(s.weighted());
+        assert_eq!(s.param_vertices(), vec![4, 9]);
+        assert!(s.job_converged(0.0, &[0.0, 0.0]));
+        assert!(!s.job_converged(1.0, &[1.0, 0.0]));
+        let p = JobClass::Ppr { teleports: vec![vec![1], vec![2, 3]], damping: 0.85, epsilon: 1e-3 };
+        assert_eq!(p.lanes(), 2);
+        assert_eq!(p.param_vertices(), vec![1, 2, 3]);
+        assert!(p.job_converged(9.0, &[1e-4, 9e-4]), "per-lane rule, not the total");
+        assert!(!p.job_converged(0.0, &[1e-4, 2e-3]));
+        assert_eq!(JobClass::Cc.lanes(), 1);
+        assert!(JobClass::Cc.param_vertices().is_empty());
+    }
+}

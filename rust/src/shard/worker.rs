@@ -1,0 +1,264 @@
+//! The shard process: owns one partition, executes global rounds over
+//! it through the engine's restricted sweep, ships boundary updates as
+//! halos.
+//!
+//! A shard keeps the **full** `n × lanes` value array; the slice
+//! outside its owned range is a mirror of the remote shards, refreshed
+//! from inbound [`Msg::Halo`] frames between rounds. Each global round
+//! is one `native::run` call with `max_rounds = 1`, `restrict` set to
+//! the owned range, and a `ResumeSeed` carrying the mirror plus the
+//! round's dirty frontier — so the single-box engine (modes, schedules,
+//! stealing, SIMD lane kernels) is reused verbatim; sharding only
+//! decides *which* vertices a process sweeps and how updates travel.
+//!
+//! The per-round protocol, from the shard's side:
+//!
+//! 1. sweep the owned range (skipped when the dirty set is empty — a
+//!    resweep from unchanged inputs recomputes identical values),
+//! 2. diff against the mirror, ship changed boundary groups through the
+//!    per-remote-shard [`HaloBuffer`]s (δ-full mid-sweep, flush at end),
+//! 3. send [`Msg::RoundDone`] with the round's residuals,
+//! 4. apply inbound halos until the router's [`Msg::Continue`]
+//!    (halos → mirror + next round's frontier) or [`Msg::Finish`]
+//!    (reply [`Msg::Values`] with the owned slice).
+//!
+//! Because the link to the router is FIFO and the router relays every
+//! halo of a round before `Continue`, a shard entering round r+1 has
+//! applied every remote update from round r — the loopback and socket
+//! transports behave identically here, which is what makes the
+//! differential harness's bit-comparisons meaningful.
+
+use std::sync::Arc;
+
+use super::halo::{BoundaryMap, HaloBuffer};
+use super::wire::{JobClass, Msg, WIRE_VERSION};
+use super::{ShardError, Transport};
+use crate::algorithms::{bfs, cc, pagerank, sssp};
+use crate::engine::{kernels, native, EngineConfig, ResumeSeed, VertexProgram};
+use crate::graph::{GraphStore, VertexId};
+use crate::partition::PartitionMap;
+
+/// Shard-side configuration for [`serve_loop`].
+#[derive(Debug, Clone)]
+pub struct WorkerCfg {
+    /// This shard's id (0-based).
+    pub shard: u32,
+    /// Cluster width; must match the router's.
+    pub shards: usize,
+    /// Engine configuration for the owned sweeps (threads, mode,
+    /// schedule, stealing…). `restrict`, `resume`, and `max_rounds` are
+    /// overwritten per round.
+    pub ecfg: EngineConfig,
+    /// Halo-shipping δ override in 32-bit elements; `None` derives it
+    /// from the execution mode via [`super::halo_delta`].
+    pub halo_delta: Option<usize>,
+}
+
+/// How a job ended, from the worker's perspective.
+enum JobEnd {
+    /// Router sent `Finish`; values were returned. Serve the next job.
+    Finished,
+    /// Router sent `Shutdown` mid-job; exit the serve loop.
+    Shutdown,
+}
+
+/// Run the shard protocol over `t` until the router says `Shutdown` or
+/// the link dies: `Hello`, then serve `Start`ed jobs one at a time,
+/// answering `Ping`s throughout.
+pub fn serve_loop<G: GraphStore, T: Transport>(t: &mut T, g: &G, cfg: &WorkerCfg) -> Result<u64, ShardError> {
+    let pm = super::shard_partition(g, cfg.shards);
+    g.ensure_out_edges();
+    let bmap = BoundaryMap::build(g, &pm, cfg.shard);
+    t.send(&Msg::Hello { shard: cfg.shard, n: g.num_vertices() as u64, version: WIRE_VERSION })?;
+    let mut served = 0u64;
+    loop {
+        match t.recv(None) {
+            Ok(Msg::Start { job, class }) => {
+                let end = run_job(t, g, cfg, &pm, &bmap, job, &class)?;
+                served += 1;
+                if matches!(end, JobEnd::Shutdown) {
+                    return Ok(served);
+                }
+            }
+            Ok(Msg::Ping(x)) => t.send(&Msg::Pong(x))?,
+            Ok(Msg::Shutdown) | Err(ShardError::Disconnected) => return Ok(served),
+            Ok(m) => {
+                return Err(ShardError::Protocol(format!("unexpected {m:?} between jobs")));
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Dispatch a job class to the generic round driver with the right
+/// vertex program. Sharded jobs trust the router's validation (vertex
+/// bounds, weightedness) — both sides assert anyway via the program
+/// constructors.
+fn run_job<G: GraphStore, T: Transport>(
+    t: &mut T,
+    g: &G,
+    cfg: &WorkerCfg,
+    pm: &PartitionMap,
+    bmap: &BoundaryMap,
+    job: u64,
+    class: &JobClass,
+) -> Result<JobEnd, ShardError> {
+    match class {
+        JobClass::Sssp { sources } => {
+            if sources.len() == 1 {
+                drive(t, g, cfg, pm, bmap, job, &sssp::Sssp::new(g, sources[0]))
+            } else {
+                drive(t, g, cfg, pm, bmap, job, &sssp::MultiSssp::new(g, sources))
+            }
+        }
+        JobClass::Ppr { teleports, damping, epsilon } => {
+            let pc = pagerank::PrConfig { damping: *damping, epsilon: *epsilon };
+            drive(t, g, cfg, pm, bmap, job, &pagerank::MultiPageRank::new(g, &pc, teleports))
+        }
+        JobClass::PageRank { damping, epsilon } => {
+            let pc = pagerank::PrConfig { damping: *damping, epsilon: *epsilon };
+            drive(t, g, cfg, pm, bmap, job, &pagerank::PageRank::new(g, &pc))
+        }
+        JobClass::Cc => drive(t, g, cfg, pm, bmap, job, &cc::Components::new(g)),
+        JobClass::Bfs { source } => drive(t, g, cfg, pm, bmap, job, &bfs::Bfs::new(g, *source)),
+    }
+}
+
+/// The round driver: one restricted engine call per router `Continue`.
+fn drive<G: GraphStore, P: VertexProgram, T: Transport>(
+    t: &mut T,
+    g: &G,
+    cfg: &WorkerCfg,
+    pm: &PartitionMap,
+    bmap: &BoundaryMap,
+    job: u64,
+    prog: &P,
+) -> Result<JobEnd, ShardError> {
+    let n = g.num_vertices();
+    let lanes = prog.lanes();
+    let owned = pm.range(cfg.shard as usize);
+    let owned_elems = super::owned_elems(pm, cfg.shard, lanes);
+
+    // Full-length mirror: owned slice is ours, the rest tracks remote
+    // shards through halos.
+    let mut mirror: Vec<u32> = Vec::with_capacity(n * lanes);
+    for v in 0..n as VertexId {
+        for l in 0..lanes {
+            mirror.push(prog.init_lane(v, l));
+        }
+    }
+
+    // Per-remote-shard outgoing buffers, δ from the execution mode (the
+    // message-amortization twin of the engine's delay buffers).
+    let delta = cfg.halo_delta.unwrap_or_else(|| super::halo_delta(cfg.ecfg.mode, owned_elems.len()));
+    let mut halos: Vec<Option<HaloBuffer>> = (0..cfg.shards as u32)
+        .map(|r| (r != cfg.shard).then(|| HaloBuffer::new(job, cfg.shard, r, lanes, delta)))
+        .collect();
+
+    // Round 0 sweeps the whole owned range, like a cold single-box run.
+    let mut dirty: Vec<VertexId> = owned.clone().collect();
+    let mut round: u32 = 0;
+    loop {
+        // 1. Sweep. An empty frontier means every input is unchanged, so
+        // the sweep would recompute identical values — skip it.
+        let (round_delta, lane_deltas, active) = if dirty.is_empty() {
+            (0.0, vec![0.0; if lanes > 1 { lanes } else { 0 }], 0)
+        } else {
+            let mut ecfg = cfg.ecfg.clone();
+            ecfg.max_rounds = 1;
+            ecfg.restrict = Some(owned.clone());
+            ecfg.resume = Some(Arc::new(ResumeSeed { values: mirror.clone(), dirty: std::mem::take(&mut dirty) }));
+            let run = native::run(g, prog, &ecfg);
+            let stats = &run.rounds[0];
+            let (rd, ld, act) = (stats.delta, stats.lane_deltas.clone(), stats.active);
+
+            // 2. Diff the owned range against the mirror: changed
+            // vertices feed next round's frontier and, where the
+            // boundary map says so, the halo buffers.
+            let mut next = Vec::new();
+            for v in owned.clone() {
+                let base = v as usize * lanes;
+                let group = &run.values[base..base + lanes];
+                if group != &mirror[base..base + lanes] {
+                    kernels::activate_out_neighbors(g, v, |u| {
+                        if owned.contains(&u) {
+                            next.push(u);
+                        }
+                    });
+                    let mut mask = bmap.mask(v);
+                    while mask != 0 {
+                        let r = mask.trailing_zeros();
+                        mask &= mask - 1;
+                        halos[r as usize].as_mut().unwrap().push(t, round, v, group)?;
+                    }
+                }
+            }
+            for h in halos.iter_mut().flatten() {
+                h.flush(t, round)?;
+            }
+            mirror = run.values;
+            dirty = next;
+            (rd, ld, act)
+        };
+
+        // 3. Report the round.
+        let (total_msgs, total_entries) = halo_totals(&halos);
+        t.send(&Msg::RoundDone {
+            job,
+            shard: cfg.shard,
+            round,
+            delta: round_delta,
+            lane_deltas,
+            active,
+            halo_msgs: total_msgs,
+            halo_entries: total_entries,
+        })?;
+
+        // 4. Absorb halos until the router decides the job's fate.
+        loop {
+            match t.recv(None)? {
+                Msg::Halo { verts, values, lanes: hl, .. } => {
+                    debug_assert_eq!(hl as usize, lanes);
+                    for (i, &v) in verts.iter().enumerate() {
+                        let base = v as usize * lanes;
+                        let group = &values[i * lanes..(i + 1) * lanes];
+                        if group != &mirror[base..base + lanes] {
+                            mirror[base..base + lanes].copy_from_slice(group);
+                            kernels::activate_out_neighbors(g, v, |u| {
+                                if owned.contains(&u) {
+                                    dirty.push(u);
+                                }
+                            });
+                        }
+                    }
+                }
+                Msg::Continue { round: r, .. } => {
+                    round = r;
+                    dirty.sort_unstable();
+                    dirty.dedup();
+                    break;
+                }
+                Msg::Finish { .. } => {
+                    t.send(&Msg::Values {
+                        job,
+                        shard: cfg.shard,
+                        start: owned.start,
+                        lanes: lanes as u32,
+                        values: mirror[owned_elems.clone()].to_vec(),
+                    })?;
+                    return Ok(JobEnd::Finished);
+                }
+                Msg::Ping(x) => t.send(&Msg::Pong(x))?,
+                Msg::Shutdown => return Ok(JobEnd::Shutdown),
+                m => return Err(ShardError::Protocol(format!("unexpected {m:?} mid-job"))),
+            }
+        }
+    }
+}
+
+fn halo_totals(halos: &[Option<HaloBuffer>]) -> (u64, u64) {
+    halos
+        .iter()
+        .flatten()
+        .fold((0, 0), |(m, e), h| (m + h.msgs(), e + h.entries()))
+}

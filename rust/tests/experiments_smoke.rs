@@ -244,3 +244,33 @@ fn autotune_validation_runs() {
     // so the §IV-C gate intentionally does not fire.)
     assert_eq!(csv.lines().count(), 11, "{csv}");
 }
+
+#[test]
+fn shard_experiment() {
+    let dir = tmpdir("shard");
+    experiments::run("shard", &opts(&dir)).unwrap();
+    let csv = std::fs::read_to_string(std::path::Path::new(&dir).join("shard.csv")).unwrap();
+    // 3 shard counts × 3 δ policies + header.
+    assert_eq!(csv.lines().count(), 10, "{csv}");
+    let cell = |l: &str, i: usize| l.split(',').nth(i).unwrap().to_string();
+    for l in csv.lines().skip(1) {
+        assert_eq!(cell(l, 2), "24", "every point serves the whole job stream: {l}");
+        assert!(cell(l, 5).parse::<f64>().unwrap() > 0.0, "jobs/s column: {l}");
+        let shards: usize = cell(l, 0).parse().unwrap();
+        let msgs: u64 = cell(l, 6).parse().unwrap();
+        let entries: u64 = cell(l, 7).parse().unwrap();
+        if shards == 1 {
+            // One shard owns everything — no remote owners, no halo.
+            assert_eq!((msgs, entries), (0, 0), "single shard ships no halo: {l}");
+        } else {
+            assert!(msgs > 0, "multi-shard clusters exchange halos: {l}");
+            match cell(l, 1).as_str() {
+                // δ=0: every boundary update is its own message.
+                "async" => assert_eq!(msgs, entries, "async ships 1 entry/msg: {l}"),
+                // δ≥range: a whole round amortizes into one message per link.
+                "sync" => assert!(msgs < entries, "sync must amortize: {l}"),
+                _ => {}
+            }
+        }
+    }
+}

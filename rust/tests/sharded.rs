@@ -1,0 +1,244 @@
+//! Sharded-vs-single-box differential suite over the deterministic
+//! loopback cluster (DESIGN.md §13).
+//!
+//! Every job here runs through the **full** sharded protocol — wire
+//! encoding, halo delay buffers, the router's round barrier — with only
+//! the socket layer swapped for in-process FIFO channels, so what these
+//! tests certify is exactly what a socket deployment computes.
+//!
+//! The comparison discipline mirrors `differential.rs`:
+//!
+//! * **SSSP / CC / BFS** have unique fixed points reached by monotone
+//!   relaxation, so the sharded result must be **bit-identical** to the
+//!   single-box result on every mode × schedule × stealing cell — no
+//!   tolerance, no sorting, `assert_eq!` on the value arrays.
+//! * **PageRank / PPR** converge to an ε-ball, and the *round count*
+//!   may legitimately differ between sharded and single-box runs (the
+//!   convergence sum is accumulated per-shard then per-lane, a
+//!   different f64 summation order than the single box's per-thread
+//!   reduction), so scores compare to a tolerance, never bit-exactly.
+//!
+//! The degradation tests drive the router's typed failure path: a
+//! drill-killed shard must turn queries it owns into
+//! [`ShardError::DeadShard`] while everything else keeps serving,
+//! degraded results carrying init values in the dead range.
+
+use daig::algorithms::{bfs, cc, pagerank, sssp};
+use daig::algorithms::pagerank::PrConfig;
+use daig::engine::{EngineConfig, ExecutionMode, SchedulePolicy};
+use daig::graph::gap::GapGraph;
+use daig::graph::Csr;
+use daig::shard::{shard_partition, with_cluster, JobClass, ShardError};
+
+const MODES: [ExecutionMode; 4] = [
+    ExecutionMode::Synchronous,
+    ExecutionMode::Asynchronous,
+    ExecutionMode::Delayed(64),
+    ExecutionMode::Adaptive,
+];
+const THREADS: usize = 2;
+const SHARDS: usize = 3;
+
+fn graph() -> Csr {
+    GapGraph::Kron.generate_weighted(8, 8)
+}
+
+/// One engine configuration cell (same shape as `differential.rs`).
+fn cfg(mode: ExecutionMode, sched: SchedulePolicy, steal: bool) -> EngineConfig {
+    let c = EngineConfig::new(THREADS, mode).with_schedule(sched);
+    if steal {
+        c.with_stealing()
+    } else {
+        c
+    }
+}
+
+fn matrix() -> Vec<(ExecutionMode, SchedulePolicy, bool)> {
+    let mut cells = Vec::new();
+    for mode in MODES {
+        for sched in SchedulePolicy::ALL {
+            for steal in [false, true] {
+                cells.push((mode, sched, steal));
+            }
+        }
+    }
+    cells
+}
+
+/// The tentpole assertion: on every mode × schedule × stealing cell,
+/// a 3-shard loopback cluster lands bit-identically on the single-box
+/// fixed point for every unique-fixed-point workload.
+#[test]
+fn sharded_matrix_matches_single_box_bit_exactly() {
+    let g = graph();
+    let source = 3u32;
+    for (mode, sched, steal) in matrix() {
+        let ecfg = cfg(mode, sched, steal);
+        let ctx = format!("mode={} sched={:?} steal={steal}", mode.label(), sched);
+        let (s_vals, c_vals, b_vals) = with_cluster(&g, SHARDS, &ecfg, |r| {
+            let s = r.run_job(&JobClass::Sssp { sources: vec![source] }).unwrap();
+            let c = r.run_job(&JobClass::Cc).unwrap();
+            let b = r.run_job(&JobClass::Bfs { source }).unwrap();
+            for j in [&s, &c, &b] {
+                assert!(j.converged && !j.degraded, "{ctx}");
+                assert_eq!(j.lanes, 1, "{ctx}");
+            }
+            (s.values, c.values, b.values)
+        });
+        assert_eq!(s_vals, sssp::run_native(&g, source, &ecfg).dist, "sssp {ctx}");
+        assert_eq!(c_vals, cc::run_native(&g, &ecfg).labels, "cc {ctx}");
+        assert_eq!(b_vals, bfs::run_native(&g, source, &ecfg).levels, "bfs {ctx}");
+    }
+}
+
+/// Multi-lane SSSP: a k=4 sharded job must match the single-box batched
+/// run lane for lane, bit-exactly — the halo buffers carry whole lane
+/// groups, so lanes can neither mix nor skew.
+#[test]
+fn sharded_multi_lane_sssp_matches_batched_single_box() {
+    let g = graph();
+    let sources = vec![1u32, 7, 42, 100];
+    let ecfg = cfg(ExecutionMode::Delayed(64), SchedulePolicy::Adaptive, true);
+    let res = with_cluster(&g, SHARDS, &ecfg, |r| {
+        r.run_job(&JobClass::Sssp { sources: sources.clone() }).unwrap()
+    });
+    assert_eq!(res.lanes, 4);
+    let single = sssp::run_native_batch(&g, &sources, &ecfg);
+    for l in 0..4 {
+        assert_eq!(res.lane_values(l), single.dist[l], "lane {l}");
+    }
+}
+
+/// PageRank and PPR: ε-bounded against the single box, in every mode.
+/// Deliberately *not* bit-exact even in sync mode — the sharded
+/// convergence sum is per-shard-then-total while the single box reduces
+/// per-thread, a different f64 summation order that can move the
+/// stopping round by one.
+#[test]
+fn sharded_pagerank_and_ppr_are_epsilon_bounded() {
+    let g = graph();
+    let pc = PrConfig::default();
+    let tol = 2e-2f32;
+    for mode in [ExecutionMode::Synchronous, ExecutionMode::Asynchronous, ExecutionMode::Delayed(64)] {
+        let ecfg = cfg(mode, SchedulePolicy::Dense, false);
+        let res = with_cluster(&g, SHARDS, &ecfg, |r| {
+            r.run_job(&JobClass::PageRank { damping: pc.damping, epsilon: pc.epsilon }).unwrap()
+        });
+        assert!(res.converged);
+        let single = pagerank::run_native(&g, &ecfg, &pc);
+        // Raw score bits from both runs (pre dangling-redistribution).
+        for (v, (&a, &b)) in res.values.iter().zip(&single.run.values).enumerate() {
+            let (a, b) = (f32::from_bits(a), f32::from_bits(b));
+            assert!((a - b).abs() <= tol, "pagerank {} v{v}: {a} vs {b}", mode.label());
+        }
+    }
+    // Two PPR lanes with distinct teleport sets.
+    let teleports = vec![vec![5u32, 9], vec![200u32]];
+    let ecfg = cfg(ExecutionMode::Asynchronous, SchedulePolicy::Frontier, false);
+    let res = with_cluster(&g, SHARDS, &ecfg, |r| {
+        r.run_job(&JobClass::Ppr { teleports: teleports.clone(), damping: pc.damping, epsilon: pc.epsilon })
+            .unwrap()
+    });
+    assert_eq!(res.lanes, 2);
+    let single = pagerank::run_native_batch(&g, &teleports, &ecfg, &pc);
+    for (i, (&a, &b)) in res.values.iter().zip(&single.run.values).enumerate() {
+        let (a, b) = (f32::from_bits(a), f32::from_bits(b));
+        assert!((a - b).abs() <= tol, "ppr elem {i}: {a} vs {b}");
+    }
+}
+
+/// Graceful degradation: drill-kill one shard, then
+/// * queries whose parameters it owns fail with the typed
+///   [`ShardError::DeadShard`] — not a hang, not a panic;
+/// * other jobs keep serving, flagged `degraded` with the dead range
+///   holding init values;
+/// * the heartbeat reports exactly the survivors.
+#[test]
+fn dead_shard_degrades_gracefully() {
+    let g = graph();
+    let ecfg = cfg(ExecutionMode::Asynchronous, SchedulePolicy::Dense, false);
+    let pm = shard_partition(&g, SHARDS);
+    let dead_range = pm.range(1);
+    let live_src = 0u32; // vertex 0 is always shard 0's
+    with_cluster(&g, SHARDS, &ecfg, |r| {
+        // Healthy first: the baseline the drill degrades from.
+        let before = r.run_job(&JobClass::Cc).unwrap();
+        assert!(!before.degraded);
+
+        r.drill_kill(1);
+        assert_eq!(r.heartbeat(), SHARDS - 1);
+        assert!(!r.is_alive(1));
+
+        // Admission: a source owned by the dead shard is a typed error.
+        let owned_by_dead = dead_range.start;
+        assert_eq!(
+            r.run_job(&JobClass::Bfs { source: owned_by_dead }),
+            Err(ShardError::DeadShard { shard: 1 })
+        );
+
+        // Everything else keeps serving, marked degraded.
+        let after = r.run_job(&JobClass::Cc).unwrap();
+        assert!(after.degraded && after.dead == vec![1]);
+        // The dead range was never computed: CC init is the vertex id.
+        for v in dead_range.clone() {
+            assert_eq!(after.values[v as usize], v, "dead range holds init values");
+        }
+
+        let b = r.run_job(&JobClass::Bfs { source: live_src }).unwrap();
+        assert!(b.degraded && b.converged);
+    });
+}
+
+/// Bad queries are typed rejections that leave the cluster serving:
+/// wrong lane counts, out-of-range vertices, and SSSP on this suite's
+/// graphs is fine — so drive the validation with shapes, not weights.
+#[test]
+fn bad_queries_reject_without_killing_the_cluster() {
+    let g = graph();
+    let ecfg = cfg(ExecutionMode::Asynchronous, SchedulePolicy::Dense, false);
+    with_cluster(&g, SHARDS, &ecfg, |r| {
+        let n = g.num_vertices() as u32;
+        assert!(matches!(
+            r.run_job(&JobClass::Bfs { source: n }),
+            Err(ShardError::BadQuery(_))
+        ));
+        assert!(matches!(
+            r.run_job(&JobClass::Sssp { sources: vec![0, 1, 2] }),
+            Err(ShardError::BadQuery(_)),
+        ));
+        assert!(matches!(
+            r.run_job(&JobClass::Ppr { teleports: vec![vec![]], damping: 0.85, epsilon: 1e-3 }),
+            Err(ShardError::BadQuery(_)),
+        ));
+        // Still alive and exact after all three rejections.
+        let res = r.run_job(&JobClass::Bfs { source: 0 }).unwrap();
+        assert!(res.converged && !res.degraded);
+        assert_eq!(res.values, bfs::run_native(&g, 0, &ecfg).levels);
+    });
+}
+
+/// Halo δ discipline, observed end to end: async ships one entry per
+/// message, sync amortizes a whole round per link per message — the
+/// paper's delay-buffer poles at the message layer.
+#[test]
+fn halo_delta_spans_message_amortization_poles() {
+    let g = graph();
+    let run = |mode| {
+        let ecfg = cfg(mode, SchedulePolicy::Dense, false);
+        with_cluster(&g, SHARDS, &ecfg, |r| r.run_job(&JobClass::Cc).unwrap())
+    };
+    let async_res = run(ExecutionMode::Asynchronous);
+    let sync_res = run(ExecutionMode::Synchronous);
+    assert!(async_res.halo_msgs > 0 && sync_res.halo_msgs > 0);
+    // δ=0: every boundary update is its own frame.
+    assert_eq!(async_res.halo_msgs, async_res.halo_entries);
+    // δ=owned-range: strictly fewer frames than entries (amortized).
+    assert!(
+        sync_res.halo_msgs < sync_res.halo_entries,
+        "sync must batch: {} msgs / {} entries",
+        sync_res.halo_msgs,
+        sync_res.halo_entries
+    );
+    // Same fixed point either way, of course.
+    assert_eq!(async_res.values, sync_res.values);
+}
